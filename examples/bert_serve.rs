@@ -1,0 +1,135 @@
+//! Serving example: batched inference through the AOT HiNM FFN artifact.
+//!
+//! Loads the `ffn_serve` artifact (a BERT-style FFN whose two GEMMs run the
+//! L1 Pallas HiNM SpMM kernel), packs the dumped dense weights with the
+//! Rust packer at the artifact's sparsity, starts the dynamic batcher, and
+//! drives concurrent clients — reporting throughput and latency
+//! percentiles, plus a correctness check of one response against the Rust
+//! CPU kernel.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example bert_serve [-- --requests 128 --clients 8]`
+
+use hinm::coordinator::serve::{packed_host_tensors, BatchServer, ServeConfig};
+use hinm::runtime::Registry;
+use hinm::sparsity::{prune_oneshot, HinmConfig};
+use hinm::tensor::Matrix;
+use hinm::util::cli::Cli;
+use std::time::Duration;
+
+fn main() {
+    let cli = Cli::new("bert_serve", "batched HiNM FFN serving demo")
+        .opt("requests", Some("128"), "total requests")
+        .opt("clients", Some("8"), "concurrent client threads");
+    let args = cli.parse_env();
+    let n_requests = args.usize_or("requests", 128);
+    let n_clients = args.usize_or("clients", 8);
+
+    let reg = match hinm::runtime::open_default_registry() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifacts missing ({e:#}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+
+    let spec = reg.artifact("ffn_serve").expect("ffn_serve artifact").clone();
+    let d = spec.meta["d"] as usize;
+    let d_ff = spec.meta["d_ff"] as usize;
+    let batch = spec.meta["batch"] as usize;
+    let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+    println!(
+        "ffn_serve: d={d} d_ff={d_ff} V={} total sparsity {:.1}% batch={batch}",
+        cfg.v,
+        cfg.total_sparsity() * 100.0
+    );
+
+    // Pack both GEMMs from the dumped dense weights.
+    let (p1, p2) = load_packed(&reg, d, d_ff, &cfg);
+    let mut fixed = packed_host_tensors(&p1);
+    fixed.extend(packed_host_tensors(&p2));
+
+    let server = BatchServer::start(
+        spec,
+        fixed,
+        d,
+        d,
+        ServeConfig { batch, max_wait: Duration::from_millis(2) },
+    )
+    .expect("server start");
+
+    // Correctness spot check against the Rust CPU kernel.
+    let probe: Vec<f32> = (0..d).map(|j| (j as f32 * 0.01).sin()).collect();
+    let y = server.handle.infer(probe.clone()).expect("probe inference");
+    let y_ref = rust_ffn(&p1, &p2, &probe);
+    let max_diff = y
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "server vs rust kernel diff {max_diff}");
+    println!("probe verified against rust CPU kernel (max |Δ| = {max_diff:.2e}) ✓");
+
+    // Load test.
+    let t0 = std::time::Instant::now();
+    let per_client = n_requests / n_clients;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let h = server.handle.clone();
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let x: Vec<f32> =
+                        (0..d).map(|j| ((c * 131 + i * 17 + j) % 23) as f32 * 0.04 - 0.4).collect();
+                    let y = h.infer(x).expect("inference");
+                    assert_eq!(y.len(), d);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let served = per_client * n_clients;
+    let m = server.metrics.lock().unwrap().clone();
+    println!(
+        "served {served} requests from {n_clients} clients in {:.1} ms → {:.0} req/s",
+        wall.as_secs_f64() * 1e3,
+        served as f64 / wall.as_secs_f64()
+    );
+    println!("latency: {}", m.summary());
+    server.stop();
+}
+
+fn load_packed(
+    reg: &Registry,
+    d: usize,
+    d_ff: usize,
+    cfg: &HinmConfig,
+) -> (hinm::sparsity::HinmPacked, hinm::sparsity::HinmPacked) {
+    let w1 = reg.load_data("ffn_w1_dense").unwrap();
+    let w2 = reg.load_data("ffn_w2_dense").unwrap();
+    let w1 = Matrix::from_vec(d_ff, d, w1.as_f32().unwrap().to_vec());
+    let w2 = Matrix::from_vec(d, d_ff, w2.as_f32().unwrap().to_vec());
+    (
+        prune_oneshot(&w1, &w1.abs(), cfg).packed,
+        prune_oneshot(&w2, &w2.abs(), cfg).packed,
+    )
+}
+
+fn rust_ffn(
+    p1: &hinm::sparsity::HinmPacked,
+    p2: &hinm::sparsity::HinmPacked,
+    x: &[f32],
+) -> Vec<f32> {
+    let xm = Matrix::from_vec(x.len(), 1, x.to_vec());
+    let h = hinm::spmm::spmm(p1, &xm);
+    let h = Matrix {
+        rows: h.rows,
+        cols: h.cols,
+        data: h.data.iter().map(|&v| gelu(v)).collect(),
+    };
+    hinm::spmm::spmm(p2, &h).data
+}
+
+fn gelu(x: f32) -> f32 {
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x3)) as f64).tanh() as f32)
+}

@@ -1,0 +1,289 @@
+//! End-to-end driver: **train → HiNM-prune → fine-tune → serve**, all three
+//! layers composing on a real (small) workload. This is the repo's
+//! headline validation run; its numbers are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Part A — transformer LM (the paper's fine-tuning story):
+//!   1. Train a 2-layer decoder LM (AOT-lowered by python/compile/aot.py)
+//!      on a synthetic token-chain corpus, driven step-by-step from Rust
+//!      through PJRT (`lm_train_step.hlo.txt`).
+//!   2. Prune all 12 attention/FFN matrices to 75% HiNM, two arms:
+//!      gyro-permutation (tile-wise ICP — runtime-free reordering) vs
+//!      HiNM-NoPerm.
+//!   3. Fine-tune both arms with masked SGD; compare loss recovery.
+//!
+//! Part B — OCP layer-consistency fold (paper §3.2): on the MLP artifact,
+//!   prune w1 with *full* gyro (OCP + ICP), fold the output-channel
+//!   permutation into b1 and w2's input columns offline, and verify the
+//!   network function is preserved exactly — the "no runtime index
+//!   translation" claim, executed.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example e2e_train_prune_finetune [-- --train-steps 300]`
+
+use hinm::coordinator::{Corpus, LmTrainer};
+use hinm::permute::{gyro_permute_and_prune, GyroParams};
+use hinm::runtime::executor::{lit_f32, lit_to_f32, Executor};
+use hinm::runtime::Registry;
+use hinm::sparsity::{prune_oneshot, HinmConfig};
+use hinm::tensor::{invert_permutation, Matrix};
+use hinm::util::cli::Cli;
+use hinm::util::rng::Xoshiro256;
+
+fn main() {
+    let cli = Cli::new("e2e", "train → prune → fine-tune → serve")
+        .opt("train-steps", Some("300"), "LM pre-training steps")
+        .opt("finetune-steps", Some("150"), "fine-tune steps per arm")
+        .opt("sparsity", Some("75"), "total sparsity %")
+        .opt("lr", Some("0.5"), "train lr")
+        .opt("ft-lr", Some("0.2"), "fine-tune lr");
+    let args = cli.parse_env();
+    let train_steps = args.usize_or("train-steps", 300);
+    let ft_steps = args.usize_or("finetune-steps", 150);
+    let total_sparsity = args.usize_or("sparsity", 75) as f64 / 100.0;
+    let lr = args.f64_or("lr", 0.5) as f32;
+    let ft_lr = args.f64_or("ft-lr", 0.2) as f32;
+
+    let reg = match hinm::runtime::open_default_registry() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifacts missing ({e:#}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+
+    part_a_lm(&reg, train_steps, ft_steps, total_sparsity, lr, ft_lr);
+    part_b_ocp_fold(&reg, total_sparsity);
+}
+
+// ---------------------------------------------------------------------------
+// Part A: LM train → prune → fine-tune
+// ---------------------------------------------------------------------------
+
+fn part_a_lm(
+    reg: &Registry,
+    train_steps: usize,
+    ft_steps: usize,
+    total_sparsity: f64,
+    lr: f32,
+    ft_lr: f32,
+) {
+    println!("=== Part A: transformer LM train → prune → fine-tune ===");
+    let mut trainer = LmTrainer::new(reg).expect("trainer");
+    let (b, s) = (trainer.batch, trainer.seq);
+    let mut corpus = Corpus::new(trainer.vocab, 0.05, 2024);
+    let mut heldout = Corpus::new(trainer.vocab, 0.05, 777);
+    let eval = |tr: &LmTrainer, held: &mut Corpus| -> f32 {
+        let mut acc = 0.0;
+        for _ in 0..4 {
+            let (t, g) = held.batch(b, s);
+            acc += tr.eval_loss(&t, &g).expect("eval");
+        }
+        acc / 4.0
+    };
+
+    // --- 1. pre-train ---
+    println!("pre-training {train_steps} steps (batch {b} × seq {s})…");
+    let t0 = std::time::Instant::now();
+    for step in 0..train_steps {
+        let (toks, tgts) = corpus.batch(b, s);
+        let loss = trainer.step(&toks, &tgts, lr).expect("step");
+        if step % 50 == 0 {
+            println!("  step {step:>4}  train loss {loss:.4}");
+        }
+    }
+    let dense_loss = eval(&trainer, &mut heldout);
+    println!(
+        "pre-trained: held-out loss {dense_loss:.4} (uniform {:.4}) in {:.1}s ({:.1} steps/s)",
+        (trainer.vocab as f64).ln(),
+        t0.elapsed().as_secs_f64(),
+        train_steps as f64 / t0.elapsed().as_secs_f64()
+    );
+
+    // --- 2+3. prune and fine-tune, two arms ---
+    // Snapshot trained params so both arms start identical.
+    let snapshot: Vec<(String, Matrix)> = trainer
+        .mnames
+        .clone()
+        .iter()
+        .map(|n| (n.clone(), trainer.param_matrix(n).unwrap()))
+        .collect();
+
+    // Second-order saliency (the paper's estimator for transformers):
+    // diagonal Fisher from gradient batches, computed through the AOT
+    // `lm_grad` artifact — ρ = w² · mean(g²).
+    println!("estimating diagonal Fisher from 4 gradient batches…");
+    let mut fisher: Vec<Matrix> = snapshot
+        .iter()
+        .map(|(_, w)| Matrix::zeros(w.rows, w.cols))
+        .collect();
+    let mut fisher_corpus = Corpus::new(trainer.vocab, 0.05, 31415);
+    for _ in 0..4 {
+        let (toks, tgts) = fisher_corpus.batch(b, s);
+        let grads = trainer.grad_matrices(reg, &toks, &tgts).expect("grads");
+        for (f, g) in fisher.iter_mut().zip(&grads) {
+            for (fv, &gv) in f.data.iter_mut().zip(&g.data) {
+                *fv += gv * gv / 4.0;
+            }
+        }
+    }
+    let saliencies: Vec<Matrix> = snapshot
+        .iter()
+        .zip(&fisher)
+        .map(|((_, w), f)| {
+            Matrix::from_vec(
+                w.rows,
+                w.cols,
+                w.data
+                    .iter()
+                    .zip(&f.data)
+                    .map(|(&wi, &fi)| wi * wi * (fi + 1e-8))
+                    .collect(),
+            )
+        })
+        .collect();
+
+    let cfg = HinmConfig::for_total_sparsity(32, total_sparsity);
+    let mut results: Vec<(&str, f32, f32)> = Vec::new(); // (arm, post-prune, post-ft)
+    for arm in ["gyro", "noperm"] {
+        // Restore the trained snapshot.
+        for (n, m) in &snapshot {
+            trainer.set_param(n, m).unwrap();
+        }
+        // Prune every attention/FFN matrix.
+        let mut retained = 0.0;
+        let mut total_sal = 0.0;
+        for ((n, w), sal) in snapshot.iter().zip(&saliencies) {
+            let sal = sal.clone();
+            let result = if arm == "gyro" {
+                // Tile-wise ICP only: reorders columns *within* tiles — the
+                // runtime-free permutation (OCP folding for transformers
+                // requires head-aware folding; see Part B for the fold).
+                let params = GyroParams { skip_ocp: true, ..Default::default() };
+                gyro_permute_and_prune(w, &sal, &cfg, &params).result
+            } else {
+                prune_oneshot(w, &sal, &cfg)
+            };
+            retained += result.retained;
+            total_sal += sal.l1();
+            trainer.set_param(n, &result.mask.apply(w)).unwrap();
+            trainer.set_mask(n, &result.mask).unwrap();
+        }
+        let retention = retained / total_sal;
+        let post_prune = eval(&trainer, &mut heldout);
+
+        // Fine-tune with masks pinned.
+        let mut ft_corpus = Corpus::new(trainer.vocab, 0.05, 4242);
+        for _ in 0..ft_steps {
+            let (toks, tgts) = ft_corpus.batch(b, s);
+            trainer.step(&toks, &tgts, ft_lr).expect("ft step");
+        }
+        let post_ft = eval(&trainer, &mut heldout);
+        println!(
+            "arm {arm:<7} @ {:.0}% sparsity: retention {retention:.4} | post-prune loss {post_prune:.4} → fine-tuned {post_ft:.4}",
+            total_sparsity * 100.0
+        );
+        results.push((if arm == "gyro" { "gyro" } else { "noperm" }, post_prune, post_ft));
+
+        // Masks must have held through fine-tuning.
+        for (n, _) in &snapshot {
+            let w = trainer.param_matrix(n).unwrap();
+            let density = w.density();
+            assert!(
+                density < 1.0 - total_sparsity + 0.05,
+                "{n}: density {density} exceeds target"
+            );
+        }
+    }
+
+    let gyro = results.iter().find(|r| r.0 == "gyro").unwrap();
+    let noperm = results.iter().find(|r| r.0 == "noperm").unwrap();
+    println!(
+        "summary: dense {dense_loss:.4} | gyro {:.4}→{:.4} | noperm {:.4}→{:.4} | gyro advantage post-prune {:+.4}, post-ft {:+.4}",
+        gyro.1, gyro.2, noperm.1, noperm.2,
+        noperm.1 - gyro.1,
+        noperm.2 - gyro.2
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Part B: OCP fold consistency (paper §3.2) on the MLP artifacts
+// ---------------------------------------------------------------------------
+
+fn part_b_ocp_fold(reg: &Registry, total_sparsity: f64) {
+    println!("\n=== Part B: OCP layer-consistency fold (MLP) ===");
+    let fwd_spec = reg.artifact("mlp_fwd").expect("mlp_fwd");
+    let d_in = fwd_spec.meta["d_in"] as usize;
+    let d_h = fwd_spec.meta["d_hidden"] as usize;
+    let classes = fwd_spec.meta["n_classes"] as usize;
+    let batch = fwd_spec.meta["batch"] as usize;
+    let exe = Executor::load(fwd_spec).expect("load mlp_fwd");
+
+    let load = |n: &str| -> Matrix {
+        let arr = reg.load_data(&format!("mlp_{n}")).unwrap();
+        let (r, c) = match arr.shape.as_slice() {
+            [r, c] => (*r, *c),
+            [n] => (1, *n),
+            _ => unreachable!(),
+        };
+        Matrix::from_vec(r, c, arr.as_f32().unwrap().to_vec())
+    };
+    let w1 = load("w1");
+    let b1 = load("b1");
+    let w2 = load("w2");
+    let b2 = load("b2");
+
+    // Full gyro (OCP + ICP) on w1; V=32 divides d_hidden=128.
+    let cfg = HinmConfig::for_total_sparsity(32, total_sparsity);
+    let sal = w1.abs();
+    let out = gyro_permute_and_prune(&w1, &sal, &cfg, &GyroParams::default());
+    let perm = &out.ocp_perm;
+
+    // Fold the permutation offline: w1 rows were reordered, so b1 entries
+    // and w2 *columns* must follow (paper: "pre-ordering all layers
+    // according to the output channel sequence").
+    let w1_pruned = out.result.mask.apply(&w1.permute_rows(perm));
+    let b1_folded = Matrix::from_vec(
+        1,
+        d_h,
+        perm.iter().map(|&p| b1.data[p]).collect::<Vec<f32>>(),
+    );
+    // w2 columns index hidden units: new column j must read old column
+    // perm[j] so that w2' · h' == w2 · h.
+    let w2_folded = w2.permute_cols(perm);
+
+    // Execute both networks on the same batch through PJRT.
+    let mut rng = Xoshiro256::new(9);
+    let x = Matrix::randn(batch, d_in, 1.0, &mut rng);
+    let run = |w1m: &Matrix, b1m: &Matrix, w2m: &Matrix| -> Vec<f32> {
+        let inputs = vec![
+            lit_f32(&w1m.data, &[d_h, d_in]).unwrap(),
+            lit_f32(&b1m.data, &[d_h]).unwrap(),
+            lit_f32(&w2m.data, &[classes, d_h]).unwrap(),
+            lit_f32(&b2.data, &[classes]).unwrap(),
+            lit_f32(&x.data, &[batch, d_in]).unwrap(),
+        ];
+        lit_to_f32(&exe.run(&inputs).unwrap()[0]).unwrap()
+    };
+
+    // Reference: prune in *original* order with the mask un-permuted.
+    let mask_unperm = out.result.mask.permute_rows(&invert_permutation(perm));
+    let y_orig = run(&mask_unperm.apply(&w1), &b1, &w2);
+    // Folded: permuted-pruned w1 + folded b1/w2.
+    let y_fold = run(&w1_pruned, &b1_folded, &w2_folded);
+
+    let max_diff = y_orig
+        .iter()
+        .zip(&y_fold)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "logits identical after offline OCP fold: max |Δ| = {max_diff:.2e} {}",
+        if max_diff < 1e-4 { "✓" } else { "✗" }
+    );
+    assert!(max_diff < 1e-4, "OCP fold must be function-preserving");
+    println!(
+        "w1 retention with full gyro: {:.4} (vs no-perm {:.4})",
+        out.result.retention_ratio,
+        prune_oneshot(&w1, &sal, &cfg).retention_ratio
+    );
+}

@@ -1,0 +1,75 @@
+//! Compress all prunable layers of ResNet-18 (true shapes, trained-like
+//! synthetic weights) through the multi-threaded compression pipeline at
+//! 75% HiNM sparsity, comparing gyro-permutation against the no-perm and
+//! ablation arms. This is the paper's §5.1 workflow as a library consumer
+//! would run it.
+//!
+//! Run: `cargo run --release --example resnet_compress [-- --scale quarter]`
+
+use hinm::coordinator::{run_pipeline, LayerJob, Method, PipelineConfig};
+use hinm::eval::common::{materialize, EvalScale};
+use hinm::models::catalog::resnet18;
+use hinm::sparsity::HinmConfig;
+use hinm::util::bench::Table;
+use hinm::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("resnet_compress", "compress ResNet-18 at 75% HiNM")
+        .opt("scale", Some("quarter"), "full | quarter | tiny")
+        .opt("sparsity", Some("75"), "total sparsity %");
+    let args = cli.parse_env();
+    let scale = EvalScale::parse(&args.get_or("scale", "quarter")).expect("bad --scale");
+    let total = args.usize_or("sparsity", 75) as f64 / 100.0;
+    let v = if scale == EvalScale::Full { 32 } else { 8 };
+
+    let catalog = resnet18();
+    println!(
+        "ResNet-18: {} prunable conv groups, {:.1}M params (scale: {scale:?})",
+        catalog.layers.len(),
+        catalog.total_params() as f64 / 1e6
+    );
+
+    let layers = materialize(&catalog, scale, v, false, 7);
+    let jobs: Vec<LayerJob> = layers
+        .iter()
+        .map(|l| LayerJob {
+            name: l.name.clone(),
+            weights: l.weights.clone(),
+            saliency: l.saliency.clone(),
+        })
+        .collect();
+
+    let cfg = HinmConfig::for_total_sparsity(v, total);
+    let mut table = Table::new(&["method", "weighted retention", "wall ms"]);
+    for method in [Method::HinmGyro, Method::HinmNoPerm, Method::HinmV1, Method::HinmV2] {
+        let pc = PipelineConfig::new(cfg, method);
+        let t0 = std::time::Instant::now();
+        let out = run_pipeline(jobs.clone(), &pc).expect("pipeline");
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let retention = hinm::coordinator::pipeline::weighted_retention(&out, &jobs);
+        table.row(vec![
+            method.label().to_string(),
+            format!("{retention:.4}"),
+            format!("{wall:.0}"),
+        ]);
+    }
+    println!("\n75% HiNM sparsity, weighted retained-saliency ratio:");
+    table.print();
+
+    // Per-layer detail for the gyro arm.
+    let pc = PipelineConfig::new(cfg, Method::HinmGyro);
+    let out = run_pipeline(jobs.clone(), &pc).expect("pipeline");
+    let mut detail = Table::new(&["layer", "shape", "retention", "stored", "ratio", "ms"]);
+    for (l, j) in out.iter().zip(&jobs) {
+        detail.row(vec![
+            l.name.clone(),
+            format!("{}×{}", j.weights.rows, j.weights.cols),
+            format!("{:.4}", l.result.retention_ratio),
+            hinm::util::human_bytes(l.result.packed.storage_bytes()),
+            format!("{:.1}×", l.result.packed.compression_ratio()),
+            format!("{:.0}", l.elapsed_ms),
+        ]);
+    }
+    println!("\nper-layer (gyro):");
+    detail.print();
+}

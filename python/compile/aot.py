@@ -1,0 +1,285 @@
+"""AOT lowering driver: jax/pallas → HLO **text** artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust binary then loads and
+executes the artifacts via PJRT with Python out of the loop.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is recorded in `manifest.json` with its positional input
+specs (name/dtype/shape) and output arity so the Rust runtime can validate
+literals before execution. Initial model parameters and demo packed
+tensors are dumped as `.npy` next to the HLO so the whole runtime story is
+python-free.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.pack import HinmConfig, pack
+
+# --------------------------------------------------------------------------
+# Shapes baked into the artifact set (mirrored in rust/src/runtime/registry).
+# --------------------------------------------------------------------------
+
+SPMM_DEMO = dict(m=64, n=128, v=16, sv=0.5, batch=8)
+FFN_SERVE = dict(d=256, d_ff=1024, v=32, sv=0.5, batch=16)
+MLP = dict(d_in=64, d_hidden=128, n_classes=8, batch=64, v=32, sv=0.5)
+LM = dict(vocab=64, d_model=128, n_layers=2, n_heads=4, d_ff=256, seq=32, batch=16)
+
+SEED = 20240607
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr):
+    return {"name": name, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+
+
+def _packed_specs(prefix, t, v, k_v):
+    vpr = k_v // 2
+    return [
+        (f"{prefix}_vals", jnp.zeros((t, v, vpr), jnp.float32)),
+        (f"{prefix}_vec_idx", jnp.zeros((t, k_v), jnp.int32)),
+        (f"{prefix}_nm_idx", jnp.zeros((t, v, vpr), jnp.int32)),
+    ]
+
+
+class Builder:
+    def __init__(self, outdir):
+        self.outdir = outdir
+        self.params_dir = os.path.join(outdir, "params")
+        os.makedirs(self.params_dir, exist_ok=True)
+        self.manifest = {"version": 1, "seed": SEED, "artifacts": [], "data": [], "meta": {}}
+
+    def lower(self, name, fn, args, arg_names, n_outputs, meta=None):
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [_spec(n, a) for n, a in zip(arg_names, args)],
+            "n_outputs": n_outputs,
+        }
+        if meta:
+            entry["meta"] = meta
+        self.manifest["artifacts"].append(entry)
+
+    def dump(self, name, arr):
+        arr = np.asarray(arr)
+        fname = f"params/{name}.npy"
+        np.save(os.path.join(self.outdir, fname), arr)
+        self.manifest["data"].append(
+            {"name": name, "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        )
+
+    def finish(self):
+        with open(os.path.join(self.outdir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=2, sort_keys=True)
+        print(f"[aot] wrote {len(self.manifest['artifacts'])} artifacts to {self.outdir}")
+
+
+# --------------------------------------------------------------------------
+# Artifact builders
+# --------------------------------------------------------------------------
+
+
+def build_spmm_demo(b: Builder):
+    c = SPMM_DEMO
+    cfg = HinmConfig(v=c["v"], vector_sparsity=c["sv"])
+    k_v = cfg.keep_cols(c["n"])
+    t = c["m"] // c["v"]
+    packed = _packed_specs("w", t, c["v"], k_v)
+    x = jnp.zeros((c["n"], c["batch"]), jnp.float32)
+    args = [a for _, a in packed] + [x]
+    names = [n for n, _ in packed] + ["x"]
+
+    def fn(vals, vidx, nm, x):
+        return (model.hinm_spmm(vals, vidx, nm, x),)
+
+    b.lower("spmm_demo", fn, args, names, 1, meta={**c, "k_v": k_v, "tiles": t})
+
+    # Demo packed weights for parity tests (rust packs the same dense W and
+    # must produce identical tensors).
+    rng = np.random.default_rng(SEED)
+    w = rng.normal(size=(c["m"], c["n"])).astype(np.float32)
+    vals, vidx, nm = pack(w, np.abs(w), cfg)
+    b.dump("spmm_demo_w_dense", w)
+    b.dump("spmm_demo_vals", vals)
+    b.dump("spmm_demo_vec_idx", vidx)
+    b.dump("spmm_demo_nm_idx", nm)
+
+
+def build_ffn_serve(b: Builder):
+    c = FFN_SERVE
+    cfg = HinmConfig(v=c["v"], vector_sparsity=c["sv"])
+    k1 = cfg.keep_cols(c["d"])
+    t1 = c["d_ff"] // c["v"]
+    k2 = cfg.keep_cols(c["d_ff"])
+    t2 = c["d"] // c["v"]
+    p1 = _packed_specs("w1", t1, c["v"], k1)
+    p2 = _packed_specs("w2", t2, c["v"], k2)
+    x = jnp.zeros((c["d"], c["batch"]), jnp.float32)
+    args = [a for _, a in p1] + [a for _, a in p2] + [x]
+    names = [n for n, _ in p1] + [n for n, _ in p2] + ["x"]
+
+    def fn(v1, i1, n1, v2, i2, n2, x):
+        return (model.ffn_hinm_fwd(v1, i1, n1, v2, i2, n2, x),)
+
+    b.lower("ffn_serve", fn, args, names, 1, meta={**c, "k_v1": k1, "k_v2": k2})
+
+    # Packed FFN weights (trained-like synthetic) for the serving example.
+    rng = np.random.default_rng(SEED + 1)
+    w1 = (rng.normal(size=(c["d_ff"], c["d"])) * (2.0 / c["d"]) ** 0.5).astype(np.float32)
+    w2 = (rng.normal(size=(c["d"], c["d_ff"])) * (1.0 / c["d_ff"]) ** 0.5).astype(np.float32)
+    for nm_, w_ in (("w1", w1), ("w2", w2)):
+        vals, vidx, nm = pack(w_, np.abs(w_), cfg)
+        b.dump(f"ffn_{nm_}_dense", w_)
+        b.dump(f"ffn_{nm_}_vals", vals)
+        b.dump(f"ffn_{nm_}_vec_idx", vidx)
+        b.dump(f"ffn_{nm_}_nm_idx", nm)
+
+
+def build_mlp(b: Builder):
+    c = MLP
+    key = jax.random.PRNGKey(SEED)
+    params = model.init_mlp(key, c["d_in"], c["d_hidden"], c["n_classes"])
+    x = jnp.zeros((c["batch"], c["d_in"]), jnp.float32)
+    labels = jnp.zeros((c["batch"],), jnp.int32)
+    lr = jnp.zeros((), jnp.float32)
+    mask = jnp.ones_like(params["w1"])
+
+    flat_names = list(model.MLP_PARAM_NAMES)
+    flat = [params[n] for n in flat_names]
+
+    def fwd(w1, b1, w2, b2, x):
+        return (model.mlp_fwd(dict(zip(flat_names, (w1, b1, w2, b2))), x),)
+
+    b.lower("mlp_fwd", fwd, flat + [x], flat_names + ["x"], 1, meta=c)
+
+    def step(w1, b1, w2, b2, mask_w1, x, labels, lr):
+        return model.mlp_train_step(
+            dict(zip(flat_names, (w1, b1, w2, b2))), mask_w1, x, labels, lr
+        )
+
+    b.lower(
+        "mlp_train_step",
+        step,
+        flat + [mask, x, labels, lr],
+        flat_names + ["mask_w1", "x", "labels", "lr"],
+        5,
+        meta=c,
+    )
+
+    for n, p in zip(flat_names, flat):
+        b.dump(f"mlp_{n}", p)
+
+
+def build_lm(b: Builder):
+    c = LM
+    key = jax.random.PRNGKey(SEED + 2)
+    params = model.init_lm(
+        key, c["vocab"], c["d_model"], c["n_layers"], c["n_heads"], c["d_ff"], c["seq"]
+    )
+    pnames = model.lm_param_names(c["n_layers"])
+    mnames = model.lm_mask_names(c["n_layers"])
+    flat = [params[n] for n in pnames]
+    masks = [jnp.ones_like(params[n]) for n in mnames]
+    tokens = jnp.zeros((c["batch"], c["seq"]), jnp.int32)
+    targets = jnp.zeros((c["batch"], c["seq"]), jnp.int32)
+    lr = jnp.zeros((), jnp.float32)
+
+    def fwd(*args):
+        ps = dict(zip(pnames, args[:-1]))
+        return (model.lm_fwd(ps, args[-1], c["n_layers"], c["n_heads"]),)
+
+    b.lower("lm_fwd", fwd, flat + [tokens], pnames + ["tokens"], 1, meta=c)
+
+    def loss_fn(*args):
+        ps = dict(zip(pnames, args[:-2]))
+        return (model.lm_loss(ps, args[-2], args[-1], c["n_layers"], c["n_heads"]),)
+
+    b.lower("lm_loss", loss_fn, flat + [tokens, targets], pnames + ["tokens", "targets"], 1, meta=c)
+
+    np_, nm_ = len(pnames), len(mnames)
+
+    def step(*args):
+        ps = dict(zip(pnames, args[:np_]))
+        ms = dict(zip(mnames, args[np_ : np_ + nm_]))
+        toks, tgts, lr_ = args[np_ + nm_ :]
+        new, loss = model.lm_train_step(ps, ms, toks, tgts, lr_, c["n_layers"], c["n_heads"])
+        return tuple(new[n] for n in pnames) + (loss,)
+
+    def grad(*args):
+        ps = dict(zip(pnames, args[:np_]))
+        toks, tgts = args[np_:]
+        g = jax.grad(
+            lambda p: model.lm_loss(p, toks, tgts, c["n_layers"], c["n_heads"])
+        )(ps)
+        return tuple(g[n] for n in mnames)
+
+    b.lower(
+        "lm_grad",
+        grad,
+        flat + [tokens, targets],
+        pnames + ["tokens", "targets"],
+        nm_,
+        meta=c,
+    )
+
+    b.lower(
+        "lm_train_step",
+        step,
+        flat + masks + [tokens, targets, lr],
+        pnames + [f"mask.{n}" for n in mnames] + ["tokens", "targets", "lr"],
+        np_ + 1,
+        meta=c,
+    )
+
+    for n, p in zip(pnames, flat):
+        b.dump(f"lm_{n.replace('.', '_')}", p)
+    b.manifest["meta"]["lm_param_names"] = pnames
+    b.manifest["meta"]["lm_mask_names"] = mnames
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma list: spmm,ffn,mlp,lm")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    b = Builder(args.out)
+    want = set((args.only or "spmm,ffn,mlp,lm").split(","))
+    if "spmm" in want:
+        build_spmm_demo(b)
+    if "ffn" in want:
+        build_ffn_serve(b)
+    if "mlp" in want:
+        build_mlp(b)
+    if "lm" in want:
+        build_lm(b)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 — the HiNM SpMM Pallas kernel.
+
+TPU re-think of the paper's CUDA/Sparse-Tensor-Core kernel (DESIGN.md
+§Hardware-Adaptation): one grid step per *tile* (V output channels ≙ one
+thread block). Per step:
+
+1. **HBM→VMEM gather** — the tile's `vec_idx` names which rows of X to
+   stage. This is the data path where runtime input-channel permutation is
+   free: the gather reads whatever order `vec_idx` prescribes, permuted or
+   not, at identical cost (the Fig. 5 claim).
+2. **2:4 expansion** — the compacted values are spread into a dense
+   `[V, K_v]` tile via a one-hot contraction with `nm_idx` (the MXU has no
+   STC; selection is resolved at VMEM-load time, not per-MAC).
+3. **MXU matmul** — dense `[V, K_v] @ [K_v, B]` accumulation.
+
+Must run with ``interpret=True`` on CPU — compiled TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expand_tile(vals, nm_idx, k_v, m_group, n_keep):
+    """Spread compacted values ``[V, vpr]`` into a dense ``[V, K_v]`` tile.
+
+    One-hot contraction (vectorizes on VPU/MXU; no scatter):
+    dense[r, g*M + o] = Σ_j vals[r, g*N + j] · [nm_idx[r, g*N + j] == o]
+    """
+    v, vpr = vals.shape
+    groups = vpr // n_keep
+    g_vals = vals.reshape(v, groups, n_keep)
+    g_offs = nm_idx.reshape(v, groups, n_keep)
+    onehot = (g_offs[..., None] == jnp.arange(m_group)[None, None, None, :]).astype(vals.dtype)
+    dense_g = jnp.einsum("vgj,vgjo->vgo", g_vals, onehot)
+    return dense_g.reshape(v, groups * m_group)[:, :k_v]
+
+
+def _kernel(vals_ref, vec_idx_ref, nm_idx_ref, x_ref, y_ref, *, k_v, m_group, n_keep):
+    # Block shapes: vals [1, V, vpr], vec_idx [1, K_v], nm [1, V, vpr],
+    # x [n, B] (unblocked), y [V, B].
+    vidx = vec_idx_ref[0, :]
+    # (1) gather: stage the K_v named rows of X into VMEM.
+    xg = x_ref[vidx, :]  # [K_v, B]
+    # (2) expand 2:4-compacted weights to a dense tile.
+    w_tile = _expand_tile(vals_ref[0], nm_idx_ref[0], k_v, m_group, n_keep)  # [V, K_v]
+    # (3) MXU matmul.
+    y_ref[...] = jnp.dot(w_tile, xg, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("m_group", "n_keep", "interpret"))
+def hinm_spmm(vals, vec_idx, nm_idx, x, *, m_group=4, n_keep=2, interpret=True):
+    """HiNM sparse matmul ``Y[T·V, B] = W_hinm · X[n, B]``.
+
+    vals:    f32 [T, V, vpr]   (vpr = K_v·N/M)
+    vec_idx: i32 [T, K_v]
+    nm_idx:  i32 [T, V, vpr]
+    x:       f32 [n, B]
+    """
+    t, v, vpr = vals.shape
+    k_v = vec_idx.shape[1]
+    n, b = x.shape
+    assert vpr == k_v * n_keep // m_group, (vpr, k_v)
+
+    kernel = functools.partial(_kernel, k_v=k_v, m_group=m_group, n_keep=n_keep)
+    return pl.pallas_call(
+        kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, v, vpr), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k_v), lambda i: (i, 0)),
+            pl.BlockSpec((1, v, vpr), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((v, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t * v, b), jnp.float32),
+        interpret=interpret,
+    )(vals, vec_idx, nm_idx, x)
+
+
+def vmem_bytes(v, k_v, n, b, dtype_bytes=4):
+    """Static VMEM footprint estimate of one grid step (perf accounting —
+    see EXPERIMENTS.md §Perf): staged X rows + expanded tile + output block
+    + packed operands."""
+    xg = k_v * b * dtype_bytes
+    w_tile = v * k_v * dtype_bytes
+    y = v * b * dtype_bytes
+    packed = v * (k_v // 2) * (dtype_bytes + 4) + k_v * 4
+    return xg + w_tile + y + packed
+
+
+def mxu_utilization_estimate(v, k_v, b):
+    """Fraction of MXU issue slots doing useful work for a [V,K_v]@[K_v,B]
+    tile on a 128×128 systolic array (perf accounting)."""
+    eff_v = min(v, 128) / 128.0 if v < 128 else 1.0
+    eff_b = min(b, 128) / 128.0 if b < 128 else 1.0
+    return eff_v * eff_b

@@ -1,0 +1,93 @@
+"""HiNM packing in Python — mirror of `rust/src/sparsity/format.rs`.
+
+Shared by the Pallas kernel tests (to fabricate valid packed inputs) and by
+`aot.py` (to pack demo weights baked into artifacts). Tie-breaking matches
+the Rust packer exactly (descending saliency, lower index wins ties) so the
+two sides produce bit-identical layouts for the same inputs.
+
+Geometry (see DESIGN.md §6): for ``W[m, n]``, vector size ``V``, kept
+columns ``K_v`` per tile, N:M = 2:4::
+
+    vals:    f32 [T, V, K_v//2]   compacted kept weights
+    vec_idx: i32 [T, K_v]         original input-channel id per kept column
+    nm_idx:  i32 [T, V, K_v//2]   in-group offset (0..4) per kept value
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HinmConfig:
+    v: int
+    n_keep: int = 2
+    m_group: int = 4
+    vector_sparsity: float = 0.5
+
+    def keep_cols(self, n: int) -> int:
+        raw = int(round(n * (1.0 - self.vector_sparsity)))
+        k = (raw // self.m_group) * self.m_group
+        return max(self.m_group, min(k, n - n % self.m_group))
+
+    def total_sparsity(self) -> float:
+        return 1.0 - (1.0 - self.vector_sparsity) * self.n_keep / self.m_group
+
+
+def _top_k_ascending(vals: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest values, ascending order, low-index ties."""
+    # stable argsort on (-vals) gives descending with low-index tie-break.
+    order = np.argsort(-vals, kind="stable")[:k]
+    return np.sort(order)
+
+
+def pack(w: np.ndarray, sal: np.ndarray, cfg: HinmConfig):
+    """Pack dense weights into (vals, vec_idx, nm_idx)."""
+    m, n = w.shape
+    assert m % cfg.v == 0, f"rows {m} not multiple of V={cfg.v}"
+    t = m // cfg.v
+    k_v = cfg.keep_cols(n)
+    groups = k_v // cfg.m_group
+    vpr = groups * cfg.n_keep
+
+    vals = np.zeros((t, cfg.v, vpr), np.float32)
+    vec_idx = np.zeros((t, k_v), np.int32)
+    nm_idx = np.zeros((t, cfg.v, vpr), np.int32)
+
+    for ti in range(t):
+        tile_sal = sal[ti * cfg.v : (ti + 1) * cfg.v]  # [V, n]
+        colsal = tile_sal.sum(axis=0)
+        kept = _top_k_ascending(colsal, k_v)
+        vec_idx[ti] = kept
+        tile_w = w[ti * cfg.v : (ti + 1) * cfg.v][:, kept]  # [V, K_v]
+        tile_s = tile_sal[:, kept]
+        for r in range(cfg.v):
+            for g in range(groups):
+                grp_s = tile_s[r, g * cfg.m_group : (g + 1) * cfg.m_group]
+                sel = _top_k_ascending(grp_s, cfg.n_keep)
+                for j, off in enumerate(sel):
+                    vals[ti, r, g * cfg.n_keep + j] = tile_w[r, g * cfg.m_group + off]
+                    nm_idx[ti, r, g * cfg.n_keep + j] = off
+    return vals, vec_idx, nm_idx
+
+
+def random_packed(m, n, cfg: HinmConfig, seed=0):
+    """Random valid packed tensors + the dense equivalent (for tests)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    vals, vec_idx, nm_idx = pack(w, np.abs(w), cfg)
+    return w, vals, vec_idx, nm_idx
+
+
+def to_dense(vals, vec_idx, nm_idx, n, cfg: HinmConfig) -> np.ndarray:
+    """Reconstruct the dense masked matrix (oracle helper)."""
+    t, v, vpr = vals.shape
+    dense = np.zeros((t * v, n), np.float32)
+    nk, m_grp = cfg.n_keep, cfg.m_group
+    for ti in range(t):
+        for r in range(v):
+            for slot in range(vpr):
+                g = slot // nk
+                cc = g * m_grp + nm_idx[ti, r, slot]
+                dense[ti * v + r, vec_idx[ti, cc]] = vals[ti, r, slot]
+    return dense

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the HiNM SpMM Pallas kernel.
+
+Implements the identical math with plain jax.numpy gathers — no Pallas, no
+control flow — so any disagreement localizes to the kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def hinm_expand_ref(vals, vec_idx, nm_idx, n, m_group=4, n_keep=2):
+    """Decompress packed HiNM tensors to the dense masked W ``[T·V, n]``.
+
+    vals:    f32 [T, V, vpr]
+    vec_idx: i32 [T, K_v]
+    nm_idx:  i32 [T, V, vpr]
+    """
+    t, v, vpr = vals.shape
+    groups = vpr // n_keep
+    # compact column position of each slot: g*m_group + offset
+    slot_group = jnp.repeat(jnp.arange(groups), n_keep)  # [vpr]
+    compact_col = slot_group[None, None, :] * m_group + nm_idx  # [T, V, vpr]
+    # original column id of each slot
+    orig_col = jnp.take_along_axis(
+        jnp.broadcast_to(vec_idx[:, None, :], (t, v, vec_idx.shape[1])),
+        compact_col,
+        axis=2,
+    )  # [T, V, vpr]
+    dense = jnp.zeros((t, v, n), vals.dtype)
+    dense = dense.at[
+        jnp.arange(t)[:, None, None],
+        jnp.arange(v)[None, :, None],
+        orig_col,
+    ].add(vals)
+    return dense.reshape(t * v, n)
+
+
+def hinm_spmm_ref(vals, vec_idx, nm_idx, x, m_group=4, n_keep=2):
+    """Reference ``Y[m, b] = W_hinm · X[n, b]``."""
+    n = x.shape[0]
+    w = hinm_expand_ref(vals, vec_idx, nm_idx, n, m_group, n_keep)
+    return w @ x

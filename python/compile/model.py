@@ -1,0 +1,203 @@
+"""L2 — JAX compute graphs (build-time only; never imported at runtime).
+
+Three model families, all lowered to HLO text by `aot.py`:
+
+* **MLP classifier** — the e2e workhorse for prune→fine-tune studies:
+  `mlp_fwd`, masked-SGD `mlp_train_step`.
+* **Transformer LM** — a small from-scratch decoder for the end-to-end
+  example (train → HiNM-prune → fine-tune → serve): `lm_fwd`,
+  `lm_train_step` with per-weight masks.
+* **HiNM FFN** — a BERT-style feed-forward block whose two GEMMs run
+  through the L1 Pallas kernel on *packed* HiNM operands: `ffn_hinm_fwd`
+  (the serving path of `examples/bert_serve.rs`).
+
+Parameter pytrees are flattened in a fixed, manifest-recorded order so the
+Rust runtime can feed/collect PJRT literals positionally.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hinm_spmm import hinm_spmm
+
+# --------------------------------------------------------------------------
+# MLP classifier
+# --------------------------------------------------------------------------
+
+MLP_PARAM_NAMES = ("w1", "b1", "w2", "b2")
+
+
+def init_mlp(key, d_in, d_hidden, n_classes):
+    k1, k2 = jax.random.split(key)
+    scale1 = (2.0 / d_in) ** 0.5
+    scale2 = (2.0 / d_hidden) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (d_hidden, d_in), jnp.float32) * scale1,
+        "b1": jnp.zeros((d_hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (n_classes, d_hidden), jnp.float32) * scale2,
+        "b2": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def mlp_fwd(params, x):
+    """x: [B, d_in] → logits [B, n_classes]."""
+    h = jnp.maximum(x @ params["w1"].T + params["b1"], 0.0)
+    return h @ params["w2"].T + params["b2"]
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def mlp_loss(params, x, labels):
+    return _xent(mlp_fwd(params, x), labels)
+
+
+def mlp_train_step(params, mask_w1, x, labels, lr):
+    """One masked-SGD step: pruned w1 entries stay exactly zero.
+
+    Returns (w1', b1', w2', b2', loss) — flat outputs for the PJRT runtime.
+    """
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, labels)
+    new = {
+        "w1": (params["w1"] - lr * grads["w1"]) * mask_w1,
+        "b1": params["b1"] - lr * grads["b1"],
+        "w2": params["w2"] - lr * grads["w2"],
+        "b2": params["b2"] - lr * grads["b2"],
+    }
+    return new["w1"], new["b1"], new["w2"], new["b2"], loss
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (decoder-only, learned positions, tied head off for
+# simplicity; weights pruned by HiNM: wq wk wv wo w1 w2 per layer)
+# --------------------------------------------------------------------------
+
+LM_PRUNED = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def lm_param_names(n_layers):
+    names = ["tok_emb", "pos_emb"]
+    for i in range(n_layers):
+        for p in ("ln1_s", "ln1_b", "wq", "wk", "wv", "wo", "ln2_s", "ln2_b", "w1", "b1", "w2", "b2"):
+            names.append(f"l{i}.{p}")
+    names += ["lnf_s", "lnf_b", "head"]
+    return names
+
+
+def lm_mask_names(n_layers):
+    return [f"l{i}.{p}" for i in range(n_layers) for p in LM_PRUNED]
+
+
+def init_lm(key, vocab, d_model, n_layers, n_heads, d_ff, seq_len):
+    del n_heads
+    params = {}
+    keys = jax.random.split(key, 3 + 6 * n_layers)
+    ki = iter(range(len(keys)))
+    s = lambda fan_in: (1.0 / fan_in) ** 0.5
+    params["tok_emb"] = jax.random.normal(keys[next(ki)], (vocab, d_model)) * 0.02
+    params["pos_emb"] = jax.random.normal(keys[next(ki)], (seq_len, d_model)) * 0.02
+    for i in range(n_layers):
+        for nm, shape, fan in (
+            ("wq", (d_model, d_model), d_model),
+            ("wk", (d_model, d_model), d_model),
+            ("wv", (d_model, d_model), d_model),
+            ("wo", (d_model, d_model), d_model),
+            ("w1", (d_ff, d_model), d_model),
+            ("w2", (d_model, d_ff), d_ff),
+        ):
+            params[f"l{i}.{nm}"] = jax.random.normal(keys[next(ki)], shape) * s(fan)
+        params[f"l{i}.b1"] = jnp.zeros((d_ff,))
+        params[f"l{i}.b2"] = jnp.zeros((d_model,))
+        params[f"l{i}.ln1_s"] = jnp.ones((d_model,))
+        params[f"l{i}.ln1_b"] = jnp.zeros((d_model,))
+        params[f"l{i}.ln2_s"] = jnp.ones((d_model,))
+        params[f"l{i}.ln2_b"] = jnp.zeros((d_model,))
+    params["lnf_s"] = jnp.ones((d_model,))
+    params["lnf_b"] = jnp.zeros((d_model,))
+    params["head"] = jax.random.normal(keys[next(ki)], (vocab, d_model)) * s(d_model)
+    return {k: v.astype(jnp.float32) for k, v in params.items()}
+
+
+def _ln(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attn(x, wq, wk, wv, wo, n_heads):
+    b, t, d = x.shape
+    hd = d // n_heads
+    q = (x @ wq.T).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk.T).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv.T).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / (hd**0.5)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo.T
+
+
+def lm_fwd(params, tokens, n_layers, n_heads):
+    """tokens: i32 [B, T] → logits [B, T, vocab]."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t]
+    for i in range(n_layers):
+        p = lambda nm: params[f"l{i}.{nm}"]
+        h = _ln(x, p("ln1_s"), p("ln1_b"))
+        x = x + _attn(h, p("wq"), p("wk"), p("wv"), p("wo"), n_heads)
+        h = _ln(x, p("ln2_s"), p("ln2_b"))
+        ff = jnp.maximum(h @ p("w1").T + p("b1"), 0.0) @ p("w2").T + p("b2")
+        x = x + ff
+    x = _ln(x, params["lnf_s"], params["lnf_b"])
+    return x @ params["head"].T
+
+
+def lm_loss(params, tokens, targets, n_layers, n_heads):
+    logits = lm_fwd(params, tokens, n_layers, n_heads)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+def lm_train_step(params, masks, tokens, targets, lr, n_layers, n_heads):
+    """Masked SGD step. `masks[name]` multiplies both weight and gradient of
+    each pruned matrix so zeros stay zero through fine-tuning."""
+    masked = dict(params)
+    for name, m in masks.items():
+        masked[name] = params[name] * m
+    loss, grads = jax.value_and_grad(lm_loss)(masked, tokens, targets, n_layers, n_heads)
+    new = {}
+    for name, p in params.items():
+        g = grads[name]
+        if name in masks:
+            new[name] = (p - lr * g) * masks[name]
+        else:
+            new[name] = p - lr * g
+    return new, loss
+
+
+# --------------------------------------------------------------------------
+# HiNM FFN through the Pallas kernel (the serving path)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ffn_hinm_fwd(vals1, vidx1, nm1, vals2, vidx2, nm2, x, interpret=True):
+    """BERT-style FFN with both GEMMs on packed HiNM weights.
+
+    x: [d, B] activations (column-major batch, matching the kernel).
+    y = W2_hinm · gelu(W1_hinm · x)   →  [d, B]
+    """
+    h = hinm_spmm(vals1, vidx1, nm1, x, interpret=interpret)  # [d_ff, B]
+    h = jax.nn.gelu(h)
+    return hinm_spmm(vals2, vidx2, nm2, h, interpret=interpret)  # [d, B]
+
+
+def ffn_dense_fwd(w1, w2, x):
+    """Dense oracle of `ffn_hinm_fwd` given the decompressed weights."""
+    return w2 @ jax.nn.gelu(w1 @ x)

@@ -1,0 +1,149 @@
+"""L2 model graph tests: shapes, training dynamics, mask discipline, and the
+HiNM FFN against its dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.pack import HinmConfig, pack
+from compile.kernels.ref import hinm_expand_ref
+
+
+# ------------------------------- MLP --------------------------------------
+
+
+def _mlp_setup(seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = model.init_mlp(key, 16, 32, 4)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(8, 16)).astype(np.float32)
+    labels = rng.integers(0, 4, size=(8,)).astype(np.int32)
+    return params, jnp.asarray(x), jnp.asarray(labels)
+
+
+def test_mlp_shapes():
+    params, x, _ = _mlp_setup()
+    assert model.mlp_fwd(params, x).shape == (8, 4)
+
+
+def test_mlp_loss_decreases():
+    params, x, labels = _mlp_setup()
+    mask = jnp.ones_like(params["w1"])
+    losses = []
+    for _ in range(30):
+        w1, b1, w2, b2, loss = model.mlp_train_step(params, mask, x, labels, 0.1)
+        params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_mlp_mask_keeps_zeros():
+    params, x, labels = _mlp_setup()
+    mask = np.ones(params["w1"].shape, np.float32)
+    mask[::2] = 0.0  # prune half the rows
+    mask = jnp.asarray(mask)
+    for _ in range(5):
+        w1, b1, w2, b2, _ = model.mlp_train_step(params, mask, x, labels, 0.1)
+        params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+    w1 = np.asarray(params["w1"])
+    assert np.all(w1[::2] == 0.0)
+    assert np.any(w1[1::2] != 0.0)
+
+
+# ------------------------------- LM ----------------------------------------
+
+LM_CFG = dict(vocab=32, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq=16)
+
+
+def _lm_setup(seed=0):
+    key = jax.random.PRNGKey(seed)
+    cfg = {("seq_len" if k == "seq" else k): v for k, v in LM_CFG.items()}
+    params = model.init_lm(key, **cfg)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, LM_CFG["vocab"], size=(4, LM_CFG["seq"])).astype(np.int32)
+    tgts = np.roll(toks, -1, axis=1).astype(np.int32)
+    return params, jnp.asarray(toks), jnp.asarray(tgts)
+
+
+def test_lm_fwd_shape():
+    params, toks, _ = _lm_setup()
+    logits = model.lm_fwd(params, toks, LM_CFG["n_layers"], LM_CFG["n_heads"])
+    assert logits.shape == (4, LM_CFG["seq"], LM_CFG["vocab"])
+
+
+def test_lm_param_name_order_is_complete():
+    params, _, _ = _lm_setup()
+    names = model.lm_param_names(LM_CFG["n_layers"])
+    assert sorted(names) == sorted(params.keys())
+
+
+def test_lm_initial_loss_near_uniform():
+    params, toks, tgts = _lm_setup()
+    loss = float(model.lm_loss(params, toks, tgts, LM_CFG["n_layers"], LM_CFG["n_heads"]))
+    assert abs(loss - np.log(LM_CFG["vocab"])) < 0.5
+
+
+def test_lm_trains_and_masks_hold():
+    params, toks, tgts = _lm_setup()
+    mnames = model.lm_mask_names(LM_CFG["n_layers"])
+    masks = {}
+    rng = np.random.default_rng(1)
+    for n in mnames:
+        m = (rng.random(params[n].shape) > 0.5).astype(np.float32)
+        masks[n] = jnp.asarray(m)
+    losses = []
+    lr = 0.2
+    for _ in range(15):
+        params, loss = model.lm_train_step(
+            params, masks, toks, tgts, lr, LM_CFG["n_layers"], LM_CFG["n_heads"]
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    for n in mnames:
+        w = np.asarray(params[n])
+        assert np.all(w[np.asarray(masks[n]) == 0.0] == 0.0), n
+
+
+def test_lm_causality():
+    """Changing a future token must not affect earlier logits."""
+    params, toks, _ = _lm_setup()
+    logits1 = model.lm_fwd(params, toks, LM_CFG["n_layers"], LM_CFG["n_heads"])
+    toks2 = np.asarray(toks).copy()
+    toks2[:, -1] = (toks2[:, -1] + 1) % LM_CFG["vocab"]
+    logits2 = model.lm_fwd(params, jnp.asarray(toks2), LM_CFG["n_layers"], LM_CFG["n_heads"])
+    np.testing.assert_allclose(
+        np.asarray(logits1)[:, :-1], np.asarray(logits2)[:, :-1], rtol=1e-5, atol=1e-5
+    )
+
+
+# --------------------------- HiNM FFN --------------------------------------
+
+
+def test_ffn_hinm_matches_dense_oracle():
+    d, d_ff, v = 32, 64, 8
+    cfg = HinmConfig(v=v, vector_sparsity=0.5)
+    rng = np.random.default_rng(7)
+    w1 = rng.normal(size=(d_ff, d)).astype(np.float32)
+    w2 = rng.normal(size=(d, d_ff)).astype(np.float32)
+    v1, i1, n1 = pack(w1, np.abs(w1), cfg)
+    v2, i2, n2 = pack(w2, np.abs(w2), cfg)
+    x = rng.normal(size=(d, 4)).astype(np.float32)
+    got = np.asarray(model.ffn_hinm_fwd(v1, i1, n1, v2, i2, n2, x))
+    w1d = np.asarray(hinm_expand_ref(v1, i1, n1, d))
+    w2d = np.asarray(hinm_expand_ref(v2, i2, n2, d_ff))
+    want = np.asarray(model.ffn_dense_fwd(w1d, w2d, x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ffn_hinm_output_shape():
+    d, d_ff, v = 32, 64, 8
+    cfg = HinmConfig(v=v, vector_sparsity=0.5)
+    rng = np.random.default_rng(8)
+    w1 = rng.normal(size=(d_ff, d)).astype(np.float32)
+    w2 = rng.normal(size=(d, d_ff)).astype(np.float32)
+    v1, i1, n1 = pack(w1, np.abs(w1), cfg)
+    v2, i2, n2 = pack(w2, np.abs(w2), cfg)
+    x = rng.normal(size=(d, 16)).astype(np.float32)
+    assert model.ffn_hinm_fwd(v1, i1, n1, v2, i2, n2, x).shape == (d, 16)

@@ -1,0 +1,70 @@
+"""Packer invariants (python side of the shared HiNM format)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pack import HinmConfig, _top_k_ascending, pack, to_dense
+
+
+def test_top_k_tie_break_low_index():
+    assert _top_k_ascending(np.array([2.0, 2.0, 2.0, 1.0]), 2).tolist() == [0, 1]
+    assert _top_k_ascending(np.array([1.0, 5.0, 3.0, 5.0]), 2).tolist() == [1, 3]
+
+
+def test_keep_cols_multiple_of_group():
+    cfg = HinmConfig(v=32, vector_sparsity=0.3)
+    for n in (16, 64, 100, 768, 3072):
+        k = cfg.keep_cols(n)
+        assert k % 4 == 0 and 4 <= k <= n
+
+
+def test_total_sparsity():
+    assert HinmConfig(v=4, vector_sparsity=0.5).total_sparsity() == 0.75
+    assert HinmConfig(v=4, vector_sparsity=0.0).total_sparsity() == 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 3),
+    v=st.sampled_from([4, 8, 16]),
+    n=st.sampled_from([16, 32, 64]),
+    sv_pct=st.sampled_from([0, 50, 75]),
+    seed=st.integers(0, 10_000),
+)
+def test_pack_invariants(t, v, n, sv_pct, seed):
+    cfg = HinmConfig(v=v, vector_sparsity=sv_pct / 100.0)
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(t * v, n)).astype(np.float32)
+    vals, vidx, nm = pack(w, np.abs(w), cfg)
+    k_v = cfg.keep_cols(n)
+    assert vidx.shape == (t, k_v)
+    assert vals.shape == (t, v, k_v // 2)
+    # vec_idx rows: unique, in-range, ascending.
+    for ti in range(t):
+        row = vidx[ti]
+        assert len(set(row.tolist())) == k_v
+        assert row.min() >= 0 and row.max() < n
+        assert (np.diff(row) > 0).all()
+    # nm offsets in range, strictly ascending within each pair.
+    assert nm.min() >= 0 and nm.max() < 4
+    pairs = nm.reshape(t, v, -1, 2)
+    assert (pairs[..., 0] < pairs[..., 1]).all()
+    # Kept values = original weights at those positions.
+    dense = to_dense(vals, vidx, nm, n, cfg)
+    nzr, nzc = np.nonzero(dense)
+    np.testing.assert_array_equal(dense[nzr, nzc], w[nzr, nzc])
+
+
+def test_pack_selects_top2_per_group():
+    cfg = HinmConfig(v=1, vector_sparsity=0.0)
+    w = np.array([[1.0, 9.0, 3.0, 7.0]], np.float32)
+    vals, vidx, nm = pack(w, np.abs(w), cfg)
+    assert vals[0, 0].tolist() == [9.0, 7.0]
+    assert nm[0, 0].tolist() == [1, 3]
+
+
+def test_pack_rejects_bad_rows():
+    cfg = HinmConfig(v=8, vector_sparsity=0.0)
+    with pytest.raises(AssertionError):
+        pack(np.zeros((12, 16), np.float32), np.zeros((12, 16), np.float32), cfg)

@@ -1,0 +1,33 @@
+//! Bench: regenerate Figure 5 (latency overhead of gyro-permutation).
+//!
+//! Measures the Rust CPU HiNM SpMM with identity vs gyro-permuted vector
+//! indices on BERT FFN shapes across sparsity ratios {50, 62.5, 75, 87.5}%
+//! and vector sizes, plus the modeled RTX-3090 numbers (swizzle arm, dense
+//! baseline, Tetris index-translation arm). `HINM_BENCH_SCALE=full` runs
+//! the paper's [3072, 768] GEMM; default runs it full too (this bench is
+//! cheap relative to the sweeps).
+
+use hinm::eval::fig5;
+
+fn main() {
+    let full = std::env::var("HINM_BENCH_SCALE").map(|s| s != "tiny").unwrap_or(true);
+    println!("== fig5_latency (full={full}) ==\n");
+    let t0 = std::time::Instant::now();
+    let rows = fig5::run(full, 7);
+    println!("{}", fig5::render(&rows));
+    println!("wall: {:.1}s", t0.elapsed().as_secs_f64());
+
+    // The paper's claim: no detectable overhead from runtime permutation.
+    let mut overheads: Vec<f64> = rows.iter().map(|r| r.overhead_pct()).collect();
+    overheads.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = overheads[overheads.len() / 2];
+    println!(
+        "\nmedian measured permutation overhead: {median:+.2}% (paper: none detectable)"
+    );
+    assert!(median.abs() < 10.0, "measured overhead should be noise, got {median}%");
+    // Modeled overhead is exactly zero by construction; Tetris pays extra.
+    for r in &rows {
+        assert!(r.gpu_tetris_us > r.gpu_model_us, "Tetris translation must cost extra");
+    }
+    println!("shape checks: overhead ≈ 0, Tetris pays an extra gather pass ✓");
+}

@@ -1,0 +1,60 @@
+//! Bench: regenerate Figures 3 & 4 (one-shot pruning sweeps, ResNet-18/50).
+//!
+//! Scale via `HINM_BENCH_SCALE` (full | quarter | tiny; default quarter —
+//! full ResNet-50 OCP sweeps take tens of minutes, see DESIGN.md §8).
+//! Output: the paper's table layout + the headline permutation gains.
+
+use hinm::eval::common::EvalScale;
+use hinm::eval::fig34;
+
+fn scale() -> EvalScale {
+    std::env::var("HINM_BENCH_SCALE")
+        .ok()
+        .and_then(|s| EvalScale::parse(&s))
+        .unwrap_or(EvalScale::Quarter)
+}
+
+fn main() {
+    let scale = scale();
+    let seed = 7;
+    println!("== oneshot_fig3_fig4 (scale {scale:?}, seed {seed}) ==\n");
+
+    let t0 = std::time::Instant::now();
+    let rows3 = fig34::fig3(scale, seed);
+    println!("{}", fig34::render(&rows3, "Fig. 3 — ResNet18 one-shot"));
+    println!(
+        "permutation gain (HiNM − NoPerm) @75%: {:+.4}   [paper: +5.12% top-1]",
+        fig34::permutation_gain_at(&rows3, 75)
+    );
+    println!("fig3 wall: {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let t1 = std::time::Instant::now();
+    let rows4 = fig34::fig4(scale, seed);
+    println!("{}", fig34::render(&rows4, "Fig. 4 — ResNet50 one-shot"));
+    println!(
+        "permutation gain (HiNM − NoPerm) @75%: {:+.4}   [paper: +3.62% top-1]",
+        fig34::permutation_gain_at(&rows4, 75)
+    );
+    println!("fig4 wall: {:.1}s", t1.elapsed().as_secs_f64());
+
+    // Shape assertions (the claims the paper's figures make).
+    for (rows, name) in [(&rows3, "fig3"), (&rows4, "fig4")] {
+        for s in [65usize, 75, 85] {
+            let get = |arm| {
+                rows.iter()
+                    .find(|r| r.arm == arm && r.sparsity_pct == s)
+                    .unwrap()
+                    .retention
+            };
+            assert!(
+                get(hinm::eval::MethodArm::HinmGyro) > get(hinm::eval::MethodArm::HinmNoPerm),
+                "{name} s={s}: HiNM must beat NoPerm"
+            );
+            assert!(
+                get(hinm::eval::MethodArm::HinmGyro) > get(hinm::eval::MethodArm::Ovw),
+                "{name} s={s}: HiNM must beat OVW"
+            );
+        }
+    }
+    println!("\nshape checks: HiNM > NoPerm and HiNM > OVW at 65/75/85% ✓");
+}

@@ -1,0 +1,75 @@
+//! Bench: gyro-permutation cost scaling — OCP and ICP wall-time vs layer
+//! size, plus the retention-vs-iterations tradeoff (the "learning rate"
+//! schedule study backing DESIGN.md §7).
+
+use hinm::models::SyntheticGen;
+use hinm::permute::{gyro_icp, gyro_ocp, IcpParams, OcpParams};
+use hinm::sparsity::vector_prune::vector_prune;
+use hinm::sparsity::HinmConfig;
+use hinm::util::bench::Table;
+use hinm::util::rng::Xoshiro256;
+
+fn main() {
+    println!("== permute_scaling ==\n");
+    let mut rng = Xoshiro256::new(7);
+
+    // --- OCP scaling over output-channel count ---
+    let mut ocp_table = Table::new(&["m×n", "V", "iters", "accepted", "retention gain", "wall ms"]);
+    for &(m, n) in &[(128usize, 256usize), (512, 1152), (1024, 2304), (2048, 1024)] {
+        let w = SyntheticGen::default().weights(m, n, &mut rng);
+        let sal = w.abs();
+        let cfg = HinmConfig::with_24(32, 0.5);
+        let before = hinm::sparsity::vector_prune::vector_retained(&sal, &cfg);
+        let t0 = std::time::Instant::now();
+        let res = gyro_ocp(&sal, &cfg, &OcpParams { max_iters: 24, patience: 8, ..Default::default() });
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let after = hinm::sparsity::vector_prune::vector_retained(&sal.permute_rows(&res.perm), &cfg);
+        ocp_table.row(vec![
+            format!("{m}×{n}"),
+            "32".into(),
+            res.iters_run.to_string(),
+            res.accepted.to_string(),
+            format!("{:+.3}%", (after / before - 1.0) * 100.0),
+            format!("{wall:.0}"),
+        ]);
+    }
+    println!("OCP scaling:");
+    ocp_table.print();
+
+    // --- ICP scaling over kept-column count ---
+    let mut icp_table = Table::new(&["K_v", "partitions", "iters", "retention gain", "wall ms"]);
+    let cfg = HinmConfig::with_24(32, 0.5);
+    for &n in &[256usize, 768, 2304] {
+        let w = SyntheticGen::default().weights(32, n, &mut rng);
+        let sal = w.abs();
+        let vp = vector_prune(&sal, &cfg);
+        let k_v = vp.kept[0].len();
+        let cols: Vec<Vec<f32>> = (0..k_v)
+            .map(|j| (0..32).map(|r| sal.at(r, vp.kept[0][j])).collect())
+            .collect();
+        let before = hinm::permute::icp::icp_objective(&cols, &(0..k_v).collect::<Vec<_>>(), 32, &cfg);
+        let t0 = std::time::Instant::now();
+        let res = gyro_icp(&cols, 32, &cfg, &IcpParams::default());
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        icp_table.row(vec![
+            k_v.to_string(),
+            (k_v / 4).to_string(),
+            res.iters_run.to_string(),
+            format!("{:+.3}%", (res.retained / before - 1.0) * 100.0),
+            format!("{wall:.1}"),
+        ]);
+    }
+    println!("\nICP scaling (single tile, V=32):");
+    icp_table.print();
+
+    // --- Sampling-schedule ablation: fixed k=1 vs annealed ladder ---
+    // (the paper's argument for varying the sample count)
+    let w = SyntheticGen::default().weights(256, 512, &mut rng);
+    let sal = w.abs();
+    let cfg = HinmConfig::with_24(32, 0.5);
+    let annealed = gyro_ocp(&sal, &cfg, &OcpParams { max_iters: 32, patience: 32, ..Default::default() });
+    println!(
+        "\nsampling schedule: annealed ladder reached {:.1} (accepted {} of {} iters)",
+        annealed.retained, annealed.accepted, annealed.iters_run
+    );
+}

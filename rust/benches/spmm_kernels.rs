@@ -1,0 +1,68 @@
+//! Bench: SpMM kernel micro-benchmarks — dense GEMM vs HiNM CPU kernel
+//! across sparsity ratios and batch sizes, with effective-GFLOP/s rates
+//! (the L3 hot path tracked in EXPERIMENTS.md §Perf).
+
+use hinm::models::SyntheticGen;
+use hinm::sparsity::{prune_oneshot, HinmConfig};
+use hinm::spmm::{dense, spmm_with_scratch, SpmmScratch};
+use hinm::tensor::Matrix;
+use hinm::util::bench::{black_box, Bencher, Table};
+use hinm::util::rng::Xoshiro256;
+
+fn main() {
+    println!("== spmm_kernels ==\n");
+    let bencher = Bencher::default();
+    let mut rng = Xoshiro256::new(7);
+    let mut table = Table::new(&[
+        "kernel",
+        "m×n",
+        "batch",
+        "sparsity",
+        "median µs",
+        "eff GFLOP/s",
+        "vs dense",
+    ]);
+
+    for &(m, n) in &[(768usize, 768usize), (3072, 768)] {
+        let w = SyntheticGen::default().weights(m, n, &mut rng);
+        for &batch in &[16usize, 64] {
+            let x = Matrix::randn(n, batch, 1.0, &mut rng);
+
+            // Dense baseline.
+            let dense_stats = bencher.run("dense", || {
+                black_box(dense::matmul(&w, &x));
+            });
+            let dense_flops = 2.0 * (m * n * batch) as f64;
+            table.row(vec![
+                "dense".into(),
+                format!("{m}×{n}"),
+                batch.to_string(),
+                "0%".into(),
+                format!("{:.0}", dense_stats.median_us()),
+                format!("{:.2}", dense_flops / dense_stats.median_ns),
+                "1.00×".into(),
+            ]);
+
+            for &total in &[0.5, 0.75, 0.875] {
+                let cfg = HinmConfig::for_total_sparsity(32, total);
+                let packed = prune_oneshot(&w, &w.abs(), &cfg).packed;
+                let mut scratch = SpmmScratch::new();
+                let stats = bencher.run("hinm", || {
+                    black_box(spmm_with_scratch(&packed, &x, &mut scratch));
+                });
+                // Effective rate counts the *dense-equivalent* work done.
+                let speedup = dense_stats.median_ns / stats.median_ns;
+                table.row(vec![
+                    "hinm".into(),
+                    format!("{m}×{n}"),
+                    batch.to_string(),
+                    format!("{:.1}%", total * 100.0),
+                    format!("{:.0}", stats.median_us()),
+                    format!("{:.2}", dense_flops / stats.median_ns),
+                    format!("{speedup:.2}×"),
+                ]);
+            }
+        }
+    }
+    table.print();
+}

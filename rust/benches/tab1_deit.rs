@@ -1,0 +1,31 @@
+//! Bench: regenerate Table 1 (DeiT-base one-shot, second-order saliency).
+//! Scale via `HINM_BENCH_SCALE` (default quarter).
+
+use hinm::eval::common::EvalScale;
+use hinm::eval::tab1;
+use hinm::eval::MethodArm;
+
+fn main() {
+    let scale = std::env::var("HINM_BENCH_SCALE")
+        .ok()
+        .and_then(|s| EvalScale::parse(&s))
+        .unwrap_or(EvalScale::Quarter);
+    println!("== tab1_deit (scale {scale:?}) ==\n");
+    let t0 = std::time::Instant::now();
+    let rows = tab1::tab1(scale, 7);
+    println!("{}", tab1::render(&rows));
+    println!("wall: {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Paper shape: HiNM > HiNM-NoPerm everywhere; gap to the element-wise
+    // bound (CAP stand-in) stays small at 65/75%.
+    for s in tab1::SPARSITIES_PCT {
+        let get = |arm| {
+            rows.iter()
+                .find(|r| r.arm == arm && r.sparsity_pct == s)
+                .unwrap()
+                .retention
+        };
+        assert!(get(MethodArm::HinmGyro) > get(MethodArm::HinmNoPerm), "s={s}");
+    }
+    println!("shape checks: HiNM > NoPerm at 65/75/85% ✓");
+}

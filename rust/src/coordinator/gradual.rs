@@ -1,0 +1,144 @@
+//! Gradual-pruning orchestrator (paper §5.1.2): drives the cubic
+//! vector-sparsity ramp → N:M activation schedule across a model's layers,
+//! re-running gyro-permutation at every mask update and (optionally)
+//! interleaving fine-tune steps through the [`super::trainer::LmTrainer`].
+//!
+//! This is the coordinator-level counterpart of `eval::tab2` (which scores
+//! the schedule on synthetic layers): here the schedule runs against *live*
+//! model parameters and masks.
+
+use super::trainer::{Corpus, LmTrainer};
+use crate::permute::{gyro_permute_and_prune, GyroParams};
+use crate::sparsity::hinm::{gradual_schedule, prune_oneshot, step_config, GradualStep};
+use crate::sparsity::HinmConfig;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct GradualConfig {
+    /// Target HiNM config at the end of the schedule.
+    pub target: HinmConfig,
+    /// Steps spent ramping the vector level before N:M activates.
+    pub vector_steps: usize,
+    /// Total schedule steps.
+    pub total_steps: usize,
+    /// Fine-tune SGD steps between mask updates.
+    pub ft_steps_per_stage: usize,
+    pub ft_lr: f32,
+    /// Use gyro-permutation at each mask update (false = VENOM-style).
+    pub permute: bool,
+    pub gyro: GyroParams,
+}
+
+impl GradualConfig {
+    pub fn new(target: HinmConfig) -> Self {
+        Self {
+            target,
+            vector_steps: 3,
+            total_steps: 5,
+            ft_steps_per_stage: 20,
+            ft_lr: 0.2,
+            permute: true,
+            gyro: GyroParams::default(),
+        }
+    }
+}
+
+/// Per-stage record of a gradual run.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub step: GradualStep,
+    /// Weighted retention across pruned tensors at this stage.
+    pub retention: f64,
+    /// Held-out loss after this stage's fine-tuning (if a trainer ran).
+    pub loss: Option<f32>,
+}
+
+/// Run the gradual schedule against a live [`LmTrainer`]: at each stage,
+/// recompute masks on the *current* weights at the stage's sparsity,
+/// install them, and fine-tune. Returns the stage-by-stage report.
+pub fn run_gradual_lm(
+    trainer: &mut LmTrainer,
+    corpus: &mut Corpus,
+    heldout: &mut Corpus,
+    cfg: &GradualConfig,
+) -> Result<Vec<StageReport>> {
+    let steps = gradual_schedule(cfg.target.vector_sparsity, cfg.vector_steps, cfg.total_steps);
+    let names = trainer.mnames.clone();
+    let (b, s) = (trainer.batch, trainer.seq);
+    let mut reports = Vec::with_capacity(steps.len());
+
+    for stage in &steps {
+        let stage_cfg = step_config(&cfg.target, stage);
+        let mut retained = 0.0f64;
+        let mut total = 0.0f64;
+
+        // Dense warmup stages (no sparsity yet): skip mask updates.
+        let active = stage_cfg.vector_sparsity > 0.0 || stage.nm_active;
+        if active {
+            for name in &names {
+                let w = trainer.param_matrix(name)?;
+                let sal = w.abs();
+                let result = if cfg.permute {
+                    gyro_permute_and_prune(
+                        &w,
+                        &sal,
+                        &stage_cfg,
+                        &GyroParams { skip_ocp: true, ..cfg.gyro.clone() },
+                    )
+                    .result
+                } else {
+                    prune_oneshot(&w, &sal, &stage_cfg)
+                };
+                retained += result.retained;
+                total += sal.l1();
+                trainer.set_param(name, &result.mask.apply(&w))?;
+                trainer.set_mask(name, &result.mask)?;
+            }
+        } else {
+            total = 1.0;
+            retained = 1.0;
+        }
+
+        // Fine-tune under the new masks.
+        for _ in 0..cfg.ft_steps_per_stage {
+            let (toks, tgts) = corpus.batch(b, s);
+            trainer.step(&toks, &tgts, cfg.ft_lr)?;
+        }
+        let (toks, tgts) = heldout.batch(b, s);
+        let loss = trainer.eval_loss(&toks, &tgts)?;
+
+        reports.push(StageReport {
+            step: *stage,
+            retention: retained / total,
+            loss: Some(loss),
+        });
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_ramp_reaches_target() {
+        let cfg = GradualConfig::new(HinmConfig::for_total_sparsity(32, 0.75));
+        let steps = gradual_schedule(cfg.target.vector_sparsity, cfg.vector_steps, cfg.total_steps);
+        assert_eq!(steps.len(), 5);
+        let last = steps.last().unwrap();
+        assert!(last.nm_active);
+        assert!((last.vector_sparsity - 0.5).abs() < 1e-9);
+        // Effective sparsity at the last stage equals the target.
+        let final_cfg = step_config(&cfg.target, last);
+        assert!((final_cfg.total_sparsity() - 0.75).abs() < 1e-9);
+    }
+
+    // Live-trainer behaviour is covered by rust/tests/gradual_integration.rs
+    // (needs artifacts); here we check the config surface.
+    #[test]
+    fn config_defaults_sane() {
+        let cfg = GradualConfig::new(HinmConfig::with_24(32, 0.5));
+        assert!(cfg.permute);
+        assert!(cfg.vector_steps < cfg.total_steps);
+    }
+}

@@ -1,0 +1,114 @@
+//! Request latency metrics (p50/p95/p99) and simple counters for the
+//! serving path and the fine-tune driver.
+
+use std::time::Duration;
+
+/// Records request latencies; percentile queries sort on demand.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0)
+        )
+    }
+}
+
+/// Throughput meter: items per second over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: std::time::Instant,
+    items: usize,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { start: std::time::Instant::now(), items: 0 }
+    }
+    pub fn add(&mut self, n: usize) {
+        self.items += n;
+    }
+    pub fn per_sec(&self) -> f64 {
+        self.items as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+    pub fn items(&self) -> usize {
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut r = LatencyRecorder::new();
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
+            r.record(Duration::from_micros(us));
+        }
+        assert_eq!(r.count(), 10);
+        assert!(r.percentile(50.0) <= r.percentile(95.0));
+        assert!(r.percentile(95.0) <= r.percentile(99.0));
+        assert!((r.mean() - 550.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_recorder_safe() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.percentile(99.0), 0.0);
+        assert_eq!(r.mean(), 0.0);
+        assert!(r.summary().contains("n=0"));
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.items(), 15);
+        assert!(t.per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator: the compression pipeline (prune → permute → pack), the
+//! batched inference server over PJRT, the Rust-driven fine-tune trainer,
+//! and request metrics.
+
+pub mod gradual;
+pub mod metrics;
+pub mod pipeline;
+pub mod serve;
+pub mod trainer;
+
+pub use pipeline::{compress_layer, run_pipeline, LayerJob, Method, PipelineConfig};
+pub use serve::{BatchServer, ServeConfig};
+pub use trainer::{Corpus, LmTrainer};

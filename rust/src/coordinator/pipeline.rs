@@ -1,0 +1,286 @@
+//! The offline compression pipeline — L3's production entry point.
+//!
+//! Takes a set of named layers (dense weights + saliency), a method and a
+//! sparsity target, and compresses every layer in parallel across worker
+//! threads (std::thread — the offline environment has no tokio; compression
+//! is CPU-bound so a thread pool is the right tool anyway).
+
+use crate::permute::baselines::apex::{apex_icp, ApexParams};
+use crate::permute::baselines::ovw::ovw_ocp;
+use crate::permute::{gyro_permute_and_prune, GyroParams};
+use crate::saliency::Saliency;
+use crate::sparsity::hinm::{prune_oneshot, prune_with_kept};
+use crate::sparsity::vector_prune::vector_prune;
+use crate::sparsity::{HinmConfig, HinmResult};
+use crate::tensor::Matrix;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Which permutation strategy to run before HiNM pruning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Gyro OCP + gyro ICP (the paper's method).
+    HinmGyro,
+    /// No permutation at all (paper's HiNM-NoPerm arm).
+    HinmNoPerm,
+    /// Ablation V1: OVW balanced-K-means OCP + gyro ICP (Table 3).
+    HinmV1,
+    /// Ablation V2: gyro OCP + Apex swap ICP (Table 3).
+    HinmV2,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "gyro" | "hinm" => Some(Method::HinmGyro),
+            "noperm" => Some(Method::HinmNoPerm),
+            "v1" | "hinm-v1" => Some(Method::HinmV1),
+            "v2" | "hinm-v2" => Some(Method::HinmV2),
+            _ => None,
+        }
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::HinmGyro => "HiNM",
+            Method::HinmNoPerm => "HiNM-NoPerm",
+            Method::HinmV1 => "HiNM-V1",
+            Method::HinmV2 => "HiNM-V2",
+        }
+    }
+}
+
+/// A layer queued for compression.
+#[derive(Clone, Debug)]
+pub struct LayerJob {
+    pub name: String,
+    pub weights: Matrix,
+    pub saliency: Matrix,
+}
+
+impl LayerJob {
+    pub fn from_saliency<S: Saliency>(name: &str, w: Matrix, estimator: &S) -> Self {
+        let saliency = estimator.score(&w);
+        Self { name: name.to_string(), weights: w, saliency }
+    }
+}
+
+/// Compression output for one layer.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    pub name: String,
+    pub result: HinmResult,
+    pub ocp_perm: Vec<usize>,
+    pub elapsed_ms: f64,
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub cfg: HinmConfig,
+    pub method: Method,
+    pub gyro: GyroParams,
+    /// Worker threads (0 = available parallelism).
+    pub workers: usize,
+}
+
+impl PipelineConfig {
+    pub fn new(cfg: HinmConfig, method: Method) -> Self {
+        Self { cfg, method, gyro: GyroParams::default(), workers: 0 }
+    }
+}
+
+/// Compress one layer with the configured method.
+pub fn compress_layer(job: &LayerJob, pc: &PipelineConfig) -> CompressedLayer {
+    let t0 = std::time::Instant::now();
+    let cfg = &pc.cfg;
+    let (result, ocp_perm) = match pc.method {
+        Method::HinmGyro => {
+            let out = gyro_permute_and_prune(&job.weights, &job.saliency, cfg, &pc.gyro);
+            (out.result, out.ocp_perm)
+        }
+        Method::HinmNoPerm => {
+            let res = prune_oneshot(&job.weights, &job.saliency, cfg);
+            (res, (0..job.weights.rows).collect())
+        }
+        Method::HinmV1 => {
+            // OVW K-means OCP, then gyro ICP via the gyro driver with OCP skipped.
+            let perm = ovw_ocp(&job.saliency, cfg, pc.gyro.ocp.seed);
+            let w = job.weights.permute_rows(&perm);
+            let s = job.saliency.permute_rows(&perm);
+            let out = gyro_permute_and_prune(
+                &w,
+                &s,
+                cfg,
+                &GyroParams { skip_ocp: true, ..pc.gyro.clone() },
+            );
+            (out.result, perm)
+        }
+        Method::HinmV2 => {
+            // Gyro OCP, then Apex swap-based ICP.
+            let ocp = crate::permute::gyro_ocp(&job.saliency, cfg, &pc.gyro.ocp);
+            let w = job.weights.permute_rows(&ocp.perm);
+            let s = job.saliency.permute_rows(&ocp.perm);
+            let vp = vector_prune(&s, cfg);
+            let k_v = vp.kept[0].len();
+            let tiles = cfg.tiles(w.rows);
+            let mut orders = Vec::with_capacity(tiles);
+            let mut buf = vec![0.0f32; cfg.v * k_v];
+            for t in 0..tiles {
+                crate::sparsity::hinm::gather_tile(&s, cfg, t, &vp.kept[t], &mut buf);
+                let cols: Vec<Vec<f32>> = (0..k_v)
+                    .map(|j| (0..cfg.v).map(|r| buf[r * k_v + j]).collect())
+                    .collect();
+                let (order, _) = apex_icp(&cols, cfg.v, cfg, &ApexParams::default());
+                orders.push(order);
+            }
+            let res = prune_with_kept(&w, &s, cfg, &vp, Some(&orders));
+            (res, ocp.perm)
+        }
+    };
+    CompressedLayer {
+        name: job.name.clone(),
+        result,
+        ocp_perm,
+        elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// Compress many layers in parallel. Results return in input order.
+pub fn run_pipeline(jobs: Vec<LayerJob>, pc: &PipelineConfig) -> Result<Vec<CompressedLayer>> {
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = if pc.workers > 0 {
+        pc.workers
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    }
+    .min(n);
+
+    let jobs = Arc::new(jobs);
+    let pc = Arc::new(pc.clone());
+    let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<(usize, CompressedLayer)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let jobs = Arc::clone(&jobs);
+            let pc = Arc::clone(&pc);
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let out = compress_layer(&jobs[i], &pc);
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut results: Vec<Option<CompressedLayer>> = (0..n).map(|_| None).collect();
+        for (i, out) in rx {
+            results[i] = Some(out);
+        }
+        Ok(results.into_iter().map(|r| r.expect("worker died")).collect())
+    })
+}
+
+/// Aggregate retention ratio across layers, weighted by parameter count.
+pub fn weighted_retention(layers: &[CompressedLayer], jobs: &[LayerJob]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (l, j) in layers.iter().zip(jobs) {
+        let w = (j.weights.rows * j.weights.cols) as f64;
+        num += l.result.retention_ratio * w;
+        den += w;
+    }
+    num / den.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::SyntheticGen;
+    use crate::saliency::Magnitude;
+    use crate::util::rng::Xoshiro256;
+
+    fn jobs(n: usize, seed: u64) -> Vec<LayerJob> {
+        let mut rng = Xoshiro256::new(seed);
+        let gen = SyntheticGen::default();
+        (0..n)
+            .map(|i| {
+                let w = gen.weights(32, 64, &mut rng);
+                LayerJob::from_saliency(&format!("layer{i}"), w, &Magnitude)
+            })
+            .collect()
+    }
+
+    fn pc(method: Method) -> PipelineConfig {
+        PipelineConfig::new(HinmConfig::with_24(8, 0.5), method)
+    }
+
+    #[test]
+    fn pipeline_preserves_order_and_names() {
+        let js = jobs(5, 100);
+        let out = run_pipeline(js.clone(), &pc(Method::HinmNoPerm)).unwrap();
+        assert_eq!(out.len(), 5);
+        for (i, l) in out.iter().enumerate() {
+            assert_eq!(l.name, format!("layer{i}"));
+            l.result.packed.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let js = jobs(4, 101);
+        let mut cfg1 = pc(Method::HinmGyro);
+        cfg1.workers = 1;
+        let mut cfg4 = pc(Method::HinmGyro);
+        cfg4.workers = 4;
+        let a = run_pipeline(js.clone(), &cfg1).unwrap();
+        let b = run_pipeline(js, &cfg4).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.result.packed, y.result.packed, "{}", x.name);
+        }
+    }
+
+    #[test]
+    fn gyro_beats_noperm_across_methods() {
+        let js = jobs(3, 102);
+        let gyro = run_pipeline(js.clone(), &pc(Method::HinmGyro)).unwrap();
+        let noperm = run_pipeline(js.clone(), &pc(Method::HinmNoPerm)).unwrap();
+        let rg = weighted_retention(&gyro, &js);
+        let rn = weighted_retention(&noperm, &js);
+        assert!(rg > rn, "gyro {rg} vs noperm {rn}");
+    }
+
+    #[test]
+    fn all_methods_produce_valid_output() {
+        let js = jobs(2, 103);
+        for m in [Method::HinmGyro, Method::HinmNoPerm, Method::HinmV1, Method::HinmV2] {
+            let out = run_pipeline(js.clone(), &pc(m)).unwrap();
+            for l in &out {
+                l.result.packed.check_invariants().unwrap();
+                assert!(crate::tensor::is_permutation(&l.ocp_perm, 32));
+                assert!((l.result.mask.sparsity() - 0.75).abs() < 0.02, "{m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_pipeline_ok() {
+        assert!(run_pipeline(vec![], &pc(Method::HinmGyro)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("gyro"), Some(Method::HinmGyro));
+        assert_eq!(Method::parse("v2"), Some(Method::HinmV2));
+        assert_eq!(Method::parse("bogus"), None);
+    }
+}

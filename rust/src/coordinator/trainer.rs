@@ -1,0 +1,268 @@
+//! Fine-tune driver: runs the AOT-lowered masked train steps from Rust.
+//!
+//! The train step (fwd + bwd + masked SGD) was lowered once by
+//! `python/compile/aot.py`; this module feeds parameter literals through it
+//! in a loop — training runs on the request path with Python out of the
+//! process entirely.
+
+use crate::runtime::executor::{lit_f32, lit_from_npy, lit_i32, lit_scalar, Executor};
+use crate::runtime::registry::Registry;
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+/// Trainer for the small transformer LM artifact set
+/// (`lm_train_step` / `lm_loss` / `lm_fwd`).
+pub struct LmTrainer {
+    step_exe: Executor,
+    loss_exe: Executor,
+    /// Parameters, ordered as `manifest.meta.lm_param_names`.
+    params: Vec<Literal>,
+    /// Masks, ordered as `manifest.meta.lm_mask_names` (all-ones = dense).
+    masks: Vec<Literal>,
+    pub pnames: Vec<String>,
+    pub mnames: Vec<String>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub losses: Vec<f32>,
+}
+
+impl LmTrainer {
+    pub fn new(reg: &Registry) -> Result<LmTrainer> {
+        let step_spec = reg.artifact("lm_train_step")?;
+        let loss_spec = reg.artifact("lm_loss")?;
+        let step_exe = Executor::load(step_spec)?;
+        let loss_exe = Executor::load(loss_spec)?;
+        let pnames = reg.lm_param_names.clone();
+        let mnames = reg.lm_mask_names.clone();
+        if pnames.is_empty() {
+            bail!("manifest lacks lm_param_names");
+        }
+        // Initial params from the npy dumps.
+        let mut params = Vec::with_capacity(pnames.len());
+        for n in &pnames {
+            let arr = reg.load_data(&format!("lm_{}", n.replace('.', "_")))?;
+            params.push(lit_from_npy(&arr)?);
+        }
+        // All-ones masks matching each pruned tensor's manifest spec.
+        let mut masks = Vec::with_capacity(mnames.len());
+        for n in &mnames {
+            let spec = step_spec
+                .inputs
+                .iter()
+                .find(|s| s.name == format!("mask.{n}"))
+                .with_context(|| format!("mask input for {n} missing"))?;
+            masks.push(lit_f32(&vec![1.0; spec.elements()], &spec.shape)?);
+        }
+        let meta = &step_spec.meta;
+        Ok(LmTrainer {
+            step_exe,
+            loss_exe,
+            params,
+            masks,
+            pnames,
+            mnames,
+            batch: meta["batch"] as usize,
+            seq: meta["seq"] as usize,
+            vocab: meta["vocab"] as usize,
+            losses: Vec::new(),
+        })
+    }
+
+    /// Fetch a parameter as a host matrix (rank-1 params come back as 1×n).
+    pub fn param_matrix(&self, name: &str) -> Result<Matrix> {
+        let i = self.pindex(name)?;
+        let lit = &self.params[i];
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        let (r, c) = match dims.as_slice() {
+            [r, c] => (*r, *c),
+            [n] => (1, *n),
+            s => bail!("param {name} has rank {} (dims {s:?})", s.len()),
+        };
+        Ok(Matrix::from_vec(r, c, data))
+    }
+
+    /// Overwrite a parameter (e.g. with its pruned version).
+    pub fn set_param(&mut self, name: &str, m: &Matrix) -> Result<()> {
+        let i = self.pindex(name)?;
+        let shape = self.params[i].array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let want: usize = dims.iter().product();
+        if want != m.data.len() {
+            bail!("set_param {name}: {} elements vs expected {want}", m.data.len());
+        }
+        self.params[i] = lit_f32(&m.data, &dims)?;
+        Ok(())
+    }
+
+    /// Set a pruning mask from a [`crate::sparsity::Mask`].
+    pub fn set_mask(&mut self, name: &str, mask: &crate::sparsity::Mask) -> Result<()> {
+        let i = self
+            .mnames
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("unknown mask {name}"))?;
+        let m = mask.as_matrix();
+        self.masks[i] = lit_f32(&m.data, &[m.rows, m.cols])?;
+        Ok(())
+    }
+
+    fn pindex(&self, name: &str) -> Result<usize> {
+        self.pnames
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("unknown param {name}"))
+    }
+
+    /// One masked-SGD step. Updates params in place, returns the loss.
+    pub fn step(&mut self, tokens: &[i32], targets: &[i32], lr: f32) -> Result<f32> {
+        let b = self.batch;
+        let s = self.seq;
+        anyhow::ensure!(tokens.len() == b * s && targets.len() == b * s, "bad batch shape");
+        let mut inputs: Vec<Literal> = Vec::with_capacity(self.params.len() + self.masks.len() + 3);
+        inputs.append(&mut self.params);
+        inputs.extend(self.masks.iter().map(clone_lit).collect::<Result<Vec<_>>>()?);
+        inputs.push(lit_i32(tokens, &[b, s])?);
+        inputs.push(lit_i32(targets, &[b, s])?);
+        inputs.push(lit_scalar(lr));
+        let mut outs = self.step_exe.run(&inputs)?;
+        let loss_lit = outs.pop().context("missing loss output")?;
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        self.params = outs;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Gradients of the loss w.r.t. the pruned matrices (one batch), in
+    /// `mnames` order — the evidence for second-order (diagonal-Fisher)
+    /// saliency, estimated entirely from Rust through the `lm_grad`
+    /// artifact.
+    pub fn grad_matrices(
+        &self,
+        reg: &Registry,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<Vec<Matrix>> {
+        let spec = reg.artifact("lm_grad")?;
+        let exe = Executor::load(spec)?;
+        let b = self.batch;
+        let s = self.seq;
+        let mut inputs: Vec<Literal> =
+            self.params.iter().map(clone_lit).collect::<Result<Vec<_>>>()?;
+        inputs.push(lit_i32(tokens, &[b, s])?);
+        inputs.push(lit_i32(targets, &[b, s])?);
+        let outs = exe.run(&inputs)?;
+        let mut grads = Vec::with_capacity(outs.len());
+        for lit in &outs {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>()?;
+            grads.push(Matrix::from_vec(dims[0], dims[1], data));
+        }
+        Ok(grads)
+    }
+
+    /// Evaluation loss on one batch (no update).
+    pub fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let b = self.batch;
+        let s = self.seq;
+        let mut inputs: Vec<Literal> =
+            self.params.iter().map(clone_lit).collect::<Result<Vec<_>>>()?;
+        inputs.push(lit_i32(tokens, &[b, s])?);
+        inputs.push(lit_i32(targets, &[b, s])?);
+        let outs = self.loss_exe.run(&inputs)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+}
+
+fn clone_lit(l: &Literal) -> Result<Literal> {
+    use xla::ElementType;
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match l.ty()? {
+        ElementType::F32 => lit_f32(&l.to_vec::<f32>()?, &dims),
+        ElementType::S32 => lit_i32(&l.to_vec::<i32>()?, &dims),
+        t => bail!("unsupported literal type {t:?}"),
+    }
+}
+
+/// Synthetic corpus for the LM: a noisy affine token chain
+/// `t_{i+1} = (a·t_i + c) mod V` with flip noise — structured enough that a
+/// small LM reaches well below the uniform baseline, random enough that it
+/// cannot memorize trivially.
+pub struct Corpus {
+    pub vocab: usize,
+    pub noise: f32,
+    rng: crate::util::rng::Xoshiro256,
+}
+
+impl Corpus {
+    pub fn new(vocab: usize, noise: f32, seed: u64) -> Self {
+        Self { vocab, noise, rng: crate::util::rng::Xoshiro256::new(seed) }
+    }
+
+    /// Sample a (tokens, targets) batch of shape `[batch, seq]` flattened.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let v = self.vocab as i64;
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut tgts = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let mut t = self.rng.below(self.vocab) as i64;
+            let mut row = Vec::with_capacity(seq + 1);
+            row.push(t);
+            for _ in 0..seq {
+                t = if self.rng.next_f32() < self.noise {
+                    self.rng.below(self.vocab) as i64
+                } else {
+                    (3 * t + 7) % v
+                };
+                row.push(t);
+            }
+            toks.extend(row[..seq].iter().map(|&x| x as i32));
+            tgts.extend(row[1..seq + 1].iter().map(|&x| x as i32));
+        }
+        (toks, tgts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shapes_and_determinism() {
+        let mut c1 = Corpus::new(64, 0.1, 5);
+        let mut c2 = Corpus::new(64, 0.1, 5);
+        let (t1, g1) = c1.batch(4, 8);
+        let (t2, g2) = c2.batch(4, 8);
+        assert_eq!(t1.len(), 32);
+        assert_eq!((&t1, &g1), (&t2, &g2));
+        assert!(t1.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_targets_shifted() {
+        let mut c = Corpus::new(64, 0.0, 9);
+        let (toks, tgts) = c.batch(1, 16);
+        // noise=0 → strictly t_{i+1} = (3 t_i + 7) % 64; targets are the
+        // next-token shift of tokens.
+        for i in 0..15 {
+            assert_eq!(tgts[i], toks[i + 1]);
+            assert_eq!(toks[i + 1] as i64, (3 * toks[i] as i64 + 7) % 64);
+        }
+    }
+
+    #[test]
+    fn corpus_noise_injects_randomness() {
+        let mut c = Corpus::new(64, 1.0, 11);
+        let (toks, _) = c.batch(1, 64);
+        let breaks = toks
+            .windows(2)
+            .filter(|w| w[1] as i64 != (3 * w[0] as i64 + 7) % 64)
+            .count();
+        assert!(breaks > 32, "full noise should break the chain often, got {breaks}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Shared evaluation machinery: per-model retention sweeps over pruning
+//! arms, the accuracy surrogate, and result-table plumbing.
+//!
+//! Accuracy surrogate (DESIGN.md §2): the drivers report the **retained
+//! saliency ratio** `‖M⊙ρ‖₁/‖ρ‖₁` — the exact quantity the permutation
+//! objective (Eq. 1) maximizes — aggregated across layers weighted by
+//! parameter count. The paper's accuracy *ordering* (who wins, rough gaps)
+//! must reproduce in this metric; EXPERIMENTS.md maps one to the other
+//! explicitly. Real (small-model) accuracy is measured by the e2e example.
+
+use crate::models::catalog::ModelCatalog;
+use crate::models::SyntheticGen;
+use crate::permute::baselines::ovw::ovw_retained;
+use crate::permute::{GyroParams, IcpParams, OcpParams};
+use crate::saliency::{Magnitude, Saliency, SecondOrder};
+use crate::sparsity::hinm::prune_oneshot;
+use crate::sparsity::unstructured::unstructured_retained;
+use crate::sparsity::HinmConfig;
+use crate::tensor::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// Scale factor applied to layer shapes so tests stay fast while benches run
+/// the full sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalScale {
+    /// Full paper shapes (benches, CLI).
+    Full,
+    /// Shapes divided by 4 (quick CLI runs).
+    Quarter,
+    /// Shapes divided by 8, layer count capped (unit tests).
+    Tiny,
+}
+
+impl EvalScale {
+    pub fn div(&self) -> usize {
+        match self {
+            EvalScale::Full => 1,
+            EvalScale::Quarter => 4,
+            EvalScale::Tiny => 8,
+        }
+    }
+    pub fn max_layers(&self) -> usize {
+        match self {
+            EvalScale::Full => usize::MAX,
+            EvalScale::Quarter => usize::MAX,
+            EvalScale::Tiny => 4,
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" => Some(EvalScale::Full),
+            "quarter" => Some(EvalScale::Quarter),
+            "tiny" => Some(EvalScale::Tiny),
+            _ => None,
+        }
+    }
+}
+
+/// The pruning arms evaluated in Figs. 3/4 and Tables 1/3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodArm {
+    Dense,
+    HinmGyro,
+    HinmNoPerm,
+    Ovw,
+    Unstructured,
+    HinmV1,
+    HinmV2,
+}
+
+impl MethodArm {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MethodArm::Dense => "Dense",
+            MethodArm::HinmGyro => "HiNM",
+            MethodArm::HinmNoPerm => "HiNM-NoPerm",
+            MethodArm::Ovw => "OVW",
+            MethodArm::Unstructured => "Unstructured",
+            MethodArm::HinmV1 => "HiNM-V1",
+            MethodArm::HinmV2 => "HiNM-V2",
+        }
+    }
+}
+
+/// A concrete synthetic layer instance.
+pub struct EvalLayer {
+    pub name: String,
+    pub weights: Matrix,
+    pub saliency: Matrix,
+    /// Multiplicity weight (layer repeat count × params).
+    pub weight: f64,
+}
+
+/// Materialize a catalog at a given scale with trained-like weights.
+/// `second_order` switches the saliency estimator (Tab. 1 uses it).
+pub fn materialize(
+    catalog: &ModelCatalog,
+    scale: EvalScale,
+    v: usize,
+    second_order: bool,
+    seed: u64,
+) -> Vec<EvalLayer> {
+    let div = scale.div();
+    let gen = SyntheticGen::default();
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::new();
+    for (i, l) in catalog.layers.iter().enumerate() {
+        if i >= scale.max_layers() {
+            break;
+        }
+        let rows = round_to(l.out_ch / div, v).max(v);
+        let cols = round_to(l.in_dim / div, 16).max(16);
+        let w = gen.weights(rows, cols, &mut rng);
+        let saliency: Matrix = if second_order {
+            let grads = gen.grad_samples(rows, cols, 4, &mut rng);
+            SecondOrder::from_grad_samples(&grads, 1e-8).score(&w)
+        } else {
+            Magnitude.score(&w)
+        };
+        out.push(EvalLayer {
+            name: l.name.clone(),
+            weights: w,
+            saliency,
+            weight: (l.count * rows * cols) as f64,
+        });
+    }
+    out
+}
+
+fn round_to(x: usize, k: usize) -> usize {
+    ((x + k - 1) / k) * k
+}
+
+/// Fast gyro parameters for evaluation sweeps (fewer iterations than the
+/// library defaults; the marginal retention gain beyond this is < 0.1%).
+pub fn eval_gyro_params(seed: u64) -> GyroParams {
+    GyroParams {
+        ocp: OcpParams { max_iters: 24, patience: 8, hinm_aware: false, seed },
+        icp: IcpParams { max_iters: 20, patience: 6, seed: seed ^ 0xABCD, max_partitions: 64 },
+        skip_ocp: false,
+        skip_icp: false,
+    }
+}
+
+/// Retention ratio of one arm on one layer at `total` sparsity.
+pub fn arm_retention(arm: MethodArm, layer: &EvalLayer, v: usize, total: f64, seed: u64) -> f64 {
+    let sal = &layer.saliency;
+    let total_sal = sal.l1();
+    if total_sal == 0.0 {
+        return 1.0;
+    }
+    let retained = match arm {
+        MethodArm::Dense => total_sal,
+        MethodArm::Unstructured => unstructured_retained(sal, total),
+        MethodArm::Ovw => ovw_retained(sal, v, total, seed),
+        MethodArm::HinmNoPerm => {
+            let cfg = HinmConfig::for_total_sparsity(v, total);
+            prune_oneshot(&layer.weights, sal, &cfg).retained
+        }
+        MethodArm::HinmGyro => {
+            let cfg = HinmConfig::for_total_sparsity(v, total);
+            let out = crate::permute::gyro_permute_and_prune(
+                &layer.weights,
+                sal,
+                &cfg,
+                &eval_gyro_params(seed),
+            );
+            out.result.retained
+        }
+        MethodArm::HinmV1 | MethodArm::HinmV2 => {
+            let cfg = HinmConfig::for_total_sparsity(v, total);
+            let method = if arm == MethodArm::HinmV1 {
+                crate::coordinator::Method::HinmV1
+            } else {
+                crate::coordinator::Method::HinmV2
+            };
+            let pc = crate::coordinator::PipelineConfig {
+                cfg,
+                method,
+                gyro: eval_gyro_params(seed),
+                workers: 1,
+            };
+            let job = crate::coordinator::LayerJob {
+                name: layer.name.clone(),
+                weights: layer.weights.clone(),
+                saliency: sal.clone(),
+            };
+            crate::coordinator::compress_layer(&job, &pc).result.retained
+        }
+    };
+    retained / total_sal
+}
+
+/// Weighted-average retention of an arm across a model's layers.
+pub fn model_retention(
+    arm: MethodArm,
+    layers: &[EvalLayer],
+    v: usize,
+    total: f64,
+    seed: u64,
+) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for l in layers {
+        num += arm_retention(arm, l, v, total, seed) * l.weight;
+        den += l.weight;
+    }
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::catalog::resnet18;
+
+    #[test]
+    fn materialize_respects_scale_and_v() {
+        let layers = materialize(&resnet18(), EvalScale::Tiny, 8, false, 1);
+        assert!(layers.len() <= 4);
+        for l in &layers {
+            assert_eq!(l.weights.rows % 8, 0);
+            assert!(l.weights.cols >= 16);
+            assert_eq!(l.weights.shape(), l.saliency.shape());
+        }
+    }
+
+    #[test]
+    fn arm_ordering_on_tiny_resnet() {
+        let layers = materialize(&resnet18(), EvalScale::Tiny, 8, false, 2);
+        let l = &layers[0];
+        let un = arm_retention(MethodArm::Unstructured, l, 8, 0.75, 3);
+        let gyro = arm_retention(MethodArm::HinmGyro, l, 8, 0.75, 3);
+        let noperm = arm_retention(MethodArm::HinmNoPerm, l, 8, 0.75, 3);
+        let dense = arm_retention(MethodArm::Dense, l, 8, 0.75, 3);
+        assert_eq!(dense, 1.0);
+        assert!(un <= 1.0 && un > 0.0);
+        assert!(gyro >= noperm, "gyro {gyro} vs noperm {noperm}");
+        assert!(un >= gyro * 0.98, "unstructured should upper-bound: {un} vs {gyro}");
+    }
+
+    #[test]
+    fn second_order_materialization_differs() {
+        let a = materialize(&resnet18(), EvalScale::Tiny, 8, false, 5);
+        let b = materialize(&resnet18(), EvalScale::Tiny, 8, true, 5);
+        assert_ne!(a[0].saliency, b[0].saliency);
+    }
+}

@@ -1,0 +1,126 @@
+//! Figures 3 & 4: one-shot pruning sweeps on ResNet-18/50 shapes.
+//!
+//! Paper: top-1 accuracy vs total sparsity {50, 65, 75, 85}% for arms
+//! Dense / HiNM(+gyro) / HiNM-NoPerm / OVW / Unstructured, V = 32,
+//! magnitude saliency. Here: retained-saliency ratio on the same layer
+//! shapes (see `common` for the surrogate rationale). Headline checks:
+//! HiNM > OVW > HiNM-NoPerm, HiNM ≈ Unstructured, gaps widening with
+//! sparsity.
+
+use super::common::{materialize, model_retention, EvalScale, MethodArm};
+use crate::models::catalog::{resnet18, resnet50, ModelCatalog};
+use crate::util::bench::Table;
+
+pub const SPARSITIES_PCT: [usize; 4] = [50, 65, 75, 85];
+pub const ARMS: [MethodArm; 5] = [
+    MethodArm::Dense,
+    MethodArm::HinmGyro,
+    MethodArm::HinmNoPerm,
+    MethodArm::Ovw,
+    MethodArm::Unstructured,
+];
+
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub arm: MethodArm,
+    pub sparsity_pct: usize,
+    pub retention: f64,
+}
+
+/// Run the one-shot sweep for one model catalog.
+pub fn run_model(catalog: &ModelCatalog, scale: EvalScale, v: usize, seed: u64) -> Vec<SweepRow> {
+    let layers = materialize(catalog, scale, v, false, seed);
+    let mut rows = Vec::new();
+    for &s in &SPARSITIES_PCT {
+        let total = s as f64 / 100.0;
+        for &arm in &ARMS {
+            let retention = model_retention(arm, &layers, v, total, seed ^ s as u64);
+            rows.push(SweepRow { arm, sparsity_pct: s, retention });
+        }
+    }
+    rows
+}
+
+/// Fig. 3 (ResNet-18).
+pub fn fig3(scale: EvalScale, seed: u64) -> Vec<SweepRow> {
+    let v = if scale == EvalScale::Full { 32 } else { 8 };
+    run_model(&resnet18(), scale, v, seed)
+}
+
+/// Fig. 4 (ResNet-50).
+pub fn fig4(scale: EvalScale, seed: u64) -> Vec<SweepRow> {
+    let v = if scale == EvalScale::Full { 32 } else { 8 };
+    run_model(&resnet50(), scale, v, seed)
+}
+
+/// Render the sweep as the paper's figure layout (arms × sparsities).
+pub fn render(rows: &[SweepRow], title: &str) -> String {
+    let mut t = Table::new(&["method", "s=50%", "s=65%", "s=75%", "s=85%"]);
+    for &arm in &ARMS {
+        let mut cells = vec![arm.label().to_string()];
+        for &s in &SPARSITIES_PCT {
+            let r = rows
+                .iter()
+                .find(|r| r.arm == arm && r.sparsity_pct == s)
+                .map(|r| r.retention)
+                .unwrap_or(f64::NAN);
+            cells.push(format!("{:.4}", r));
+        }
+        t.row(cells);
+    }
+    format!("# {title} — retained saliency ratio\n{}", t.render())
+}
+
+/// The paper's headline delta at 75%: gyro-permutation gain over NoPerm.
+pub fn permutation_gain_at(rows: &[SweepRow], sparsity_pct: usize) -> f64 {
+    let get = |arm| {
+        rows.iter()
+            .find(|r| r.arm == arm && r.sparsity_pct == sparsity_pct)
+            .map(|r| r.retention)
+            .unwrap_or(f64::NAN)
+    };
+    get(MethodArm::HinmGyro) - get(MethodArm::HinmNoPerm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_tiny_preserves_paper_ordering() {
+        let rows = fig3(EvalScale::Tiny, 11);
+        for &s in &[65usize, 75, 85] {
+            let get = |arm| {
+                rows.iter()
+                    .find(|r| r.arm == arm && r.sparsity_pct == s)
+                    .unwrap()
+                    .retention
+            };
+            let dense = get(MethodArm::Dense);
+            let gyro = get(MethodArm::HinmGyro);
+            let noperm = get(MethodArm::HinmNoPerm);
+            let unstructured = get(MethodArm::Unstructured);
+            assert_eq!(dense, 1.0);
+            assert!(gyro > noperm, "s={s}: gyro {gyro} vs noperm {noperm}");
+            assert!(unstructured >= gyro * 0.97, "s={s}");
+            assert!(gyro < 1.0 && gyro > 0.0);
+        }
+    }
+
+    #[test]
+    fn gain_grows_with_sparsity() {
+        let rows = fig3(EvalScale::Tiny, 12);
+        let g65 = permutation_gain_at(&rows, 65);
+        let g85 = permutation_gain_at(&rows, 85);
+        assert!(g85 > 0.0 && g65 > 0.0);
+    }
+
+    #[test]
+    fn render_contains_all_arms() {
+        let rows = fig3(EvalScale::Tiny, 13);
+        let s = render(&rows, "Fig3");
+        for arm in ARMS {
+            assert!(s.contains(arm.label()));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation harness: one driver per table/figure in the paper's §5
+//! (see DESIGN.md §5 for the experiment index).
+
+pub mod common;
+pub mod fig34;
+pub mod fig5;
+pub mod tab1;
+pub mod tab2;
+pub mod tab3;
+
+pub use common::{EvalScale, MethodArm};

@@ -1,0 +1,95 @@
+//! Table 1: one-shot pruning on DeiT-base with second-order saliency.
+//!
+//! Paper: accuracy at {65, 75, 85}% for Dense / HiNM / HiNM-NoPerm / CAP.
+//! CAP (correlation-aware element-wise pruning) is represented by the
+//! unstructured arm under the same second-order saliency — the element-wise
+//! upper bound HiNM is expected to approach (paper: HiNM even edges it out
+//! on accuracy after fine-tuning; in raw retention the unstructured mask is
+//! by construction ≥ any structured mask, so the check here is *gap*, not
+//! order).
+
+use super::common::{materialize, model_retention, EvalScale, MethodArm};
+use crate::models::catalog::deit_base;
+use crate::util::bench::Table;
+
+pub const SPARSITIES_PCT: [usize; 3] = [65, 75, 85];
+pub const ARMS: [MethodArm; 4] = [
+    MethodArm::Dense,
+    MethodArm::HinmGyro,
+    MethodArm::HinmNoPerm,
+    MethodArm::Unstructured, // CAP stand-in (2nd-order element-wise)
+];
+
+#[derive(Clone, Debug)]
+pub struct Tab1Row {
+    pub arm: MethodArm,
+    pub sparsity_pct: usize,
+    pub retention: f64,
+}
+
+pub fn tab1(scale: EvalScale, seed: u64) -> Vec<Tab1Row> {
+    let v = if scale == EvalScale::Full { 32 } else { 8 };
+    let layers = materialize(&deit_base(), scale, v, /*second_order=*/ true, seed);
+    let mut rows = Vec::new();
+    for &s in &SPARSITIES_PCT {
+        for &arm in &ARMS {
+            let retention = model_retention(arm, &layers, v, s as f64 / 100.0, seed ^ s as u64);
+            rows.push(Tab1Row { arm, sparsity_pct: s, retention });
+        }
+    }
+    rows
+}
+
+pub fn render(rows: &[Tab1Row]) -> String {
+    let mut t = Table::new(&["method", "s=65%", "s=75%", "s=85%"]);
+    for &arm in &ARMS {
+        let label = if arm == MethodArm::Unstructured { "CAP (elem 2nd-order)" } else { arm.label() };
+        let mut cells = vec![label.to_string()];
+        for &s in &SPARSITIES_PCT {
+            let r = rows
+                .iter()
+                .find(|r| r.arm == arm && r.sparsity_pct == s)
+                .map(|r| r.retention)
+                .unwrap_or(f64::NAN);
+            cells.push(format!("{:.4}", r));
+        }
+        t.row(cells);
+    }
+    format!("# Table 1 — DeiT-base one-shot (2nd-order saliency), retained ratio\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab1_ordering() {
+        let rows = tab1(EvalScale::Tiny, 21);
+        for &s in &SPARSITIES_PCT {
+            let get = |arm| {
+                rows.iter()
+                    .find(|r| r.arm == arm && r.sparsity_pct == s)
+                    .unwrap()
+                    .retention
+            };
+            assert!(get(MethodArm::HinmGyro) > get(MethodArm::HinmNoPerm), "s={s}");
+            assert!(get(MethodArm::Unstructured) >= get(MethodArm::HinmGyro) * 0.97, "s={s}");
+        }
+    }
+
+    #[test]
+    fn hinm_gap_to_cap_is_small_at_moderate_sparsity() {
+        // Paper: HiNM ≈ CAP at 65/75%. Check the retention gap < 10%.
+        let rows = tab1(EvalScale::Tiny, 22);
+        let get = |arm: MethodArm, s: usize| {
+            rows.iter()
+                .find(|r| r.arm == arm && r.sparsity_pct == s)
+                .unwrap()
+                .retention
+        };
+        for s in [65, 75] {
+            let gap = get(MethodArm::Unstructured, s) - get(MethodArm::HinmGyro, s);
+            assert!(gap < 0.12, "s={s}: gap {gap}");
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Table 3: permutation ablation at 75% on ResNet-18/50 shapes —
+//! HiNM (gyro OCP + gyro ICP) vs HiNM-V1 (OVW K-means OCP + gyro ICP) vs
+//! HiNM-V2 (gyro OCP + Apex swap ICP).
+
+use super::common::{materialize, model_retention, EvalScale, MethodArm};
+use crate::models::catalog::{resnet18, resnet50};
+use crate::util::bench::Table;
+
+pub const ARMS: [MethodArm; 3] = [MethodArm::HinmGyro, MethodArm::HinmV1, MethodArm::HinmV2];
+
+#[derive(Clone, Debug)]
+pub struct Tab3Row {
+    pub model: &'static str,
+    pub arm: MethodArm,
+    pub retention: f64,
+}
+
+pub fn tab3(scale: EvalScale, seed: u64) -> Vec<Tab3Row> {
+    let v = if scale == EvalScale::Full { 32 } else { 8 };
+    let mut rows = Vec::new();
+    for (name, catalog) in [("resnet18", resnet18()), ("resnet50", resnet50())] {
+        let layers = materialize(&catalog, scale, v, false, seed);
+        for &arm in &ARMS {
+            let retention = model_retention(arm, &layers, v, 0.75, seed);
+            rows.push(Tab3Row { model: name, arm, retention });
+        }
+    }
+    rows
+}
+
+pub fn render(rows: &[Tab3Row]) -> String {
+    let mut t = Table::new(&["model", "method", "retained ratio"]);
+    for r in rows {
+        t.row(vec![r.model.to_string(), r.arm.label().to_string(), format!("{:.4}", r.retention)]);
+    }
+    format!("# Table 3 — ablation @75% (OCP / ICP variants)\n{}", t.render())
+}
+
+/// Paper's check: full gyro ≥ both ablation arms on both models, within
+/// `tol` (the paper's own ResNet-50 gaps are < 1%; at reduced scales the
+/// arms are within run-to-run noise, so tests pass a small tolerance while
+/// the full-scale bench asserts a strict win on the aggregate).
+pub fn gyro_wins(rows: &[Tab3Row], tol: f64) -> bool {
+    for model in ["resnet18", "resnet50"] {
+        let get = |arm: MethodArm| {
+            rows.iter()
+                .find(|r| r.model == model && r.arm == arm)
+                .map(|r| r.retention)
+                .unwrap_or(f64::NAN)
+        };
+        let full = get(MethodArm::HinmGyro);
+        if full < get(MethodArm::HinmV1) - tol || full < get(MethodArm::HinmV2) - tol {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab3_gyro_wins_ablation_within_noise() {
+        let rows = tab3(EvalScale::Tiny, 41);
+        assert!(gyro_wins(&rows, 0.005), "{rows:?}");
+        assert_eq!(rows.len(), 6);
+        // Gyro must strictly beat V1 (the clustering-only OCP) on ResNet-18,
+        // the paper's largest reported gap (4.53%).
+        let get = |m: &str, a: MethodArm| {
+            rows.iter().find(|r| r.model == m && r.arm == a).unwrap().retention
+        };
+        assert!(get("resnet18", MethodArm::HinmGyro) >= get("resnet18", MethodArm::HinmV1));
+    }
+}

@@ -1,0 +1,29 @@
+//! # hinm — Hierarchical N:M sparsity with gyro-permutation
+//!
+//! Production-grade reproduction of *"Toward Efficient Permutation for
+//! Hierarchical N:M Sparsity on GPUs"* (Yu et al., 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the offline compression pipeline (saliency →
+//!   gyro-permutation → HiNM pruning → packed format), the PJRT runtime that
+//!   executes AOT-lowered JAX/Pallas artifacts, a batched inference server,
+//!   and the full evaluation/bench harness reproducing every table and figure
+//!   in the paper.
+//! * **L2 (`python/compile/model.py`)** — JAX forward/backward graphs calling
+//!   the L1 kernel, lowered once to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/hinm_spmm.py`)** — the HiNM SpMM Pallas
+//!   kernel (interpret mode on CPU).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod eval;
+pub mod models;
+pub mod permute;
+pub mod runtime;
+pub mod saliency;
+pub mod sparsity;
+pub mod spmm;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,305 @@
+//! `hinm` — CLI for the HiNM sparsity + gyro-permutation library.
+//!
+//! Subcommands:
+//!   eval <fig3|fig4|tab1|tab2|tab3|fig5|all>   regenerate a paper result
+//!   prune                                       compress a .npy weight matrix
+//!   spmm                                        run the CPU HiNM SpMM on a pruned layer
+//!   info                                        list AOT artifacts
+//!   serve-demo                                  run the batched FFN server briefly
+//!   train-demo                                  short LM train loop via the AOT step
+
+use anyhow::{bail, Context, Result};
+use hinm::coordinator::{Corpus, LmTrainer};
+use hinm::eval::{common::EvalScale, fig34, fig5, tab1, tab2, tab3};
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::npy;
+use hinm::util::cli::Cli;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let result = match cmd.as_str() {
+        "eval" => cmd_eval(args),
+        "prune" => cmd_prune(args),
+        "spmm" => cmd_spmm(args),
+        "info" => cmd_info(args),
+        "serve-demo" => cmd_serve_demo(args),
+        "train-demo" => cmd_train_demo(args),
+        "--help" | "-h" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            usage();
+            Err(anyhow::anyhow!("unknown subcommand {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "hinm — hierarchical N:M sparsity with gyro-permutation\n\n\
+         USAGE: hinm <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 eval <fig3|fig4|tab1|tab2|tab3|fig5|all>  regenerate paper results\n\
+         \x20 prune   --weights w.npy --out dir [--sparsity 75] [--v 32] [--method gyro]\n\
+         \x20 spmm    --weights w.npy [--batch 8] [--sparsity 75]\n\
+         \x20 info    list AOT artifacts and data dumps\n\
+         \x20 serve-demo  [--requests 64]   batched FFN inference via PJRT\n\
+         \x20 train-demo  [--steps 50]      LM training via AOT train step\n"
+    );
+}
+
+fn cmd_eval(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm eval", "regenerate a paper table/figure")
+        .opt("scale", Some("quarter"), "full | quarter | tiny")
+        .opt("seed", Some("7"), "rng seed")
+        .opt("csv", None, "write the report to this path");
+    let mut pos = Vec::new();
+    let mut flags = Vec::new();
+    let mut it = args.into_iter().peekable();
+    while let Some(a) = it.next() {
+        if a.starts_with("--") {
+            let takes_value = !a.contains('=');
+            flags.push(a);
+            if takes_value {
+                if let Some(v) = it.peek() {
+                    if !v.starts_with("--") {
+                        flags.push(it.next().unwrap());
+                    }
+                }
+            }
+        } else {
+            pos.push(a);
+        }
+    }
+    let parsed = cli.parse_tail(flags);
+    let scale = EvalScale::parse(&parsed.get_or("scale", "quarter")).context("bad --scale")?;
+    let seed = parsed.u64_or("seed", 7);
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+
+    let mut outputs: Vec<String> = Vec::new();
+    if matches!(which, "fig3" | "all") {
+        outputs.push(fig34::render(&fig34::fig3(scale, seed), "Fig. 3 — ResNet18 one-shot"));
+    }
+    if matches!(which, "fig4" | "all") {
+        outputs.push(fig34::render(&fig34::fig4(scale, seed), "Fig. 4 — ResNet50 one-shot"));
+    }
+    if matches!(which, "tab1" | "all") {
+        outputs.push(tab1::render(&tab1::tab1(scale, seed)));
+    }
+    if matches!(which, "tab2" | "all") {
+        outputs.push(tab2::render(&tab2::tab2(scale, seed)));
+    }
+    if matches!(which, "tab3" | "all") {
+        outputs.push(tab3::render(&tab3::tab3(scale, seed)));
+    }
+    if matches!(which, "fig5" | "all") {
+        outputs.push(fig5::render(&fig5::run(scale == EvalScale::Full, seed)));
+    }
+    if outputs.is_empty() {
+        bail!("unknown experiment {which:?} (expected fig3|fig4|tab1|tab2|tab3|fig5|all)");
+    }
+    let text = outputs.join("\n");
+    println!("{text}");
+    if let Some(path) = parsed.get("csv") {
+        std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_prune(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm prune", "compress a dense .npy weight matrix to HiNM")
+        .opt("weights", None, ".npy file with a 2-D f32 matrix (required)")
+        .opt("out", Some("pruned_out"), "output directory")
+        .opt("sparsity", Some("75"), "total sparsity %")
+        .opt("v", Some("32"), "vector size V")
+        .opt("method", Some("gyro"), "gyro | noperm | v1 | v2");
+    let a = cli.parse_tail(args);
+    let wpath = a.get("weights").context("--weights is required")?;
+    let w = npy::load_matrix(wpath)?;
+    let total = a.usize_or("sparsity", 75) as f64 / 100.0;
+    let v = a.usize_or("v", 32);
+    let method =
+        hinm::coordinator::Method::parse(&a.get_or("method", "gyro")).context("bad --method")?;
+    let cfg = HinmConfig::for_total_sparsity(v, total);
+    cfg.validate(w.rows, w.cols).map_err(|e| anyhow::anyhow!(e))?;
+
+    let job = hinm::coordinator::LayerJob::from_saliency("cli", w, &hinm::saliency::Magnitude);
+    let pc = hinm::coordinator::PipelineConfig::new(cfg, method);
+    let out = hinm::coordinator::compress_layer(&job, &pc);
+    let p = &out.result.packed;
+    p.check_invariants()?;
+
+    let dir = std::path::PathBuf::from(a.get_or("out", "pruned_out"));
+    std::fs::create_dir_all(&dir)?;
+    let t = p.tiles();
+    let vpr = p.vals_per_row();
+    npy::save(dir.join("vals.npy"), &npy::NpyArray::f32(vec![t, cfg.v, vpr], p.vals.clone()))?;
+    npy::save(dir.join("vec_idx.npy"), &npy::NpyArray::i32(vec![t, p.k_v], p.vec_idx.clone()))?;
+    npy::save(
+        dir.join("nm_idx.npy"),
+        &npy::NpyArray::i32(vec![t, cfg.v, vpr], p.nm_idx.iter().map(|&o| o as i32).collect()),
+    )?;
+    let perm: Vec<i32> = out.ocp_perm.iter().map(|&x| x as i32).collect();
+    npy::save(dir.join("ocp_perm.npy"), &npy::NpyArray::i32(vec![perm.len()], perm))?;
+
+    println!(
+        "{}: {}×{} → HiNM V={} total sparsity {:.1}% | retention {:.4} | {} | {:.0} ms",
+        method.label(),
+        p.rows,
+        p.cols,
+        cfg.v,
+        cfg.total_sparsity() * 100.0,
+        out.result.retention_ratio,
+        hinm::util::human_bytes(p.storage_bytes()),
+        out.elapsed_ms
+    );
+    println!("wrote vals/vec_idx/nm_idx/ocp_perm to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_spmm(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm spmm", "run the CPU HiNM SpMM on a dense .npy matrix")
+        .opt("weights", None, ".npy dense weights (required)")
+        .opt("batch", Some("8"), "batch size")
+        .opt("sparsity", Some("75"), "total sparsity %")
+        .opt("v", Some("32"), "vector size");
+    let a = cli.parse_tail(args);
+    let w = npy::load_matrix(a.get("weights").context("--weights required")?)?;
+    let cfg = HinmConfig::for_total_sparsity(
+        a.usize_or("v", 32),
+        a.usize_or("sparsity", 75) as f64 / 100.0,
+    );
+    let res = hinm::sparsity::prune_oneshot(&w, &w.abs(), &cfg);
+    let batch = a.usize_or("batch", 8);
+    let mut rng = hinm::util::rng::Xoshiro256::new(1);
+    let x = hinm::tensor::Matrix::randn(w.cols, batch, 1.0, &mut rng);
+    let t0 = std::time::Instant::now();
+    let y = hinm::spmm::spmm(&res.packed, &x);
+    let dt = t0.elapsed();
+    let y_ref = hinm::spmm::dense::matmul(&res.packed.to_dense(), &x);
+    println!(
+        "spmm {}×{} @ batch {batch}: {:.2} ms, max |Δ| vs dense ref = {:.2e}",
+        w.rows,
+        w.cols,
+        dt.as_secs_f64() * 1e3,
+        y.max_abs_diff(&y_ref)
+    );
+    Ok(())
+}
+
+fn cmd_info(_args: Vec<String>) -> Result<()> {
+    let reg = hinm::runtime::open_default_registry()?;
+    println!("artifact root: {}", reg.root.display());
+    println!("\nartifacts:");
+    for (name, a) in &reg.artifacts {
+        let in_elems: usize = a.inputs.iter().map(|i| i.elements()).sum();
+        println!(
+            "  {name:<16} {} inputs ({} elements) → {} outputs   [{}]",
+            a.inputs.len(),
+            in_elems,
+            a.n_outputs,
+            a.file.file_name().unwrap_or_default().to_string_lossy()
+        );
+    }
+    println!("\ndata dumps: {}", reg.data.len());
+    for name in reg.data.keys() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn cmd_serve_demo(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm serve-demo", "batched FFN inference over PJRT")
+        .opt("requests", Some("64"), "number of requests to fire");
+    let a = cli.parse_tail(args);
+    let n_requests = a.usize_or("requests", 64);
+
+    let reg = hinm::runtime::open_default_registry()?;
+    let spec = reg.artifact("ffn_serve")?.clone();
+    let d = spec.meta["d"] as usize;
+    let d_ff = spec.meta["d_ff"] as usize;
+    let batch = spec.meta["batch"] as usize;
+    let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+
+    let w1 = reg.load_data("ffn_w1_dense")?;
+    let w2 = reg.load_data("ffn_w2_dense")?;
+    let w1 = hinm::tensor::Matrix::from_vec(d_ff, d, w1.as_f32()?.to_vec());
+    let w2 = hinm::tensor::Matrix::from_vec(d, d_ff, w2.as_f32()?.to_vec());
+    let p1 = hinm::sparsity::prune_oneshot(&w1, &w1.abs(), &cfg).packed;
+    let p2 = hinm::sparsity::prune_oneshot(&w2, &w2.abs(), &cfg).packed;
+    let mut fixed = hinm::coordinator::serve::packed_host_tensors(&p1);
+    fixed.extend(hinm::coordinator::serve::packed_host_tensors(&p2));
+
+    let server = hinm::coordinator::BatchServer::start(
+        spec,
+        fixed,
+        d,
+        d,
+        hinm::coordinator::ServeConfig { batch, max_wait: std::time::Duration::from_millis(2) },
+    )?;
+    let handle = server.handle.clone();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for i in 0..n_requests {
+            let h = handle.clone();
+            s.spawn(move || {
+                let x: Vec<f32> = (0..d).map(|j| ((i * 31 + j) % 13) as f32 * 0.05).collect();
+                let y = h.infer(x).expect("inference failed");
+                assert_eq!(y.len(), d);
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = server.metrics.lock().unwrap().clone();
+    println!(
+        "served {n_requests} requests in {:.1} ms ({:.0} req/s) | latency {}",
+        wall.as_secs_f64() * 1e3,
+        n_requests as f64 / wall.as_secs_f64(),
+        m.summary()
+    );
+    server.stop();
+    Ok(())
+}
+
+fn cmd_train_demo(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm train-demo", "LM training through the AOT train step")
+        .opt("steps", Some("50"), "SGD steps")
+        .opt("lr", Some("0.5"), "learning rate");
+    let a = cli.parse_tail(args);
+    let steps = a.usize_or("steps", 50);
+    let lr = a.f64_or("lr", 0.5) as f32;
+
+    let reg = hinm::runtime::open_default_registry()?;
+    let mut trainer = LmTrainer::new(&reg)?;
+    let mut corpus = Corpus::new(trainer.vocab, 0.05, 99);
+    let (b, s) = (trainer.batch, trainer.seq);
+    let (t0s, g0s) = corpus.batch(b, s);
+    let initial = trainer.eval_loss(&t0s, &g0s)?;
+    println!("initial loss {initial:.4} (uniform = {:.4})", (trainer.vocab as f64).ln());
+    let start = std::time::Instant::now();
+    for step in 0..steps {
+        let (toks, tgts) = corpus.batch(b, s);
+        let loss = trainer.step(&toks, &tgts, lr)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "{} steps in {:.1}s ({:.1} steps/s)",
+        steps,
+        start.elapsed().as_secs_f64(),
+        steps as f64 / start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Layer-shape catalogs for the paper's evaluation models.
+//!
+//! Conv2d layers are listed as their im2col GEMM equivalents
+//! (`out_ch × in_ch·kh·kw`), which is exactly the granularity HiNM pruning
+//! operates at (the paper prunes "all the Conv2d layers", V along output
+//! channels). Linear layers are `out_features × in_features`.
+
+/// One prunable layer as a GEMM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerShape {
+    pub name: String,
+    /// Output channels (GEMM rows).
+    pub out_ch: usize,
+    /// Input channels × kernel area (GEMM cols).
+    pub in_dim: usize,
+    /// How many times this shape repeats in the network.
+    pub count: usize,
+}
+
+impl LayerShape {
+    pub fn new(name: &str, out_ch: usize, in_dim: usize, count: usize) -> Self {
+        Self { name: name.to_string(), out_ch, in_dim, count }
+    }
+    pub fn params(&self) -> usize {
+        self.out_ch * self.in_dim * self.count
+    }
+}
+
+/// A named collection of prunable layers.
+#[derive(Clone, Debug)]
+pub struct ModelCatalog {
+    pub name: &'static str,
+    pub layers: Vec<LayerShape>,
+}
+
+impl ModelCatalog {
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelCatalog> {
+        match name {
+            "resnet18" => Some(resnet18()),
+            "resnet50" => Some(resnet50()),
+            "deit-base" | "deit" => Some(deit_base()),
+            "bert-base" | "bert" => Some(bert_base()),
+            _ => None,
+        }
+    }
+}
+
+/// ResNet-18 prunable convs (conv1 excluded, as is standard: 7×7 stem is
+/// kept dense; downsample 1×1 convs included).
+pub fn resnet18() -> ModelCatalog {
+    ModelCatalog {
+        name: "resnet18",
+        layers: vec![
+            LayerShape::new("layer1.conv3x3", 64, 64 * 9, 4),
+            LayerShape::new("layer2.down", 128, 64, 1),
+            LayerShape::new("layer2.conv3x3.a", 128, 64 * 9, 1),
+            LayerShape::new("layer2.conv3x3", 128, 128 * 9, 3),
+            LayerShape::new("layer3.down", 256, 128, 1),
+            LayerShape::new("layer3.conv3x3.a", 256, 128 * 9, 1),
+            LayerShape::new("layer3.conv3x3", 256, 256 * 9, 3),
+            LayerShape::new("layer4.down", 512, 256, 1),
+            LayerShape::new("layer4.conv3x3.a", 512, 256 * 9, 1),
+            LayerShape::new("layer4.conv3x3", 512, 512 * 9, 3),
+        ],
+    }
+}
+
+/// ResNet-50 bottleneck convs.
+pub fn resnet50() -> ModelCatalog {
+    let mut layers = Vec::new();
+    // (stage, width, blocks, in_width_of_first)
+    let stages: [(usize, usize, usize, usize); 4] =
+        [(1, 64, 3, 64), (2, 128, 4, 256), (3, 256, 6, 512), (4, 512, 3, 1024)];
+    for (s, w, blocks, in_w) in stages {
+        let out4 = w * 4;
+        layers.push(LayerShape::new(&format!("layer{s}.0.conv1x1a"), w, in_w, 1));
+        layers.push(LayerShape::new(&format!("layer{s}.conv1x1a"), w, out4, blocks - 1));
+        layers.push(LayerShape::new(&format!("layer{s}.conv3x3"), w, w * 9, blocks));
+        layers.push(LayerShape::new(&format!("layer{s}.conv1x1b"), out4, w, blocks));
+        layers.push(LayerShape::new(&format!("layer{s}.down"), out4, in_w, 1));
+    }
+    ModelCatalog { name: "resnet50", layers }
+}
+
+/// DeiT-base: 12 blocks of attention (qkv+proj) + MLP linear layers
+/// (the paper prunes "all Linear modules within the attention,
+/// intermediate, and output layers").
+pub fn deit_base() -> ModelCatalog {
+    let d = 768;
+    ModelCatalog {
+        name: "deit-base",
+        layers: vec![
+            LayerShape::new("attn.qkv", 3 * d, d, 12),
+            LayerShape::new("attn.proj", d, d, 12),
+            LayerShape::new("mlp.fc1", 4 * d, d, 12),
+            LayerShape::new("mlp.fc2", d, 4 * d, 12),
+        ],
+    }
+}
+
+/// BERT-base encoder linear layers.
+pub fn bert_base() -> ModelCatalog {
+    let d = 768;
+    ModelCatalog {
+        name: "bert-base",
+        layers: vec![
+            LayerShape::new("attn.query", d, d, 12),
+            LayerShape::new("attn.key", d, d, 12),
+            LayerShape::new("attn.value", d, d, 12),
+            LayerShape::new("attn.output", d, d, 12),
+            LayerShape::new("ffn.intermediate", 4 * d, d, 12),
+            LayerShape::new("ffn.output", d, 4 * d, 12),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_param_count_plausible() {
+        // Prunable convs of ResNet-18 ≈ 10.9M params (11.7M total − stem/fc/bn).
+        let p = resnet18().total_params();
+        assert!((10_000_000..12_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn resnet50_param_count_plausible() {
+        // Prunable convs of ResNet-50 ≈ 23M.
+        let p = resnet50().total_params();
+        assert!((19_000_000..26_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn deit_base_param_count() {
+        // 12 × (768·2304 + 768·768 + 768·3072·2) = ~85M… matches DeiT-base
+        // linear params (85M total incl. embeddings ≈ 86M).
+        let p = deit_base().total_params();
+        assert!((80_000_000..90_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn bert_base_param_count() {
+        // Encoder linears of BERT-base ≈ 85M.
+        let p = bert_base().total_params();
+        assert!((80_000_000..90_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(ModelCatalog::by_name("resnet18").is_some());
+        assert!(ModelCatalog::by_name("bert").is_some());
+        assert!(ModelCatalog::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_shapes_v32_compatible() {
+        // Every out_ch must be divisible by the paper's V=32 (ResNets use
+        // V=32; transformers 768-dim are divisible by 32/64/128).
+        for model in [resnet18(), resnet50(), deit_base(), bert_base()] {
+            for l in &model.layers {
+                assert_eq!(l.out_ch % 32, 0, "{}:{}", model.name, l.name);
+                assert_eq!(l.in_dim % 4, 0, "{}:{}", model.name, l.name);
+            }
+        }
+    }
+}

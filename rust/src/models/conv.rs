@@ -1,0 +1,200 @@
+//! Conv2d ⇄ GEMM bridge (im2col).
+//!
+//! The paper applies HiNM "to all the Conv2d layers" of the ResNets: a
+//! `[C_out, C_in, kh, kw]` convolution is pruned as its im2col GEMM
+//! `[C_out, C_in·kh·kw]` (V along output channels). This module provides
+//! the executable counterpart so a pruned conv actually *runs*: im2col
+//! lowering of activations and conv-as-SpMM inference on the packed HiNM
+//! format — the path `examples/resnet_compress.rs` measures.
+
+use crate::sparsity::HinmPacked;
+use crate::tensor::Matrix;
+
+/// A 2-D convolution shape (stride 1, symmetric zero padding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn gemm_cols(&self) -> usize {
+        self.c_in * self.kh * self.kw
+    }
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (h + 2 * self.pad + 1 - self.kh, w + 2 * self.pad + 1 - self.kw)
+    }
+}
+
+/// Input feature map, CHW layout.
+#[derive(Clone, Debug)]
+pub struct FeatureMap {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatureMap {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w, data: vec![0.0; c * h * w] }
+    }
+    #[inline]
+    pub fn at(&self, ch: usize, y: usize, x: usize) -> f32 {
+        self.data[(ch * self.h + y) * self.w + x]
+    }
+    #[inline]
+    pub fn at_mut(&mut self, ch: usize, y: usize, x: usize) -> &mut f32 {
+        &mut self.data[(ch * self.h + y) * self.w + x]
+    }
+}
+
+/// im2col: unfold the padded input into a `[C_in·kh·kw, H_out·W_out]`
+/// matrix whose columns are receptive fields — the layout the HiNM SpMM
+/// consumes directly (`X[n, batch]` with batch = output pixels).
+pub fn im2col(input: &FeatureMap, shape: &ConvShape) -> Matrix {
+    assert_eq!(input.c, shape.c_in);
+    let (oh, ow) = shape.out_hw(input.h, input.w);
+    let rows = shape.gemm_cols();
+    let cols = oh * ow;
+    let mut out = Matrix::zeros(rows, cols);
+    let pad = shape.pad as isize;
+    for ci in 0..shape.c_in {
+        for ky in 0..shape.kh {
+            for kx in 0..shape.kw {
+                let r = (ci * shape.kh + ky) * shape.kw + kx;
+                let orow = out.row_mut(r);
+                for oy in 0..oh {
+                    let iy = oy as isize + ky as isize - pad;
+                    for ox in 0..ow {
+                        let ix = ox as isize + kx as isize - pad;
+                        let v = if iy >= 0 && (iy as usize) < input.h && ix >= 0 && (ix as usize) < input.w {
+                            input.at(ci, iy as usize, ix as usize)
+                        } else {
+                            0.0
+                        };
+                        orow[oy * ow + ox] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Direct (naive) convolution — the oracle for the GEMM path.
+pub fn conv2d_direct(input: &FeatureMap, weights: &Matrix, shape: &ConvShape) -> FeatureMap {
+    assert_eq!(weights.shape(), (shape.c_out, shape.gemm_cols()));
+    let (oh, ow) = shape.out_hw(input.h, input.w);
+    let mut out = FeatureMap::zeros(shape.c_out, oh, ow);
+    let pad = shape.pad as isize;
+    for co in 0..shape.c_out {
+        let wrow = weights.row(co);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for ci in 0..shape.c_in {
+                    for ky in 0..shape.kh {
+                        let iy = oy as isize + ky as isize - pad;
+                        if iy < 0 || iy as usize >= input.h {
+                            continue;
+                        }
+                        for kx in 0..shape.kw {
+                            let ix = ox as isize + kx as isize - pad;
+                            if ix < 0 || ix as usize >= input.w {
+                                continue;
+                            }
+                            acc += wrow[(ci * shape.kh + ky) * shape.kw + kx]
+                                * input.at(ci, iy as usize, ix as usize);
+                        }
+                    }
+                }
+                *out.at_mut(co, oy, ox) = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Convolution through the packed HiNM format: im2col → HiNM SpMM → fold.
+pub fn conv2d_hinm(input: &FeatureMap, packed: &HinmPacked, shape: &ConvShape) -> FeatureMap {
+    assert_eq!(packed.rows, shape.c_out);
+    assert_eq!(packed.cols, shape.gemm_cols());
+    let (oh, ow) = shape.out_hw(input.h, input.w);
+    let cols = im2col(input, shape);
+    let y = crate::spmm::spmm(packed, &cols);
+    FeatureMap { c: shape.c_out, h: oh, w: ow, data: y.data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::{prune_oneshot, HinmConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_fm(c: usize, h: usize, w: usize, rng: &mut Xoshiro256) -> FeatureMap {
+        FeatureMap { c, h, w, data: (0..c * h * w).map(|_| rng.normal()).collect() }
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1×1 conv: im2col is just a reshape.
+        let mut rng = Xoshiro256::new(1);
+        let fm = rand_fm(3, 4, 4, &mut rng);
+        let shape = ConvShape { c_in: 3, c_out: 2, kh: 1, kw: 1, pad: 0 };
+        let cols = im2col(&fm, &shape);
+        assert_eq!(cols.shape(), (3, 16));
+        assert_eq!(cols.data, fm.data);
+    }
+
+    #[test]
+    fn gemm_conv_matches_direct() {
+        let mut rng = Xoshiro256::new(2);
+        for (kh, pad) in [(1usize, 0usize), (3, 1)] {
+            let shape = ConvShape { c_in: 4, c_out: 8, kh, kw: kh, pad };
+            let fm = rand_fm(4, 6, 5, &mut rng);
+            let w = Matrix::randn(8, shape.gemm_cols(), 1.0, &mut rng);
+            let direct = conv2d_direct(&fm, &w, &shape);
+            let cols = im2col(&fm, &shape);
+            let gemm = crate::spmm::dense::matmul(&w, &cols);
+            let diff = gemm
+                .data
+                .iter()
+                .zip(&direct.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-4, "k={kh} pad={pad}: {diff}");
+        }
+    }
+
+    #[test]
+    fn hinm_conv_matches_masked_direct() {
+        let mut rng = Xoshiro256::new(3);
+        let shape = ConvShape { c_in: 4, c_out: 16, kh: 3, kw: 3, pad: 1 };
+        let fm = rand_fm(4, 8, 8, &mut rng);
+        let w = Matrix::randn(16, shape.gemm_cols(), 1.0, &mut rng);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let res = prune_oneshot(&w, &w.abs(), &cfg);
+        let hinm_out = conv2d_hinm(&fm, &res.packed, &shape);
+        let direct = conv2d_direct(&fm, &res.packed.to_dense(), &shape);
+        let diff = hinm_out
+            .data
+            .iter()
+            .zip(&direct.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-3, "{diff}");
+        assert_eq!((hinm_out.c, hinm_out.h, hinm_out.w), (16, 8, 8));
+    }
+
+    #[test]
+    fn output_geometry() {
+        let s = ConvShape { c_in: 1, c_out: 1, kh: 3, kw: 3, pad: 0 };
+        assert_eq!(s.out_hw(8, 8), (6, 6));
+        let s = ConvShape { c_in: 1, c_out: 1, kh: 3, kw: 3, pad: 1 };
+        assert_eq!(s.out_hw(8, 8), (8, 8));
+    }
+}

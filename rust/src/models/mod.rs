@@ -1,0 +1,15 @@
+//! Model layer catalogs and synthetic weight generation.
+//!
+//! The paper evaluates on ResNet18/50 (ImageNet), DeiT-base, and BERT-base.
+//! We cannot train those here (no ImageNet/SQuAD, no GPUs), so experiments
+//! run on (a) the *true layer shapes* of each model with synthetic weights
+//! whose statistics mimic trained layers (heavy-tailed, channel- and
+//! column-correlated — exactly the structure permutation exploits), and
+//! (b) small models trained for real in the e2e example. See DESIGN.md §2.
+
+pub mod catalog;
+pub mod conv;
+pub mod synthetic;
+
+pub use catalog::{LayerShape, ModelCatalog};
+pub use synthetic::SyntheticGen;

@@ -1,0 +1,143 @@
+//! NVIDIA-Apex–style input-channel permutation (Pool & Yu, NeurIPS'21):
+//! greedy channel *swapping* to balance important elements across N:M
+//! groups, with bounded escape moves. Re-implemented here at column-vector
+//! granularity so it can stand in for gyro ICP — the HiNM-V2 ablation arm
+//! of Table 3.
+
+use crate::permute::cost::icp_group_retained;
+use crate::sparsity::config::HinmConfig;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct ApexParams {
+    /// Full sweeps over all column pairs.
+    pub max_sweeps: usize,
+    /// Escape attempts (random swap accepted regardless) when a sweep
+    /// finds no improving swap — Apex's bounded-regression trick.
+    pub escapes: usize,
+    pub seed: u64,
+}
+
+impl Default for ApexParams {
+    fn default() -> Self {
+        Self { max_sweeps: 8, escapes: 2, seed: 0xA9E }
+    }
+}
+
+/// Total Eq. 3 objective of an order.
+fn objective(cols: &[Vec<f32>], order: &[usize], v: usize, cfg: &HinmConfig) -> f64 {
+    order
+        .chunks_exact(cfg.m_group)
+        .map(|grp| {
+            let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_slice()).collect();
+            icp_group_retained(&members, v, cfg)
+        })
+        .sum()
+}
+
+/// Greedy pairwise-swap search over column-vector positions.
+pub fn apex_icp(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &ApexParams) -> (Vec<usize>, f64) {
+    let k_v = cols.len();
+    let m = cfg.m_group;
+    assert_eq!(k_v % m, 0);
+    let mut order: Vec<usize> = (0..k_v).collect();
+    let mut rng = Xoshiro256::new(params.seed);
+    let mut escapes_left = params.escapes;
+
+    for _sweep in 0..params.max_sweeps {
+        let mut improved = false;
+        for a in 0..k_v {
+            for b in (a + 1)..k_v {
+                if a / m == b / m {
+                    continue; // same group: swap is a no-op for the mask
+                }
+                order.swap(a, b);
+                // Only the two touched groups change; recompute locally.
+                let delta_groups = [a / m, b / m];
+                let local_after: f64 = delta_groups
+                    .iter()
+                    .map(|&g| {
+                        let grp = &order[g * m..(g + 1) * m];
+                        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_slice()).collect();
+                        icp_group_retained(&members, v, cfg)
+                    })
+                    .sum();
+                order.swap(a, b);
+                let local_before: f64 = delta_groups
+                    .iter()
+                    .map(|&g| {
+                        let grp = &order[g * m..(g + 1) * m];
+                        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_slice()).collect();
+                        icp_group_retained(&members, v, cfg)
+                    })
+                    .sum();
+                if local_after > local_before + 1e-9 {
+                    order.swap(a, b);
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            if escapes_left == 0 {
+                break;
+            }
+            // Escape: random cross-group swap accepted unconditionally.
+            escapes_left -= 1;
+            let a = rng.below(k_v);
+            let mut b = rng.below(k_v);
+            while b / m == a / m {
+                b = rng.below(k_v);
+            }
+            order.swap(a, b);
+        }
+    }
+    let final_obj = objective(cols, &order, v, cfg);
+    (order, final_obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::is_permutation;
+
+    fn cfg() -> HinmConfig {
+        HinmConfig::with_24(4, 0.0)
+    }
+
+    #[test]
+    fn swap_search_improves_adversarial_tile() {
+        // 4 hot then 4 cold vectors: natural grouping wastes hot elements.
+        let cols: Vec<Vec<f32>> = (0..8)
+            .map(|j| {
+                let val = if j < 4 { 5.0 } else { 0.1 };
+                vec![val; 4]
+            })
+            .collect();
+        let before = objective(&cols, &(0..8).collect::<Vec<_>>(), 4, &cfg());
+        let (order, after) = apex_icp(&cols, 4, &cfg(), &ApexParams::default());
+        assert!(is_permutation(&order, 8));
+        assert!(after > before, "before={before} after={after}");
+        // Optimum spreads hot 2/2.
+        let hot0 = order[..4].iter().filter(|&&j| j < 4).count();
+        assert_eq!(hot0, 2);
+    }
+
+    #[test]
+    fn noop_on_uniform_tile() {
+        let cols: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0; 4]).collect();
+        let before = objective(&cols, &(0..8).collect::<Vec<_>>(), 4, &cfg());
+        let (_, after) = apex_icp(&cols, 4, &cfg(), &ApexParams::default());
+        assert!((after - before).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incremental_objective_consistent() {
+        let mut rng = Xoshiro256::new(55);
+        let cols: Vec<Vec<f32>> = (0..12)
+            .map(|_| (0..4).map(|_| rng.next_f32() * 3.0).collect())
+            .collect();
+        let (order, reported) = apex_icp(&cols, 4, &cfg(), &ApexParams::default());
+        let actual = objective(&cols, &order, 4, &cfg());
+        assert!((reported - actual).abs() < 1e-6, "{reported} vs {actual}");
+    }
+}

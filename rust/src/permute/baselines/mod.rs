@@ -1,0 +1,7 @@
+//! Baseline permutation methods: OVW (balanced K-means OCP, Tan et al.),
+//! Apex-style swap ICP (Pool & Yu), and Tetris (two-axis swap search with
+//! runtime index-translation overhead).
+
+pub mod apex;
+pub mod ovw;
+pub mod tetris;

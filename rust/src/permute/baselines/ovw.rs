@@ -1,0 +1,96 @@
+//! OVW baseline (Tan et al., NeurIPS'22 — "out-vector-wise" sparsity):
+//! output-channel permutation via balanced K-means over *all* channels in a
+//! single pass, grouping channels with similar saliency profiles into
+//! partitions of V so whole column vectors can be removed.
+//!
+//! This is the `OVW` arm of Figs. 3/4 and the OCP replaced in the HiNM-V1
+//! ablation (Table 3). Unlike gyro OCP it has no sampling phase and no
+//! explicit prune-loss cost — exactly the two deficiencies §5.2 calls out.
+
+use crate::permute::kmeans::balanced_kmeans;
+use crate::sparsity::config::HinmConfig;
+use crate::tensor::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// One-shot balanced-K-means output-channel permutation.
+/// Returns `perm[i]` = original channel at permuted position `i`.
+pub fn ovw_ocp(sal: &Matrix, cfg: &HinmConfig, seed: u64) -> Vec<usize> {
+    cfg.validate(sal.rows, sal.cols).expect("invalid config");
+    let v = cfg.v;
+    let p_count = sal.rows / v;
+    if p_count <= 1 {
+        return (0..sal.rows).collect();
+    }
+    let mut rng = Xoshiro256::new(seed);
+    let feats: Vec<Vec<f32>> = (0..sal.rows).map(|r| sal.row(r).to_vec()).collect();
+    let clustering = balanced_kmeans(&feats, p_count, v, 16, &mut rng);
+    let mut perm = Vec::with_capacity(sal.rows);
+    for cluster in &clustering.clusters {
+        let mut members = cluster.clone();
+        members.sort_unstable();
+        perm.extend(members);
+    }
+    perm
+}
+
+/// The complete OVW pruning arm: K-means OCP + column-wise vector pruning
+/// (no N:M level — OVW is a single-level vector-sparsity method). To compare
+/// at equal *total* sparsity with HiNM, the vector level must carry all of
+/// it: `s_v(total) = total`.
+pub fn ovw_retained(sal: &Matrix, v: usize, total_sparsity: f64, seed: u64) -> f64 {
+    let cfg = HinmConfig {
+        v,
+        n_keep: 4,
+        m_group: 4, // N==M → N:M disabled
+        vector_sparsity: total_sparsity,
+    };
+    let perm = ovw_ocp(sal, &cfg, seed);
+    let sal_p = sal.permute_rows(&perm);
+    crate::sparsity::vector_prune::vector_retained(&sal_p, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::vector_prune::vector_retained;
+    use crate::tensor::is_permutation;
+
+    #[test]
+    fn produces_valid_permutation() {
+        let mut rng = Xoshiro256::new(30);
+        let sal = Matrix::randn(16, 16, 1.0, &mut rng).abs();
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let perm = ovw_ocp(&sal, &cfg, 1);
+        assert!(is_permutation(&perm, 16));
+    }
+
+    #[test]
+    fn clusters_similar_channels_improving_vector_retention() {
+        // Two channel archetypes interleaved; clustering them recovers
+        // homogeneous partitions, concentrating unimportant columns.
+        let sal = Matrix::from_fn(16, 16, |r, c| {
+            if r % 2 == 0 {
+                if c < 8 { 5.0 } else { 0.1 }
+            } else if c < 8 {
+                0.1
+            } else {
+                5.0
+            }
+        });
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let before = vector_retained(&sal, &cfg);
+        let perm = ovw_ocp(&sal, &cfg, 2);
+        let after = vector_retained(&sal.permute_rows(&perm), &cfg);
+        assert!(after > before * 1.2, "before={before} after={after}");
+    }
+
+    #[test]
+    fn ovw_retained_at_total_sparsity() {
+        let mut rng = Xoshiro256::new(31);
+        let sal = Matrix::randn(32, 32, 1.0, &mut rng).abs();
+        let r50 = ovw_retained(&sal, 8, 0.5, 3);
+        let r75 = ovw_retained(&sal, 8, 0.75, 3);
+        assert!(r50 > r75);
+        assert!(r75 > 0.0);
+    }
+}

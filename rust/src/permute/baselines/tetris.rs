@@ -1,0 +1,141 @@
+//! Tetris baseline (Ji et al., NeurIPS'18): swap-based permutation of *both*
+//! output and input channels for block-wise sparsity. Unlike gyro, the
+//! input-channel permutation is global (one order shared by all tiles), so
+//! adjacent layers end up with inconsistent channel orders and require an
+//! explicit index-translation (gather) op at runtime — the overhead the
+//! paper's §2 contrasts against. `spmm::sim` charges that extra pass when
+//! asked to model a Tetris-permuted network.
+
+use crate::sparsity::config::HinmConfig;
+use crate::sparsity::hinm::hinm_retained;
+use crate::tensor::Matrix;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct TetrisParams {
+    pub max_rounds: usize,
+    /// Candidate swaps evaluated per round per axis.
+    pub swaps_per_round: usize,
+    pub seed: u64,
+}
+
+impl Default for TetrisParams {
+    fn default() -> Self {
+        Self { max_rounds: 12, swaps_per_round: 64, seed: 0x7E7 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TetrisResult {
+    pub row_perm: Vec<usize>,
+    pub col_perm: Vec<usize>,
+    pub retained: f64,
+    pub rounds_run: usize,
+}
+
+/// Alternating random-swap hill-climb on rows then columns, scored by the
+/// full HiNM retention (Tetris scored block saliency; the analogous
+/// objective here is the hierarchical mask's retention).
+pub fn tetris_permute(sal: &Matrix, cfg: &HinmConfig, params: &TetrisParams) -> TetrisResult {
+    let mut rng = Xoshiro256::new(params.seed);
+    let mut row_perm: Vec<usize> = (0..sal.rows).collect();
+    let mut col_perm: Vec<usize> = (0..sal.cols).collect();
+    let mut cur = sal.clone();
+    let mut best = hinm_retained(&cur, cfg);
+    let mut rounds_run = 0;
+
+    for _round in 0..params.max_rounds {
+        rounds_run += 1;
+        let mut improved = false;
+
+        // Row swaps across partitions.
+        for _ in 0..params.swaps_per_round {
+            let a = rng.below(sal.rows);
+            let mut b = rng.below(sal.rows);
+            while b / cfg.v == a / cfg.v {
+                b = rng.below(sal.rows);
+            }
+            swap_rows(&mut cur, a, b);
+            let cand = hinm_retained(&cur, cfg);
+            if cand > best + 1e-9 {
+                best = cand;
+                row_perm.swap(a, b);
+                improved = true;
+            } else {
+                swap_rows(&mut cur, a, b);
+            }
+        }
+
+        // Column swaps (global — the Tetris weakness).
+        for _ in 0..params.swaps_per_round {
+            let a = rng.below(sal.cols);
+            let b = rng.below(sal.cols);
+            if a == b {
+                continue;
+            }
+            swap_cols(&mut cur, a, b);
+            let cand = hinm_retained(&cur, cfg);
+            if cand > best + 1e-9 {
+                best = cand;
+                col_perm.swap(a, b);
+                improved = true;
+            } else {
+                swap_cols(&mut cur, a, b);
+            }
+        }
+
+        if !improved {
+            break;
+        }
+    }
+
+    TetrisResult { row_perm, col_perm, retained: best, rounds_run }
+}
+
+fn swap_rows(m: &mut Matrix, a: usize, b: usize) {
+    if a == b {
+        return;
+    }
+    for c in 0..m.cols {
+        let tmp = m.at(a, c);
+        *m.at_mut(a, c) = m.at(b, c);
+        *m.at_mut(b, c) = tmp;
+    }
+}
+
+fn swap_cols(m: &mut Matrix, a: usize, b: usize) {
+    for r in 0..m.rows {
+        let tmp = m.at(r, a);
+        *m.at_mut(r, a) = m.at(r, b);
+        *m.at_mut(r, b) = tmp;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::is_permutation;
+
+    #[test]
+    fn permutations_valid_and_retention_monotone() {
+        let mut rng = Xoshiro256::new(60);
+        let sal = Matrix::from_fn(16, 16, |_, _| rng.next_f32() * if rng.next_f32() < 0.2 { 5.0 } else { 0.2 });
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let before = hinm_retained(&sal, &cfg);
+        let res = tetris_permute(&sal, &cfg, &TetrisParams::default());
+        assert!(is_permutation(&res.row_perm, 16));
+        assert!(is_permutation(&res.col_perm, 16));
+        assert!(res.retained >= before);
+    }
+
+    #[test]
+    fn reported_retention_matches_applied_permutations() {
+        let mut rng = Xoshiro256::new(61);
+        let sal = Matrix::from_fn(8, 16, |_, _| rng.next_f32());
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let res = tetris_permute(&sal, &cfg, &TetrisParams { max_rounds: 4, swaps_per_round: 16, seed: 9 });
+        let permuted = sal.permute_rows(&res.row_perm).permute_cols(&res.col_perm);
+        let direct = hinm_retained(&permuted, &cfg);
+        assert!((direct - res.retained).abs() < 1e-6 * direct.max(1.0), "{direct} vs {}", res.retained);
+    }
+}

@@ -1,0 +1,169 @@
+//! Eq. 4 cost primitives for the gyro **assignment** phase.
+//!
+//! `C[i][j] = Σρ − ‖M ⊙ ρ‖` over `P_i ∪ s_j`: the saliency lost to pruning
+//! when sample/cluster `j` joins partition `i`. Because each cluster is used
+//! exactly once in a perfect assignment, the `Σρ` terms are constant across
+//! assignments, so the solver can equivalently minimize `−retained`; the
+//! helpers here therefore return *retained saliency* and the callers negate.
+
+use crate::sparsity::config::HinmConfig;
+
+/// Sum of the `k` largest values (selection in O(n)).
+pub fn sum_top_k(vals: &[f64], k: usize) -> f64 {
+    debug_assert!(k <= vals.len());
+    if k == 0 {
+        return 0.0;
+    }
+    if k == vals.len() {
+        return vals.iter().sum();
+    }
+    let mut buf: Vec<f64> = vals.to_vec();
+    // nth element so that [0..k) are the k largest (descending comparator).
+    buf.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    buf[..k].iter().sum()
+}
+
+/// OCP: retained saliency of a candidate partition whose per-column vector
+/// saliency is `rem_colsum + cluster_colsum`, keeping the top `k_v` columns
+/// (Eq. 2 objective restricted to one partition).
+pub fn ocp_partition_retained(rem_colsum: &[f64], cluster_colsum: &[f64], k_v: usize, scratch: &mut Vec<f64>) -> f64 {
+    debug_assert_eq!(rem_colsum.len(), cluster_colsum.len());
+    scratch.clear();
+    scratch.extend(rem_colsum.iter().zip(cluster_colsum).map(|(&a, &b)| a + b));
+    sum_top_k(scratch, k_v)
+}
+
+/// HiNM-aware OCP cost (extension, DESIGN §7): retained after *both* levels —
+/// top-`k_v` columns then 2:4 across those columns per row. `rows` holds the
+/// V member-channel saliency rows (each of length n) of remainder ∪ cluster.
+pub fn ocp_partition_retained_hinm(
+    rows: &[&[f32]],
+    k_v: usize,
+    cfg: &HinmConfig,
+    colsum_scratch: &mut Vec<f64>,
+) -> f64 {
+    let n = rows[0].len();
+    colsum_scratch.clear();
+    colsum_scratch.resize(n, 0.0);
+    for row in rows {
+        for (acc, &s) in colsum_scratch.iter_mut().zip(row.iter()) {
+            *acc += s as f64;
+        }
+    }
+    // Select kept columns (top-k_v by vector saliency), ascending ids.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        colsum_scratch[b]
+            .partial_cmp(&colsum_scratch[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut kept: Vec<usize> = idx[..k_v].to_vec();
+    kept.sort_unstable();
+    // 2:4 on the compacted rows.
+    let mut retained = 0.0f64;
+    let m = cfg.m_group;
+    let nk = cfg.n_keep;
+    let mut grp: Vec<f64> = vec![0.0; m];
+    for row in rows {
+        for gcols in kept.chunks_exact(m) {
+            for (g, &c) in grp.iter_mut().zip(gcols) {
+                *g = row[c] as f64;
+            }
+            retained += sum_top_k(&grp, nk);
+        }
+    }
+    retained
+}
+
+/// ICP: retained saliency of a group of `M` column vectors (each of height V,
+/// column-major contiguous) under N:M row pruning. `cols` are the M member
+/// vectors of remainder ∪ sample.
+pub fn icp_group_retained(cols: &[&[f32]], v: usize, cfg: &HinmConfig) -> f64 {
+    debug_assert_eq!(cols.len(), cfg.m_group);
+    debug_assert!(cols.iter().all(|c| c.len() == v));
+    let mut retained = 0.0f64;
+    if cfg.m_group == 4 && cfg.n_keep == 2 {
+        let (c0, c1, c2, c3) = (cols[0], cols[1], cols[2], cols[3]);
+        for r in 0..v {
+            let (a, b, c, d) = (c0[r], c1[r], c2[r], c3[r]);
+            let (lo1, hi1) = if a < b { (a, b) } else { (b, a) };
+            let (lo2, hi2) = if c < d { (c, d) } else { (d, c) };
+            let smallest = if lo1 < lo2 { lo1 } else { lo2 };
+            let second = if lo1 < lo2 {
+                if lo2 < hi1 { lo2 } else { hi1 }
+            } else if lo1 < hi2 {
+                lo1
+            } else {
+                hi2
+            };
+            retained += (a + b + c + d - smallest - second) as f64;
+        }
+    } else {
+        let mut grp = vec![0.0f64; cfg.m_group];
+        for r in 0..v {
+            for (g, col) in grp.iter_mut().zip(cols) {
+                *g = col[r] as f64;
+            }
+            retained += sum_top_k(&grp, cfg.n_keep);
+        }
+    }
+    retained
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_selection() {
+        assert_eq!(sum_top_k(&[1.0, 5.0, 3.0, 2.0], 2), 8.0);
+        assert_eq!(sum_top_k(&[1.0, 5.0], 0), 0.0);
+        assert_eq!(sum_top_k(&[1.0, 5.0], 2), 6.0);
+        assert_eq!(sum_top_k(&[-1.0, -5.0, -3.0], 1), -1.0);
+    }
+
+    #[test]
+    fn ocp_retained_adds_and_selects() {
+        let rem = vec![1.0, 0.0, 5.0, 0.0];
+        let clu = vec![1.0, 4.0, 0.0, 0.0];
+        let mut scratch = Vec::new();
+        // combined = [2,4,5,0]; top-2 = 9
+        assert_eq!(ocp_partition_retained(&rem, &clu, 2, &mut scratch), 9.0);
+    }
+
+    #[test]
+    fn icp_group_24_picks_row_top2() {
+        let cfg = HinmConfig::with_24(4, 0.0);
+        let c0 = vec![9.0f32, 1.0];
+        let c1 = vec![8.0f32, 2.0];
+        let c2 = vec![1.0f32, 3.0];
+        let c3 = vec![2.0f32, 4.0];
+        let got = icp_group_retained(&[&c0, &c1, &c2, &c3], 2, &cfg);
+        assert_eq!(got, (9.0 + 8.0 + 3.0 + 4.0) as f64);
+    }
+
+    #[test]
+    fn icp_group_generic_nm() {
+        let cfg = HinmConfig { v: 1, n_keep: 1, m_group: 3, vector_sparsity: 0.0 };
+        let c0 = vec![5.0f32];
+        let c1 = vec![7.0f32];
+        let c2 = vec![1.0f32];
+        assert_eq!(icp_group_retained(&[&c0, &c1, &c2], 1, &cfg), 7.0);
+    }
+
+    #[test]
+    fn hinm_aware_cost_lower_than_vector_only() {
+        // After 2:4, retained ≤ vector-level retained.
+        let cfg = HinmConfig::with_24(2, 0.5);
+        let r0: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let r1: Vec<f32> = vec![8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        let rows: Vec<&[f32]> = vec![&r0, &r1];
+        let mut scratch = Vec::new();
+        let hinm = ocp_partition_retained_hinm(&rows, 4, &cfg, &mut scratch);
+        let colsum: Vec<f64> = (0..8).map(|c| (r0[c] + r1[c]) as f64).collect();
+        let vec_only = sum_top_k(&colsum, 4);
+        assert!(hinm <= vec_only + 1e-9, "{hinm} vs {vec_only}");
+        assert!(hinm > 0.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! The full gyro-permutation pipeline for one layer (paper §4):
+//! OCP → column-wise vector pruning → per-tile ICP → N:M packing.
+
+use super::icp::{gyro_icp, IcpParams, IcpResult};
+use super::ocp::{gyro_ocp, OcpParams};
+use crate::sparsity::config::HinmConfig;
+use crate::sparsity::hinm::{gather_tile, prune_with_kept, HinmResult};
+use crate::sparsity::vector_prune::vector_prune;
+use crate::tensor::Matrix;
+
+#[derive(Clone, Debug, Default)]
+pub struct GyroParams {
+    pub ocp: OcpParams,
+    pub icp: IcpParams,
+    /// Skip OCP (ablation arms that replace it).
+    pub skip_ocp: bool,
+    /// Skip ICP.
+    pub skip_icp: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct GyroOutcome {
+    /// Output-channel permutation applied to rows (offline; folded into the
+    /// adjacent layers, see paper §3.2).
+    pub ocp_perm: Vec<usize>,
+    /// Per-tile orders over kept columns (consumed by the runtime gather).
+    pub tile_orders: Vec<Vec<usize>>,
+    /// Final packed layer + retention stats.
+    pub result: HinmResult,
+    /// Eq. 2 retention after OCP only.
+    pub ocp_retained: f64,
+    /// ICP iteration stats per tile.
+    pub icp_stats: Vec<(usize, usize)>, // (iters_run, accepted)
+}
+
+/// Run gyro-permutation + HiNM pruning on one layer.
+///
+/// `w` and `sal` are the dense weights and their saliency; the returned
+/// packed matrix stores rows in *permuted* order — callers fold `ocp_perm`
+/// into neighbouring layers offline (the paper's consistency argument).
+pub fn gyro_permute_and_prune(
+    w: &Matrix,
+    sal: &Matrix,
+    cfg: &HinmConfig,
+    params: &GyroParams,
+) -> GyroOutcome {
+    cfg.validate(w.rows, w.cols).expect("invalid config");
+    assert_eq!(w.shape(), sal.shape());
+
+    // --- Phase 1: output-channel permutation (Eq. 2). ---
+    let (ocp_perm, ocp_retained) = if params.skip_ocp {
+        ((0..w.rows).collect::<Vec<_>>(), f64::NAN)
+    } else {
+        let r = gyro_ocp(sal, cfg, &params.ocp);
+        (r.perm, r.retained)
+    };
+    let w_p = w.permute_rows(&ocp_perm);
+    let sal_p = sal.permute_rows(&ocp_perm);
+
+    // --- Phase 2: column-wise vector pruning on the permuted layout. ---
+    let vp = vector_prune(&sal_p, cfg);
+    let k_v = vp.kept[0].len();
+
+    // --- Phase 3: tile-wise ICP (Eq. 3), tiles independent. ---
+    let tiles = cfg.tiles(w.rows);
+    let mut tile_orders: Vec<Vec<usize>> = Vec::with_capacity(tiles);
+    let mut icp_stats = Vec::with_capacity(tiles);
+    let mut buf = vec![0.0f32; cfg.v * k_v];
+    for t in 0..tiles {
+        if params.skip_icp {
+            tile_orders.push((0..k_v).collect());
+            icp_stats.push((0, 0));
+            continue;
+        }
+        gather_tile(&sal_p, cfg, t, &vp.kept[t], &mut buf);
+        // Column-major copy for the ICP cost kernels.
+        let cols: Vec<Vec<f32>> = (0..k_v)
+            .map(|j| (0..cfg.v).map(|r| buf[r * k_v + j]).collect())
+            .collect();
+        let icp_params = IcpParams {
+            seed: params.icp.seed ^ (t as u64).wrapping_mul(0x9E37_79B9),
+            ..params.icp.clone()
+        };
+        let IcpResult { order, iters_run, accepted, .. } = gyro_icp(&cols, cfg.v, cfg, &icp_params);
+        tile_orders.push(order);
+        icp_stats.push((iters_run, accepted));
+    }
+
+    // --- Phase 4: pack with the permuted kept-column grouping. ---
+    let result = prune_with_kept(&w_p, &sal_p, cfg, &vp, Some(&tile_orders));
+
+    // --- Never-worse guard (hierarchical pruning awareness, paper §4.1):
+    // OCP optimizes the *vector-level* objective (Eq. 2), which on rare
+    // inputs lowers the final hierarchical retention below the unpermuted
+    // baseline (elements it consolidates get re-pruned by 2:4). Gyro keeps
+    // whichever arrangement retains more — permutation must never hurt. ---
+    let baseline = crate::sparsity::hinm::hinm_retained(sal, cfg);
+    if result.retained < baseline {
+        let id_perm: Vec<usize> = (0..w.rows).collect();
+        let vp0 = vector_prune(sal, cfg);
+        let k_v0 = vp0.kept[0].len();
+        let mut id_orders: Vec<Vec<usize>> = Vec::with_capacity(vp0.kept.len());
+        let mut stats = Vec::with_capacity(vp0.kept.len());
+        let tiles = cfg.tiles(w.rows);
+        let mut buf0 = vec![0.0f32; cfg.v * k_v0];
+        for t in 0..tiles {
+            // Re-run ICP alone on the unpermuted layout (ICP is always
+            // monotone w.r.t. the final objective).
+            if params.skip_icp {
+                id_orders.push((0..k_v0).collect());
+                stats.push((0, 0));
+                continue;
+            }
+            gather_tile(sal, cfg, t, &vp0.kept[t], &mut buf0);
+            let cols: Vec<Vec<f32>> = (0..k_v0)
+                .map(|j| (0..cfg.v).map(|r| buf0[r * k_v0 + j]).collect())
+                .collect();
+            let icp_params = IcpParams {
+                seed: params.icp.seed ^ (t as u64).wrapping_mul(0x517C_C1B7),
+                ..params.icp.clone()
+            };
+            let res = gyro_icp(&cols, cfg.v, cfg, &icp_params);
+            stats.push((res.iters_run, res.accepted));
+            id_orders.push(res.order);
+        }
+        let fallback = prune_with_kept(w, sal, cfg, &vp0, Some(&id_orders));
+        if fallback.retained >= result.retained {
+            return GyroOutcome {
+                ocp_perm: id_perm,
+                tile_orders: id_orders,
+                result: fallback,
+                ocp_retained,
+                icp_stats: stats,
+            };
+        }
+    }
+
+    GyroOutcome { ocp_perm, tile_orders, result, ocp_retained, icp_stats }
+}
+
+/// Convenience: HiNM retention ratio with and without gyro, for quick A/B.
+pub fn retention_gain(w: &Matrix, sal: &Matrix, cfg: &HinmConfig, params: &GyroParams) -> (f64, f64) {
+    let noperm = crate::sparsity::hinm::prune_oneshot(w, sal, cfg);
+    let gyro = gyro_permute_and_prune(w, sal, cfg, params);
+    (noperm.retention_ratio, gyro.result.retention_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn mixed_importance(m: usize, n: usize, seed: u64) -> (Matrix, Matrix) {
+        // Heavy-tailed weights: some channels/columns far more important.
+        let mut rng = Xoshiro256::new(seed);
+        let row_scale: Vec<f32> = (0..m).map(|_| if rng.next_f32() < 0.3 { 3.0 } else { 0.3 }).collect();
+        let col_scale: Vec<f32> = (0..n).map(|_| if rng.next_f32() < 0.3 { 3.0 } else { 0.3 }).collect();
+        let w = Matrix::from_fn(m, n, |r, c| rng.normal() * row_scale[r] * col_scale[c]);
+        let sal = w.abs();
+        (w, sal)
+    }
+
+    #[test]
+    fn gyro_beats_noperm_on_heterogeneous_layers() {
+        let (w, sal) = mixed_importance(32, 64, 42);
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let (noperm, gyro) = retention_gain(&w, &sal, &cfg, &GyroParams::default());
+        assert!(
+            gyro > noperm,
+            "gyro retention {gyro} should beat no-perm {noperm}"
+        );
+    }
+
+    #[test]
+    fn packed_layer_valid_and_correct_density() {
+        let (w, sal) = mixed_importance(32, 64, 43);
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let out = gyro_permute_and_prune(&w, &sal, &cfg, &GyroParams::default());
+        out.result.packed.check_invariants().unwrap();
+        assert!((out.result.mask.sparsity() - cfg.total_sparsity()).abs() < 0.02);
+        assert!(crate::tensor::is_permutation(&out.ocp_perm, 32));
+        for ord in &out.tile_orders {
+            assert!(crate::tensor::is_permutation(ord, out.result.packed.k_v));
+        }
+    }
+
+    #[test]
+    fn dense_reconstruction_matches_permuted_weights() {
+        let (w, sal) = mixed_importance(16, 32, 44);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let out = gyro_permute_and_prune(&w, &sal, &cfg, &GyroParams::default());
+        let w_p = w.permute_rows(&out.ocp_perm);
+        let dense = out.result.packed.to_dense();
+        // Every kept value equals the corresponding permuted weight.
+        for r in 0..16 {
+            for c in 0..32 {
+                let d = dense.at(r, c);
+                if d != 0.0 {
+                    assert_eq!(d, w_p.at(r, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_flags_disable_phases() {
+        let (w, sal) = mixed_importance(16, 32, 45);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let out = gyro_permute_and_prune(
+            &w,
+            &sal,
+            &cfg,
+            &GyroParams { skip_ocp: true, skip_icp: true, ..Default::default() },
+        );
+        assert_eq!(out.ocp_perm, (0..16).collect::<Vec<_>>());
+        assert!(out.tile_orders.iter().all(|o| o.iter().enumerate().all(|(i, &x)| i == x)));
+        // With both phases off this must equal plain one-shot HiNM.
+        let noperm = crate::sparsity::hinm::prune_oneshot(&w, &sal, &cfg);
+        assert!((out.result.retained - noperm.retained).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ocp_and_icp_contribute_independently() {
+        let (w, sal) = mixed_importance(32, 64, 46);
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let full = gyro_permute_and_prune(&w, &sal, &cfg, &GyroParams::default());
+        let no_icp = gyro_permute_and_prune(
+            &w,
+            &sal,
+            &cfg,
+            &GyroParams { skip_icp: true, ..Default::default() },
+        );
+        let no_ocp = gyro_permute_and_prune(
+            &w,
+            &sal,
+            &cfg,
+            &GyroParams { skip_ocp: true, ..Default::default() },
+        );
+        assert!(full.result.retained >= no_icp.result.retained - 1e-9);
+        assert!(full.result.retained >= no_ocp.result.retained * 0.999);
+    }
+}

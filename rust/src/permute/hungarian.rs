@@ -1,0 +1,197 @@
+//! Hungarian algorithm (Kuhn–Munkres) for minimum-cost perfect assignment.
+//!
+//! Used by the gyro-permutation **assignment** phase (paper §4.2): after
+//! sampling and clustering, the P samples/clusters must be re-assigned to
+//! the P partitions minimizing total pruning loss (Eq. 4). This is the
+//! O(n³) shortest-augmenting-path formulation (Jonker–Volgenant style
+//! potentials) — exact, no approximation.
+
+/// Solve min-cost assignment on a square cost matrix `cost[i][j]` (cost of
+/// assigning *column/worker* `j` to *row/task* `i`). Returns `assign` with
+/// `assign[i] = j` and the total cost.
+pub fn solve(cost: &[Vec<f64>]) -> (Vec<usize>, f64) {
+    let n = cost.len();
+    assert!(n > 0, "empty cost matrix");
+    for row in cost {
+        assert_eq!(row.len(), n, "cost matrix must be square");
+    }
+    // Potentials u (rows), v (cols); way[j] = previous column on the
+    // augmenting path; matching p[j] = row assigned to column j.
+    // 1-indexed internally per the classical formulation.
+    const INF: f64 = f64::INFINITY;
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to col j (0 = none)
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the path.
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assign = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            assign[p[j] - 1] = j - 1;
+        }
+    }
+    let total: f64 = (0..n).map(|i| cost[i][assign[i]]).sum();
+    (assign, total)
+}
+
+/// Brute-force solver for testing (n ≤ 9).
+#[cfg(test)]
+pub fn brute_force(cost: &[Vec<f64>]) -> f64 {
+    let n = cost.len();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut best = f64::INFINITY;
+    permute_all(&mut perm, 0, &mut |p| {
+        let c: f64 = (0..n).map(|i| cost[i][p[i]]).sum();
+        if c < best {
+            best = c;
+        }
+    });
+    best
+}
+
+#[cfg(test)]
+fn permute_all(perm: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == perm.len() {
+        f(perm);
+        return;
+    }
+    for i in k..perm.len() {
+        perm.swap(k, i);
+        permute_all(perm, k + 1, f);
+        perm.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn trivial_identity() {
+        let cost = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let (assign, total) = solve(&cost);
+        assert_eq!(assign, vec![0, 1]);
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn forced_swap() {
+        let cost = vec![vec![10.0, 1.0], vec![1.0, 10.0]];
+        let (assign, total) = solve(&cost);
+        assert_eq!(assign, vec![1, 0]);
+        assert_eq!(total, 2.0);
+    }
+
+    #[test]
+    fn classic_example() {
+        // Known optimum 140: (0→1? ...) classic 4x4.
+        let cost = vec![
+            vec![82.0, 83.0, 69.0, 92.0],
+            vec![77.0, 37.0, 49.0, 92.0],
+            vec![11.0, 69.0, 5.0, 86.0],
+            vec![8.0, 9.0, 98.0, 23.0],
+        ];
+        let (_, total) = solve(&cost);
+        assert_eq!(total, 140.0);
+    }
+
+    #[test]
+    fn matches_brute_force_random() {
+        let mut rng = Xoshiro256::new(77);
+        for n in 2..=7 {
+            for _ in 0..20 {
+                let cost: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..n).map(|_| (rng.next_f64() * 100.0).round()).collect())
+                    .collect();
+                let (assign, total) = solve(&cost);
+                // assignment is a permutation
+                let mut seen = vec![false; n];
+                for &j in &assign {
+                    assert!(!seen[j]);
+                    seen[j] = true;
+                }
+                let bf = brute_force(&cost);
+                assert!(
+                    (total - bf).abs() < 1e-9,
+                    "n={n}: hungarian={total} brute={bf} cost={cost:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn handles_negative_costs() {
+        let cost = vec![vec![-5.0, 0.0], vec![0.0, -5.0]];
+        let (assign, total) = solve(&cost);
+        assert_eq!(assign, vec![0, 1]);
+        assert_eq!(total, -10.0);
+    }
+
+    #[test]
+    fn large_instance_is_fast_and_valid() {
+        let mut rng = Xoshiro256::new(78);
+        let n = 128;
+        let cost: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.next_f64()).collect())
+            .collect();
+        let t0 = std::time::Instant::now();
+        let (assign, total) = solve(&cost);
+        assert!(t0.elapsed().as_millis() < 2_000);
+        let mut seen = vec![false; n];
+        for &j in &assign {
+            assert!(!seen[j]);
+            seen[j] = true;
+        }
+        // Optimal total must beat identity and a random permutation.
+        let id: f64 = (0..n).map(|i| cost[i][i]).sum();
+        assert!(total <= id);
+    }
+}

@@ -1,0 +1,251 @@
+//! Balanced K-means clustering of channels (paper §4.2 "Clustering").
+//!
+//! Groups sampled output channels by similarity of their saliency profiles
+//! under the constraint that every cluster has exactly `cluster_size`
+//! members (so clusters can be assigned one-to-one to partitions). Balanced
+//! assignment per round is solved exactly with the Hungarian algorithm on a
+//! (points × slots) distance matrix — the same approach OVW/Tan et al. use.
+
+use super::hungarian;
+use crate::util::rng::Xoshiro256;
+
+/// Result: `clusters[c]` = indices (into the input point list) of cluster c.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    pub clusters: Vec<Vec<usize>>,
+}
+
+/// Balanced K-means over `points` (each a feature vector, e.g. a channel's
+/// |saliency| profile). `k` clusters of exactly `cluster_size` points;
+/// requires `points.len() == k * cluster_size`.
+pub fn balanced_kmeans(
+    points: &[Vec<f32>],
+    k: usize,
+    cluster_size: usize,
+    max_iters: usize,
+    rng: &mut Xoshiro256,
+) -> Clustering {
+    assert!(k > 0 && cluster_size > 0);
+    assert_eq!(points.len(), k * cluster_size, "balanced kmeans needs k·size points");
+    let dim = points[0].len();
+    assert!(points.iter().all(|p| p.len() == dim));
+    let n = points.len();
+
+    if k == 1 {
+        return Clustering { clusters: vec![(0..n).collect()] };
+    }
+
+    // Seeding: farthest-point (k-means++-like) for small inputs; random
+    // distinct points for large ones (farthest-point is O(n·k²·dim)).
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    if n <= 256 {
+        centroids.push(points[rng.below(n)].clone());
+        while centroids.len() < k {
+            let mut best_i = 0;
+            let mut best_d = -1.0f64;
+            for (i, p) in points.iter().enumerate() {
+                let d = centroids
+                    .iter()
+                    .map(|c| dist2(p, c))
+                    .fold(f64::INFINITY, f64::min);
+                if d > best_d {
+                    best_d = d;
+                    best_i = i;
+                }
+            }
+            centroids.push(points[best_i].clone());
+        }
+    } else {
+        for i in rng.sample_distinct(n, k) {
+            centroids.push(points[i].clone());
+        }
+    }
+
+    // Exact balanced assignment (Hungarian on an n×n slot matrix) is O(n³);
+    // beyond this size a greedy fill (sort all point–cluster distances,
+    // assign while capacity remains) is the standard approximation — same
+    // scheme large-scale balanced-clustering implementations use.
+    const EXACT_LIMIT: usize = 256;
+
+    let mut assignment = vec![0usize; n];
+    for _ in 0..max_iters {
+        let new_assignment: Vec<usize> = if n <= EXACT_LIMIT {
+            let cost: Vec<Vec<f64>> = (0..n)
+                .map(|i| {
+                    (0..n)
+                        .map(|s| dist2(&points[i], &centroids[s / cluster_size]))
+                        .collect()
+                })
+                .collect();
+            let (assign_slots, _) = hungarian::solve(&cost);
+            assign_slots.iter().map(|&s| s / cluster_size).collect()
+        } else {
+            greedy_balanced(points, &centroids, cluster_size)
+        };
+        let changed = new_assignment != assignment;
+        assignment = new_assignment;
+
+        // Update centroids.
+        let mut sums = vec![vec![0.0f32; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, &c) in assignment.iter().enumerate() {
+            counts[c] += 1;
+            for (s, &x) in sums[c].iter_mut().zip(&points[i]) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f32;
+                }
+                centroids[c] = sums[c].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut clusters = vec![Vec::with_capacity(cluster_size); k];
+    for (i, &c) in assignment.iter().enumerate() {
+        clusters[c].push(i);
+    }
+    Clustering { clusters }
+}
+
+/// Greedy balanced assignment: globally sort (point, cluster) pairs by
+/// distance; assign greedily while the cluster has capacity.
+fn greedy_balanced(points: &[Vec<f32>], centroids: &[Vec<f32>], cluster_size: usize) -> Vec<usize> {
+    let n = points.len();
+    let k = centroids.len();
+    let mut pairs: Vec<(f64, u32, u32)> = Vec::with_capacity(n * k);
+    for (i, p) in points.iter().enumerate() {
+        for (c, cent) in centroids.iter().enumerate() {
+            pairs.push((dist2(p, cent), i as u32, c as u32));
+        }
+    }
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut assignment = vec![usize::MAX; n];
+    let mut remaining = vec![cluster_size; k];
+    let mut unassigned = n;
+    for (_, i, c) in pairs {
+        let (i, c) = (i as usize, c as usize);
+        if assignment[i] == usize::MAX && remaining[c] > 0 {
+            assignment[i] = c;
+            remaining[c] -= 1;
+            unassigned -= 1;
+            if unassigned == 0 {
+                break;
+            }
+        }
+    }
+    debug_assert!(assignment.iter().all(|&a| a != usize::MAX));
+    assignment
+}
+
+#[inline]
+fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_are_balanced() {
+        let mut rng = Xoshiro256::new(21);
+        let points: Vec<Vec<f32>> = (0..12)
+            .map(|i| vec![i as f32, (i * i) as f32 * 0.1])
+            .collect();
+        let c = balanced_kmeans(&points, 4, 3, 10, &mut rng);
+        assert_eq!(c.clusters.len(), 4);
+        for cl in &c.clusters {
+            assert_eq!(cl.len(), 3);
+        }
+        // Partition property.
+        let mut all: Vec<usize> = c.clusters.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn separated_blobs_recovered() {
+        let mut rng = Xoshiro256::new(22);
+        // Two tight blobs far apart, 3 points each.
+        let mut points = Vec::new();
+        for i in 0..3 {
+            points.push(vec![0.0 + i as f32 * 0.01, 0.0]);
+        }
+        for i in 0..3 {
+            points.push(vec![100.0 + i as f32 * 0.01, 0.0]);
+        }
+        let c = balanced_kmeans(&points, 2, 3, 20, &mut rng);
+        let mut groups: Vec<Vec<usize>> = c.clusters.clone();
+        for g in groups.iter_mut() {
+            g.sort_unstable();
+        }
+        groups.sort();
+        assert_eq!(groups, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    }
+
+    #[test]
+    fn single_cluster_passthrough() {
+        let mut rng = Xoshiro256::new(23);
+        let points: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32]).collect();
+        let c = balanced_kmeans(&points, 1, 5, 5, &mut rng);
+        assert_eq!(c.clusters[0].len(), 5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let points: Vec<Vec<f32>> = (0..8).map(|i| vec![(i % 4) as f32, (i / 4) as f32]).collect();
+        let a = balanced_kmeans(&points, 2, 4, 10, &mut Xoshiro256::new(5));
+        let b = balanced_kmeans(&points, 2, 4, 10, &mut Xoshiro256::new(5));
+        assert_eq!(a.clusters, b.clusters);
+    }
+}
+
+#[cfg(test)]
+mod greedy_tests {
+    use super::*;
+
+    #[test]
+    fn greedy_path_is_balanced_partition() {
+        let mut rng = Xoshiro256::new(24);
+        // n = 320 > EXACT_LIMIT → greedy path.
+        let points: Vec<Vec<f32>> = (0..320)
+            .map(|i| vec![(i % 10) as f32, rng.next_f32()])
+            .collect();
+        let c = balanced_kmeans(&points, 10, 32, 6, &mut rng);
+        assert_eq!(c.clusters.len(), 10);
+        for cl in &c.clusters {
+            assert_eq!(cl.len(), 32);
+        }
+        let mut all: Vec<usize> = c.clusters.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..320).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn greedy_separates_far_blobs() {
+        let mut rng = Xoshiro256::new(25);
+        let mut points = Vec::new();
+        for i in 0..300 {
+            let base = if i < 150 { 0.0 } else { 1000.0 };
+            points.push(vec![base + rng.next_f32()]);
+        }
+        let c = balanced_kmeans(&points, 2, 150, 8, &mut rng);
+        for cl in &c.clusters {
+            let lo = cl.iter().filter(|&&i| i < 150).count();
+            assert!(lo == 0 || lo == 150, "blobs mixed: {lo}");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Channel permutation — the paper's contribution (gyro-permutation) plus
+//! the baseline/ablation permutation methods it is compared against.
+
+pub mod baselines;
+pub mod cost;
+pub mod gyro;
+pub mod hungarian;
+pub mod icp;
+pub mod kmeans;
+pub mod ocp;
+pub mod sampling;
+
+pub use gyro::{gyro_permute_and_prune, GyroOutcome, GyroParams};
+pub use icp::{gyro_icp, IcpParams};
+pub use ocp::{gyro_ocp, OcpParams};

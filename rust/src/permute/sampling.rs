@@ -1,0 +1,82 @@
+//! Sample-count schedule for the gyro **sampling** phase (paper §4.2).
+//!
+//! "The effectiveness of permutations is significantly influenced by the
+//! number of samples extracted from each partition, akin to the effect of
+//! learning rates in model training." Large sample counts escape local
+//! minima; small counts converge precisely. The schedule is a geometric
+//! ladder with warm restarts: `V/4, V/8, …, 1, V/4, …` — the "gyro" motion
+//! that alternates exploration and refinement.
+
+/// Annealed sample-count schedule with warm restarts.
+#[derive(Clone, Debug)]
+pub struct SampleSchedule {
+    ladder: Vec<usize>,
+}
+
+impl SampleSchedule {
+    /// Ladder for partitions of size `partition_size`: starts at
+    /// `partition_size / 4` (at least 1), halves down to 1.
+    pub fn for_partition(partition_size: usize) -> Self {
+        let mut ladder = Vec::new();
+        let mut k = (partition_size / 4).max(1);
+        while k > 1 {
+            ladder.push(k);
+            k /= 2;
+        }
+        ladder.push(1);
+        Self { ladder }
+    }
+
+    /// Constant schedule (ICP uses k = 1 always).
+    pub fn constant(k: usize) -> Self {
+        assert!(k >= 1);
+        Self { ladder: vec![k] }
+    }
+
+    /// Sample count for iteration `i` (cyclic warm restarts).
+    pub fn k_at(&self, iter: usize) -> usize {
+        self.ladder[iter % self.ladder.len()]
+    }
+
+    pub fn cycle_len(&self) -> usize {
+        self.ladder.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_for_v32() {
+        let s = SampleSchedule::for_partition(32);
+        assert_eq!(
+            (0..5).map(|i| s.k_at(i)).collect::<Vec<_>>(),
+            vec![8, 4, 2, 1, 8] // warm restart at the cycle boundary
+        );
+    }
+
+    #[test]
+    fn ladder_for_small_partitions() {
+        assert_eq!(SampleSchedule::for_partition(4).k_at(0), 1);
+        assert_eq!(SampleSchedule::for_partition(8).k_at(0), 2);
+        assert_eq!(SampleSchedule::for_partition(8).k_at(1), 1);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = SampleSchedule::constant(1);
+        assert!((0..10).all(|i| s.k_at(i) == 1));
+    }
+
+    #[test]
+    fn k_never_exceeds_quarter_partition() {
+        for v in [4usize, 8, 16, 32, 64, 128] {
+            let s = SampleSchedule::for_partition(v);
+            for i in 0..2 * s.cycle_len() {
+                assert!(s.k_at(i) <= (v / 4).max(1));
+                assert!(s.k_at(i) >= 1);
+            }
+        }
+    }
+}

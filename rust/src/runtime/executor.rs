@@ -1,0 +1,207 @@
+//! PJRT executor: loads an HLO-text artifact, compiles it on the CPU PJRT
+//! client, and executes it with validated literals. Adapted from
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format (the
+//! crate's XLA rejects jax ≥ 0.5 serialized protos).
+
+use super::registry::{ArtifactSpec, Dtype, InputSpec};
+use crate::tensor::npy::{NpyArray, NpyData};
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+thread_local! {
+    static CLIENT: RefCell<Option<PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// The thread's PJRT CPU client. PJRT wrapper types are `Rc`-based
+/// (`!Send`), so each thread that touches XLA owns a client; executors must
+/// be created and used on the same thread (the batch server and trainer are
+/// structured accordingly).
+pub fn client() -> Result<PjRtClient> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(PjRtClient::cpu().context("creating PJRT CPU client")?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executor {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Load + compile an artifact.
+    pub fn load(spec: &ArtifactSpec) -> Result<Executor> {
+        let client = client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .context("artifact path not utf8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Executor { spec: spec.clone(), exe })
+    }
+
+    /// Execute with positional literals; validates count and element counts
+    /// against the manifest, returns the flattened output tuple.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (lit, spec) in inputs.iter().zip(&self.spec.inputs) {
+            let want: usize = spec.elements();
+            let got = lit.element_count();
+            if got != want {
+                bail!(
+                    "{}: input {:?} has {} elements, expected {} (shape {:?})",
+                    self.spec.name,
+                    spec.name,
+                    got,
+                    want,
+                    spec.shape
+                );
+            }
+        }
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = lit.to_tuple().context("decomposing output tuple")?;
+        if outs.len() != self.spec.n_outputs {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.n_outputs
+            );
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host-data conversions
+// ---------------------------------------------------------------------------
+
+/// f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elements vs dims {:?}", data.len(), dims);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elements vs dims {:?}", data.len(), dims);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Matrix → 2-D f32 literal.
+pub fn lit_matrix(m: &Matrix) -> Result<Literal> {
+    lit_f32(&m.data, &[m.rows, m.cols])
+}
+
+/// Literal → host f32 vec.
+pub fn lit_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Literal → Matrix with the given shape.
+pub fn lit_to_matrix(lit: &Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = lit_to_f32(lit)?;
+    if v.len() != rows * cols {
+        bail!("literal has {} elements, wanted {rows}×{cols}", v.len());
+    }
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+/// `.npy` array → literal (dtype-dispatching).
+pub fn lit_from_npy(arr: &NpyArray) -> Result<Literal> {
+    match &arr.data {
+        NpyData::F32(v) => lit_f32(v, &arr.shape),
+        NpyData::I32(v) => lit_i32(v, &arr.shape),
+    }
+}
+
+/// Build a literal of zeros matching an input spec (for warmup/validation).
+pub fn lit_zeros(spec: &InputSpec) -> Result<Literal> {
+    match spec.dtype {
+        Dtype::F32 => lit_f32(&vec![0.0; spec.elements()], &spec.shape),
+        Dtype::I32 => lit_i32(&vec![0; spec.elements()], &spec.shape),
+    }
+}
+
+/// Pack a [`crate::sparsity::HinmPacked`] into the kernel's three literals
+/// (vals [T,V,vpr] f32, vec_idx [T,K_v] i32, nm_idx [T,V,vpr] i32).
+pub fn lit_packed(p: &crate::sparsity::HinmPacked) -> Result<(Literal, Literal, Literal)> {
+    let t = p.tiles();
+    let vpr = p.vals_per_row();
+    let vals = lit_f32(&p.vals, &[t, p.cfg.v, vpr])?;
+    let vidx = lit_i32(&p.vec_idx, &[t, p.k_v])?;
+    let nm: Vec<i32> = p.nm_idx.iter().map(|&o| o as i32).collect();
+    let nm = lit_i32(&nm, &[t, p.cfg.v, vpr])?;
+    Ok((vals, vidx, nm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit_to_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![1i32, -2, 3];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn matrix_conversion() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let lit = lit_matrix(&m).unwrap();
+        let back = lit_to_matrix(&lit, 2, 2).unwrap();
+        assert_eq!(m, back);
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: the Rust↔XLA bridge that loads the AOT artifacts emitted by
+//! `python/compile/aot.py` and executes them on the request path with Python
+//! out of the loop.
+
+pub mod executor;
+pub mod registry;
+
+pub use executor::{client, Executor};
+pub use registry::Registry;
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Default artifact directory: `$HINM_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("HINM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Open the default registry (errors point the user at `make artifacts`).
+pub fn open_default_registry() -> Result<Registry> {
+    Registry::open(default_artifact_dir())
+}

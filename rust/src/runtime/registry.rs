@@ -1,0 +1,201 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and hands out typed artifact/data descriptors.
+
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Dtype of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One positional input of an artifact.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub n_outputs: usize,
+    /// Free-form metadata (shapes, hyperparams) recorded at lowering time.
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// One `.npy` data dump (initial params, demo packed tensors).
+#[derive(Clone, Debug)]
+pub struct DataSpec {
+    pub name: String,
+    pub file: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub root: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub data: BTreeMap<String, DataSpec>,
+    /// Ordered LM parameter / mask names (for the trainer).
+    pub lm_param_names: Vec<String>,
+    pub lm_mask_names: Vec<String>,
+}
+
+impl Registry {
+    /// Load `<root>/manifest.json`.
+    pub fn open<P: AsRef<Path>>(root: P) -> Result<Registry> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::from_json(&root, &text)
+    }
+
+    pub fn from_json(root: &Path, text: &str) -> Result<Registry> {
+        let doc = parse(text).map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        for a in doc.get("artifacts").as_arr().context("artifacts missing")? {
+            let name = a.get("name").as_str().context("artifact name")?.to_string();
+            let file = root.join(a.get("file").as_str().context("artifact file")?);
+            let mut inputs = Vec::new();
+            for spec in a.get("inputs").as_arr().context("inputs")? {
+                inputs.push(InputSpec {
+                    name: spec.get("name").as_str().unwrap_or("?").to_string(),
+                    dtype: Dtype::parse(spec.get("dtype").as_str().context("dtype")?)?,
+                    shape: spec
+                        .get("shape")
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                });
+            }
+            let mut meta = BTreeMap::new();
+            if let Some(obj) = a.get("meta").as_obj() {
+                for (k, v) in obj {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            let n_outputs = a.get("n_outputs").as_usize().context("n_outputs")?;
+            artifacts.insert(name.clone(), ArtifactSpec { name, file, inputs, n_outputs, meta });
+        }
+        let mut data = BTreeMap::new();
+        for d in doc.get("data").as_arr().unwrap_or(&[]) {
+            let name = d.get("name").as_str().context("data name")?.to_string();
+            let file = root.join(d.get("file").as_str().context("data file")?);
+            data.insert(name.clone(), DataSpec { name, file });
+        }
+        let str_list = |j: &Json| -> Vec<String> {
+            j.as_arr()
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+        let meta = doc.get("meta");
+        Ok(Registry {
+            root: root.to_path_buf(),
+            lm_param_names: str_list(meta.get("lm_param_names")),
+            lm_mask_names: str_list(meta.get("lm_mask_names")),
+            artifacts,
+            data,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Load a `.npy` data dump.
+    pub fn load_data(&self, name: &str) -> Result<crate::tensor::npy::NpyArray> {
+        let spec = self
+            .data
+            .get(name)
+            .with_context(|| format!("data {name:?} not in manifest"))?;
+        crate::tensor::npy::load(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "spmm", "file": "spmm.hlo.txt", "n_outputs": 1,
+         "meta": {"v": 16, "sv": 0.5},
+         "inputs": [
+           {"name": "vals", "dtype": "float32", "shape": [4, 16, 32]},
+           {"name": "vec_idx", "dtype": "int32", "shape": [4, 64]}
+         ]}
+      ],
+      "data": [{"name": "w", "file": "params/w.npy", "dtype": "float32", "shape": [4, 4]}],
+      "meta": {"lm_param_names": ["tok_emb", "l0.wq"], "lm_mask_names": ["l0.wq"]}
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let r = Registry::from_json(Path::new("/tmp/art"), SAMPLE).unwrap();
+        let a = r.artifact("spmm").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.inputs[1].shape, vec![4, 64]);
+        assert_eq!(a.meta["v"], 16.0);
+        assert_eq!(a.n_outputs, 1);
+        assert_eq!(r.lm_param_names, vec!["tok_emb", "l0.wq"]);
+        assert!(r.data.contains_key("w"));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let r = Registry::from_json(Path::new("/tmp/art"), SAMPLE).unwrap();
+        assert!(r.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("float32", "float64");
+        assert!(Registry::from_json(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration-lite: parse the checked-in artifacts when present.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if root.join("manifest.json").exists() {
+            let r = Registry::open(&root).unwrap();
+            assert!(r.artifacts.contains_key("spmm_demo"));
+            assert!(r.artifacts.contains_key("lm_train_step"));
+            assert!(!r.lm_param_names.is_empty());
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! HiNM sparsity configuration: vector size `V`, `N:M` pattern, and vector
+//! sparsity, with the arithmetic tying them to total sparsity.
+
+/// Configuration of the hierarchical N:M pattern.
+///
+/// A weight matrix `W[m, n]` is tiled into `T = m / v` row-bands ("tiles") of
+/// `v` consecutive output channels. Per tile, column-wise `v×1` vector pruning
+/// keeps `keep_cols(n)` input columns; row-wise `n_keep:m_group` (e.g. 2:4)
+/// pruning then keeps `n_keep` of every `m_group` surviving columns per row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HinmConfig {
+    /// Column-vector height V (paper: 32 for ResNets; 32/64/128 in Fig. 5).
+    pub v: usize,
+    /// N of N:M (kept elements per group).
+    pub n_keep: usize,
+    /// M of N:M (group width). NVIDIA STC: 2:4.
+    pub m_group: usize,
+    /// Fraction of column vectors removed per tile, in [0, 1).
+    pub vector_sparsity: f64,
+}
+
+impl HinmConfig {
+    /// Standard 2:4 with the given vector size and vector sparsity.
+    pub fn with_24(v: usize, vector_sparsity: f64) -> Self {
+        Self { v, n_keep: 2, m_group: 4, vector_sparsity }
+    }
+
+    /// Derive the config that reaches `total` overall sparsity with 2:4 fixed:
+    /// `total = 1 - (1 - s_v)·(N/M)` ⇒ `s_v = 1 - (1-total)·M/N`.
+    pub fn for_total_sparsity(v: usize, total: f64) -> Self {
+        let nm_density = 0.5;
+        let sv = 1.0 - (1.0 - total) / nm_density;
+        assert!(
+            (0.0..1.0).contains(&sv),
+            "total sparsity {total} unreachable with 2:4 (needs ≥ 0.5)"
+        );
+        Self::with_24(v, sv)
+    }
+
+    /// Overall sparsity implied by the config.
+    pub fn total_sparsity(&self) -> f64 {
+        1.0 - (1.0 - self.vector_sparsity) * self.nm_density()
+    }
+
+    pub fn nm_density(&self) -> f64 {
+        self.n_keep as f64 / self.m_group as f64
+    }
+
+    /// Number of column vectors kept per tile for `n` input channels,
+    /// rounded to a multiple of `m_group` (the ICP partition width) and
+    /// clamped to at least one group.
+    pub fn keep_cols(&self, n: usize) -> usize {
+        let raw = (n as f64 * (1.0 - self.vector_sparsity)).round() as usize;
+        let k = (raw / self.m_group) * self.m_group;
+        k.max(self.m_group).min(n - n % self.m_group)
+    }
+
+    /// Number of tiles for `m` output channels (requires `m % v == 0`).
+    pub fn tiles(&self, m: usize) -> usize {
+        assert_eq!(m % self.v, 0, "rows {m} not a multiple of vector size {}", self.v);
+        m / self.v
+    }
+
+    /// Kept values per tile row after N:M (`keep_cols · N/M`).
+    pub fn vals_per_row(&self, n: usize) -> usize {
+        self.keep_cols(n) * self.n_keep / self.m_group
+    }
+
+    /// Validate against a concrete weight shape.
+    pub fn validate(&self, m: usize, n: usize) -> Result<(), String> {
+        if self.v == 0 || self.n_keep == 0 || self.m_group == 0 {
+            return Err("zero-sized config".into());
+        }
+        if self.n_keep > self.m_group {
+            return Err(format!("N:M with N={} > M={}", self.n_keep, self.m_group));
+        }
+        if m % self.v != 0 {
+            return Err(format!("rows {m} not a multiple of V={}", self.v));
+        }
+        if n < self.m_group {
+            return Err(format!("cols {n} smaller than M={}", self.m_group));
+        }
+        if !(0.0..1.0).contains(&self.vector_sparsity) {
+            return Err(format!("vector sparsity {} out of [0,1)", self.vector_sparsity));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_sparsity_roundtrip() {
+        for &total in &[0.5, 0.625, 0.65, 0.75, 0.85, 0.875] {
+            let cfg = HinmConfig::for_total_sparsity(32, total);
+            assert!((cfg.total_sparsity() - total).abs() < 1e-9, "total {total}");
+        }
+    }
+
+    #[test]
+    fn paper_sparsity_mapping() {
+        // 75% total with 2:4 → 50% vector sparsity (paper Fig. 1).
+        let cfg = HinmConfig::for_total_sparsity(4, 0.75);
+        assert!((cfg.vector_sparsity - 0.5).abs() < 1e-9);
+        // 50% total → dense vector level.
+        let cfg = HinmConfig::for_total_sparsity(4, 0.5);
+        assert!(cfg.vector_sparsity.abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn below_nm_floor_panics() {
+        let _ = HinmConfig::for_total_sparsity(4, 0.4);
+    }
+
+    #[test]
+    fn keep_cols_multiple_of_group() {
+        let cfg = HinmConfig::with_24(32, 0.3);
+        for n in [16usize, 64, 100, 768, 3072] {
+            let k = cfg.keep_cols(n);
+            assert_eq!(k % 4, 0);
+            assert!(k >= 4 && k <= n);
+        }
+    }
+
+    #[test]
+    fn vals_per_row_is_half_keep() {
+        let cfg = HinmConfig::with_24(32, 0.5);
+        assert_eq!(cfg.vals_per_row(64), cfg.keep_cols(64) / 2);
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let cfg = HinmConfig::with_24(32, 0.5);
+        assert!(cfg.validate(64, 64).is_ok());
+        assert!(cfg.validate(65, 64).is_err());
+        assert!(cfg.validate(64, 2).is_err());
+        let bad = HinmConfig { v: 8, n_keep: 5, m_group: 4, vector_sparsity: 0.0 };
+        assert!(bad.validate(8, 8).is_err());
+    }
+}

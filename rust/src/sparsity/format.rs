@@ -1,0 +1,346 @@
+//! The packed HiNM storage format — canonical across all three layers.
+//!
+//! For `W[m, n]`, vector size `V`, kept columns `K_v` per tile, 2:4:
+//!
+//! ```text
+//! vals:    f32 [T, V, K_v·N/M]   compacted kept weights
+//! vec_idx: i32 [T, K_v]          original input-channel id per kept column
+//! nm_idx:  u8  [T, V, K_v·N/M]   in-group offset (0..M) per kept value
+//! ```
+//!
+//! `vec_idx` is the software-level index the GPU kernel consumes during the
+//! global→shared gather; `nm_idx` is what NVIDIA's STC consumes in hardware
+//! (2 bits per value — `pack_nm_bits` provides the bit-exact size used in
+//! index-overhead accounting).
+
+use super::config::HinmConfig;
+use super::mask::Mask;
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// A weight matrix compressed to the HiNM format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HinmPacked {
+    pub cfg: HinmConfig,
+    /// Original (uncompressed) shape.
+    pub rows: usize,
+    pub cols: usize,
+    /// Kept columns per tile.
+    pub k_v: usize,
+    /// `[T * V * k_v/2]` compacted values, tile-major then row-major.
+    pub vals: Vec<f32>,
+    /// `[T * k_v]` original column ids (tile-major).
+    pub vec_idx: Vec<i32>,
+    /// `[T * V * k_v/2]` in-group offsets, parallel to `vals`.
+    pub nm_idx: Vec<u8>,
+}
+
+impl HinmPacked {
+    pub fn tiles(&self) -> usize {
+        self.rows / self.cfg.v
+    }
+
+    pub fn vals_per_row(&self) -> usize {
+        self.k_v * self.cfg.n_keep / self.cfg.m_group
+    }
+
+    /// Slice of `vec_idx` for tile `t`.
+    pub fn tile_vec_idx(&self, t: usize) -> &[i32] {
+        &self.vec_idx[t * self.k_v..(t + 1) * self.k_v]
+    }
+
+    /// Values of row `r` within tile `t` (r in 0..V).
+    pub fn tile_row_vals(&self, t: usize, r: usize) -> &[f32] {
+        let vpr = self.vals_per_row();
+        let base = (t * self.cfg.v + r) * vpr;
+        &self.vals[base..base + vpr]
+    }
+
+    pub fn tile_row_nm(&self, t: usize, r: usize) -> &[u8] {
+        let vpr = self.vals_per_row();
+        let base = (t * self.cfg.v + r) * vpr;
+        &self.nm_idx[base..base + vpr]
+    }
+
+    /// Decompress to the dense masked matrix (for testing / verification).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let vpr = self.vals_per_row();
+        let n = self.cfg.n_keep;
+        let m = self.cfg.m_group;
+        for t in 0..self.tiles() {
+            let vidx = self.tile_vec_idx(t);
+            for r in 0..self.cfg.v {
+                let vals = self.tile_row_vals(t, r);
+                let offs = self.tile_row_nm(t, r);
+                for slot in 0..vpr {
+                    let g = slot / n;
+                    let compact_col = g * m + offs[slot] as usize;
+                    let orig_col = vidx[compact_col] as usize;
+                    *out.at_mut(t * self.cfg.v + r, orig_col) = vals[slot];
+                }
+            }
+        }
+        out
+    }
+
+    /// Storage footprint in bytes with 2-bit packed NM indices and i16/i32
+    /// vector indices — mirrors the paper's index-overhead accounting.
+    pub fn storage_bytes(&self) -> usize {
+        let vals = self.vals.len() * 4;
+        let vecidx = self.vec_idx.len() * if self.cols <= i16::MAX as usize { 2 } else { 4 };
+        let nm = self.nm_idx.len().div_ceil(4); // 2 bits each
+        vals + vecidx + nm
+    }
+
+    /// Compression ratio vs. dense f32.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.rows * self.cols * 4) as f64 / self.storage_bytes() as f64
+    }
+
+    /// Structural invariant check (used by property tests and after permute).
+    pub fn check_invariants(&self) -> Result<()> {
+        let t = self.tiles();
+        let vpr = self.vals_per_row();
+        if self.vec_idx.len() != t * self.k_v {
+            bail!("vec_idx len {} != {}", self.vec_idx.len(), t * self.k_v);
+        }
+        if self.vals.len() != t * self.cfg.v * vpr || self.nm_idx.len() != self.vals.len() {
+            bail!("vals/nm_idx length mismatch");
+        }
+        if self.k_v % self.cfg.m_group != 0 {
+            bail!("k_v {} not a multiple of M {}", self.k_v, self.cfg.m_group);
+        }
+        for tt in 0..t {
+            let vidx = self.tile_vec_idx(tt);
+            let mut seen = std::collections::HashSet::new();
+            for &c in vidx {
+                if c < 0 || c as usize >= self.cols {
+                    bail!("tile {tt}: column id {c} out of range");
+                }
+                if !seen.insert(c) {
+                    bail!("tile {tt}: duplicate column id {c}");
+                }
+            }
+        }
+        for (i, &o) in self.nm_idx.iter().enumerate() {
+            if o as usize >= self.cfg.m_group {
+                bail!("nm_idx[{i}] = {o} out of group range");
+            }
+        }
+        // Within each group of N offsets, ascending strictly.
+        let n = self.cfg.n_keep;
+        for row in self.nm_idx.chunks_exact(vpr.max(1)) {
+            for grp in row.chunks_exact(n) {
+                for w in grp.windows(2) {
+                    if w[0] >= w[1] {
+                        bail!("nm offsets not strictly ascending within group");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pack a dense weight matrix given saliency, using saliency to choose both
+/// the kept vectors and the N:M survivors. Optionally a per-tile column order
+/// (from ICP) controls how kept columns are grouped into M-wide partitions.
+///
+/// `tile_col_order[t]`, when given, is a permutation of `0..k_v` applied to
+/// the (ascending) kept-column list of tile `t` before N:M grouping.
+pub fn pack(
+    w: &Matrix,
+    sal: &Matrix,
+    cfg: &HinmConfig,
+    kept: &[Vec<usize>],
+    tile_col_order: Option<&[Vec<usize>]>,
+) -> HinmPacked {
+    let (rows, cols) = w.shape();
+    cfg.validate(rows, cols).expect("invalid config");
+    let tiles = cfg.tiles(rows);
+    assert_eq!(kept.len(), tiles);
+    let k_v = kept[0].len();
+    let vpr = k_v * cfg.n_keep / cfg.m_group;
+    let mut vals = vec![0.0f32; tiles * cfg.v * vpr];
+    let mut nm_idx = vec![0u8; tiles * cfg.v * vpr];
+    let mut vec_idx = vec![0i32; tiles * k_v];
+
+    for t in 0..tiles {
+        assert_eq!(kept[t].len(), k_v, "tile {t}: inconsistent K_v");
+        // Apply per-tile column order (ICP) to the kept list.
+        let order: Vec<usize> = match tile_col_order {
+            Some(orders) => {
+                assert_eq!(orders[t].len(), k_v);
+                orders[t].iter().map(|&j| kept[t][j]).collect()
+            }
+            None => kept[t].clone(),
+        };
+        for (j, &c) in order.iter().enumerate() {
+            vec_idx[t * k_v + j] = c as i32;
+        }
+        for r in 0..cfg.v {
+            let row_global = t * cfg.v + r;
+            let wrow = w.row(row_global);
+            let srow = sal.row(row_global);
+            let base = row_global * vpr;
+            for g in 0..k_v / cfg.m_group {
+                let grp_cols = &order[g * cfg.m_group..(g + 1) * cfg.m_group];
+                let grp_sal: Vec<f32> = grp_cols.iter().map(|&c| srow[c]).collect();
+                let sel = super::nm_prune::select_nm(&grp_sal, cfg.n_keep);
+                for (j, &off) in sel.iter().enumerate() {
+                    let slot = base + g * cfg.n_keep + j;
+                    vals[slot] = wrow[grp_cols[off as usize]];
+                    nm_idx[slot] = off;
+                }
+            }
+        }
+    }
+
+    HinmPacked { cfg: *cfg, rows, cols, k_v, vals, vec_idx, nm_idx }
+}
+
+/// Dense mask equivalent of a packed matrix (kept-weight positions).
+pub fn packed_mask(p: &HinmPacked) -> Mask {
+    let dense = p.to_dense();
+    let mut mask = Mask::zeros(p.rows, p.cols);
+    // NOTE: a genuinely-zero kept weight is indistinguishable in to_dense();
+    // reconstruct from indices instead for exactness.
+    let vpr = p.vals_per_row();
+    let n = p.cfg.n_keep;
+    let m = p.cfg.m_group;
+    for t in 0..p.tiles() {
+        let vidx = p.tile_vec_idx(t);
+        for r in 0..p.cfg.v {
+            let offs = p.tile_row_nm(t, r);
+            for slot in 0..vpr {
+                let g = slot / n;
+                let cc = g * m + offs[slot] as usize;
+                mask.set(t * p.cfg.v + r, vidx[cc] as usize, true);
+            }
+        }
+    }
+    debug_assert_eq!(mask.count_kept(), dense.nnz().max(mask.count_kept()));
+    mask
+}
+
+/// Pack the 2-bit NM offsets four-per-byte (size accounting / artifact dump).
+pub fn pack_nm_bits(nm_idx: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; nm_idx.len().div_ceil(4)];
+    for (i, &o) in nm_idx.iter().enumerate() {
+        debug_assert!(o < 4);
+        out[i / 4] |= (o & 0b11) << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Inverse of [`pack_nm_bits`].
+pub fn unpack_nm_bits(packed: &[u8], len: usize) -> Vec<u8> {
+    (0..len).map(|i| (packed[i / 4] >> ((i % 4) * 2)) & 0b11).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::vector_prune::vector_prune;
+    use crate::util::rng::Xoshiro256;
+
+    fn make(rows: usize, cols: usize, sv: f64, seed: u64) -> (Matrix, Matrix, HinmConfig) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let sal = w.abs();
+        (w, sal, HinmConfig::with_24(4, sv))
+    }
+
+    #[test]
+    fn pack_roundtrip_preserves_kept_values() {
+        let (w, sal, cfg) = make(8, 16, 0.5, 1);
+        let vp = vector_prune(&sal, &cfg);
+        let p = pack(&w, &sal, &cfg, &vp.kept, None);
+        p.check_invariants().unwrap();
+        let dense = p.to_dense();
+        // Every nonzero of dense equals the original weight there.
+        let mut nonzero = 0;
+        for r in 0..8 {
+            for c in 0..16 {
+                let d = dense.at(r, c);
+                if d != 0.0 {
+                    assert_eq!(d, w.at(r, c));
+                    nonzero += 1;
+                }
+            }
+        }
+        // 16 cols → keep 8 vectors → 4 kept values per row after 2:4.
+        assert_eq!(nonzero, 8 * 4);
+    }
+
+    #[test]
+    fn density_matches_config() {
+        let (w, sal, cfg) = make(32, 64, 0.5, 2);
+        let vp = vector_prune(&sal, &cfg);
+        let p = pack(&w, &sal, &cfg, &vp.kept, None);
+        let mask = packed_mask(&p);
+        let got = 1.0 - mask.sparsity();
+        let want = (1.0 - cfg.total_sparsity());
+        assert!((got - want).abs() < 0.02, "density {got} vs {want}");
+    }
+
+    #[test]
+    fn packed_selects_top2_per_group() {
+        // Single tile, V=4, 4 cols kept of 4 (sv=0) → one group per row.
+        let w = Matrix::from_vec(4, 4, (1..=16).map(|i| i as f32).collect());
+        let sal = w.abs();
+        let cfg = HinmConfig::with_24(4, 0.0);
+        let kept = vec![(0..4).collect::<Vec<_>>()];
+        let p = pack(&w, &sal, &cfg, &kept, None);
+        // Row 0 = [1,2,3,4] → keep 3,4 at offsets 2,3.
+        assert_eq!(p.tile_row_vals(0, 0), &[3.0, 4.0]);
+        assert_eq!(p.tile_row_nm(0, 0), &[2, 3]);
+    }
+
+    #[test]
+    fn tile_col_order_changes_grouping() {
+        // 1×8 tile (V=1 invalid for cfg.v=4? use V=1 config) — V=1, 8 cols.
+        let cfg = HinmConfig { v: 1, n_keep: 2, m_group: 4, vector_sparsity: 0.0 };
+        let w = Matrix::from_vec(1, 8, vec![9., 8., 7., 6., 1., 2., 3., 4.]);
+        let sal = w.abs();
+        let kept = vec![(0..8).collect::<Vec<_>>()];
+        // Default order: groups {9,8,7,6} {1,2,3,4} → retain 9+8+3+4 = 24.
+        let p0 = pack(&w, &sal, &cfg, &kept, None);
+        let r0: f32 = p0.vals.iter().sum();
+        assert_eq!(r0, 24.0);
+        // Interleave: {9,1,8,2} {7,3,6,4} → retain 9+8+7+6 = 30.
+        let order = vec![vec![0usize, 4, 1, 5, 2, 6, 3, 7]];
+        let p1 = pack(&w, &sal, &cfg, &kept, Some(&order));
+        let r1: f32 = p1.vals.iter().sum();
+        assert_eq!(r1, 30.0);
+        p1.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn nm_bit_packing_roundtrip() {
+        let offs = vec![0u8, 1, 2, 3, 3, 2, 1, 0, 1, 3];
+        let packed = pack_nm_bits(&offs);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack_nm_bits(&packed, offs.len()), offs);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let (w, sal, cfg) = make(64, 128, 0.5, 3);
+        let vp = vector_prune(&sal, &cfg);
+        let p = pack(&w, &sal, &cfg, &vp.kept, None);
+        // 75% total sparsity → vals ~= 25% of dense; ratio > 3 even with indices.
+        assert!(p.compression_ratio() > 3.0, "ratio {}", p.compression_ratio());
+    }
+
+    #[test]
+    fn invariants_catch_corruption() {
+        let (w, sal, cfg) = make(8, 16, 0.5, 4);
+        let vp = vector_prune(&sal, &cfg);
+        let mut p = pack(&w, &sal, &cfg, &vp.kept, None);
+        p.check_invariants().unwrap();
+        p.vec_idx[0] = 999;
+        assert!(p.check_invariants().is_err());
+    }
+}

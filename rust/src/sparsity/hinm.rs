@@ -1,0 +1,186 @@
+//! The hierarchical N:M pipeline: column-wise vector pruning → row-wise N:M,
+//! one-shot and gradual schedules (paper §3.1, §5.1.2).
+
+use super::config::HinmConfig;
+use super::format::{pack, HinmPacked};
+use super::mask::Mask;
+use super::nm_prune::nm_retained_tile;
+use super::vector_prune::{vector_prune, VectorPruneResult};
+use crate::tensor::Matrix;
+
+/// Outcome of HiNM pruning a single layer.
+#[derive(Clone, Debug)]
+pub struct HinmResult {
+    pub packed: HinmPacked,
+    pub mask: Mask,
+    /// `‖M ⊙ ρ‖₁` — the Eq. 1 objective value.
+    pub retained: f64,
+    /// `retained / ‖ρ‖₁`.
+    pub retention_ratio: f64,
+}
+
+/// One-shot HiNM pruning without any permutation (the paper's HiNM-NoPerm
+/// arm): vector-prune on saliency, then 2:4 on the survivors in natural
+/// column order.
+pub fn prune_oneshot(w: &Matrix, sal: &Matrix, cfg: &HinmConfig) -> HinmResult {
+    let vp = vector_prune(sal, cfg);
+    prune_with_kept(w, sal, cfg, &vp, None)
+}
+
+/// HiNM pruning given a vector-prune result and optional per-tile column
+/// orders (the ICP output). Used by the gyro pipeline after permutation.
+pub fn prune_with_kept(
+    w: &Matrix,
+    sal: &Matrix,
+    cfg: &HinmConfig,
+    vp: &VectorPruneResult,
+    tile_col_order: Option<&[Vec<usize>]>,
+) -> HinmResult {
+    let packed = pack(w, sal, cfg, &vp.kept, tile_col_order);
+    let mask = super::format::packed_mask(&packed);
+    let retained = mask.retained(sal);
+    let total: f64 = sal.l1();
+    HinmResult {
+        packed,
+        mask,
+        retained,
+        retention_ratio: if total > 0.0 { retained / total } else { 1.0 },
+    }
+}
+
+/// Retained saliency of HiNM *without* materializing the packed matrix —
+/// the inner-loop objective used by permutation search. Natural column order
+/// within each tile (ascending kept index), groups of M consecutive columns.
+pub fn hinm_retained(sal: &Matrix, cfg: &HinmConfig) -> f64 {
+    let vp = vector_prune(sal, cfg);
+    let k_v = vp.kept[0].len();
+    let mut total = 0.0;
+    let mut tile_buf = vec![0.0f32; cfg.v * k_v];
+    for (t, kept) in vp.kept.iter().enumerate() {
+        gather_tile(sal, cfg, t, kept, &mut tile_buf);
+        total += nm_retained_tile(&tile_buf, cfg.v, k_v, cfg);
+    }
+    total
+}
+
+/// Gather a tile's compacted saliency `[v, |cols|]` into `buf`.
+pub fn gather_tile(sal: &Matrix, cfg: &HinmConfig, t: usize, cols: &[usize], buf: &mut [f32]) {
+    let k = cols.len();
+    debug_assert_eq!(buf.len(), cfg.v * k);
+    for r in 0..cfg.v {
+        let srow = sal.row(t * cfg.v + r);
+        let dst = &mut buf[r * k..(r + 1) * k];
+        for (j, &c) in cols.iter().enumerate() {
+            dst[j] = srow[c];
+        }
+    }
+}
+
+/// A step of the gradual schedule (paper §5.1.2): vector sparsity ramps
+/// cubically from 0 to the target over `vector_steps`, after which N:M
+/// switches on for the remaining steps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GradualStep {
+    pub step: usize,
+    pub vector_sparsity: f64,
+    pub nm_active: bool,
+}
+
+/// Cubic sparsity ramp (Zhu & Gupta) used for the vector level.
+pub fn gradual_schedule(target_sv: f64, vector_steps: usize, total_steps: usize) -> Vec<GradualStep> {
+    assert!(vector_steps >= 1 && total_steps >= vector_steps);
+    let mut steps = Vec::with_capacity(total_steps);
+    for i in 0..total_steps {
+        if i < vector_steps {
+            let frac = (i + 1) as f64 / vector_steps as f64;
+            let sv = target_sv * (1.0 - (1.0 - frac).powi(3));
+            steps.push(GradualStep { step: i, vector_sparsity: sv, nm_active: false });
+        } else {
+            steps.push(GradualStep { step: i, vector_sparsity: target_sv, nm_active: true });
+        }
+    }
+    steps
+}
+
+/// Effective config at a gradual step.
+pub fn step_config(base: &HinmConfig, s: &GradualStep) -> HinmConfig {
+    HinmConfig {
+        v: base.v,
+        n_keep: if s.nm_active { base.n_keep } else { base.m_group },
+        m_group: base.m_group,
+        vector_sparsity: s.vector_sparsity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn oneshot_density() {
+        let mut rng = Xoshiro256::new(7);
+        let w = Matrix::randn(32, 64, 1.0, &mut rng);
+        let sal = w.abs();
+        let cfg = HinmConfig::with_24(8, 0.5); // 75% total
+        let res = prune_oneshot(&w, &sal, &cfg);
+        assert!((res.mask.sparsity() - 0.75).abs() < 0.02);
+        assert!(res.retention_ratio > 0.25 && res.retention_ratio < 1.0);
+        res.packed.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retained_fast_path_matches_packed() {
+        let mut rng = Xoshiro256::new(8);
+        for _ in 0..10 {
+            let w = Matrix::randn(16, 32, 1.0, &mut rng);
+            let sal = w.abs();
+            let cfg = HinmConfig::with_24(4, 0.5);
+            let fast = hinm_retained(&sal, &cfg);
+            let slow = prune_oneshot(&w, &sal, &cfg).retained;
+            assert!((fast - slow).abs() < 1e-6 * slow.max(1.0), "{fast} vs {slow}");
+        }
+    }
+
+    #[test]
+    fn retention_monotone_in_sparsity() {
+        let mut rng = Xoshiro256::new(9);
+        let sal = Matrix::randn(32, 64, 1.0, &mut rng).abs();
+        let r50 = hinm_retained(&sal, &HinmConfig::for_total_sparsity(8, 0.5));
+        let r75 = hinm_retained(&sal, &HinmConfig::for_total_sparsity(8, 0.75));
+        let r875 = hinm_retained(&sal, &HinmConfig::for_total_sparsity(8, 0.875));
+        assert!(r50 > r75 && r75 > r875, "{r50} {r75} {r875}");
+    }
+
+    #[test]
+    fn gradual_schedule_shape() {
+        let steps = gradual_schedule(0.5, 4, 7);
+        assert_eq!(steps.len(), 7);
+        assert!(!steps[0].nm_active && steps[3].vector_sparsity == 0.5);
+        assert!(steps[4].nm_active && steps[6].vector_sparsity == 0.5);
+        // Monotone non-decreasing ramp.
+        for w in steps.windows(2) {
+            assert!(w[1].vector_sparsity >= w[0].vector_sparsity - 1e-12);
+        }
+    }
+
+    #[test]
+    fn step_config_disables_nm_during_ramp() {
+        let base = HinmConfig::with_24(32, 0.5);
+        let ramp = GradualStep { step: 0, vector_sparsity: 0.2, nm_active: false };
+        let c = step_config(&base, &ramp);
+        assert_eq!(c.n_keep, c.m_group); // N==M → N:M is a no-op
+        assert!((c.total_sparsity() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gather_tile_layout() {
+        let sal = Matrix::from_fn(4, 6, |r, c| (r * 10 + c) as f32);
+        let cfg = HinmConfig::with_24(4, 0.0);
+        let cols = vec![1usize, 3, 4, 5];
+        let mut buf = vec![0.0; 4 * 4];
+        gather_tile(&sal, &cfg, 0, &cols, &mut buf);
+        assert_eq!(&buf[0..4], &[1.0, 3.0, 4.0, 5.0]);
+        assert_eq!(&buf[12..16], &[31.0, 33.0, 34.0, 35.0]);
+    }
+}

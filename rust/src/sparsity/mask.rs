@@ -1,0 +1,155 @@
+//! Binary pruning masks over 2-D weight grids.
+
+use crate::tensor::Matrix;
+
+/// A dense boolean mask with matrix shape. `true` = kept weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    bits: Vec<bool>,
+}
+
+impl Mask {
+    pub fn new_all(rows: usize, cols: usize, value: bool) -> Self {
+        Self { rows, cols, bits: vec![value; rows * cols] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Self::new_all(rows, cols, true)
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self::new_all(rows, cols, false)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.bits[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.bits[r * self.cols + c] = v;
+    }
+
+    pub fn count_kept(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of weights *removed*.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.count_kept() as f64 / self.bits.len() as f64
+    }
+
+    /// Logical AND — composing hierarchical levels.
+    pub fn and(&self, other: &Mask) -> Mask {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mask {
+            rows: self.rows,
+            cols: self.cols,
+            bits: self
+                .bits
+                .iter()
+                .zip(&other.bits)
+                .map(|(a, b)| *a && *b)
+                .collect(),
+        }
+    }
+
+    /// Apply to weights: kept entries pass through, pruned become 0.
+    pub fn apply(&self, w: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (w.rows, w.cols));
+        Matrix {
+            rows: w.rows,
+            cols: w.cols,
+            data: w
+                .data
+                .iter()
+                .zip(&self.bits)
+                .map(|(&x, &b)| if b { x } else { 0.0 })
+                .collect(),
+        }
+    }
+
+    /// Sum of saliency over kept entries: `‖M ⊙ ρ‖₁` for nonneg ρ.
+    pub fn retained(&self, sal: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (sal.rows, sal.cols));
+        sal.data
+            .iter()
+            .zip(&self.bits)
+            .filter(|(_, &b)| b)
+            .map(|(&s, _)| s as f64)
+            .sum()
+    }
+
+    /// Row permutation (matches `Matrix::permute_rows`).
+    pub fn permute_rows(&self, perm: &[usize]) -> Mask {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Mask::zeros(self.rows, self.cols);
+        for (i, &p) in perm.iter().enumerate() {
+            for c in 0..self.cols {
+                out.set(i, c, self.get(p, c));
+            }
+        }
+        out
+    }
+
+    pub fn as_matrix(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let mut m = Mask::zeros(2, 3);
+        assert_eq!(m.count_kept(), 0);
+        m.set(1, 2, true);
+        m.set(0, 0, true);
+        assert!(m.get(1, 2));
+        assert_eq!(m.count_kept(), 2);
+        assert!((m.sparsity() - (1.0 - 2.0 / 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn and_composes() {
+        let mut a = Mask::ones(2, 2);
+        a.set(0, 0, false);
+        let mut b = Mask::ones(2, 2);
+        b.set(1, 1, false);
+        let c = a.and(&b);
+        assert_eq!(c.count_kept(), 2);
+        assert!(!c.get(0, 0) && !c.get(1, 1));
+    }
+
+    #[test]
+    fn apply_and_retained() {
+        let w = Matrix::from_vec(2, 2, vec![1., -2., 3., -4.]);
+        let mut m = Mask::zeros(2, 2);
+        m.set(0, 1, true);
+        m.set(1, 0, true);
+        let pruned = m.apply(&w);
+        assert_eq!(pruned.data, vec![0., -2., 3., 0.]);
+        assert_eq!(m.retained(&w.abs()), 5.0);
+    }
+
+    #[test]
+    fn permute_rows_consistent_with_matrix() {
+        let w = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let mut m = Mask::zeros(3, 2);
+        m.set(0, 0, true);
+        m.set(2, 1, true);
+        let perm = vec![2, 0, 1];
+        assert_eq!(m.permute_rows(&perm).apply(&w.permute_rows(&perm)), m.apply(&w).permute_rows(&perm));
+    }
+}

@@ -1,0 +1,16 @@
+//! Sparsity patterns and pruning: masks, `V×1` column-vector pruning,
+//! row-wise N:M, the combined hierarchical (HiNM) pipeline, the packed
+//! storage format, and the unstructured baseline.
+
+pub mod config;
+pub mod format;
+pub mod hinm;
+pub mod mask;
+pub mod nm_prune;
+pub mod unstructured;
+pub mod vector_prune;
+
+pub use config::HinmConfig;
+pub use format::HinmPacked;
+pub use hinm::{prune_oneshot, HinmResult};
+pub use mask::Mask;

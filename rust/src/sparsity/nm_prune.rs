@@ -1,0 +1,162 @@
+//! Row-wise N:M pruning (the fine, hardware-indexed level of HiNM).
+//!
+//! Operates on the *compacted* tile view: the `K_v` column vectors kept by
+//! vector pruning, laid out contiguously in `vec_idx` order. Each row of the
+//! tile is split into groups of `M` consecutive surviving columns; the `N`
+//! most salient elements of each group are kept (NVIDIA STC semantics).
+
+use super::config::HinmConfig;
+
+/// N:M selection for one logical row segment of length `M`:
+/// returns ascending in-group offsets of the kept elements.
+pub fn select_nm(group: &[f32], n_keep: usize) -> Vec<u8> {
+    debug_assert!(n_keep <= group.len());
+    let mut idx: Vec<usize> = (0..group.len()).collect();
+    idx.sort_by(|&a, &b| {
+        group[b]
+            .partial_cmp(&group[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut kept: Vec<u8> = idx.into_iter().take(n_keep).map(|i| i as u8).collect();
+    kept.sort_unstable();
+    kept
+}
+
+/// Result of N:M pruning one tile's compacted saliency `[v, k_v]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NmTile {
+    /// `offsets[r][g*n_keep + j]` = in-group offset (0..m_group) of the j-th
+    /// kept element of group g in row r. Ascending within each group.
+    pub offsets: Vec<Vec<u8>>,
+    /// Retained saliency of the tile under the N:M mask.
+    pub retained: f64,
+}
+
+/// Apply N:M to a compacted tile of saliency values (row-major `[v][k_v]`).
+pub fn nm_prune_tile(tile_sal: &[f32], v: usize, k_v: usize, cfg: &HinmConfig) -> NmTile {
+    assert_eq!(tile_sal.len(), v * k_v);
+    assert_eq!(k_v % cfg.m_group, 0, "compacted width must be a multiple of M");
+    let groups = k_v / cfg.m_group;
+    let mut offsets = Vec::with_capacity(v);
+    let mut retained = 0.0f64;
+    for r in 0..v {
+        let row = &tile_sal[r * k_v..(r + 1) * k_v];
+        let mut row_off = Vec::with_capacity(groups * cfg.n_keep);
+        for g in 0..groups {
+            let grp = &row[g * cfg.m_group..(g + 1) * cfg.m_group];
+            for off in select_nm(grp, cfg.n_keep) {
+                retained += grp[off as usize] as f64;
+                row_off.push(off);
+            }
+        }
+        offsets.push(row_off);
+    }
+    NmTile { offsets, retained }
+}
+
+/// Retained saliency of a compacted tile under 2:4 without materializing the
+/// offsets — used in permutation inner loops (hot path).
+#[inline]
+pub fn nm_retained_tile(tile_sal: &[f32], v: usize, k_v: usize, cfg: &HinmConfig) -> f64 {
+    debug_assert_eq!(tile_sal.len(), v * k_v);
+    let m = cfg.m_group;
+    let n = cfg.n_keep;
+    let mut retained = 0.0f64;
+    if m == 4 && n == 2 {
+        // Specialized 2:4: keep the two largest of four = sum - two smallest
+        // = sum of the two largest; branchless-ish max selection.
+        for r in 0..v {
+            let row = &tile_sal[r * k_v..(r + 1) * k_v];
+            for g in row.chunks_exact(4) {
+                let (a, b, c, d) = (g[0], g[1], g[2], g[3]);
+                // top2 = sum - min2 where min2 = sum of two smallest
+                let (lo1, hi1) = if a < b { (a, b) } else { (b, a) };
+                let (lo2, hi2) = if c < d { (c, d) } else { (d, c) };
+                // two smallest of {a,b,c,d}
+                let smallest = if lo1 < lo2 { lo1 } else { lo2 };
+                let second = if lo1 < lo2 {
+                    if lo2 < hi1 { lo2 } else { hi1 }
+                } else if lo1 < hi2 {
+                    lo1
+                } else {
+                    hi2
+                };
+                retained += (a + b + c + d - smallest - second) as f64;
+            }
+        }
+    } else {
+        for r in 0..v {
+            let row = &tile_sal[r * k_v..(r + 1) * k_v];
+            for g in row.chunks_exact(m) {
+                let mut buf: Vec<f32> = g.to_vec();
+                buf.sort_by(|x, y| y.partial_cmp(x).unwrap_or(std::cmp::Ordering::Equal));
+                retained += buf[..n].iter().map(|&x| x as f64).sum::<f64>();
+            }
+        }
+    }
+    retained
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn cfg() -> HinmConfig {
+        HinmConfig::with_24(4, 0.0)
+    }
+
+    #[test]
+    fn select_24_picks_top2() {
+        assert_eq!(select_nm(&[1.0, 9.0, 3.0, 7.0], 2), vec![1, 3]);
+        assert_eq!(select_nm(&[5.0, 5.0, 1.0, 0.0], 2), vec![0, 1]); // ties → low idx
+        assert_eq!(select_nm(&[-1.0, -2.0, -3.0, -4.0], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn tile_retained_counts_top2_per_group() {
+        // 1 row, 8 cols = 2 groups.
+        let sal = vec![1., 2., 3., 4., 10., 0., 0., 20.];
+        let t = nm_prune_tile(&sal, 1, 8, &cfg());
+        assert_eq!(t.retained, (3. + 4. + 10. + 20.) as f64);
+        assert_eq!(t.offsets[0], vec![2, 3, 0, 3]);
+    }
+
+    #[test]
+    fn fast_retained_matches_materialized() {
+        let mut rng = Xoshiro256::new(11);
+        for _ in 0..50 {
+            let v = 4 + rng.below(4) * 4;
+            let kv = 4 * (1 + rng.below(8));
+            let sal: Vec<f32> = (0..v * kv).map(|_| rng.next_f32() * 10.0).collect();
+            let a = nm_prune_tile(&sal, v, kv, &cfg()).retained;
+            let b = nm_retained_tile(&sal, v, kv, &cfg());
+            assert!((a - b).abs() < 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fast_retained_generic_nm() {
+        let cfg_13 = HinmConfig { v: 1, n_keep: 1, m_group: 3, vector_sparsity: 0.0 };
+        let sal = vec![5., 1., 2., 0., 9., 3.];
+        let r = nm_retained_tile(&sal, 1, 6, &cfg_13);
+        assert_eq!(r, 14.0);
+    }
+
+    #[test]
+    fn offsets_shape() {
+        let sal = vec![0.0f32; 8 * 16];
+        let t = nm_prune_tile(&sal, 8, 16, &cfg());
+        assert_eq!(t.offsets.len(), 8);
+        assert!(t.offsets.iter().all(|r| r.len() == 16 / 4 * 2));
+    }
+
+    #[test]
+    fn negative_saliency_still_selects_largest() {
+        // Saliency should be nonnegative in practice, but the selector must
+        // stay total-order-correct for negatives too.
+        let sal = vec![-5., -1., -3., -2.];
+        assert_eq!(select_nm(&sal, 2), vec![1, 3]);
+    }
+}

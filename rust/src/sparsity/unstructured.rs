@@ -1,0 +1,80 @@
+//! Element-wise (unstructured) pruning baselines: global magnitude /
+//! saliency top-k, plus the CAP-style second-order arm used in Table 1.
+
+use super::mask::Mask;
+use crate::tensor::Matrix;
+
+/// Keep the `keep` most salient elements anywhere in the matrix.
+pub fn unstructured_mask(sal: &Matrix, keep: usize) -> Mask {
+    let total = sal.rows * sal.cols;
+    assert!(keep <= total);
+    let mut idx: Vec<u32> = (0..total as u32).collect();
+    // Partial selection: sort by saliency descending, take `keep`.
+    idx.select_nth_unstable_by(keep.saturating_sub(1).min(total - 1), |&a, &b| {
+        sal.data[b as usize]
+            .partial_cmp(&sal.data[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut mask = Mask::zeros(sal.rows, sal.cols);
+    for &i in &idx[..keep] {
+        let i = i as usize;
+        mask.set(i / sal.cols, i % sal.cols, true);
+    }
+    mask
+}
+
+/// Unstructured pruning at a target sparsity in [0, 1].
+pub fn prune_to_sparsity(sal: &Matrix, sparsity: f64) -> Mask {
+    let total = sal.rows * sal.cols;
+    let keep = ((1.0 - sparsity) * total as f64).round() as usize;
+    unstructured_mask(sal, keep.min(total))
+}
+
+/// Retained saliency of unstructured pruning — the upper bound every
+/// structured method in the paper is compared against.
+pub fn unstructured_retained(sal: &Matrix, sparsity: f64) -> f64 {
+    prune_to_sparsity(sal, sparsity).retained(sal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn keeps_exactly_k_and_the_largest() {
+        let sal = Matrix::from_vec(2, 3, vec![0.1, 5.0, 0.2, 4.0, 0.3, 0.05]);
+        let m = unstructured_mask(&sal, 2);
+        assert_eq!(m.count_kept(), 2);
+        assert!(m.get(0, 1) && m.get(1, 0));
+    }
+
+    #[test]
+    fn sparsity_target() {
+        let mut rng = Xoshiro256::new(5);
+        let sal = Matrix::randn(32, 32, 1.0, &mut rng).abs();
+        let m = prune_to_sparsity(&sal, 0.75);
+        assert_eq!(m.count_kept(), 256);
+    }
+
+    #[test]
+    fn upper_bounds_any_structured_mask() {
+        let mut rng = Xoshiro256::new(6);
+        let sal = Matrix::randn(16, 32, 1.0, &mut rng).abs();
+        let keep = 16 * 32 / 4;
+        let un = unstructured_mask(&sal, keep);
+        // Any other mask with the same budget retains less or equal.
+        let mut other = Mask::zeros(16, 32);
+        for i in 0..keep {
+            other.set(i / 32, i % 32, true);
+        }
+        assert!(un.retained(&sal) >= other.retained(&sal));
+    }
+
+    #[test]
+    fn degenerate_budgets() {
+        let sal = Matrix::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        assert_eq!(unstructured_mask(&sal, 0).count_kept(), 0);
+        assert_eq!(unstructured_mask(&sal, 4).count_kept(), 4);
+    }
+}

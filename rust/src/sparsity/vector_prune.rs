@@ -1,0 +1,154 @@
+//! Column-wise `V×1` vector pruning (the coarse level of HiNM).
+//!
+//! Within each tile (a band of `V` consecutive output channels), every input
+//! channel contributes one `V×1` column vector. The least-salient vectors are
+//! removed tile-by-tile; survivors are recorded as a per-tile `vec_idx` list
+//! (ascending original column ids) — exactly the index the GPU kernel uses
+//! for the global→shared gather.
+
+use super::config::HinmConfig;
+use super::mask::Mask;
+use crate::tensor::Matrix;
+
+/// Per-tile kept-column result of vector pruning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VectorPruneResult {
+    /// `kept[t]` = ascending original column indices kept in tile `t`.
+    pub kept: Vec<Vec<usize>>,
+    pub mask: Mask,
+}
+
+/// Saliency of each column vector: `vecsal[t][c] = Σ_{r in tile t} ρ[r][c]`.
+pub fn vector_saliency(sal: &Matrix, cfg: &HinmConfig) -> Vec<Vec<f64>> {
+    let tiles = cfg.tiles(sal.rows);
+    let mut out = vec![vec![0.0f64; sal.cols]; tiles];
+    for t in 0..tiles {
+        let acc = &mut out[t];
+        for r in t * cfg.v..(t + 1) * cfg.v {
+            let row = sal.row(r);
+            for (c, &s) in row.iter().enumerate() {
+                acc[c] += s as f64;
+            }
+        }
+    }
+    out
+}
+
+/// Keep the `keep_cols` most salient column vectors of each tile.
+pub fn vector_prune(sal: &Matrix, cfg: &HinmConfig) -> VectorPruneResult {
+    cfg.validate(sal.rows, sal.cols).expect("invalid HiNM config for shape");
+    let k = cfg.keep_cols(sal.cols);
+    let vecsal = vector_saliency(sal, cfg);
+    let tiles = vecsal.len();
+    let mut kept = Vec::with_capacity(tiles);
+    let mut mask = Mask::zeros(sal.rows, sal.cols);
+    for (t, colsal) in vecsal.iter().enumerate() {
+        let cols = top_k_indices(colsal, k);
+        for &c in &cols {
+            for r in t * cfg.v..(t + 1) * cfg.v {
+                mask.set(r, c, true);
+            }
+        }
+        kept.push(cols);
+    }
+    VectorPruneResult { kept, mask }
+}
+
+/// Indices of the `k` largest values, returned in ascending index order
+/// (deterministic tie-break: lower index wins).
+pub fn top_k_indices(vals: &[f64], k: usize) -> Vec<usize> {
+    assert!(k <= vals.len());
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| {
+        vals[b]
+            .partial_cmp(&vals[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut top: Vec<usize> = idx.into_iter().take(k).collect();
+    top.sort_unstable();
+    top
+}
+
+/// Retained saliency under vector pruning only (Eq. 2 objective).
+pub fn vector_retained(sal: &Matrix, cfg: &HinmConfig) -> f64 {
+    vector_prune(sal, cfg).mask.retained(sal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn cfg4(sv: f64) -> HinmConfig {
+        HinmConfig::with_24(4, sv)
+    }
+
+    #[test]
+    fn top_k_basics() {
+        assert_eq!(top_k_indices(&[1.0, 5.0, 3.0, 5.0], 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&[1.0, 5.0, 3.0], 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&[2.0, 2.0, 2.0], 2), vec![0, 1]); // tie → low idx
+    }
+
+    #[test]
+    fn keeps_most_salient_columns_per_tile() {
+        // 4×8 = one tile; columns 0..8 with column 6 and 2 clearly dominant.
+        let mut sal = Matrix::zeros(4, 8);
+        for r in 0..4 {
+            *sal.at_mut(r, 6) = 10.0;
+            *sal.at_mut(r, 2) = 8.0;
+            *sal.at_mut(r, 0) = 1.0;
+        }
+        let res = vector_prune(&sal, &cfg4(0.5)); // keep 4 of 8
+        assert_eq!(res.kept.len(), 1);
+        let kept = &res.kept[0];
+        assert_eq!(kept.len(), 4);
+        assert!(kept.contains(&6) && kept.contains(&2));
+    }
+
+    #[test]
+    fn tiles_prune_independently() {
+        // 8×8, V=4 → 2 tiles with opposite dominant columns.
+        let mut sal = Matrix::zeros(8, 8);
+        for r in 0..4 {
+            *sal.at_mut(r, 0) = 5.0; // tile 0 likes col 0
+        }
+        for r in 4..8 {
+            *sal.at_mut(r, 7) = 5.0; // tile 1 likes col 7
+        }
+        let res = vector_prune(&sal, &cfg4(0.5));
+        assert!(res.kept[0].contains(&0));
+        assert!(res.kept[1].contains(&7));
+        assert_ne!(res.kept[0], res.kept[1]);
+    }
+
+    #[test]
+    fn mask_sparsity_matches_config() {
+        let mut rng = Xoshiro256::new(3);
+        let sal = Matrix::randn(32, 64, 1.0, &mut rng).abs();
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let res = vector_prune(&sal, &cfg);
+        let expect_kept = cfg.keep_cols(64) * 32;
+        assert_eq!(res.mask.count_kept(), expect_kept);
+        for kept in &res.kept {
+            assert_eq!(kept.len(), cfg.keep_cols(64));
+            assert!(kept.windows(2).all(|w| w[0] < w[1]), "ascending");
+        }
+    }
+
+    #[test]
+    fn zero_vector_sparsity_keeps_everything() {
+        let mut rng = Xoshiro256::new(4);
+        let sal = Matrix::randn(8, 16, 1.0, &mut rng).abs();
+        let res = vector_prune(&sal, &cfg4(0.0));
+        assert_eq!(res.mask.count_kept(), 8 * 16);
+    }
+
+    #[test]
+    fn retained_is_sum_over_kept_columns() {
+        let sal = Matrix::from_vec(4, 4, vec![1.0; 16]);
+        // keep 4 of 4 (sv=0): everything retained.
+        assert_eq!(vector_retained(&sal, &cfg4(0.0)), 16.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! CPU SpMM over the packed HiNM format — the executable model of the
+//! paper's GPU kernel (Fig. 2), structured exactly like the CUDA schedule:
+//!
+//! * one *tile* (V output channels) per "thread block" → outer loop;
+//! * global→shared gather of the input rows named by `vec_idx` → the
+//!   per-tile `xbuf` staging copy (this is where runtime input-channel
+//!   permutation happens for free — the gather reads whatever order
+//!   `vec_idx` prescribes);
+//! * shared→compute 2:4 selection via `nm_idx` → the inner FMA loop.
+//!
+//! The same format is consumed by the L1 Pallas kernel; `tests/` checks the
+//! two agree through the PJRT runtime.
+
+use crate::sparsity::format::HinmPacked;
+use crate::tensor::Matrix;
+
+/// Scratch buffers reused across calls (the "shared memory" of a block).
+pub struct SpmmScratch {
+    xbuf: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+impl SpmmScratch {
+    pub fn new() -> Self {
+        Self { xbuf: Vec::new(), acc: Vec::new() }
+    }
+}
+
+impl Default for SpmmScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `Y = W_hinm · X` where `X` is `[cols, batch]`, `Y` is `[rows, batch]`.
+pub fn spmm(p: &HinmPacked, x: &Matrix) -> Matrix {
+    let mut scratch = SpmmScratch::new();
+    spmm_with_scratch(p, x, &mut scratch)
+}
+
+/// SpMM with caller-provided scratch (hot-path variant; no allocation).
+pub fn spmm_with_scratch(p: &HinmPacked, x: &Matrix, scratch: &mut SpmmScratch) -> Matrix {
+    assert_eq!(x.rows, p.cols, "X rows must equal uncompressed input channels");
+    let batch = x.cols;
+    let v = p.cfg.v;
+    let k_v = p.k_v;
+    let vpr = p.vals_per_row();
+    let n = p.cfg.n_keep;
+    let m = p.cfg.m_group;
+    let mut y = Matrix::zeros(p.rows, batch);
+
+    scratch.xbuf.resize(k_v * batch, 0.0);
+
+    for t in 0..p.tiles() {
+        // --- global → shared: gather the kept input rows in vec_idx order ---
+        let vidx = p.tile_vec_idx(t);
+        for (j, &c) in vidx.iter().enumerate() {
+            let src = x.row(c as usize);
+            scratch.xbuf[j * batch..(j + 1) * batch].copy_from_slice(src);
+        }
+
+        // --- compute: per output row, 2:4-select from the staged buffer ---
+        // Hot loop (EXPERIMENTS.md §Perf): the two kept values of each
+        // group are processed as paired FMA chains over the batch so the
+        // autovectorizer emits two independent accumulation streams, and
+        // the group's X base pointer is resolved once.
+        if n == 2 {
+            for r in 0..v {
+                let vals = p.tile_row_vals(t, r);
+                let offs = p.tile_row_nm(t, r);
+                let yrow = y.row_mut(t * v + r);
+                // Row-local accumulator: lets LLVM keep the whole batch
+                // vector in registers across the group loop instead of
+                // re-loading yrow every group (§Perf iteration 2).
+                scratch.acc.resize(batch, 0.0);
+                scratch.acc.fill(0.0);
+                for g in 0..vpr / 2 {
+                    let base = (g * m) * batch;
+                    let w0 = vals[2 * g];
+                    let w1 = vals[2 * g + 1];
+                    let x0 = &scratch.xbuf[base + offs[2 * g] as usize * batch..][..batch];
+                    let x1 = &scratch.xbuf[base + offs[2 * g + 1] as usize * batch..][..batch];
+                    for ((yv, &a), &b) in scratch.acc.iter_mut().zip(x0).zip(x1) {
+                        *yv += w0 * a + w1 * b;
+                    }
+                }
+                yrow.copy_from_slice(&scratch.acc);
+            }
+        } else {
+            for r in 0..v {
+                let vals = p.tile_row_vals(t, r);
+                let offs = p.tile_row_nm(t, r);
+                let yrow = y.row_mut(t * v + r);
+                for g in 0..vpr / n {
+                    let base_col = g * m;
+                    for j in 0..n {
+                        let slot = g * n + j;
+                        let w = vals[slot];
+                        let col = base_col + offs[slot] as usize;
+                        let xrow = &scratch.xbuf[col * batch..col * batch + batch];
+                        for (yv, &xv) in yrow.iter_mut().zip(xrow) {
+                            *yv += w * xv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Reference: decompress then dense-multiply (oracle for `spmm`).
+pub fn spmm_reference(p: &HinmPacked, x: &Matrix) -> Matrix {
+    super::dense::matmul(&p.to_dense(), x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::config::HinmConfig;
+    use crate::sparsity::hinm::prune_oneshot;
+    use crate::util::rng::Xoshiro256;
+
+    fn packed(m: usize, n: usize, v: usize, sv: f64, seed: u64) -> HinmPacked {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Matrix::randn(m, n, 1.0, &mut rng);
+        let sal = w.abs();
+        let cfg = HinmConfig::with_24(v, sv);
+        prune_oneshot(&w, &sal, &cfg).packed
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        let mut rng = Xoshiro256::new(80);
+        for (m, n, v, sv) in [(8, 16, 4, 0.5), (32, 64, 8, 0.5), (16, 32, 16, 0.0), (64, 128, 32, 0.75)] {
+            let p = packed(m, n, v, sv, 80 + m as u64);
+            let x = Matrix::randn(n, 5, 1.0, &mut rng);
+            let got = spmm(&p, &x);
+            let want = spmm_reference(&p, &x);
+            assert!(got.max_abs_diff(&want) < 1e-4, "shape ({m},{n},V={v})");
+        }
+    }
+
+    #[test]
+    fn batch_one_and_wide() {
+        let p = packed(16, 32, 4, 0.5, 81);
+        let mut rng = Xoshiro256::new(82);
+        for b in [1usize, 3, 64] {
+            let x = Matrix::randn(32, b, 1.0, &mut rng);
+            assert!(spmm(&p, &x).max_abs_diff(&spmm_reference(&p, &x)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn permuted_vec_idx_changes_gather_not_result_shape() {
+        // Reordering columns *within a tile* (with matching value layout)
+        // must not change the mathematical result — here we check the packer +
+        // spmm agree for an ICP-permuted layout.
+        let mut rng = Xoshiro256::new(83);
+        let w = Matrix::randn(8, 16, 1.0, &mut rng);
+        let sal = w.abs();
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let out = crate::permute::gyro_permute_and_prune(&w, &sal, &cfg, &Default::default());
+        let x = Matrix::randn(16, 7, 1.0, &mut rng);
+        let got = spmm(&out.result.packed, &x);
+        let want = spmm_reference(&out.result.packed, &x);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn scratch_reuse_is_equivalent() {
+        let p = packed(16, 32, 8, 0.5, 84);
+        let mut rng = Xoshiro256::new(85);
+        let mut scratch = SpmmScratch::new();
+        for _ in 0..3 {
+            let x = Matrix::randn(32, 4, 1.0, &mut rng);
+            let a = spmm_with_scratch(&p, &x, &mut scratch);
+            let b = spmm(&p, &x);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn zero_input_zero_output() {
+        let p = packed(8, 16, 4, 0.5, 86);
+        let x = Matrix::zeros(16, 3);
+        let y = spmm(&p, &x);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

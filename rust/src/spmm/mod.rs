@@ -1,0 +1,9 @@
+//! Sparse matrix multiplication: the dense baseline, the CPU HiNM kernel
+//! (structured like the paper's CUDA schedule), and the analytical GPU cost
+//! model used for the Fig. 5 latency study.
+
+pub mod dense;
+pub mod hinm_cpu;
+pub mod sim;
+
+pub use hinm_cpu::{spmm, spmm_with_scratch, SpmmScratch};

@@ -1,0 +1,238 @@
+//! Row-major `f32` matrix — the dense-tensor substrate every layer of the
+//! library shares (weights, activations, saliency grids).
+
+use crate::util::rng::Xoshiro256;
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// I.i.d. normal entries (He-style scale by default fan-in).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Xoshiro256) -> Self {
+        Self::from_fn(rows, cols, |_, _| rng.normal() * std)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Apply a row permutation: `out.row(i) = self.row(perm[i])`.
+    pub fn permute_rows(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for (i, &p) in perm.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(p));
+        }
+        out
+    }
+
+    /// Apply a column permutation: `out[r][j] = self[r][perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.cols);
+        Matrix::from_fn(self.rows, self.cols, |r, j| self.at(r, perm[j]))
+    }
+
+    /// Elementwise |x|.
+    pub fn abs(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x.abs()).collect(),
+        }
+    }
+
+    /// Elementwise product (Hadamard).
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn l1(&self) -> f64 {
+        self.data.iter().map(|&x| x.abs() as f64).sum()
+    }
+
+    pub fn frob2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Count of non-zero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.data.len() as f64
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+/// Invert a permutation: `inv[perm[i]] = i`.
+pub fn invert_permutation(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+/// Verify `perm` is a permutation of `0..n`.
+pub fn is_permutation(perm: &[usize], n: usize) -> bool {
+    if perm.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &p in perm {
+        if p >= n || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_rows() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.);
+        assert_eq!(m.at(1, 0), 4.);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::new(1);
+        let m = Matrix::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn permute_rows_and_invert() {
+        let m = Matrix::from_vec(3, 2, vec![0., 0., 1., 1., 2., 2.]);
+        let p = vec![2, 0, 1];
+        let pm = m.permute_rows(&p);
+        assert_eq!(pm.row(0), &[2., 2.]);
+        let back = pm.permute_rows(&invert_permutation(&p));
+        // permute by inv(perm) then perm is identity only when composed the
+        // right way: rows(perm) then rows applied with the inverse recovers.
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn permute_cols_roundtrip() {
+        let mut rng = Xoshiro256::new(2);
+        let m = Matrix::randn(4, 6, 1.0, &mut rng);
+        let p = rng.permutation(6);
+        let inv = invert_permutation(&p);
+        assert_eq!(m.permute_cols(&p).permute_cols(&inv), m);
+    }
+
+    #[test]
+    fn is_permutation_checks() {
+        assert!(is_permutation(&[2, 0, 1], 3));
+        assert!(!is_permutation(&[0, 0, 1], 3));
+        assert!(!is_permutation(&[0, 1], 3));
+        assert!(!is_permutation(&[0, 1, 3], 3));
+    }
+
+    #[test]
+    fn norms_and_density() {
+        let m = Matrix::from_vec(2, 2, vec![0., -2., 0., 1.]);
+        assert_eq!(m.l1(), 3.0);
+        assert_eq!(m.frob2(), 5.0);
+        assert_eq!(m.nnz(), 2);
+        assert!((m.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hadamard_matches_manual() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        assert_eq!(a.hadamard(&b).data, vec![5., 12., 21., 32.]);
+    }
+}

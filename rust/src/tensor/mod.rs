@@ -1,0 +1,7 @@
+//! Dense tensor substrate: row-major [`Matrix`] plus `.npy` interop with the
+//! build-time Python layer.
+
+mod matrix;
+pub mod npy;
+
+pub use matrix::{invert_permutation, is_permutation, Matrix};

@@ -1,0 +1,284 @@
+//! Reader/writer for the NumPy `.npy` v1.0 format (f32/i32, C-order).
+//!
+//! This is the interchange format between the build-time Python layer
+//! (model parameters, tokenized corpora) and the Rust runtime — the offline
+//! environment has no `npy`/`ndarray` crates, so the format is implemented
+//! here directly from the spec. Only little-endian `<f4`/`<i4` C-contiguous
+//! arrays of rank 1–2 are needed (and enforced).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+impl NpyArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data: NpyData::F32(data) }
+    }
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data: NpyData::I32(data) }
+    }
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            _ => bail!("expected f32 array"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            NpyData::I32(v) => Ok(v),
+            _ => bail!("expected i32 array"),
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn dtype_str(d: &NpyData) -> &'static str {
+    match d {
+        NpyData::F32(_) => "<f4",
+        NpyData::I32(_) => "<i4",
+    }
+}
+
+/// Serialize an array into `.npy` v1.0 bytes.
+pub fn to_bytes(arr: &NpyArray) -> Vec<u8> {
+    let shape_str = match arr.shape.len() {
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        dtype_str(&arr.data),
+        shape_str
+    );
+    // Pad so total header size (magic + version + len + header) % 64 == 0.
+    let base = MAGIC.len() + 2 + 2;
+    let pad = (64 - (base + header.len() + 1) % 64) % 64;
+    let padded = format!("{}{}\n", header, " ".repeat(pad));
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&[0x01, 0x00]);
+    out.extend_from_slice(&(padded.len() as u16).to_le_bytes());
+    out.extend_from_slice(padded.as_bytes());
+    match &arr.data {
+        NpyData::F32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        NpyData::I32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Parse `.npy` bytes.
+pub fn from_bytes(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let major = bytes[6];
+    let header_len: usize = match major {
+        1 => u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+        2 | 3 => u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header_start = if major == 1 { 10 } else { 12 };
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+        .context("npy header not utf8")?;
+    let descr = extract_quoted(header, "descr").context("descr missing")?;
+    if header.contains("'fortran_order': True") {
+        bail!("fortran_order arrays unsupported");
+    }
+    let shape = parse_shape(header)?;
+    let n: usize = shape.iter().product();
+    let body = &bytes[header_start + header_len..];
+    let need = n * 4;
+    if body.len() < need {
+        bail!("npy body too short: {} < {}", body.len(), need);
+    }
+    let data = match descr.as_str() {
+        "<f4" => NpyData::F32(
+            body[..need]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        "<i4" => NpyData::I32(
+            body[..need]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        "<i8" => {
+            // int64 arrays (numpy default int) are narrowed with a range check.
+            let need8 = n * 8;
+            if body.len() < need8 {
+                bail!("npy body too short for i8");
+            }
+            NpyData::I32(
+                body[..need8]
+                    .chunks_exact(8)
+                    .map(|c| {
+                        let v = i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+                        i32::try_from(v).expect("int64 value out of i32 range")
+                    })
+                    .collect(),
+            )
+        }
+        d => bail!("unsupported dtype {d}"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let kpos = header.find(&format!("'{key}'"))?;
+    let rest = &header[kpos..];
+    let colon = rest.find(':')?;
+    let after = rest[colon + 1..].trim_start();
+    if let Some(stripped) = after.strip_prefix('\'') {
+        let end = stripped.find('\'')?;
+        return Some(stripped[..end].to_string());
+    }
+    None
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let kpos = header.find("'shape'").context("shape missing")?;
+    let rest = &header[kpos..];
+    let open = rest.find('(').context("no ( in shape")?;
+    let close = rest.find(')').context("no ) in shape")?;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for tok in inner.split(',') {
+        let t = tok.trim();
+        if t.is_empty() {
+            continue;
+        }
+        shape.push(t.parse::<usize>().with_context(|| format!("bad dim {t:?}"))?);
+    }
+    if shape.is_empty() {
+        // 0-d scalar array: treat as length-1 vector.
+        shape.push(1);
+    }
+    Ok(shape)
+}
+
+pub fn save<P: AsRef<Path>>(path: P, arr: &NpyArray) -> Result<()> {
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    f.write_all(&to_bytes(arr))?;
+    Ok(())
+}
+
+pub fn load<P: AsRef<Path>>(path: P) -> Result<NpyArray> {
+    let mut f = std::fs::File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    from_bytes(&bytes).with_context(|| format!("parse {}", path.as_ref().display()))
+}
+
+/// Load a 2-D f32 array as a [`crate::tensor::Matrix`].
+pub fn load_matrix<P: AsRef<Path>>(path: P) -> Result<crate::tensor::Matrix> {
+    let arr = load(path)?;
+    let (rows, cols) = match arr.shape.as_slice() {
+        [r, c] => (*r, *c),
+        [n] => (1, *n),
+        s => bail!("expected rank<=2, got {s:?}"),
+    };
+    Ok(crate::tensor::Matrix::from_vec(rows, cols, arr.as_f32()?.to_vec()))
+}
+
+/// Save a [`crate::tensor::Matrix`] as 2-D f32 `.npy`.
+pub fn save_matrix<P: AsRef<Path>>(path: P, m: &crate::tensor::Matrix) -> Result<()> {
+    save(path, &NpyArray::f32(vec![m.rows, m.cols], m.data.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_2d() {
+        let arr = NpyArray::f32(vec![3, 4], (0..12).map(|i| i as f32 * 0.5).collect());
+        let back = from_bytes(&to_bytes(&arr)).unwrap();
+        assert_eq!(arr, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_1d() {
+        let arr = NpyArray::i32(vec![5], vec![-1, 0, 7, 42, i32::MAX]);
+        let back = from_bytes(&to_bytes(&arr)).unwrap();
+        assert_eq!(arr, back);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let arr = NpyArray::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let bytes = to_bytes(&arr);
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_bytes(b"nope").is_err());
+        assert!(from_bytes(&[0u8; 64]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_matrix_helpers() {
+        let dir = std::env::temp_dir().join("hinm_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.npy");
+        let m = crate::tensor::Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        save_matrix(&p, &m).unwrap();
+        let back = load_matrix(&p).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn python_written_header_variant_parses() {
+        // numpy writes exactly this header layout; emulate a v1 header with
+        // different spacing to make sure the parser is not layout-brittle.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        let header = "{'descr': '<i4', 'fortran_order': False, 'shape': (3,), }          \n";
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for v in [1i32, 2, 3] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let arr = from_bytes(&bytes).unwrap();
+        assert_eq!(arr.shape, vec![3]);
+        assert_eq!(arr.as_i32().unwrap(), &[1, 2, 3]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Micro-benchmark harness (no `criterion` in the offline environment).
+//!
+//! Used by every `rust/benches/*.rs` target (`harness = false`). Provides
+//! warmup, calibrated iteration counts, and robust statistics (median, p95,
+//! mean, std) plus a plain-text table emitter so bench output mirrors the
+//! paper's tables.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Benchmark runner with a fixed time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(120),
+            measure: Duration::from_millis(500),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(150),
+            max_iters: 2_000,
+            min_iters: 3,
+        }
+    }
+
+    /// Run `f` repeatedly; each invocation is timed individually.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warmup & calibration.
+        let t0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while t0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = if warm_iters > 0 {
+            t0.elapsed().as_secs_f64() / warm_iters as f64
+        } else {
+            self.warmup.as_secs_f64()
+        };
+        let target = ((self.measure.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples_ns = Vec::with_capacity(target);
+        for _ in 0..target {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        Self::stats(name, &mut samples_ns)
+    }
+
+    fn stats(name: &str, samples: &mut [f64]) -> BenchStats {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: samples[n / 2],
+            p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+            std_ns: var.sqrt(),
+            min_ns: samples[0],
+        }
+    }
+}
+
+/// Fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths = vec![0usize; cols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+        }
+        out
+    }
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+    /// CSV dump for plotting.
+    pub fn csv(&self) -> String {
+        let mut out = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let st = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(st.iters >= 3);
+        assert!(st.median_ns >= 0.0);
+        assert!(st.min_ns <= st.median_ns);
+        assert!(st.median_ns <= st.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn bench_orders_costs() {
+        let b = Bencher::quick();
+        let cheap = b.run("cheap", || {
+            black_box((0..10).sum::<u64>());
+        });
+        let pricey = b.run("pricey", || {
+            black_box((0..100_000).sum::<u64>());
+        });
+        assert!(
+            pricey.median_ns > cheap.median_ns * 5.0,
+            "expected clear separation: {} vs {}",
+            pricey.median_ns,
+            cheap.median_ns
+        );
+    }
+
+    #[test]
+    fn table_renders_and_csv() {
+        let mut t = Table::new(&["method", "latency_us"]);
+        t.row(vec!["dense".into(), "12.5".into()]);
+        t.row(vec!["hinm".into(), "6.1".into()]);
+        let r = t.render();
+        assert!(r.contains("dense"));
+        assert!(r.lines().count() == 4);
+        assert_eq!(t.csv().lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

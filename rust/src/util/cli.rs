@@ -1,0 +1,229 @@
+//! Tiny command-line argument parser (no `clap` in the offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
+//! Each binary declares its options up front so `--help` output and unknown-
+//! option errors are consistent across the CLI, examples, and benches.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+    /// Comma-separated list of usize, e.g. `--sparsities 50,65,75`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer {t:?}")))
+                .collect(),
+        }
+    }
+}
+
+/// A simple command parser: `Cli::new("desc").opt(...).flag(...).parse(argv)`.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            s.push_str(&format!("{head:<28}{}", spec.help));
+            if let Some(d) = spec.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Parse a raw argv tail (without the program name). Returns Err(usage)
+    /// on `--help` or an unknown/malformed option.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} expects a value"))?,
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args().skip(1)`; print usage and exit on error.
+    pub fn parse_env(&self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Like parse_env but skips further tokens (for subcommand dispatch).
+    pub fn parse_tail(&self, tail: Vec<String>) -> Args {
+        match self.parse(tail) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("model", Some("resnet18"), "model name")
+            .opt("sparsity", None, "total sparsity %")
+            .flag("verbose", "chatty")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(argv(&[])).unwrap();
+        assert_eq!(a.get("model"), Some("resnet18"));
+        assert_eq!(a.get("sparsity"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = cli().parse(argv(&["--model", "bert", "--sparsity=75"])).unwrap();
+        assert_eq!(a.get("model"), Some("bert"));
+        assert_eq!(a.usize_or("sparsity", 0), 75);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cli().parse(argv(&["--verbose", "fig3", "fig5"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["fig3", "fig5"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse(argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--model"));
+        assert!(err.contains("--verbose"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = cli().parse(argv(&["--sparsity", "50,65,75"])).unwrap();
+        assert_eq!(a.usize_list_or("sparsity", &[]), vec![50, 65, 75]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(argv(&["--model"])).is_err());
+    }
+}

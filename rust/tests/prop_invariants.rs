@@ -1,0 +1,161 @@
+//! Property-based invariants over the sparsity/permutation core, using the
+//! in-repo `util::prop` framework (offline environment has no proptest).
+
+use hinm::ensure_prop;
+use hinm::permute::{gyro_permute_and_prune, GyroParams};
+use hinm::sparsity::hinm::{hinm_retained, prune_oneshot};
+use hinm::sparsity::unstructured::unstructured_retained;
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::{is_permutation, Matrix};
+use hinm::util::prop::{forall, Config, Gen, IntIn};
+use hinm::util::rng::Xoshiro256;
+
+/// Generator for random (weights, config) HiNM problem instances.
+struct HinmCase;
+
+struct Case {
+    w: Matrix,
+    cfg: HinmConfig,
+}
+
+impl Gen for HinmCase {
+    type Value = Case;
+    fn generate(&self, rng: &mut Xoshiro256, size: f64) -> Case {
+        let v = [4usize, 8, 16][rng.below(3)];
+        let tiles = 1 + rng.below((3.0 * size).ceil() as usize + 1);
+        let m = v * tiles;
+        let n = 4 * (2 + rng.below((14.0 * size) as usize + 2));
+        let sv = [0.0, 0.25, 0.5, 0.75][rng.below(4)];
+        let w = Matrix::from_fn(m, n, |_, _| {
+            let x = rng.normal();
+            if rng.next_f32() < 0.05 {
+                x * 5.0
+            } else {
+                x
+            }
+        });
+        Case { w, cfg: HinmConfig::with_24(v, sv) }
+    }
+}
+
+#[test]
+fn prop_packed_density_matches_config() {
+    forall(&Config { cases: 40, seed: 0xD1 }, &HinmCase, |c| {
+        let res = prune_oneshot(&c.w, &c.w.abs(), &c.cfg);
+        res.packed.check_invariants().map_err(|e| e.to_string())?;
+        // Exact expected density: keep_cols floors to a multiple of M, so
+        // narrow layers deviate from the nominal total — the *exact* count
+        // is keep_cols(n)/n · N/M.
+        let k_v = c.cfg.keep_cols(c.w.cols);
+        let want_density = (k_v as f64 / c.w.cols as f64) * c.cfg.nm_density();
+        let got = 1.0 - res.mask.sparsity();
+        ensure_prop!(
+            (got - want_density).abs() < 1e-9,
+            "density {got} vs {want_density} for {:?} {:?}",
+            c.w.shape(),
+            c.cfg
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kept_values_equal_original_weights() {
+    forall(&Config { cases: 40, seed: 0xD2 }, &HinmCase, |c| {
+        let res = prune_oneshot(&c.w, &c.w.abs(), &c.cfg);
+        let dense = res.packed.to_dense();
+        for r in 0..c.w.rows {
+            for col in 0..c.w.cols {
+                let d = dense.at(r, col);
+                if d != 0.0 {
+                    ensure_prop!(d == c.w.at(r, col), "value mismatch at ({r},{col})");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unstructured_upper_bounds_hinm() {
+    forall(&Config { cases: 30, seed: 0xD3 }, &HinmCase, |c| {
+        let sal = c.w.abs();
+        let hinm = hinm_retained(&sal, &c.cfg);
+        // Unstructured at the *same kept-element budget* as the actual mask.
+        let res = prune_oneshot(&c.w, &sal, &c.cfg);
+        let kept = res.mask.count_kept();
+        let un = hinm::sparsity::unstructured::unstructured_mask(&sal, kept).retained(&sal);
+        ensure_prop!(un >= hinm - 1e-6, "unstructured {un} < hinm {hinm}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gyro_never_hurts_retention() {
+    forall(&Config { cases: 20, seed: 0xD4 }, &HinmCase, |c| {
+        let sal = c.w.abs();
+        let noperm = prune_oneshot(&c.w, &sal, &c.cfg).retained;
+        let gyro = gyro_permute_and_prune(&c.w, &sal, &c.cfg, &GyroParams::default());
+        ensure_prop!(
+            gyro.result.retained >= noperm - 1e-6,
+            "gyro {} < noperm {noperm}",
+            gyro.result.retained
+        );
+        ensure_prop!(
+            is_permutation(&gyro.ocp_perm, c.w.rows),
+            "invalid OCP permutation"
+        );
+        gyro.result.packed.check_invariants().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_matches_dense_reference() {
+    forall(&Config { cases: 25, seed: 0xD5 }, &HinmCase, |c| {
+        let res = prune_oneshot(&c.w, &c.w.abs(), &c.cfg);
+        let mut rng = Xoshiro256::new(c.w.rows as u64 * 31 + c.w.cols as u64);
+        let x = Matrix::randn(c.w.cols, 1 + rng.below(8), 1.0, &mut rng);
+        let y = hinm::spmm::spmm(&res.packed, &x);
+        let y_ref = hinm::spmm::dense::matmul(&res.packed.to_dense(), &x);
+        let diff = y.max_abs_diff(&y_ref);
+        ensure_prop!(diff < 1e-3, "spmm diff {diff}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_retention_monotone_in_sparsity() {
+    forall(&Config { cases: 25, seed: 0xD6 }, &IntIn { lo: 1, hi: 4 }, |tiles| {
+        let v = 8;
+        let m = v * tiles;
+        let n = 64;
+        let mut rng = Xoshiro256::new(tiles as u64 ^ 0xBEEF);
+        let sal = Matrix::randn(m, n, 1.0, &mut rng).abs();
+        let mut prev = f64::INFINITY;
+        for total in [0.5, 0.625, 0.75, 0.875] {
+            let cfg = HinmConfig::for_total_sparsity(v, total);
+            let r = hinm_retained(&sal, &cfg);
+            ensure_prop!(r <= prev + 1e-9, "retention increased with sparsity at {total}");
+            prev = r;
+            let un = unstructured_retained(&sal, total);
+            ensure_prop!(un + 1e-9 >= r, "unstructured below hinm at {total}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mask_rows_keep_exact_budget() {
+    // Every row keeps exactly vals_per_row elements: the vector level keeps
+    // K_v columns per tile and 2:4 keeps n_keep per M of them.
+    forall(&Config { cases: 30, seed: 0xD7 }, &HinmCase, |c| {
+        let res = prune_oneshot(&c.w, &c.w.abs(), &c.cfg);
+        let keep_per_row = res.packed.vals_per_row();
+        for r in 0..c.w.rows {
+            let kept = (0..c.w.cols).filter(|&col| res.mask.get(r, col)).count();
+            ensure_prop!(kept == keep_per_row, "row {r}: kept {kept} != {keep_per_row}");
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,242 @@
+//! Cross-layer integration: the AOT Pallas/JAX artifacts executed through
+//! PJRT must agree with the Rust-side implementations on the same packed
+//! HiNM data. Requires `make artifacts`; tests are skipped (with a loud
+//! message) when the artifact directory is absent.
+
+use hinm::runtime::executor::{lit_f32, lit_packed, lit_to_f32, Executor};
+use hinm::runtime::Registry;
+use hinm::sparsity::{HinmConfig, HinmPacked};
+use hinm::tensor::Matrix;
+use hinm::util::rng::Xoshiro256;
+
+fn registry() -> Option<Registry> {
+    match hinm::runtime::open_default_registry() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// Pack the python-dumped demo weights with the *rust* packer and check
+/// bit-identical layout — proves the two packers implement one format.
+#[test]
+fn rust_and_python_packers_agree() {
+    let Some(reg) = registry() else { return };
+    let w_arr = reg.load_data("spmm_demo_w_dense").unwrap();
+    let (m, n) = (w_arr.shape[0], w_arr.shape[1]);
+    let w = Matrix::from_vec(m, n, w_arr.as_f32().unwrap().to_vec());
+    let spec = reg.artifact("spmm_demo").unwrap();
+    let v = spec.meta["v"] as usize;
+    let sv = spec.meta["sv"];
+    let cfg = HinmConfig::with_24(v, sv);
+    let packed = hinm::sparsity::prune_oneshot(&w, &w.abs(), &cfg).packed;
+
+    let py_vals = reg.load_data("spmm_demo_vals").unwrap();
+    let py_vidx = reg.load_data("spmm_demo_vec_idx").unwrap();
+    let py_nm = reg.load_data("spmm_demo_nm_idx").unwrap();
+    assert_eq!(packed.vals, py_vals.as_f32().unwrap());
+    assert_eq!(packed.vec_idx, py_vidx.as_i32().unwrap());
+    let nm_i32: Vec<i32> = packed.nm_idx.iter().map(|&o| o as i32).collect();
+    assert_eq!(nm_i32, py_nm.as_i32().unwrap());
+}
+
+fn demo_packed(reg: &Registry) -> (HinmPacked, usize) {
+    let w_arr = reg.load_data("spmm_demo_w_dense").unwrap();
+    let (m, n) = (w_arr.shape[0], w_arr.shape[1]);
+    let w = Matrix::from_vec(m, n, w_arr.as_f32().unwrap().to_vec());
+    let spec = reg.artifact("spmm_demo").unwrap();
+    let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+    let batch = spec.meta["batch"] as usize;
+    (hinm::sparsity::prune_oneshot(&w, &w.abs(), &cfg).packed, batch)
+}
+
+/// Pallas kernel through PJRT vs the Rust CPU SpMM on identical inputs.
+#[test]
+fn pallas_artifact_matches_rust_spmm() {
+    let Some(reg) = registry() else { return };
+    let (packed, batch) = demo_packed(&reg);
+    let exe = Executor::load(reg.artifact("spmm_demo").unwrap()).unwrap();
+
+    let mut rng = Xoshiro256::new(424242);
+    let x = Matrix::randn(packed.cols, batch, 1.0, &mut rng);
+
+    // PJRT path.
+    let (vals, vidx, nm) = lit_packed(&packed).unwrap();
+    let xlit = lit_f32(&x.data, &[x.rows, x.cols]).unwrap();
+    let outs = exe.run(&[vals, vidx, nm, xlit]).unwrap();
+    let y_pjrt = lit_to_f32(&outs[0]).unwrap();
+
+    // Rust path.
+    let y_rust = hinm::spmm::spmm(&packed, &x);
+
+    assert_eq!(y_pjrt.len(), y_rust.data.len());
+    let max_diff = y_pjrt
+        .iter()
+        .zip(&y_rust.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "pallas vs rust spmm max diff {max_diff}");
+}
+
+/// Input validation: wrong arity and wrong element counts are rejected
+/// before reaching XLA.
+#[test]
+fn executor_validates_inputs() {
+    let Some(reg) = registry() else { return };
+    let (packed, batch) = demo_packed(&reg);
+    let exe = Executor::load(reg.artifact("spmm_demo").unwrap()).unwrap();
+    let (vals, vidx, nm) = lit_packed(&packed).unwrap();
+
+    // Too few inputs.
+    let err = match exe.run(&[vals, vidx, nm]) {
+        Err(e) => e,
+        Ok(_) => panic!("expected arity error"),
+    };
+    assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+
+    // Wrong shape on x.
+    let (vals, vidx, nm) = lit_packed(&packed).unwrap();
+    let bad_x = lit_f32(&vec![0.0; 7], &[7]).unwrap();
+    let err = match exe.run(&[vals, vidx, nm, bad_x]) {
+        Err(e) => e,
+        Ok(_) => panic!("expected shape error"),
+    };
+    assert!(format!("{err:#}").contains("elements"), "{err:#}");
+    let _ = batch;
+}
+
+/// The ffn_serve artifact executes and matches the rust two-layer reference.
+#[test]
+fn ffn_serve_artifact_matches_rust() {
+    let Some(reg) = registry() else { return };
+    let spec = reg.artifact("ffn_serve").unwrap();
+    let d = spec.meta["d"] as usize;
+    let d_ff = spec.meta["d_ff"] as usize;
+    let batch = spec.meta["batch"] as usize;
+    let v = spec.meta["v"] as usize;
+    let sv = spec.meta["sv"];
+    let cfg = HinmConfig::with_24(v, sv);
+
+    // Rebuild the packed weights from the dumped dense FFN weights.
+    let w1_arr = reg.load_data("ffn_w1_dense").unwrap();
+    let w2_arr = reg.load_data("ffn_w2_dense").unwrap();
+    let w1 = Matrix::from_vec(d_ff, d, w1_arr.as_f32().unwrap().to_vec());
+    let w2 = Matrix::from_vec(d, d_ff, w2_arr.as_f32().unwrap().to_vec());
+    let p1 = hinm::sparsity::prune_oneshot(&w1, &w1.abs(), &cfg).packed;
+    let p2 = hinm::sparsity::prune_oneshot(&w2, &w2.abs(), &cfg).packed;
+
+    // Parity with the python-side packing dumped at AOT time.
+    assert_eq!(p1.vals, reg.load_data("ffn_w1_vals").unwrap().as_f32().unwrap());
+    assert_eq!(p2.vec_idx, reg.load_data("ffn_w2_vec_idx").unwrap().as_i32().unwrap());
+
+    let mut rng = Xoshiro256::new(77);
+    let x = Matrix::randn(d, batch, 0.5, &mut rng);
+
+    let exe = Executor::load(spec).unwrap();
+    let (v1, i1, n1) = lit_packed(&p1).unwrap();
+    let (v2, i2, n2) = lit_packed(&p2).unwrap();
+    let xlit = lit_f32(&x.data, &[d, batch]).unwrap();
+    let outs = exe.run(&[v1, i1, n1, v2, i2, n2, xlit]).unwrap();
+    let y = lit_to_f32(&outs[0]).unwrap();
+
+    // Rust reference: spmm → gelu → spmm.
+    let h = hinm::spmm::spmm(&p1, &x);
+    let h_gelu = Matrix {
+        rows: h.rows,
+        cols: h.cols,
+        data: h.data.iter().map(|&v| gelu(v)).collect(),
+    };
+    let y_ref = hinm::spmm::spmm(&p2, &h_gelu);
+    let max_diff = y
+        .iter()
+        .zip(&y_ref.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "ffn pjrt vs rust max diff {max_diff}");
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation (matches jax.nn.gelu default approximate=True)
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x3)) as f64).tanh() as f32)
+}
+
+/// mlp artifacts: forward produces logits, train step reduces loss, masks
+/// pin pruned weights at zero — all driven from Rust.
+#[test]
+fn mlp_train_step_learns_and_respects_mask() {
+    let Some(reg) = registry() else { return };
+    let spec = reg.artifact("mlp_train_step").unwrap();
+    let d_in = spec.meta["d_in"] as usize;
+    let d_h = spec.meta["d_hidden"] as usize;
+    let classes = spec.meta["n_classes"] as usize;
+    let batch = spec.meta["batch"] as usize;
+    let exe = Executor::load(spec).unwrap();
+
+    // Initial params from the artifact dumps.
+    let mut params: Vec<xla::Literal> = ["w1", "b1", "w2", "b2"]
+        .iter()
+        .map(|n| {
+            hinm::runtime::executor::lit_from_npy(&reg.load_data(&format!("mlp_{n}")).unwrap())
+                .unwrap()
+        })
+        .collect();
+
+    // Mask: prune every 4th row of w1 entirely.
+    let mut mask = vec![1.0f32; d_h * d_in];
+    for r in (0..d_h).step_by(4) {
+        for c in 0..d_in {
+            mask[r * d_in + c] = 0.0;
+        }
+    }
+
+    // Synthetic 2-cluster-per-class data.
+    let mut rng = Xoshiro256::new(31337);
+    let make_batch = |rng: &mut Xoshiro256| {
+        let mut x = vec![0.0f32; batch * d_in];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            let class = rng.below(classes);
+            y[b] = class as i32;
+            for j in 0..d_in {
+                let center = if j % classes == class { 1.5 } else { -0.5 };
+                x[b * d_in + j] = center + rng.normal() * 0.3;
+            }
+        }
+        (x, y)
+    };
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for step in 0..40 {
+        let (x, y) = make_batch(&mut rng);
+        let mut inputs = Vec::with_capacity(8);
+        inputs.append(&mut params);
+        inputs.push(lit_f32(&mask, &[d_h, d_in]).unwrap());
+        inputs.push(lit_f32(&x, &[batch, d_in]).unwrap());
+        inputs.push(hinm::runtime::executor::lit_i32(&y, &[batch]).unwrap());
+        inputs.push(hinm::runtime::executor::lit_scalar(0.3));
+        let mut outs = exe.run(&inputs).unwrap();
+        let loss = outs.pop().unwrap().to_vec::<f32>().unwrap()[0];
+        params = outs;
+        if step == 0 {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+    }
+    let first = first_loss.unwrap();
+    assert!(
+        last_loss < first * 0.5,
+        "training did not learn: first {first} last {last_loss}"
+    );
+
+    // Pruned rows of w1 stayed exactly zero.
+    let w1 = params[0].to_vec::<f32>().unwrap();
+    for r in (0..d_h).step_by(4) {
+        for c in 0..d_in {
+            assert_eq!(w1[r * d_in + c], 0.0, "mask leaked at ({r},{c})");
+        }
+    }
+}

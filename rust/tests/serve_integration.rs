@@ -1,0 +1,130 @@
+//! Batch-server integration over the real PJRT executor + ffn_serve
+//! artifact: correctness under concurrency, padding of partial batches,
+//! failure propagation, and clean shutdown. Skipped when artifacts are
+//! absent.
+
+use hinm::coordinator::serve::{packed_host_tensors, BatchServer, HostTensor, ServeConfig};
+use hinm::runtime::Registry;
+use hinm::sparsity::{prune_oneshot, HinmConfig, HinmPacked};
+use hinm::tensor::Matrix;
+use std::time::Duration;
+
+fn registry() -> Option<Registry> {
+    match hinm::runtime::open_default_registry() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#})");
+            None
+        }
+    }
+}
+
+struct Setup {
+    server: BatchServer,
+    p1: HinmPacked,
+    p2: HinmPacked,
+    d: usize,
+}
+
+fn start(reg: &Registry) -> Setup {
+    let spec = reg.artifact("ffn_serve").unwrap().clone();
+    let d = spec.meta["d"] as usize;
+    let d_ff = spec.meta["d_ff"] as usize;
+    let batch = spec.meta["batch"] as usize;
+    let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+    let w1 = reg.load_data("ffn_w1_dense").unwrap();
+    let w2 = reg.load_data("ffn_w2_dense").unwrap();
+    let w1 = Matrix::from_vec(d_ff, d, w1.as_f32().unwrap().to_vec());
+    let w2 = Matrix::from_vec(d, d_ff, w2.as_f32().unwrap().to_vec());
+    let p1 = prune_oneshot(&w1, &w1.abs(), &cfg).packed;
+    let p2 = prune_oneshot(&w2, &w2.abs(), &cfg).packed;
+    let mut fixed = packed_host_tensors(&p1);
+    fixed.extend(packed_host_tensors(&p2));
+    let server = BatchServer::start(
+        spec,
+        fixed,
+        d,
+        d,
+        ServeConfig { batch, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    Setup { server, p1, p2, d }
+}
+
+fn gelu(x: f32) -> f32 {
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x3)) as f64).tanh() as f32)
+}
+
+fn rust_ffn(p1: &HinmPacked, p2: &HinmPacked, x: &[f32]) -> Vec<f32> {
+    let xm = Matrix::from_vec(x.len(), 1, x.to_vec());
+    let h = hinm::spmm::spmm(p1, &xm);
+    let h = Matrix { rows: h.rows, cols: h.cols, data: h.data.iter().map(|&v| gelu(v)).collect() };
+    hinm::spmm::spmm(p2, &h).data
+}
+
+#[test]
+fn single_request_partial_batch_is_padded_and_correct() {
+    let Some(reg) = registry() else { return };
+    let s = start(&reg);
+    let x: Vec<f32> = (0..s.d).map(|j| (j as f32 * 0.02).cos()).collect();
+    let y = s.server.handle.infer(x.clone()).unwrap();
+    let y_ref = rust_ffn(&s.p1, &s.p2, &x);
+    let diff = y.iter().zip(&y_ref).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(diff < 2e-3, "diff {diff}");
+    s.server.stop();
+}
+
+#[test]
+fn concurrent_clients_get_their_own_answers() {
+    let Some(reg) = registry() else { return };
+    let s = start(&reg);
+    let d = s.d;
+    let handles: Vec<_> = (0..24)
+        .map(|i| {
+            let h = s.server.handle.clone();
+            std::thread::spawn(move || {
+                let x: Vec<f32> = (0..d).map(|j| ((i * 7 + j) % 11) as f32 * 0.1).collect();
+                (x.clone(), h.infer(x).unwrap())
+            })
+        })
+        .collect();
+    for h in handles {
+        let (x, y) = h.join().unwrap();
+        let y_ref = rust_ffn(&s.p1, &s.p2, &x);
+        let diff = y.iter().zip(&y_ref).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(diff < 2e-3, "concurrent response mismatch: {diff}");
+    }
+    assert_eq!(s.server.metrics.lock().unwrap().count(), 24);
+    s.server.stop();
+}
+
+#[test]
+fn wrong_input_size_is_rejected_client_side() {
+    let Some(reg) = registry() else { return };
+    let s = start(&reg);
+    assert!(s.server.handle.infer(vec![0.0; 3]).is_err());
+    s.server.stop();
+}
+
+#[test]
+fn startup_failure_surfaces_cleanly() {
+    let Some(reg) = registry() else { return };
+    // Fixed inputs with a wrong shape → the executor's validation must fail
+    // the *first request*, not hang: startup succeeds (shapes are only
+    // checked at run time), so submit one request and expect Err.
+    let spec = reg.artifact("ffn_serve").unwrap().clone();
+    let d = spec.meta["d"] as usize;
+    let bad_fixed = vec![HostTensor::F32(vec![0.0; 8], vec![8])];
+    let server = BatchServer::start(
+        spec,
+        bad_fixed,
+        d,
+        d,
+        ServeConfig { batch: 4, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let err = server.handle.infer(vec![0.0; d]);
+    assert!(err.is_err(), "bad fixed inputs must fail the request");
+    server.stop();
+}
