@@ -4,8 +4,13 @@
 //! full ResNet-50 OCP sweeps take tens of minutes, see DESIGN.md §8).
 //! Output: the paper's table layout + the headline permutation gains.
 
-use hinm::eval::common::EvalScale;
+use hinm::coordinator::{run_pipeline, weighted_retention, LayerJob, PipelineConfig};
+use hinm::eval::common::{materialize, EvalScale};
+use hinm::models::catalog::resnet18;
 use hinm::eval::fig34;
+use hinm::permute::StrategySpec;
+use hinm::sparsity::HinmConfig;
+use hinm::util::bench::Table;
 
 fn scale() -> EvalScale {
     std::env::var("HINM_BENCH_SCALE")
@@ -57,4 +62,42 @@ fn main() {
         }
     }
     println!("\nshape checks: HiNM > NoPerm and HiNM > OVW at 65/75/85% ✓");
+
+    // --- Registry sweep: every named spec plus two free-form OCP×ICP pairs
+    // on the ResNet-18 shapes @75%, all through the coordinator pipeline. ---
+    let v = if scale == EvalScale::Full { 32 } else { 8 };
+    let layers = materialize(&resnet18(), scale, v, false, seed);
+    let jobs: Vec<LayerJob> = layers
+        .iter()
+        .map(|l| LayerJob {
+            name: l.name.clone(),
+            weights: l.weights.clone(),
+            saliency: l.saliency.clone(),
+        })
+        .collect();
+    let cfg = HinmConfig::for_total_sparsity(v, 0.75);
+    let mut t = Table::new(&["spec", "label", "weighted retention", "wall ms"]);
+    let mut noperm_r = 0.0;
+    let mut gyro_r = 0.0;
+    for key in ["noperm", "gyro", "v1", "v2", "v3", "ovw+apex", "id+tetris"] {
+        let spec = StrategySpec::parse(key).expect(key);
+        let pc = PipelineConfig::new(cfg, spec.clone());
+        let t0 = std::time::Instant::now();
+        let out = run_pipeline(jobs.clone(), &pc).expect("pipeline");
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let r = weighted_retention(&out, &jobs);
+        if key == "noperm" {
+            noperm_r = r;
+        }
+        if key == "gyro" {
+            gyro_r = r;
+        }
+        t.row(vec![spec.key(), spec.label(), format!("{r:.4}"), format!("{wall:.0}")]);
+    }
+    println!("\nregistry sweep (ResNet-18 shapes @75%):");
+    t.print();
+    // 1e-6 slack: the guard compares against hinm_retained(), which matches
+    // the packed noperm retention only up to float summation order.
+    assert!(gyro_r >= noperm_r - 1e-6, "gyro {gyro_r} must not lose to noperm {noperm_r}");
+    println!("registry sweep: all specs ran end-to-end; gyro ≥ noperm ✓");
 }

@@ -1,9 +1,13 @@
 //! Bench: gyro-permutation cost scaling — OCP and ICP wall-time vs layer
-//! size, plus the retention-vs-iterations tradeoff (the "learning rate"
-//! schedule study backing DESIGN.md §7).
+//! size, the tile-parallel engine's thread scaling, and the
+//! retention-vs-iterations tradeoff (the "learning rate" schedule study
+//! backing DESIGN.md §7).
 
 use hinm::models::SyntheticGen;
-use hinm::permute::{gyro_icp, gyro_ocp, IcpParams, OcpParams};
+use hinm::permute::{
+    gyro_icp, gyro_ocp, IcpParams, OcpParams, PermutePipeline, StrategyParams, StrategyRegistry,
+    StrategySpec,
+};
 use hinm::sparsity::vector_prune::vector_prune;
 use hinm::sparsity::HinmConfig;
 use hinm::util::bench::Table;
@@ -61,6 +65,53 @@ fn main() {
     }
     println!("\nICP scaling (single tile, V=32):");
     icp_table.print();
+
+    // --- Tile-parallel engine: thread scaling on a wide synthetic layer ---
+    // 256×2304 at V=32 → 8 independent tiles, K_v=1152 each: the ResNet
+    // conv3x3 shape the paper flags as the ICP bottleneck. The engine must
+    // be bit-deterministic across worker counts and give >1.5× at 4 workers.
+    let m = 256usize;
+    let n = 2304usize;
+    let w = SyntheticGen::default().weights(m, n, &mut rng);
+    let sal = w.abs();
+    let cfg = HinmConfig::with_24(32, 0.5);
+    let params = StrategyParams {
+        icp: IcpParams { max_iters: 8, patience: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let reg = StrategyRegistry::builtin();
+    // Identity OCP + guard off isolate the tile engine: no OCP cost, and no
+    // serial hinm_retained() baseline inside the timed region.
+    let spec = StrategySpec::parse("id+gyro").expect("spec");
+    let run_with = |workers: usize| {
+        let (ocp, icp) = reg.build(&spec, &params).expect("build");
+        let t0 = std::time::Instant::now();
+        let out = PermutePipeline { workers, guard: false }.run(ocp.as_ref(), icp.as_ref(), &w, &sal, &cfg);
+        (t0.elapsed().as_secs_f64() * 1e3, out.result.retained)
+    };
+    let _ = run_with(1); // warm-up (page in the layer, fill allocator pools)
+    let (t1, r1) = run_with(1);
+    let (t4, r4) = run_with(4);
+    let speedup = t1 / t4;
+    let mut par_table = Table::new(&["workers", "wall ms", "speedup"]);
+    par_table.row(vec!["1".into(), format!("{t1:.0}"), "1.00×".into()]);
+    par_table.row(vec!["4".into(), format!("{t4:.0}"), format!("{speedup:.2}×")]);
+    println!("\ntile-parallel ICP ({m}×{n}, V=32, 8 tiles):");
+    par_table.print();
+    assert!(
+        (r1 - r4).abs() < 1e-9,
+        "tile engine must be deterministic across worker counts: {r1} vs {r4}"
+    );
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if cores >= 4 {
+        assert!(
+            speedup > 1.5,
+            "tile-parallel ICP speedup {speedup:.2}× ≤ 1.5× at workers=4 ({cores} cores)"
+        );
+        println!("speedup check: {speedup:.2}× > 1.5× at workers=4 ✓");
+    } else {
+        println!("speedup check skipped ({cores} cores < 4)");
+    }
 
     // --- Sampling-schedule ablation: fixed k=1 vs annealed ladder ---
     // (the paper's argument for varying the sample count)

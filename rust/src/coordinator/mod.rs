@@ -8,6 +8,6 @@ pub mod pipeline;
 pub mod serve;
 pub mod trainer;
 
-pub use pipeline::{compress_layer, run_pipeline, LayerJob, Method, PipelineConfig};
+pub use pipeline::{compress_layer, run_pipeline, weighted_retention, LayerJob, Method, PipelineConfig};
 pub use serve::{BatchServer, ServeConfig};
 pub use trainer::{Corpus, LmTrainer};

@@ -1,32 +1,32 @@
 //! The offline compression pipeline — L3's production entry point.
 //!
-//! Takes a set of named layers (dense weights + saliency), a method and a
-//! sparsity target, and compresses every layer in parallel across worker
-//! threads (std::thread — the offline environment has no tokio; compression
-//! is CPU-bound so a thread pool is the right tool anyway).
+//! Takes a set of named layers (dense weights + saliency), a permutation
+//! method and a sparsity target, and compresses every layer in parallel
+//! across worker threads (std::thread — the offline environment has no
+//! tokio; compression is CPU-bound so a thread pool is the right tool
+//! anyway). Methods are [`StrategySpec`]s resolved through the permute
+//! [`StrategyRegistry`], so any OCP×ICP pair runs here — the legacy
+//! [`Method`] enum survives only as a thin parser/alias layer over it.
 
-use crate::permute::baselines::apex::{apex_icp, ApexParams};
-use crate::permute::baselines::ovw::ovw_ocp;
-use crate::permute::{gyro_permute_and_prune, GyroParams};
+use crate::permute::{GyroParams, PermutePipeline, StrategyParams, StrategyRegistry, StrategySpec};
 use crate::saliency::Saliency;
-use crate::sparsity::hinm::{prune_oneshot, prune_with_kept};
-use crate::sparsity::vector_prune::vector_prune;
 use crate::sparsity::{HinmConfig, HinmResult};
 use crate::tensor::Matrix;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::sync::Arc;
 
-/// Which permutation strategy to run before HiNM pruning.
+/// The four named arms of the paper (thin aliases over registry specs).
+/// Prefer [`StrategySpec`] for anything beyond these.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
-    /// Gyro OCP + gyro ICP (the paper's method).
+    /// Gyro OCP + gyro ICP (the paper's method) — `gyro+gyro`.
     HinmGyro,
-    /// No permutation at all (paper's HiNM-NoPerm arm).
+    /// No permutation at all (paper's HiNM-NoPerm arm) — `id+id`.
     HinmNoPerm,
-    /// Ablation V1: OVW balanced-K-means OCP + gyro ICP (Table 3).
+    /// Ablation V1: OVW balanced-K-means OCP + gyro ICP (Table 3) — `ovw+gyro`.
     HinmV1,
-    /// Ablation V2: gyro OCP + Apex swap ICP (Table 3).
+    /// Ablation V2: gyro OCP + Apex swap ICP (Table 3) — `gyro+apex`.
     HinmV2,
 }
 
@@ -47,6 +47,21 @@ impl Method {
             Method::HinmV1 => "HiNM-V1",
             Method::HinmV2 => "HiNM-V2",
         }
+    }
+    /// The registry spec this arm resolves to.
+    pub fn spec(&self) -> StrategySpec {
+        match self {
+            Method::HinmGyro => StrategySpec::new("gyro", "gyro"),
+            Method::HinmNoPerm => StrategySpec::new("id", "id"),
+            Method::HinmV1 => StrategySpec::new("ovw", "gyro"),
+            Method::HinmV2 => StrategySpec::new("gyro", "apex"),
+        }
+    }
+}
+
+impl From<Method> for StrategySpec {
+    fn from(m: Method) -> Self {
+        m.spec()
     }
 }
 
@@ -78,76 +93,58 @@ pub struct CompressedLayer {
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
     pub cfg: HinmConfig,
-    pub method: Method,
+    /// Which OCP×ICP pair to run (any registry spec; `Method` coerces).
+    pub method: StrategySpec,
+    /// Gyro tuning; baseline strategies derive their seeds from it
+    /// (see `StrategyParams::from`).
     pub gyro: GyroParams,
-    /// Worker threads (0 = available parallelism).
+    /// Worker threads across layers (0 = available parallelism).
     pub workers: usize,
+    /// Worker threads for the per-layer tile engine. Defaults to 1: layers
+    /// already fan out across `workers`, so nesting tile parallelism would
+    /// oversubscribe. Raise it when compressing few, wide layers.
+    pub tile_workers: usize,
 }
 
 impl PipelineConfig {
-    pub fn new(cfg: HinmConfig, method: Method) -> Self {
-        Self { cfg, method, gyro: GyroParams::default(), workers: 0 }
+    pub fn new(cfg: HinmConfig, method: impl Into<StrategySpec>) -> Self {
+        Self {
+            cfg,
+            method: method.into(),
+            gyro: GyroParams::default(),
+            workers: 0,
+            tile_workers: 1,
+        }
     }
 }
 
-/// Compress one layer with the configured method.
+/// Compress one layer with the configured method, through the strategy
+/// registry and the shared [`PermutePipeline`] engine (single code path for
+/// every arm — the never-worse guard applies uniformly).
 pub fn compress_layer(job: &LayerJob, pc: &PipelineConfig) -> CompressedLayer {
     let t0 = std::time::Instant::now();
-    let cfg = &pc.cfg;
-    let (result, ocp_perm) = match pc.method {
-        Method::HinmGyro => {
-            let out = gyro_permute_and_prune(&job.weights, &job.saliency, cfg, &pc.gyro);
-            (out.result, out.ocp_perm)
-        }
-        Method::HinmNoPerm => {
-            let res = prune_oneshot(&job.weights, &job.saliency, cfg);
-            (res, (0..job.weights.rows).collect())
-        }
-        Method::HinmV1 => {
-            // OVW K-means OCP, then gyro ICP via the gyro driver with OCP skipped.
-            let perm = ovw_ocp(&job.saliency, cfg, pc.gyro.ocp.seed);
-            let w = job.weights.permute_rows(&perm);
-            let s = job.saliency.permute_rows(&perm);
-            let out = gyro_permute_and_prune(
-                &w,
-                &s,
-                cfg,
-                &GyroParams { skip_ocp: true, ..pc.gyro.clone() },
-            );
-            (out.result, perm)
-        }
-        Method::HinmV2 => {
-            // Gyro OCP, then Apex swap-based ICP.
-            let ocp = crate::permute::gyro_ocp(&job.saliency, cfg, &pc.gyro.ocp);
-            let w = job.weights.permute_rows(&ocp.perm);
-            let s = job.saliency.permute_rows(&ocp.perm);
-            let vp = vector_prune(&s, cfg);
-            let k_v = vp.kept[0].len();
-            let tiles = cfg.tiles(w.rows);
-            let mut orders = Vec::with_capacity(tiles);
-            let mut buf = vec![0.0f32; cfg.v * k_v];
-            for t in 0..tiles {
-                crate::sparsity::hinm::gather_tile(&s, cfg, t, &vp.kept[t], &mut buf);
-                let cols: Vec<Vec<f32>> = (0..k_v)
-                    .map(|j| (0..cfg.v).map(|r| buf[r * k_v + j]).collect())
-                    .collect();
-                let (order, _) = apex_icp(&cols, cfg.v, cfg, &ApexParams::default());
-                orders.push(order);
-            }
-            let res = prune_with_kept(&w, &s, cfg, &vp, Some(&orders));
-            (res, ocp.perm)
-        }
-    };
+    let params = StrategyParams::from(&pc.gyro);
+    let (ocp, icp) = StrategyRegistry::builtin()
+        .build(&pc.method, &params)
+        .unwrap_or_else(|| panic!("unknown method spec {:?}", pc.method.key()));
+    let engine = PermutePipeline { workers: pc.tile_workers, guard: true };
+    let out = engine.run(ocp.as_ref(), icp.as_ref(), &job.weights, &job.saliency, &pc.cfg);
     CompressedLayer {
         name: job.name.clone(),
-        result,
-        ocp_perm,
+        result: out.result,
+        ocp_perm: out.ocp_perm,
         elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
     }
 }
 
 /// Compress many layers in parallel. Results return in input order.
 pub fn run_pipeline(jobs: Vec<LayerJob>, pc: &PipelineConfig) -> Result<Vec<CompressedLayer>> {
+    // Validate the spec up front: StrategySpec's fields are freely
+    // constructible, and a panic inside a worker thread would otherwise
+    // unwind through this Result-returning API.
+    if !StrategyRegistry::builtin().supports(&pc.method) {
+        anyhow::bail!("unknown method spec {:?}", pc.method.key());
+    }
     let n = jobs.len();
     if n == 0 {
         return Ok(Vec::new());
@@ -220,7 +217,7 @@ mod tests {
             .collect()
     }
 
-    fn pc(method: Method) -> PipelineConfig {
+    fn pc(method: impl Into<StrategySpec>) -> PipelineConfig {
         PipelineConfig::new(HinmConfig::with_24(8, 0.5), method)
     }
 
@@ -273,8 +270,38 @@ mod tests {
     }
 
     #[test]
+    fn registry_combos_run_end_to_end() {
+        // Beyond the four legacy arms: arbitrary OCP×ICP pairs through the
+        // same pipeline, never below the noperm baseline.
+        let js = jobs(2, 104);
+        let noperm = weighted_retention(
+            &run_pipeline(js.clone(), &pc(Method::HinmNoPerm)).unwrap(),
+            &js,
+        );
+        for spec in ["gyro+tetris", "ovw+apex", "id+gyro", "ovw+tetris"] {
+            let spec = StrategySpec::parse(spec).expect(spec);
+            let out = run_pipeline(js.clone(), &pc(spec.clone())).unwrap();
+            for l in &out {
+                l.result.packed.check_invariants().unwrap();
+                assert!(crate::tensor::is_permutation(&l.ocp_perm, 32), "{}", spec.key());
+            }
+            let r = weighted_retention(&out, &js);
+            assert!(r >= noperm - 1e-6, "{}: {r} < noperm {noperm}", spec.key());
+        }
+    }
+
+    #[test]
     fn empty_pipeline_ok() {
         assert!(run_pipeline(vec![], &pc(Method::HinmGyro)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_spec_is_an_error_not_a_panic() {
+        // StrategySpec's fields are freely constructible; run_pipeline must
+        // surface a bad key as Err, not a worker-thread panic.
+        let js = jobs(1, 105);
+        let bad = pc(StrategySpec::new("gyr0", "gyro"));
+        assert!(run_pipeline(js, &bad).is_err());
     }
 
     #[test]
@@ -282,5 +309,8 @@ mod tests {
         assert_eq!(Method::parse("gyro"), Some(Method::HinmGyro));
         assert_eq!(Method::parse("v2"), Some(Method::HinmV2));
         assert_eq!(Method::parse("bogus"), None);
+        // Legacy arms and registry specs agree.
+        assert_eq!(Method::HinmGyro.spec(), StrategySpec::parse("gyro").unwrap());
+        assert_eq!(Method::HinmV1.spec(), StrategySpec::parse("v1").unwrap());
     }
 }

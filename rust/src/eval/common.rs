@@ -66,6 +66,9 @@ pub enum MethodArm {
     Unstructured,
     HinmV1,
     HinmV2,
+    /// Extra ablation arm via the strategy registry: gyro OCP + Tetris-style
+    /// swap ICP (`gyro+tetris`).
+    HinmV3,
 }
 
 impl MethodArm {
@@ -78,6 +81,21 @@ impl MethodArm {
             MethodArm::Unstructured => "Unstructured",
             MethodArm::HinmV1 => "HiNM-V1",
             MethodArm::HinmV2 => "HiNM-V2",
+            MethodArm::HinmV3 => "HiNM-V3",
+        }
+    }
+
+    /// Strategy-registry spec for the HiNM arms (None for the non-HiNM
+    /// baselines, which have dedicated scoring paths).
+    pub fn spec(&self) -> Option<crate::permute::StrategySpec> {
+        use crate::permute::StrategySpec;
+        match self {
+            MethodArm::HinmGyro => Some(StrategySpec::new("gyro", "gyro")),
+            MethodArm::HinmNoPerm => Some(StrategySpec::new("id", "id")),
+            MethodArm::HinmV1 => Some(StrategySpec::new("ovw", "gyro")),
+            MethodArm::HinmV2 => Some(StrategySpec::new("gyro", "apex")),
+            MethodArm::HinmV3 => Some(StrategySpec::new("gyro", "tetris")),
+            _ => None,
         }
     }
 }
@@ -167,18 +185,16 @@ pub fn arm_retention(arm: MethodArm, layer: &EvalLayer, v: usize, total: f64, se
             );
             out.result.retained
         }
-        MethodArm::HinmV1 | MethodArm::HinmV2 => {
+        MethodArm::HinmV1 | MethodArm::HinmV2 | MethodArm::HinmV3 => {
+            // Ablation arms route through the strategy registry — the same
+            // code path the coordinator pipeline and the CLI use.
             let cfg = HinmConfig::for_total_sparsity(v, total);
-            let method = if arm == MethodArm::HinmV1 {
-                crate::coordinator::Method::HinmV1
-            } else {
-                crate::coordinator::Method::HinmV2
-            };
             let pc = crate::coordinator::PipelineConfig {
                 cfg,
-                method,
+                method: arm.spec().expect("HiNM arm has a spec"),
                 gyro: eval_gyro_params(seed),
                 workers: 1,
+                tile_workers: 1,
             };
             let job = crate::coordinator::LayerJob {
                 name: layer.name.clone(),

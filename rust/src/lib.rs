@@ -5,10 +5,12 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the offline compression pipeline (saliency →
-//!   gyro-permutation → HiNM pruning → packed format), the PJRT runtime that
-//!   executes AOT-lowered JAX/Pallas artifacts, a batched inference server,
-//!   and the full evaluation/bench harness reproducing every table and figure
-//!   in the paper.
+//!   permutation → HiNM pruning → packed format) built on the
+//!   [`permute::strategy`] layer (any OCP×ICP strategy pair from a
+//!   string-keyed registry, executed by a parallel tile engine), the PJRT
+//!   runtime that executes AOT-lowered JAX/Pallas artifacts, a batched
+//!   inference server, and the full evaluation/bench harness reproducing
+//!   every table and figure in the paper.
 //! * **L2 (`python/compile/model.py`)** — JAX forward/backward graphs calling
 //!   the L1 kernel, lowered once to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/hinm_spmm.py`)** — the HiNM SpMM Pallas

@@ -11,6 +11,7 @@
 use anyhow::{bail, Context, Result};
 use hinm::coordinator::{Corpus, LmTrainer};
 use hinm::eval::{common::EvalScale, fig34, fig5, tab1, tab2, tab3};
+use hinm::permute::{StrategyRegistry, StrategySpec};
 use hinm::sparsity::HinmConfig;
 use hinm::tensor::npy;
 use hinm::util::cli::Cli;
@@ -51,6 +52,8 @@ fn usage() {
          SUBCOMMANDS:\n\
          \x20 eval <fig3|fig4|tab1|tab2|tab3|fig5|all>  regenerate paper results\n\
          \x20 prune   --weights w.npy --out dir [--sparsity 75] [--v 32] [--method gyro]\n\
+         \x20         --method also accepts any <ocp>+<icp> registry pair, e.g. gyro+apex,\n\
+         \x20         ovw+gyro, id+tetris (ocp: gyro|ovw|id; icp: gyro|apex|tetris|id)\n\
          \x20 spmm    --weights w.npy [--batch 8] [--sparsity 75]\n\
          \x20 info    list AOT artifacts and data dumps\n\
          \x20 serve-demo  [--requests 64]   batched FFN inference via PJRT\n\
@@ -123,19 +126,29 @@ fn cmd_prune(args: Vec<String>) -> Result<()> {
         .opt("out", Some("pruned_out"), "output directory")
         .opt("sparsity", Some("75"), "total sparsity %")
         .opt("v", Some("32"), "vector size V")
-        .opt("method", Some("gyro"), "gyro | noperm | v1 | v2");
+        .opt("method", Some("gyro"), "gyro | noperm | v1 | v2 | v3 | <ocp>+<icp> (registry keys)")
+        .opt("workers", Some("0"), "tile-engine threads (0 = all cores)");
     let a = cli.parse_tail(args);
     let wpath = a.get("weights").context("--weights is required")?;
     let w = npy::load_matrix(wpath)?;
     let total = a.usize_or("sparsity", 75) as f64 / 100.0;
     let v = a.usize_or("v", 32);
-    let method =
-        hinm::coordinator::Method::parse(&a.get_or("method", "gyro")).context("bad --method")?;
+    let method_str = a.get_or("method", "gyro");
+    let spec = StrategySpec::parse(&method_str).with_context(|| {
+        format!(
+            "bad --method {:?}; expected {}",
+            method_str,
+            StrategyRegistry::builtin().method_help()
+        )
+    })?;
     let cfg = HinmConfig::for_total_sparsity(v, total);
     cfg.validate(w.rows, w.cols).map_err(|e| anyhow::anyhow!(e))?;
 
     let job = hinm::coordinator::LayerJob::from_saliency("cli", w, &hinm::saliency::Magnitude);
-    let pc = hinm::coordinator::PipelineConfig::new(cfg, method);
+    let mut pc = hinm::coordinator::PipelineConfig::new(cfg, spec.clone());
+    // Single layer: hand every core to the tile engine instead of the
+    // (useless here) layer-level pool.
+    pc.tile_workers = a.usize_or("workers", 0);
     let out = hinm::coordinator::compress_layer(&job, &pc);
     let p = &out.result.packed;
     p.check_invariants()?;
@@ -155,7 +168,7 @@ fn cmd_prune(args: Vec<String>) -> Result<()> {
 
     println!(
         "{}: {}×{} → HiNM V={} total sparsity {:.1}% | retention {:.4} | {} | {:.0} ms",
-        method.label(),
+        spec.label(),
         p.rows,
         p.cols,
         cfg.v,

@@ -25,18 +25,22 @@ impl Default for ApexParams {
 }
 
 /// Total Eq. 3 objective of an order.
-fn objective(cols: &[Vec<f32>], order: &[usize], v: usize, cfg: &HinmConfig) -> f64 {
+fn objective<C: AsRef<[f32]>>(cols: &[C], order: &[usize], v: usize, cfg: &HinmConfig) -> f64 {
     order
         .chunks_exact(cfg.m_group)
         .map(|grp| {
-            let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_slice()).collect();
+            let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_ref()).collect();
             icp_group_retained(&members, v, cfg)
         })
         .sum()
 }
 
-/// Greedy pairwise-swap search over column-vector positions.
-pub fn apex_icp(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &ApexParams) -> (Vec<usize>, f64) {
+/// Greedy pairwise-swap search over column-vector positions. Generic over the
+/// column container (owned `Vec<f32>` columns or borrowed slices into a flat
+/// tile buffer — see the strategy layer).
+pub fn apex_icp<C: AsRef<[f32]>>(cols: &[C], v: usize, cfg: &HinmConfig, params: &ApexParams) -> (Vec<usize>, f64) {
+    let cols: Vec<&[f32]> = cols.iter().map(|c| c.as_ref()).collect();
+    let cols = cols.as_slice();
     let k_v = cols.len();
     let m = cfg.m_group;
     assert_eq!(k_v % m, 0);
@@ -58,7 +62,7 @@ pub fn apex_icp(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &ApexPara
                     .iter()
                     .map(|&g| {
                         let grp = &order[g * m..(g + 1) * m];
-                        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_slice()).collect();
+                        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j]).collect();
                         icp_group_retained(&members, v, cfg)
                     })
                     .sum();
@@ -67,7 +71,7 @@ pub fn apex_icp(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &ApexPara
                     .iter()
                     .map(|&g| {
                         let grp = &order[g * m..(g + 1) * m];
-                        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_slice()).collect();
+                        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j]).collect();
                         icp_group_retained(&members, v, cfg)
                     })
                     .sum();

@@ -1,12 +1,22 @@
-//! The full gyro-permutation pipeline for one layer (paper §4):
+//! The gyro-permutation entry point for one layer (paper §4):
 //! OCP → column-wise vector pruning → per-tile ICP → N:M packing.
+//!
+//! Since the strategy-layer refactor this is a thin wrapper over
+//! [`PermutePipeline`] with the gyro OCP/ICP strategies — the phase
+//! sequence, the parallel tile engine, and the never-worse guard all live in
+//! [`super::strategy`] and are shared by every method in the registry.
 
-use super::icp::{gyro_icp, IcpParams, IcpResult};
-use super::ocp::{gyro_ocp, OcpParams};
+use super::icp::IcpParams;
+use super::ocp::OcpParams;
+use super::strategy::{GyroIcp, GyroOcp, IcpStrategy, IdentityIcp, IdentityOcp, OcpStrategy, PermutePipeline};
 use crate::sparsity::config::HinmConfig;
-use crate::sparsity::hinm::{gather_tile, prune_with_kept, HinmResult};
-use crate::sparsity::vector_prune::vector_prune;
 use crate::tensor::Matrix;
+
+/// Outcome of the gyro run — the strategy layer's [`PermuteOutcome`]
+/// (re-exported under the legacy name; the fields are identical).
+///
+/// [`PermuteOutcome`]: super::strategy::PermuteOutcome
+pub use super::strategy::PermuteOutcome as GyroOutcome;
 
 #[derive(Clone, Debug, Default)]
 pub struct GyroParams {
@@ -16,21 +26,6 @@ pub struct GyroParams {
     pub skip_ocp: bool,
     /// Skip ICP.
     pub skip_icp: bool,
-}
-
-#[derive(Clone, Debug)]
-pub struct GyroOutcome {
-    /// Output-channel permutation applied to rows (offline; folded into the
-    /// adjacent layers, see paper §3.2).
-    pub ocp_perm: Vec<usize>,
-    /// Per-tile orders over kept columns (consumed by the runtime gather).
-    pub tile_orders: Vec<Vec<usize>>,
-    /// Final packed layer + retention stats.
-    pub result: HinmResult,
-    /// Eq. 2 retention after OCP only.
-    pub ocp_retained: f64,
-    /// ICP iteration stats per tile.
-    pub icp_stats: Vec<(usize, usize)>, // (iters_run, accepted)
 }
 
 /// Run gyro-permutation + HiNM pruning on one layer.
@@ -44,98 +39,17 @@ pub fn gyro_permute_and_prune(
     cfg: &HinmConfig,
     params: &GyroParams,
 ) -> GyroOutcome {
-    cfg.validate(w.rows, w.cols).expect("invalid config");
-    assert_eq!(w.shape(), sal.shape());
-
-    // --- Phase 1: output-channel permutation (Eq. 2). ---
-    let (ocp_perm, ocp_retained) = if params.skip_ocp {
-        ((0..w.rows).collect::<Vec<_>>(), f64::NAN)
+    let ocp: Box<dyn OcpStrategy> = if params.skip_ocp {
+        Box::new(IdentityOcp)
     } else {
-        let r = gyro_ocp(sal, cfg, &params.ocp);
-        (r.perm, r.retained)
+        Box::new(GyroOcp { params: params.ocp.clone() })
     };
-    let w_p = w.permute_rows(&ocp_perm);
-    let sal_p = sal.permute_rows(&ocp_perm);
-
-    // --- Phase 2: column-wise vector pruning on the permuted layout. ---
-    let vp = vector_prune(&sal_p, cfg);
-    let k_v = vp.kept[0].len();
-
-    // --- Phase 3: tile-wise ICP (Eq. 3), tiles independent. ---
-    let tiles = cfg.tiles(w.rows);
-    let mut tile_orders: Vec<Vec<usize>> = Vec::with_capacity(tiles);
-    let mut icp_stats = Vec::with_capacity(tiles);
-    let mut buf = vec![0.0f32; cfg.v * k_v];
-    for t in 0..tiles {
-        if params.skip_icp {
-            tile_orders.push((0..k_v).collect());
-            icp_stats.push((0, 0));
-            continue;
-        }
-        gather_tile(&sal_p, cfg, t, &vp.kept[t], &mut buf);
-        // Column-major copy for the ICP cost kernels.
-        let cols: Vec<Vec<f32>> = (0..k_v)
-            .map(|j| (0..cfg.v).map(|r| buf[r * k_v + j]).collect())
-            .collect();
-        let icp_params = IcpParams {
-            seed: params.icp.seed ^ (t as u64).wrapping_mul(0x9E37_79B9),
-            ..params.icp.clone()
-        };
-        let IcpResult { order, iters_run, accepted, .. } = gyro_icp(&cols, cfg.v, cfg, &icp_params);
-        tile_orders.push(order);
-        icp_stats.push((iters_run, accepted));
-    }
-
-    // --- Phase 4: pack with the permuted kept-column grouping. ---
-    let result = prune_with_kept(&w_p, &sal_p, cfg, &vp, Some(&tile_orders));
-
-    // --- Never-worse guard (hierarchical pruning awareness, paper §4.1):
-    // OCP optimizes the *vector-level* objective (Eq. 2), which on rare
-    // inputs lowers the final hierarchical retention below the unpermuted
-    // baseline (elements it consolidates get re-pruned by 2:4). Gyro keeps
-    // whichever arrangement retains more — permutation must never hurt. ---
-    let baseline = crate::sparsity::hinm::hinm_retained(sal, cfg);
-    if result.retained < baseline {
-        let id_perm: Vec<usize> = (0..w.rows).collect();
-        let vp0 = vector_prune(sal, cfg);
-        let k_v0 = vp0.kept[0].len();
-        let mut id_orders: Vec<Vec<usize>> = Vec::with_capacity(vp0.kept.len());
-        let mut stats = Vec::with_capacity(vp0.kept.len());
-        let tiles = cfg.tiles(w.rows);
-        let mut buf0 = vec![0.0f32; cfg.v * k_v0];
-        for t in 0..tiles {
-            // Re-run ICP alone on the unpermuted layout (ICP is always
-            // monotone w.r.t. the final objective).
-            if params.skip_icp {
-                id_orders.push((0..k_v0).collect());
-                stats.push((0, 0));
-                continue;
-            }
-            gather_tile(sal, cfg, t, &vp0.kept[t], &mut buf0);
-            let cols: Vec<Vec<f32>> = (0..k_v0)
-                .map(|j| (0..cfg.v).map(|r| buf0[r * k_v0 + j]).collect())
-                .collect();
-            let icp_params = IcpParams {
-                seed: params.icp.seed ^ (t as u64).wrapping_mul(0x517C_C1B7),
-                ..params.icp.clone()
-            };
-            let res = gyro_icp(&cols, cfg.v, cfg, &icp_params);
-            stats.push((res.iters_run, res.accepted));
-            id_orders.push(res.order);
-        }
-        let fallback = prune_with_kept(w, sal, cfg, &vp0, Some(&id_orders));
-        if fallback.retained >= result.retained {
-            return GyroOutcome {
-                ocp_perm: id_perm,
-                tile_orders: id_orders,
-                result: fallback,
-                ocp_retained,
-                icp_stats: stats,
-            };
-        }
-    }
-
-    GyroOutcome { ocp_perm, tile_orders, result, ocp_retained, icp_stats }
+    let icp: Box<dyn IcpStrategy> = if params.skip_icp {
+        Box::new(IdentityIcp)
+    } else {
+        Box::new(GyroIcp { params: params.icp.clone() })
+    };
+    PermutePipeline::default().run(ocp.as_ref(), icp.as_ref(), w, sal, cfg)
 }
 
 /// Convenience: HiNM retention ratio with and without gyro, for quick A/B.
@@ -238,5 +152,24 @@ mod tests {
         );
         assert!(full.result.retained >= no_icp.result.retained - 1e-9);
         assert!(full.result.retained >= no_ocp.result.retained * 0.999);
+    }
+
+    #[test]
+    fn never_worse_guard_holds_on_random_inputs() {
+        // The guard lives in PermutePipeline now; pin the wrapper-level
+        // behaviour the old in-function fallback provided.
+        let mut rng = Xoshiro256::new(48);
+        for case in 0..6 {
+            let w = Matrix::from_fn(16, 32, |_, _| rng.normal());
+            let sal = w.abs();
+            let cfg = HinmConfig::with_24(4, 0.5);
+            let noperm = crate::sparsity::hinm::prune_oneshot(&w, &sal, &cfg).retained;
+            let out = gyro_permute_and_prune(&w, &sal, &cfg, &GyroParams::default());
+            assert!(
+                out.result.retained >= noperm - 1e-6,
+                "case {case}: gyro {} < noperm {noperm}",
+                out.result.retained
+            );
+        }
     }
 }

@@ -10,7 +10,7 @@
 use super::cost::icp_group_retained;
 use super::hungarian;
 use crate::sparsity::config::HinmConfig;
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{mix_seed, Xoshiro256};
 
 #[derive(Clone, Debug)]
 pub struct IcpParams {
@@ -43,11 +43,15 @@ pub struct IcpResult {
 }
 
 /// Objective: Σ over M-wide groups of row-wise top-N retention.
-pub fn icp_objective(cols: &[Vec<f32>], order: &[usize], v: usize, cfg: &HinmConfig) -> f64 {
+///
+/// Generic over the column container so callers can pass owned columns
+/// (`&[Vec<f32>]`) or borrowed views into a flat scratch buffer
+/// (`&[&[f32]]`, the strategy-layer tile engine) without copying.
+pub fn icp_objective<C: AsRef<[f32]>>(cols: &[C], order: &[usize], v: usize, cfg: &HinmConfig) -> f64 {
     let m = cfg.m_group;
     let mut total = 0.0;
     for grp in order.chunks_exact(m) {
-        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_slice()).collect();
+        let members: Vec<&[f32]> = grp.iter().map(|&j| cols[j].as_ref()).collect();
         total += icp_group_retained(&members, v, cfg);
     }
     total
@@ -55,12 +59,13 @@ pub fn icp_objective(cols: &[Vec<f32>], order: &[usize], v: usize, cfg: &HinmCon
 
 /// Run gyro ICP for one tile, splitting wide tiles into independent blocks
 /// of at most `params.max_partitions` groups (see [`IcpParams`]).
-pub fn gyro_icp(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &IcpParams) -> IcpResult {
-    let k_v = cols.len();
+pub fn gyro_icp<C: AsRef<[f32]>>(cols: &[C], v: usize, cfg: &HinmConfig, params: &IcpParams) -> IcpResult {
+    let views: Vec<&[f32]> = cols.iter().map(|c| c.as_ref()).collect();
+    let k_v = views.len();
     let m = cfg.m_group;
     let p_count = k_v / m;
     if p_count <= params.max_partitions {
-        return gyro_icp_block(cols, v, cfg, params);
+        return gyro_icp_block(&views, v, cfg, params);
     }
     // Blocked: permute each segment independently, offset and concatenate.
     let block_cols = params.max_partitions * m;
@@ -71,12 +76,15 @@ pub fn gyro_icp(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &IcpParam
     let mut accepted = 0;
     for (bi, start) in (0..k_v).step_by(block_cols).enumerate() {
         let end = (start + block_cols).min(k_v);
-        let block: Vec<Vec<f32>> = cols[start..end].to_vec();
         let sub_params = IcpParams {
-            seed: params.seed ^ ((bi as u64) << 32 | 0x51C9),
+            // SplitMix-style per-block stream derivation: block 0 must not
+            // collapse to the parent seed, and nearby blocks must be
+            // decorrelated (the old `seed ^ (bi << 32 | K)` left the low
+            // xoshiro seed bits identical across blocks).
+            seed: mix_seed(params.seed, bi as u64),
             ..params.clone()
         };
-        let res = gyro_icp_block(&block, v, cfg, &sub_params);
+        let res = gyro_icp_block(&views[start..end], v, cfg, &sub_params);
         order.extend(res.order.iter().map(|&j| j + start));
         retained += res.retained;
         iters_run = iters_run.max(res.iters_run);
@@ -89,7 +97,7 @@ pub fn gyro_icp(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &IcpParam
 
 /// Gyro ICP over a single block. `cols[j]` is the j-th kept column vector
 /// (height `v`, column-major contiguous).
-fn gyro_icp_block(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &IcpParams) -> IcpResult {
+fn gyro_icp_block(cols: &[&[f32]], v: usize, cfg: &HinmConfig, params: &IcpParams) -> IcpResult {
     let k_v = cols.len();
     let m = cfg.m_group;
     assert_eq!(k_v % m, 0, "kept columns must be a multiple of M");
@@ -135,7 +143,7 @@ fn gyro_icp_block(cols: &[Vec<f32>], v: usize, cfg: &HinmConfig, params: &IcpPar
                         let members: Vec<&[f32]> = remainders[i]
                             .iter()
                             .chain(std::iter::once(&samples[j]))
-                            .map(|&idx| cols[idx].as_slice())
+                            .map(|&idx| cols[idx])
                             .collect();
                         -icp_group_retained(&members, v, cfg)
                     })

@@ -1,5 +1,8 @@
 //! Channel permutation — the paper's contribution (gyro-permutation) plus
-//! the baseline/ablation permutation methods it is compared against.
+//! the baseline/ablation permutation methods it is compared against, unified
+//! behind the [`strategy`] layer: [`OcpStrategy`] × [`IcpStrategy`] pairs
+//! built from a string-keyed [`StrategyRegistry`] and executed by the
+//! parallel [`PermutePipeline`] tile engine.
 
 pub mod baselines;
 pub mod cost;
@@ -9,7 +12,13 @@ pub mod icp;
 pub mod kmeans;
 pub mod ocp;
 pub mod sampling;
+pub mod strategy;
 
 pub use gyro::{gyro_permute_and_prune, GyroOutcome, GyroParams};
 pub use icp::{gyro_icp, IcpParams};
 pub use ocp::{gyro_ocp, OcpParams};
+pub use strategy::{
+    ApexIcp, GyroIcp, GyroOcp, IcpStrategy, IdentityIcp, IdentityOcp, OcpStrategy, OvwOcp,
+    PermuteOutcome, PermutePipeline, StrategyParams, StrategyRegistry, StrategySpec, TetrisIcp,
+    TileCols,
+};

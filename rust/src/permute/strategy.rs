@@ -1,0 +1,829 @@
+//! The permutation **strategy layer**: every OCP/ICP method behind two
+//! composable traits, a string-keyed registry so any OCP×ICP pair is runnable
+//! from the CLI/pipeline/evals/benches (`gyro+apex`, `ovw+gyro`, …), and the
+//! [`PermutePipeline`] tile engine that owns the
+//! OCP → vector-prune → ICP → pack sequence exactly once.
+//!
+//! Contracts (see DESIGN.md §4):
+//!
+//! * [`OcpStrategy`] maps a dense saliency grid to an output-channel
+//!   permutation. It must return a valid permutation of `0..rows`; it never
+//!   mutates inputs and may report `f64::NAN` when it has no Eq. 2 score.
+//! * [`IcpStrategy`] maps one tile's kept column vectors (a borrowed
+//!   column-major [`TileCols`] view) to an order over those columns. It must
+//!   return a valid permutation of `0..k_v` and must derive any randomness
+//!   from `(its seed, tile index)` only — that is what makes the parallel
+//!   tile engine bit-deterministic regardless of worker count.
+//! * [`PermutePipeline`] enforces the paper's never-worse guarantee
+//!   centrally: if a strategy pair retains less than the unpermuted HiNM
+//!   baseline, it re-invokes itself with [`IdentityOcp`] (and, for
+//!   non-monotone ICPs, falls through to plain HiNM), so *no* registered
+//!   method can end below `noperm`.
+
+use super::baselines::apex::{apex_icp, ApexParams};
+use super::baselines::ovw::ovw_ocp;
+use super::cost::icp_group_retained;
+use super::gyro::GyroParams;
+use super::icp::{gyro_icp, IcpParams};
+use super::ocp::{gyro_ocp, OcpParams};
+use crate::sparsity::config::HinmConfig;
+use crate::sparsity::hinm::{gather_tile_colmajor, hinm_retained, prune_with_kept, HinmResult};
+use crate::sparsity::vector_prune::{vector_prune, VectorPruneResult};
+use crate::tensor::{is_permutation, Matrix};
+use crate::util::rng::{mix_seed, Xoshiro256};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+// ---------------------------------------------------------------------------
+// Tile view
+// ---------------------------------------------------------------------------
+
+/// One tile's kept column vectors, borrowed column-major from a flat scratch
+/// buffer: column `j` is the contiguous slice `data[j*v .. (j+1)*v]`. The
+/// tile engine fills one such buffer per worker and reuses it across tiles —
+/// replacing the per-tile `Vec<Vec<f32>>` materialization the legacy drivers
+/// performed.
+pub struct TileCols<'a> {
+    data: &'a [f32],
+    /// Vector height V.
+    pub v: usize,
+    /// Kept columns in this tile.
+    pub k_v: usize,
+}
+
+impl<'a> TileCols<'a> {
+    pub fn new(data: &'a [f32], v: usize, k_v: usize) -> Self {
+        debug_assert_eq!(data.len(), v * k_v);
+        Self { data, v, k_v }
+    }
+
+    /// The `j`-th kept column vector (contiguous, height `v`).
+    #[inline]
+    pub fn col(&self, j: usize) -> &'a [f32] {
+        &self.data[j * self.v..(j + 1) * self.v]
+    }
+
+    /// All columns as borrowed slices (no copy of the underlying data).
+    pub fn col_slices(&self) -> Vec<&'a [f32]> {
+        (0..self.k_v).map(|j| self.col(j)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traits
+// ---------------------------------------------------------------------------
+
+/// Result of an output-channel permutation strategy.
+#[derive(Clone, Debug)]
+pub struct OcpOutcome {
+    /// `perm[i]` = original output channel at permuted position `i`.
+    pub perm: Vec<usize>,
+    /// The strategy's own objective value (`f64::NAN` when not applicable).
+    pub retained: f64,
+}
+
+/// Dense saliency → output-channel permutation (paper Eq. 2 level).
+pub trait OcpStrategy: Send + Sync {
+    /// Canonical registry key (`"gyro"`, `"ovw"`, `"id"`).
+    fn key(&self) -> &'static str;
+    /// `true` when [`permute`](Self::permute) always returns the identity —
+    /// lets the pipeline skip the never-worse guard and re-permutation.
+    fn is_identity(&self) -> bool {
+        false
+    }
+    fn permute(&self, sal: &Matrix, cfg: &HinmConfig) -> OcpOutcome;
+}
+
+/// Result of ordering one tile's kept columns.
+#[derive(Clone, Debug)]
+pub struct IcpTileOutcome {
+    /// Permutation of `0..k_v` (positions into the tile's ascending kept
+    /// list), consumed by the packer's N:M grouping.
+    pub order: Vec<usize>,
+    pub iters_run: usize,
+    pub accepted: usize,
+}
+
+/// Tile column vectors → per-tile order (paper Eq. 3 level). Tiles are
+/// independent; `tile` is provided solely for per-tile seed derivation.
+pub trait IcpStrategy: Send + Sync {
+    /// Canonical registry key (`"gyro"`, `"apex"`, `"tetris"`, `"id"`).
+    fn key(&self) -> &'static str;
+    /// `true` when the strategy always returns the natural order.
+    fn is_identity(&self) -> bool {
+        false
+    }
+    fn order_tile(&self, cols: &TileCols<'_>, cfg: &HinmConfig, tile: usize) -> IcpTileOutcome;
+}
+
+// ---------------------------------------------------------------------------
+// OCP strategies
+// ---------------------------------------------------------------------------
+
+/// Gyro OCP: sampling → clustering → Hungarian assignment (the paper's §4.2).
+#[derive(Clone, Debug, Default)]
+pub struct GyroOcp {
+    pub params: OcpParams,
+}
+
+impl OcpStrategy for GyroOcp {
+    fn key(&self) -> &'static str {
+        "gyro"
+    }
+    fn permute(&self, sal: &Matrix, cfg: &HinmConfig) -> OcpOutcome {
+        let r = gyro_ocp(sal, cfg, &self.params);
+        OcpOutcome { perm: r.perm, retained: r.retained }
+    }
+}
+
+/// OVW baseline OCP: one-shot balanced K-means over all channels
+/// (Tan et al., NeurIPS'22 — the HiNM-V1 ablation arm).
+#[derive(Clone, Debug)]
+pub struct OvwOcp {
+    pub seed: u64,
+}
+
+impl OcpStrategy for OvwOcp {
+    fn key(&self) -> &'static str {
+        "ovw"
+    }
+    fn permute(&self, sal: &Matrix, cfg: &HinmConfig) -> OcpOutcome {
+        OcpOutcome { perm: ovw_ocp(sal, cfg, self.seed), retained: f64::NAN }
+    }
+}
+
+/// No output-channel permutation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IdentityOcp;
+
+impl OcpStrategy for IdentityOcp {
+    fn key(&self) -> &'static str {
+        "id"
+    }
+    fn is_identity(&self) -> bool {
+        true
+    }
+    fn permute(&self, sal: &Matrix, _cfg: &HinmConfig) -> OcpOutcome {
+        OcpOutcome { perm: (0..sal.rows).collect(), retained: f64::NAN }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ICP strategies
+// ---------------------------------------------------------------------------
+
+/// Gyro ICP: one-sample-per-partition extraction + Hungarian assignment.
+#[derive(Clone, Debug, Default)]
+pub struct GyroIcp {
+    pub params: IcpParams,
+}
+
+impl IcpStrategy for GyroIcp {
+    fn key(&self) -> &'static str {
+        "gyro"
+    }
+    fn order_tile(&self, cols: &TileCols<'_>, cfg: &HinmConfig, tile: usize) -> IcpTileOutcome {
+        let views = cols.col_slices();
+        let params = IcpParams { seed: mix_seed(self.params.seed, tile as u64), ..self.params.clone() };
+        let res = gyro_icp(&views, cols.v, cfg, &params);
+        IcpTileOutcome { order: res.order, iters_run: res.iters_run, accepted: res.accepted }
+    }
+}
+
+/// Apex-style greedy pairwise-swap ICP with bounded escape moves
+/// (Pool & Yu, NeurIPS'21 — the HiNM-V2 ablation arm). NOTE: escape moves
+/// make this the one registered ICP that is *not* monotone w.r.t. the
+/// natural order; the pipeline guard covers it.
+#[derive(Clone, Debug, Default)]
+pub struct ApexIcp {
+    pub params: ApexParams,
+}
+
+impl IcpStrategy for ApexIcp {
+    fn key(&self) -> &'static str {
+        "apex"
+    }
+    fn order_tile(&self, cols: &TileCols<'_>, cfg: &HinmConfig, tile: usize) -> IcpTileOutcome {
+        let views = cols.col_slices();
+        let params = ApexParams { seed: mix_seed(self.params.seed, tile as u64), ..self.params.clone() };
+        let (order, _) = apex_icp(&views, cols.v, cfg, &params);
+        IcpTileOutcome { order, iters_run: 0, accepted: 0 }
+    }
+}
+
+/// Tetris-style random-swap hill-climb (Ji et al., NeurIPS'18), restricted to
+/// one tile's columns so it slots in as an ICP. Only improving swaps are
+/// accepted, so unlike the global Tetris search it is monotone per tile.
+#[derive(Clone, Debug)]
+pub struct TetrisIcp {
+    pub max_rounds: usize,
+    /// Candidate swaps per round.
+    pub swaps_per_round: usize,
+    pub seed: u64,
+}
+
+impl Default for TetrisIcp {
+    fn default() -> Self {
+        Self { max_rounds: 12, swaps_per_round: 128, seed: 0x7E7 }
+    }
+}
+
+impl IcpStrategy for TetrisIcp {
+    fn key(&self) -> &'static str {
+        "tetris"
+    }
+    fn order_tile(&self, cols: &TileCols<'_>, cfg: &HinmConfig, tile: usize) -> IcpTileOutcome {
+        let k_v = cols.k_v;
+        let m = cfg.m_group;
+        let mut order: Vec<usize> = (0..k_v).collect();
+        if k_v / m <= 1 {
+            return IcpTileOutcome { order, iters_run: 0, accepted: 0 };
+        }
+        let mut rng = Xoshiro256::new(mix_seed(self.seed, tile as u64));
+        let group_retained = |order: &[usize], g: usize| {
+            let members: Vec<&[f32]> =
+                order[g * m..(g + 1) * m].iter().map(|&j| cols.col(j)).collect();
+            icp_group_retained(&members, cols.v, cfg)
+        };
+        let mut accepted = 0usize;
+        let mut rounds = 0usize;
+        for _ in 0..self.max_rounds {
+            rounds += 1;
+            let mut improved = false;
+            for _ in 0..self.swaps_per_round {
+                let a = rng.below(k_v);
+                let b = rng.below(k_v);
+                if a / m == b / m {
+                    continue; // same group: no-op for the mask
+                }
+                let (ga, gb) = (a / m, b / m);
+                let before = group_retained(&order, ga) + group_retained(&order, gb);
+                order.swap(a, b);
+                let after = group_retained(&order, ga) + group_retained(&order, gb);
+                if after > before + 1e-9 {
+                    accepted += 1;
+                    improved = true;
+                } else {
+                    order.swap(a, b);
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        IcpTileOutcome { order, iters_run: rounds, accepted }
+    }
+}
+
+/// Natural (ascending kept-index) order — no ICP.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IdentityIcp;
+
+impl IcpStrategy for IdentityIcp {
+    fn key(&self) -> &'static str {
+        "id"
+    }
+    fn is_identity(&self) -> bool {
+        true
+    }
+    fn order_tile(&self, cols: &TileCols<'_>, _cfg: &HinmConfig, _tile: usize) -> IcpTileOutcome {
+        IcpTileOutcome { order: (0..cols.k_v).collect(), iters_run: 0, accepted: 0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Tuning bundle the registry instantiates strategies from. One bundle per
+/// pipeline run keeps seeds explicit and every table reproducible.
+#[derive(Clone, Debug)]
+pub struct StrategyParams {
+    pub ocp: OcpParams,
+    pub icp: IcpParams,
+    pub apex: ApexParams,
+    pub tetris: TetrisIcp,
+    pub ovw_seed: u64,
+}
+
+impl Default for StrategyParams {
+    fn default() -> Self {
+        let ocp = OcpParams::default();
+        let ovw_seed = ocp.seed;
+        Self {
+            ocp,
+            icp: IcpParams::default(),
+            apex: ApexParams::default(),
+            tetris: TetrisIcp::default(),
+            ovw_seed,
+        }
+    }
+}
+
+impl From<&GyroParams> for StrategyParams {
+    /// Legacy bridge: the coordinator's `GyroParams` carries the gyro OCP/ICP
+    /// tuning; baseline strategies reuse its seeds so a single `--seed`
+    /// steers every arm.
+    fn from(g: &GyroParams) -> Self {
+        let mut p = Self { ocp: g.ocp.clone(), icp: g.icp.clone(), ..Self::default() };
+        p.ovw_seed = p.ocp.seed;
+        p.apex.seed = mix_seed(p.icp.seed, 0xA9E);
+        p.tetris.seed = mix_seed(p.icp.seed, 0x7E7);
+        p
+    }
+}
+
+/// Resolve key aliases (`identity`/`none` → `id`) shared by both axes.
+fn canon_key(key: &str) -> &str {
+    match key {
+        "identity" | "none" => "id",
+        k => k,
+    }
+}
+
+/// A parsed `<ocp>+<icp>` method specification over canonical registry keys.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StrategySpec {
+    pub ocp: String,
+    pub icp: String,
+}
+
+impl StrategySpec {
+    pub fn new(ocp: &str, icp: &str) -> Self {
+        Self { ocp: canon_key(ocp).to_string(), icp: canon_key(icp).to_string() }
+    }
+
+    /// Parse a CLI method string against the **builtin** registry: the four
+    /// legacy arm names (`gyro`, `noperm`, `v1`, `v2`), `v3`, or any
+    /// explicit `<ocp>+<icp>` pair (`gyro+apex`, `ovw+tetris`, `id+gyro`,
+    /// …). Code holding a registry with custom strategies should use
+    /// [`StrategyRegistry::parse_spec`] instead, which validates against
+    /// that instance's keys.
+    pub fn parse(s: &str) -> Option<StrategySpec> {
+        StrategyRegistry::builtin().parse_spec(s)
+    }
+
+    /// Canonical `ocp+icp` key.
+    pub fn key(&self) -> String {
+        format!("{}+{}", self.ocp, self.icp)
+    }
+
+    /// Human label matching the paper's arm names where one exists.
+    pub fn label(&self) -> String {
+        match (self.ocp.as_str(), self.icp.as_str()) {
+            ("gyro", "gyro") => "HiNM".to_string(),
+            ("id", "id") => "HiNM-NoPerm".to_string(),
+            ("ovw", "gyro") => "HiNM-V1".to_string(),
+            ("gyro", "apex") => "HiNM-V2".to_string(),
+            ("gyro", "tetris") => "HiNM-V3".to_string(),
+            _ => format!("HiNM[{}+{}]", self.ocp, self.icp),
+        }
+    }
+}
+
+type OcpFactory = fn(&StrategyParams) -> Box<dyn OcpStrategy>;
+type IcpFactory = fn(&StrategyParams) -> Box<dyn IcpStrategy>;
+
+/// String-keyed strategy registry. `builtin()` registers every method the
+/// paper compares; downstream code adds methods by inserting a factory under
+/// a new key (see DESIGN.md §4 "adding a method").
+pub struct StrategyRegistry {
+    ocp: BTreeMap<&'static str, OcpFactory>,
+    icp: BTreeMap<&'static str, IcpFactory>,
+}
+
+impl StrategyRegistry {
+    pub fn builtin() -> Self {
+        let mut ocp: BTreeMap<&'static str, OcpFactory> = BTreeMap::new();
+        ocp.insert("gyro", |p| Box::new(GyroOcp { params: p.ocp.clone() }));
+        ocp.insert("ovw", |p| Box::new(OvwOcp { seed: p.ovw_seed }));
+        ocp.insert("id", |_| Box::new(IdentityOcp));
+        let mut icp: BTreeMap<&'static str, IcpFactory> = BTreeMap::new();
+        icp.insert("gyro", |p| Box::new(GyroIcp { params: p.icp.clone() }));
+        icp.insert("apex", |p| Box::new(ApexIcp { params: p.apex.clone() }));
+        icp.insert("tetris", |p| Box::new(p.tetris.clone()));
+        icp.insert("id", |_| Box::new(IdentityIcp));
+        Self { ocp, icp }
+    }
+
+    /// Register a custom OCP strategy factory under `key`.
+    pub fn register_ocp(&mut self, key: &'static str, f: OcpFactory) {
+        self.ocp.insert(key, f);
+    }
+
+    /// Register a custom ICP strategy factory under `key`.
+    pub fn register_icp(&mut self, key: &'static str, f: IcpFactory) {
+        self.icp.insert(key, f);
+    }
+
+    /// Canonical OCP keys, sorted.
+    pub fn ocp_keys(&self) -> Vec<&'static str> {
+        self.ocp.keys().copied().collect()
+    }
+
+    /// Canonical ICP keys, sorted.
+    pub fn icp_keys(&self) -> Vec<&'static str> {
+        self.icp.keys().copied().collect()
+    }
+
+    pub fn supports(&self, spec: &StrategySpec) -> bool {
+        self.ocp.contains_key(spec.ocp.as_str()) && self.icp.contains_key(spec.icp.as_str())
+    }
+
+    /// Parse a method string against **this** registry's keys — legacy arm
+    /// names plus any `<ocp>+<icp>` pair, including custom-registered keys.
+    pub fn parse_spec(&self, s: &str) -> Option<StrategySpec> {
+        let spec = match s {
+            "gyro" | "hinm" => StrategySpec::new("gyro", "gyro"),
+            "noperm" | "hinm-noperm" => StrategySpec::new("id", "id"),
+            "v1" | "hinm-v1" => StrategySpec::new("ovw", "gyro"),
+            "v2" | "hinm-v2" => StrategySpec::new("gyro", "apex"),
+            "v3" | "hinm-v3" => StrategySpec::new("gyro", "tetris"),
+            other => {
+                let (o, i) = other.split_once('+')?;
+                StrategySpec::new(o.trim(), i.trim())
+            }
+        };
+        if self.supports(&spec) {
+            Some(spec)
+        } else {
+            None
+        }
+    }
+
+    pub fn build_ocp(&self, key: &str, params: &StrategyParams) -> Option<Box<dyn OcpStrategy>> {
+        self.ocp.get(canon_key(key)).map(|f| f(params))
+    }
+
+    pub fn build_icp(&self, key: &str, params: &StrategyParams) -> Option<Box<dyn IcpStrategy>> {
+        self.icp.get(canon_key(key)).map(|f| f(params))
+    }
+
+    /// Build the strategy pair for a spec, or `None` on an unknown key.
+    pub fn build(
+        &self,
+        spec: &StrategySpec,
+        params: &StrategyParams,
+    ) -> Option<(Box<dyn OcpStrategy>, Box<dyn IcpStrategy>)> {
+        Some((self.build_ocp(&spec.ocp, params)?, self.build_icp(&spec.icp, params)?))
+    }
+
+    /// One-line help text for CLI `--method` flags.
+    pub fn method_help(&self) -> String {
+        format!(
+            "gyro | noperm | v1 | v2 | v3 | <ocp>+<icp> with ocp ∈ {{{}}}, icp ∈ {{{}}}",
+            self.ocp_keys().join("|"),
+            self.icp_keys().join("|")
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline
+// ---------------------------------------------------------------------------
+
+/// Outcome of a full permute-and-prune run (any strategy pair).
+#[derive(Clone, Debug)]
+pub struct PermuteOutcome {
+    /// Output-channel permutation applied to rows (offline; folded into the
+    /// adjacent layers, see paper §3.2).
+    pub ocp_perm: Vec<usize>,
+    /// Per-tile orders over kept columns (consumed by the runtime gather).
+    pub tile_orders: Vec<Vec<usize>>,
+    /// Final packed layer + retention stats.
+    pub result: HinmResult,
+    /// The OCP strategy's own objective (`NAN` for identity/OVW).
+    pub ocp_retained: f64,
+    /// ICP iteration stats per tile: `(iters_run, accepted)`.
+    pub icp_stats: Vec<(usize, usize)>,
+}
+
+/// The generic permute-and-prune engine: owns the OCP → vector-prune → ICP →
+/// pack sequence once for every strategy pair, runs tiles in parallel across
+/// a chunked `std::thread` worker pool (per-worker reusable column-major
+/// scratch), and enforces the never-worse guard.
+#[derive(Clone, Debug)]
+pub struct PermutePipeline {
+    /// Tile-engine worker threads (0 = available parallelism). Output is
+    /// bit-identical for any worker count.
+    pub workers: usize,
+    /// Enforce the never-worse guard (paper §4.1). Disable only for timing
+    /// studies that must not trigger fallback re-runs.
+    pub guard: bool,
+}
+
+impl Default for PermutePipeline {
+    fn default() -> Self {
+        Self { workers: 0, guard: true }
+    }
+}
+
+impl PermutePipeline {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, ..Self::default() }
+    }
+
+    /// Run one layer through `ocp` then column-wise vector pruning then
+    /// per-tile `icp`, and pack. Guarantees (with `guard`) that the returned
+    /// retention is never below the unpermuted HiNM baseline.
+    pub fn run(
+        &self,
+        ocp: &dyn OcpStrategy,
+        icp: &dyn IcpStrategy,
+        w: &Matrix,
+        sal: &Matrix,
+        cfg: &HinmConfig,
+    ) -> PermuteOutcome {
+        cfg.validate(w.rows, w.cols).expect("invalid config");
+        assert_eq!(w.shape(), sal.shape());
+
+        let outcome = self.run_once(ocp, icp, w, sal, cfg);
+        if !self.guard || (ocp.is_identity() && icp.is_identity()) {
+            return outcome;
+        }
+
+        // --- Never-worse guard (hierarchical pruning awareness, §4.1):
+        // OCP optimizes the *vector-level* objective (Eq. 2), which on rare
+        // inputs lowers the final hierarchical retention below the
+        // unpermuted baseline (elements it consolidates get re-pruned by
+        // 2:4). Keep whichever arrangement retains more — permutation must
+        // never hurt. ---
+        let baseline = hinm_retained(sal, cfg);
+        if outcome.result.retained >= baseline {
+            return outcome;
+        }
+        // Fallback 1: drop the OCP, keep the ICP (the legacy gyro fallback).
+        let best = if ocp.is_identity() {
+            outcome
+        } else {
+            let fallback = self.run_once(&IdentityOcp, icp, w, sal, cfg);
+            if fallback.result.retained >= outcome.result.retained { fallback } else { outcome }
+        };
+        if best.result.retained >= baseline || icp.is_identity() {
+            return best;
+        }
+        // Fallback 2: a non-monotone ICP (Apex's escape moves) can leave
+        // even the identity-OCP arrangement below the baseline; finish at
+        // plain HiNM.
+        let noperm = self.run_once(&IdentityOcp, &IdentityIcp, w, sal, cfg);
+        if noperm.result.retained > best.result.retained {
+            noperm
+        } else {
+            best
+        }
+    }
+
+    fn run_once(
+        &self,
+        ocp: &dyn OcpStrategy,
+        icp: &dyn IcpStrategy,
+        w: &Matrix,
+        sal: &Matrix,
+        cfg: &HinmConfig,
+    ) -> PermuteOutcome {
+        // --- Phase 1: output-channel permutation (Eq. 2). ---
+        let OcpOutcome { perm: ocp_perm, retained: ocp_retained } = ocp.permute(sal, cfg);
+        debug_assert!(is_permutation(&ocp_perm, w.rows), "{} returned a non-permutation", ocp.key());
+        let w_p: Matrix;
+        let sal_p: Matrix;
+        let (w_eff, sal_eff) = if ocp.is_identity() {
+            (w, sal)
+        } else {
+            w_p = w.permute_rows(&ocp_perm);
+            sal_p = sal.permute_rows(&ocp_perm);
+            (&w_p, &sal_p)
+        };
+
+        // --- Phase 2: column-wise vector pruning on the permuted layout. ---
+        let vp = vector_prune(sal_eff, cfg);
+
+        // --- Phase 3: tile-wise ICP (Eq. 3), tiles independent. ---
+        let (tile_orders, icp_stats) = self.order_tiles(icp, sal_eff, &vp, cfg);
+
+        // --- Phase 4: pack with the permuted kept-column grouping. ---
+        let result = prune_with_kept(w_eff, sal_eff, cfg, &vp, Some(&tile_orders));
+        PermuteOutcome { ocp_perm, tile_orders, result, ocp_retained, icp_stats }
+    }
+
+    /// The parallel tile engine. Tiles are claimed off an atomic counter by
+    /// `workers` scoped threads; each worker owns one reusable column-major
+    /// scratch buffer for gathers. Per-tile results are written back by tile
+    /// index, and every strategy seeds from `(seed, tile)` — so the packed
+    /// output is bit-identical for any worker count.
+    fn order_tiles(
+        &self,
+        icp: &dyn IcpStrategy,
+        sal_p: &Matrix,
+        vp: &VectorPruneResult,
+        cfg: &HinmConfig,
+    ) -> (Vec<Vec<usize>>, Vec<(usize, usize)>) {
+        let tiles = vp.kept.len();
+        let k_v = vp.kept[0].len();
+        if icp.is_identity() {
+            return ((0..tiles).map(|_| (0..k_v).collect()).collect(), vec![(0, 0); tiles]);
+        }
+        let workers = resolve_workers(self.workers).min(tiles).max(1);
+
+        if workers == 1 {
+            let mut scratch = vec![0.0f32; cfg.v * k_v];
+            let mut orders = Vec::with_capacity(tiles);
+            let mut stats = Vec::with_capacity(tiles);
+            for t in 0..tiles {
+                let (o, s) = order_one_tile(icp, sal_p, &vp.kept[t], cfg, t, &mut scratch);
+                orders.push(o);
+                stats.push(s);
+            }
+            return (orders, stats);
+        }
+
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Vec<usize>, (usize, usize))>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let kept = &vp.kept;
+                scope.spawn(move || {
+                    let mut scratch = vec![0.0f32; cfg.v * k_v];
+                    loop {
+                        let t = next.fetch_add(1, Ordering::Relaxed);
+                        if t >= tiles {
+                            break;
+                        }
+                        let (o, s) = order_one_tile(icp, sal_p, &kept[t], cfg, t, &mut scratch);
+                        if tx.send((t, o, s)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            let mut orders: Vec<Option<Vec<usize>>> = (0..tiles).map(|_| None).collect();
+            let mut stats = vec![(0usize, 0usize); tiles];
+            for (t, o, s) in rx {
+                orders[t] = Some(o);
+                stats[t] = s;
+            }
+            (
+                orders.into_iter().map(|o| o.expect("tile worker died")).collect(),
+                stats,
+            )
+        })
+    }
+}
+
+fn resolve_workers(workers: usize) -> usize {
+    if workers > 0 {
+        workers
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+}
+
+fn order_one_tile(
+    icp: &dyn IcpStrategy,
+    sal_p: &Matrix,
+    kept: &[usize],
+    cfg: &HinmConfig,
+    t: usize,
+    scratch: &mut Vec<f32>,
+) -> (Vec<usize>, (usize, usize)) {
+    let k = kept.len();
+    scratch.resize(cfg.v * k, 0.0);
+    gather_tile_colmajor(sal_p, cfg, t, kept, &mut scratch[..cfg.v * k]);
+    let view = TileCols::new(&scratch[..cfg.v * k], cfg.v, k);
+    let out = icp.order_tile(&view, cfg, t);
+    debug_assert!(is_permutation(&out.order, k), "{} returned a non-permutation", icp.key());
+    (out.order, (out.iters_run, out.accepted))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::hinm::prune_oneshot;
+    use crate::util::rng::Xoshiro256;
+
+    fn mixed(m: usize, n: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Xoshiro256::new(seed);
+        let row_scale: Vec<f32> = (0..m).map(|_| if rng.next_f32() < 0.3 { 3.0 } else { 0.3 }).collect();
+        let col_scale: Vec<f32> = (0..n).map(|_| if rng.next_f32() < 0.3 { 3.0 } else { 0.3 }).collect();
+        let w = Matrix::from_fn(m, n, |r, c| rng.normal() * row_scale[r] * col_scale[c]);
+        let sal = w.abs();
+        (w, sal)
+    }
+
+    #[test]
+    fn spec_parse_legacy_and_pairs() {
+        assert_eq!(StrategySpec::parse("gyro"), Some(StrategySpec::new("gyro", "gyro")));
+        assert_eq!(StrategySpec::parse("noperm"), Some(StrategySpec::new("id", "id")));
+        assert_eq!(StrategySpec::parse("v1"), Some(StrategySpec::new("ovw", "gyro")));
+        assert_eq!(StrategySpec::parse("v2"), Some(StrategySpec::new("gyro", "apex")));
+        assert_eq!(StrategySpec::parse("gyro+tetris"), Some(StrategySpec::new("gyro", "tetris")));
+        assert_eq!(StrategySpec::parse("ovw+apex"), Some(StrategySpec::new("ovw", "apex")));
+        assert_eq!(StrategySpec::parse("identity+gyro"), Some(StrategySpec::new("id", "gyro")));
+        assert_eq!(StrategySpec::parse("bogus"), None);
+        assert_eq!(StrategySpec::parse("gyro+bogus"), None);
+    }
+
+    #[test]
+    fn spec_labels_match_paper_arms() {
+        assert_eq!(StrategySpec::parse("gyro").unwrap().label(), "HiNM");
+        assert_eq!(StrategySpec::parse("noperm").unwrap().label(), "HiNM-NoPerm");
+        assert_eq!(StrategySpec::parse("v1").unwrap().label(), "HiNM-V1");
+        assert_eq!(StrategySpec::parse("v2").unwrap().label(), "HiNM-V2");
+        assert_eq!(StrategySpec::parse("ovw+tetris").unwrap().label(), "HiNM[ovw+tetris]");
+    }
+
+    #[test]
+    fn registry_lists_all_builtin_keys() {
+        let reg = StrategyRegistry::builtin();
+        assert_eq!(reg.ocp_keys(), vec!["gyro", "id", "ovw"]);
+        assert_eq!(reg.icp_keys(), vec!["apex", "gyro", "id", "tetris"]);
+        let params = StrategyParams::default();
+        for o in reg.ocp_keys() {
+            for i in reg.icp_keys() {
+                let (os, is) = reg.build(&StrategySpec::new(o, i), &params).unwrap();
+                assert_eq!(os.key(), o);
+                assert_eq!(is.key(), i);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_pair_equals_plain_oneshot() {
+        let (w, sal) = mixed(16, 32, 45);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let out = PermutePipeline::default().run(&IdentityOcp, &IdentityIcp, &w, &sal, &cfg);
+        let noperm = prune_oneshot(&w, &sal, &cfg);
+        assert!((out.result.retained - noperm.retained).abs() < 1e-9);
+        assert_eq!(out.result.packed, noperm.packed);
+        assert_eq!(out.ocp_perm, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tetris_icp_improves_adversarial_tile() {
+        // Natural order puts 4 hot then 4 cold columns in separate groups;
+        // a correct swap search interleaves them 2/2.
+        let v = 4;
+        let cfg = HinmConfig::with_24(v, 0.0);
+        let mut data = Vec::new();
+        for j in 0..8 {
+            let val = if j < 4 { 5.0 } else { 0.1 };
+            data.extend(std::iter::repeat(val).take(v));
+        }
+        let view = TileCols::new(&data, v, 8);
+        let out = TetrisIcp::default().order_tile(&view, &cfg, 0);
+        assert!(is_permutation(&out.order, 8));
+        let hot0 = out.order[..4].iter().filter(|&&j| j < 4).count();
+        assert_eq!(hot0, 2, "order={:?}", out.order);
+        assert!(out.accepted > 0);
+    }
+
+    #[test]
+    fn every_strategy_pair_never_below_noperm() {
+        let (w, sal) = mixed(16, 32, 46);
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let noperm = prune_oneshot(&w, &sal, &cfg).retained;
+        let reg = StrategyRegistry::builtin();
+        let params = StrategyParams::default();
+        for o in reg.ocp_keys() {
+            for i in reg.icp_keys() {
+                let (os, is) = reg.build(&StrategySpec::new(o, i), &params).unwrap();
+                let out = PermutePipeline::default().run(os.as_ref(), is.as_ref(), &w, &sal, &cfg);
+                assert!(
+                    out.result.retained >= noperm - 1e-6,
+                    "{o}+{i}: {} < noperm {noperm}",
+                    out.result.retained
+                );
+                assert!(is_permutation(&out.ocp_perm, 16), "{o}+{i}");
+                for ord in &out.tile_orders {
+                    assert!(is_permutation(ord, out.result.packed.k_v), "{o}+{i}");
+                }
+                out.result.packed.check_invariants().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let (w, sal) = mixed(32, 64, 47);
+        let cfg = HinmConfig::with_24(4, 0.5); // 8 tiles
+        let a = PermutePipeline::with_workers(1).run(
+            &GyroOcp::default(),
+            &GyroIcp::default(),
+            &w,
+            &sal,
+            &cfg,
+        );
+        let b = PermutePipeline::with_workers(4).run(
+            &GyroOcp::default(),
+            &GyroIcp::default(),
+            &w,
+            &sal,
+            &cfg,
+        );
+        assert_eq!(a.tile_orders, b.tile_orders);
+        assert_eq!(a.result.packed, b.result.packed);
+    }
+}

@@ -76,6 +76,21 @@ pub fn gather_tile(sal: &Matrix, cfg: &HinmConfig, t: usize, cols: &[usize], buf
     }
 }
 
+/// Gather a tile's compacted saliency into `buf` **column-major**: kept
+/// column `j` occupies `buf[j*V .. (j+1)*V]`, so each column vector is one
+/// contiguous slice — the layout the ICP cost kernels consume. Used by the
+/// strategy-layer tile engine with a per-worker reusable scratch buffer.
+pub fn gather_tile_colmajor(sal: &Matrix, cfg: &HinmConfig, t: usize, cols: &[usize], buf: &mut [f32]) {
+    let k = cols.len();
+    debug_assert_eq!(buf.len(), cfg.v * k);
+    for r in 0..cfg.v {
+        let srow = sal.row(t * cfg.v + r);
+        for (j, &c) in cols.iter().enumerate() {
+            buf[j * cfg.v + r] = srow[c];
+        }
+    }
+}
+
 /// A step of the gradual schedule (paper §5.1.2): vector sparsity ramps
 /// cubically from 0 to the target over `vector_steps`, after which N:M
 /// switches on for the remaining steps.
@@ -182,5 +197,31 @@ mod tests {
         gather_tile(&sal, &cfg, 0, &cols, &mut buf);
         assert_eq!(&buf[0..4], &[1.0, 3.0, 4.0, 5.0]);
         assert_eq!(&buf[12..16], &[31.0, 33.0, 34.0, 35.0]);
+    }
+
+    #[test]
+    fn gather_tile_colmajor_is_transpose_of_rowmajor() {
+        let sal = Matrix::from_fn(8, 6, |r, c| (r * 10 + c) as f32);
+        let cfg = HinmConfig::with_24(4, 0.0);
+        let cols = vec![0usize, 2, 5];
+        let (v, k) = (cfg.v, cols.len());
+        let mut row_buf = vec![0.0; v * k];
+        let mut col_buf = vec![0.0; v * k];
+        for t in 0..2 {
+            gather_tile(&sal, &cfg, t, &cols, &mut row_buf);
+            gather_tile_colmajor(&sal, &cfg, t, &cols, &mut col_buf);
+            for r in 0..v {
+                for j in 0..k {
+                    assert_eq!(col_buf[j * v + r], row_buf[r * k + j], "t={t} r={r} j={j}");
+                }
+            }
+            // Column j is contiguous and equals the tile's column cols[j].
+            for (j, &c) in cols.iter().enumerate() {
+                let col = &col_buf[j * v..(j + 1) * v];
+                for r in 0..v {
+                    assert_eq!(col[r], sal.at(t * v + r, c));
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,153 @@
+//! Integration tests for the permutation strategy layer: every registered
+//! OCP×ICP pair must produce valid permutations and never retain less than
+//! the unpermuted baseline (the never-worse guard generalized beyond gyro),
+//! and the parallel tile engine must be bit-deterministic in the worker
+//! count.
+
+use hinm::ensure_prop;
+use hinm::permute::baselines::apex::ApexParams;
+use hinm::permute::{
+    IcpParams, OcpParams, PermutePipeline, StrategyParams, StrategyRegistry, StrategySpec,
+    TetrisIcp,
+};
+use hinm::sparsity::hinm::prune_oneshot;
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::{is_permutation, Matrix};
+use hinm::util::prop::{forall, Config, Gen};
+use hinm::util::rng::Xoshiro256;
+
+/// Generator for small random HiNM problem instances (kept tiny: every case
+/// runs all 12 registry pairs through the full pipeline).
+struct StrategyCase;
+
+struct Case {
+    w: Matrix,
+    cfg: HinmConfig,
+    seed: u64,
+}
+
+impl Gen for StrategyCase {
+    type Value = Case;
+    fn generate(&self, rng: &mut Xoshiro256, size: f64) -> Case {
+        let v = [4usize, 8][rng.below(2)];
+        let tiles = 1 + rng.below((2.0 * size).ceil() as usize + 1);
+        let m = v * tiles;
+        let n = 4 * (2 + rng.below((8.0 * size) as usize + 2));
+        let sv = [0.0, 0.25, 0.5][rng.below(3)];
+        let w = Matrix::from_fn(m, n, |_, _| {
+            let x = rng.normal();
+            if rng.next_f32() < 0.1 {
+                x * 5.0
+            } else {
+                x
+            }
+        });
+        Case { w, cfg: HinmConfig::with_24(v, sv), seed: rng.next_u64() }
+    }
+}
+
+/// Fast strategy tuning so the exhaustive pair sweep stays quick.
+fn cheap_params(seed: u64) -> StrategyParams {
+    StrategyParams {
+        ocp: OcpParams { max_iters: 8, patience: 4, hinm_aware: false, seed },
+        icp: IcpParams { max_iters: 6, patience: 3, seed: seed ^ 0xABCD, max_partitions: 32 },
+        apex: ApexParams { max_sweeps: 3, escapes: 1, seed: seed ^ 0xA9E },
+        tetris: TetrisIcp { max_rounds: 3, swaps_per_round: 32, seed: seed ^ 0x7E7 },
+        ovw_seed: seed,
+    }
+}
+
+#[test]
+fn prop_every_registry_pair_valid_and_never_worse() {
+    let reg = StrategyRegistry::builtin();
+    forall(&Config { cases: 10, seed: 0xE1 }, &StrategyCase, |c| {
+        let sal = c.w.abs();
+        let noperm = prune_oneshot(&c.w, &sal, &c.cfg).retained;
+        let params = cheap_params(c.seed);
+        for o in reg.ocp_keys() {
+            for i in reg.icp_keys() {
+                let (ocp, icp) = reg.build(&StrategySpec::new(o, i), &params).unwrap();
+                let out = PermutePipeline::default().run(
+                    ocp.as_ref(),
+                    icp.as_ref(),
+                    &c.w,
+                    &sal,
+                    &c.cfg,
+                );
+                ensure_prop!(
+                    is_permutation(&out.ocp_perm, c.w.rows),
+                    "{o}+{i}: invalid OCP perm for shape {:?}",
+                    c.w.shape()
+                );
+                for (t, ord) in out.tile_orders.iter().enumerate() {
+                    ensure_prop!(
+                        is_permutation(ord, out.result.packed.k_v),
+                        "{o}+{i}: tile {t} order invalid"
+                    );
+                }
+                out.result.packed.check_invariants().map_err(|e| format!("{o}+{i}: {e}"))?;
+                ensure_prop!(
+                    out.result.retained >= noperm - 1e-6,
+                    "{o}+{i}: retained {} below noperm baseline {noperm} (shape {:?}, cfg {:?})",
+                    out.result.retained,
+                    c.w.shape(),
+                    c.cfg
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parse_roundtrips_through_registry() {
+    let reg = StrategyRegistry::builtin();
+    for o in reg.ocp_keys() {
+        for i in reg.icp_keys() {
+            let key = format!("{o}+{i}");
+            let spec = StrategySpec::parse(&key).expect(&key);
+            assert_eq!(spec.key(), key);
+            assert!(reg.supports(&spec));
+        }
+    }
+}
+
+#[test]
+fn tile_engine_bit_deterministic_across_worker_counts() {
+    // workers=1 and workers=8 must produce bit-identical packed output for
+    // the same seed — the contract that makes the thread pool safe to use
+    // everywhere (evals, CLI, coordinator).
+    let mut rng = Xoshiro256::new(0xD37);
+    let w = Matrix::from_fn(64, 96, |_, _| rng.normal());
+    let sal = w.abs();
+    let cfg = HinmConfig::with_24(8, 0.5); // 8 tiles
+    let reg = StrategyRegistry::builtin();
+    let params = cheap_params(0x5EED);
+    for spec in ["gyro", "gyro+tetris", "v2", "id+gyro"] {
+        let spec = StrategySpec::parse(spec).expect(spec);
+        let (ocp1, icp1) = reg.build(&spec, &params).unwrap();
+        let (ocp8, icp8) = reg.build(&spec, &params).unwrap();
+        let a = PermutePipeline { workers: 1, guard: true }.run(ocp1.as_ref(), icp1.as_ref(), &w, &sal, &cfg);
+        let b = PermutePipeline { workers: 8, guard: true }.run(ocp8.as_ref(), icp8.as_ref(), &w, &sal, &cfg);
+        assert_eq!(a.ocp_perm, b.ocp_perm, "{}", spec.key());
+        assert_eq!(a.tile_orders, b.tile_orders, "{}", spec.key());
+        assert_eq!(a.result.packed, b.result.packed, "{}", spec.key());
+        assert_eq!(a.icp_stats, b.icp_stats, "{}", spec.key());
+    }
+}
+
+#[test]
+fn guard_can_be_disabled_for_timing_runs() {
+    // With guard=false the pipeline must still produce valid output (it just
+    // skips the baseline comparison and potential re-runs).
+    let mut rng = Xoshiro256::new(0xD38);
+    let w = Matrix::from_fn(16, 32, |_, _| rng.normal());
+    let sal = w.abs();
+    let cfg = HinmConfig::with_24(4, 0.5);
+    let reg = StrategyRegistry::builtin();
+    let params = cheap_params(3);
+    let (ocp, icp) = reg.build(&StrategySpec::parse("v2").unwrap(), &params).unwrap();
+    let out = PermutePipeline { workers: 2, guard: false }.run(ocp.as_ref(), icp.as_ref(), &w, &sal, &cfg);
+    out.result.packed.check_invariants().unwrap();
+    assert!(is_permutation(&out.ocp_perm, 16));
+}
