@@ -20,10 +20,12 @@ use std::time::Duration;
 fn main() {
     let cli = Cli::new("bert_serve", "batched HiNM FFN serving demo")
         .opt("requests", Some("128"), "total requests")
-        .opt("clients", Some("8"), "concurrent client threads");
+        .opt("clients", Some("8"), "concurrent client threads")
+        .opt("replicas", Some("1"), "server worker replicas");
     let args = cli.parse_env();
     let n_requests = args.usize_or("requests", 128);
     let n_clients = args.usize_or("clients", 8);
+    let replicas = args.usize_or("replicas", 1);
 
     let reg = match hinm::runtime::open_default_registry() {
         Ok(r) => r,
@@ -49,12 +51,12 @@ fn main() {
     let mut fixed = packed_host_tensors(&p1);
     fixed.extend(packed_host_tensors(&p2));
 
-    let server = BatchServer::start(
+    let server = BatchServer::start_pjrt(
         spec,
         fixed,
         d,
         d,
-        ServeConfig { batch, max_wait: Duration::from_millis(2) },
+        ServeConfig::new(batch, Duration::from_millis(2)).with_replicas(replicas),
     )
     .expect("server start");
 
@@ -88,13 +90,12 @@ fn main() {
     });
     let wall = t0.elapsed();
     let served = per_client * n_clients;
-    let m = server.metrics.lock().unwrap().clone();
     println!(
         "served {served} requests from {n_clients} clients in {:.1} ms → {:.0} req/s",
         wall.as_secs_f64() * 1e3,
         served as f64 / wall.as_secs_f64()
     );
-    println!("latency: {}", m.summary());
+    println!("{}", server.metrics.summary());
     server.stop();
 }
 

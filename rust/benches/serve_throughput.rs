@@ -1,0 +1,112 @@
+//! Bench: closed-loop load test of the sharded serving engine over the
+//! native CPU backend — aggregate requests/sec and latency percentiles vs
+//! replica count and batch size. Runs everywhere (no `make artifacts`).
+//!
+//! The "vs 1 replica" column is the scaling acceptance check: on a ≥4-core
+//! machine, 4 replicas should deliver ≥2× the aggregate req/s of 1 replica
+//! at the same batch size. `--smoke` runs a seconds-long CI configuration.
+
+use hinm::coordinator::{BatchServer, ServeConfig};
+use hinm::models::{Activation, HinmModel};
+use hinm::sparsity::HinmConfig;
+use hinm::util::bench::Table;
+use hinm::util::cli::Cli;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let cli = Cli::new("serve_throughput", "closed-loop load bench over the native serving engine")
+        .opt("requests", Some("1024"), "requests per configuration")
+        .opt("clients", Some("32"), "closed-loop client threads")
+        .opt("d", Some("384"), "model width")
+        .opt("d-ff", Some("1536"), "hidden width")
+        .opt("sparsity", Some("75"), "total sparsity %")
+        .opt("replicas", Some("1,2,4"), "replica counts to sweep")
+        .opt("batches", Some("8,32"), "batch sizes to sweep")
+        .opt("max-wait-us", Some("200"), "batch window, µs")
+        .flag("smoke", "tiny CI configuration (small model, few requests)")
+        .flag("bench", "(ignored; injected by `cargo bench`)");
+    let a = cli.parse_env();
+    let smoke = a.flag("smoke");
+    let (d, d_ff, n_requests, n_clients) = if smoke {
+        (64, 128, 96, 8)
+    } else {
+        (
+            a.usize_or("d", 384),
+            a.usize_or("d-ff", 1536),
+            a.usize_or("requests", 1024),
+            a.usize_or("clients", 32).max(1),
+        )
+    };
+    let replica_counts =
+        if smoke { vec![1, 2] } else { a.usize_list_or("replicas", &[1, 2, 4]) };
+    let batch_sizes = if smoke { vec![4] } else { a.usize_list_or("batches", &[8, 32]) };
+    let max_wait = Duration::from_micros(a.u64_or("max-wait-us", 200));
+    let cfg = HinmConfig::for_total_sparsity(32, a.usize_or("sparsity", 75) as f64 / 100.0);
+
+    println!(
+        "== serve_throughput ==  {d}→{d_ff}→{d} FFN at {:.1}% sparsity, {n_requests} requests × {n_clients} clients\n",
+        cfg.total_sparsity() * 100.0
+    );
+    let model =
+        Arc::new(HinmModel::synthetic_ffn(d, d_ff, &cfg, Activation::Relu, 7).expect("model"));
+
+    let mut table = Table::new(&[
+        "backend",
+        "replicas",
+        "batch",
+        "req/s",
+        "p50 µs",
+        "p99 µs",
+        "vs 1 replica",
+    ]);
+    for &batch in &batch_sizes {
+        let mut base_rps: Option<f64> = None;
+        for &replicas in &replica_counts {
+            let server = BatchServer::start_native(
+                Arc::clone(&model),
+                ServeConfig::new(batch, max_wait).with_replicas(replicas),
+            )
+            .expect("server start");
+            let handle = server.handle.clone();
+            let per_client = (n_requests / n_clients).max(1);
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for c in 0..n_clients {
+                    let h = handle.clone();
+                    s.spawn(move || {
+                        for i in 0..per_client {
+                            let x: Vec<f32> = (0..d)
+                                .map(|j| ((c * 31 + i * 7 + j) % 17) as f32 * 0.05 - 0.4)
+                                .collect();
+                            h.infer(x).expect("inference");
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let served = per_client * n_clients;
+            let rps = served as f64 / wall;
+            let pct = server.metrics.aggregate_latency().percentiles(&[50.0, 99.0]);
+            let scale = match base_rps {
+                None => {
+                    base_rps = Some(rps);
+                    "1.00×".to_string()
+                }
+                Some(b) => format!("{:.2}×", rps / b),
+            };
+            table.row(vec![
+                "native".into(),
+                replicas.to_string(),
+                batch.to_string(),
+                format!("{rps:.0}"),
+                format!("{:.0}", pct[0]),
+                format!("{:.0}", pct[1]),
+                scale,
+            ]);
+            server.stop();
+        }
+    }
+    table.print();
+    println!("\n(\"vs 1 replica\" = aggregate throughput scaling at the same batch size.)");
+}

@@ -1,52 +1,110 @@
-//! Request latency metrics (p50/p95/p99) and simple counters for the
-//! serving path and the fine-tune driver.
+//! Request metrics for the serving engine and the fine-tune driver:
+//! bounded-memory latency percentiles, a throughput meter, and the
+//! per-replica + aggregate views the sharded batch server reports.
 
+use std::sync::Mutex;
 use std::time::Duration;
 
-/// Records request latencies; percentile queries sort on demand.
-#[derive(Clone, Debug, Default)]
+/// Records request latencies in a fixed-capacity ring buffer.
+///
+/// Long-running servers record forever, so the recorder keeps (a) running
+/// aggregates over *every* sample (count, mean) and (b) a bounded window of
+/// the most recent `cap` samples for percentile queries. Percentile reads
+/// sort the retained window once per call, however many percentiles are
+/// requested — `summary()` is one sort, not three.
+#[derive(Clone, Debug)]
 pub struct LatencyRecorder {
     samples_us: Vec<f64>,
+    /// Next overwrite position once the ring is full.
+    head: usize,
+    /// Total samples ever recorded (≥ retained window size).
+    total: u64,
+    /// Running sum over all samples ever recorded.
+    sum_us: f64,
+    cap: usize,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl LatencyRecorder {
+    /// Default retained-window capacity (samples).
+    pub const DEFAULT_CAP: usize = 65_536;
+
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(Self::DEFAULT_CAP)
+    }
+
+    /// Recorder retaining at most `cap` samples for percentile queries.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { samples_us: Vec::new(), head: 0, total: 0, sum_us: 0.0, cap: cap.max(1) }
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_secs_f64() * 1e6);
+        self.record_us(d.as_secs_f64() * 1e6);
     }
 
+    pub fn record_us(&mut self, us: f64) {
+        self.total += 1;
+        self.sum_us += us;
+        if self.samples_us.len() < self.cap {
+            self.samples_us.push(us);
+        } else {
+            self.samples_us[self.head] = us;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Total samples ever recorded (not capped).
     pub fn count(&self) -> usize {
+        self.total as usize
+    }
+
+    /// Samples currently retained for percentile queries (≤ capacity).
+    pub fn retained(&self) -> usize {
         self.samples_us.len()
     }
 
-    pub fn percentile(&self, p: f64) -> f64 {
+    /// Mean over all samples ever recorded.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    /// Percentiles (in %) over the retained window; one sort per call.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
         if self.samples_us.is_empty() {
-            return 0.0;
+            return vec![0.0; ps.len()];
         }
         let mut s = self.samples_us.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        ps.iter()
+            .map(|&p| {
+                let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+                s[idx.min(s.len() - 1)]
+            })
+            .collect()
     }
 
-    pub fn mean(&self) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
-        }
-        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
     }
 
     pub fn summary(&self) -> String {
+        let pct = self.percentiles(&[50.0, 95.0, 99.0]);
         format!(
             "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
             self.count(),
             self.mean(),
-            self.percentile(50.0),
-            self.percentile(95.0),
-            self.percentile(99.0)
+            pct[0],
+            pct[1],
+            pct[2]
         )
     }
 }
@@ -79,6 +137,78 @@ impl Throughput {
     }
 }
 
+/// Per-replica counters for the sharded batch server.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaStats {
+    pub latency: LatencyRecorder,
+    /// Batches flushed (successful executions).
+    pub batches: usize,
+    /// Requests answered successfully.
+    pub requests: usize,
+    /// Failed batch executions (every request in them got an error).
+    pub errors: usize,
+}
+
+/// Aggregate + per-replica metrics for one serving engine instance.
+///
+/// Workers lock only their own replica slot plus the aggregate recorder per
+/// flush; locks are never nested, so replicas never contend on each other.
+#[derive(Debug)]
+pub struct EngineMetrics {
+    pub aggregate: Mutex<LatencyRecorder>,
+    pub throughput: Mutex<Throughput>,
+    pub replicas: Vec<Mutex<ReplicaStats>>,
+}
+
+impl EngineMetrics {
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            aggregate: Mutex::new(LatencyRecorder::new()),
+            throughput: Mutex::new(Throughput::new()),
+            replicas: (0..replicas).map(|_| Mutex::new(ReplicaStats::default())).collect(),
+        }
+    }
+
+    /// Requests answered successfully across all replicas.
+    pub fn total_requests(&self) -> usize {
+        self.aggregate.lock().unwrap().count()
+    }
+
+    /// Snapshot of the aggregate latency recorder.
+    pub fn aggregate_latency(&self) -> LatencyRecorder {
+        self.aggregate.lock().unwrap().clone()
+    }
+
+    /// Snapshot of one replica's counters.
+    pub fn replica_stats(&self, replica: usize) -> ReplicaStats {
+        self.replicas[replica].lock().unwrap().clone()
+    }
+
+    /// Successful requests per second since the engine started.
+    pub fn requests_per_sec(&self) -> f64 {
+        self.throughput.lock().unwrap().per_sec()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "aggregate: {} | {:.0} req/s",
+            self.aggregate_latency().summary(),
+            self.requests_per_sec()
+        );
+        for (i, m) in self.replicas.iter().enumerate() {
+            let st = m.lock().unwrap();
+            s.push_str(&format!(
+                "\n  replica {i}: {} batches, {} reqs, {} failed batches | {}",
+                st.batches,
+                st.requests,
+                st.errors,
+                st.latency.summary()
+            ));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,11 +234,74 @@ mod tests {
     }
 
     #[test]
+    fn ring_buffer_caps_retention_and_keeps_percentiles_ordered() {
+        let mut r = LatencyRecorder::with_capacity(8);
+        for us in 1..=100u64 {
+            r.record(Duration::from_micros(us));
+        }
+        // Count/mean cover everything; percentiles cover the last 8 samples.
+        assert_eq!(r.count(), 100);
+        assert_eq!(r.retained(), 8);
+        assert!((r.mean() - 50.5).abs() < 0.1);
+        let pct = r.percentiles(&[0.0, 50.0, 95.0, 99.0]);
+        assert!(pct.windows(2).all(|w| w[0] <= w[1]), "unordered: {pct:?}");
+        // The retained window is exactly the most recent samples 93..=100.
+        assert!(pct[0] >= 92.9, "min retained {}", pct[0]);
+        assert!(pct[3] <= 100.1, "max retained {}", pct[3]);
+    }
+
+    #[test]
+    fn wraparound_overwrites_oldest_first() {
+        let mut r = LatencyRecorder::with_capacity(4);
+        for us in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            r.record_us(us);
+        }
+        // 10 was overwritten by 50; window = {20,30,40,50}.
+        assert_eq!(r.percentile(0.0), 20.0);
+        assert_eq!(r.percentile(100.0), 50.0);
+        assert_eq!(r.count(), 5);
+    }
+
+    #[test]
+    fn summary_sorts_once_consistently() {
+        let mut r = LatencyRecorder::with_capacity(16);
+        for us in [5.0, 1.0, 9.0, 3.0] {
+            r.record_us(us);
+        }
+        let pct = r.percentiles(&[50.0, 95.0, 99.0]);
+        assert_eq!(pct.len(), 3);
+        assert!(r.summary().contains("n=4"));
+    }
+
+    #[test]
     fn throughput_counts() {
         let mut t = Throughput::new();
         t.add(10);
         t.add(5);
         assert_eq!(t.items(), 15);
         assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn engine_metrics_aggregates_replicas() {
+        let m = EngineMetrics::new(2);
+        {
+            let mut r0 = m.replicas[0].lock().unwrap();
+            r0.requests += 3;
+            r0.batches += 1;
+            r0.latency.record_us(100.0);
+        }
+        {
+            let mut agg = m.aggregate.lock().unwrap();
+            agg.record_us(100.0);
+            agg.record_us(200.0);
+        }
+        m.throughput.lock().unwrap().add(2);
+        assert_eq!(m.total_requests(), 2);
+        assert_eq!(m.replica_stats(0).requests, 3);
+        assert_eq!(m.replica_stats(1).requests, 0);
+        let s = m.summary();
+        assert!(s.contains("replica 0"));
+        assert!(s.contains("replica 1"));
     }
 }

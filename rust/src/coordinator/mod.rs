@@ -1,6 +1,6 @@
 //! L3 coordinator: the compression pipeline (prune → permute → pack), the
-//! batched inference server over PJRT, the Rust-driven fine-tune trainer,
-//! and request metrics.
+//! sharded multi-backend inference engine, the Rust-driven fine-tune
+//! trainer, and request metrics.
 
 pub mod gradual;
 pub mod metrics;
@@ -8,6 +8,7 @@ pub mod pipeline;
 pub mod serve;
 pub mod trainer;
 
+pub use metrics::{EngineMetrics, LatencyRecorder, ReplicaStats, Throughput};
 pub use pipeline::{compress_layer, run_pipeline, weighted_retention, LayerJob, Method, PipelineConfig};
-pub use serve::{BatchServer, ServeConfig};
+pub use serve::{BackendFactory, BatchServer, ServeConfig, ServerHandle};
 pub use trainer::{Corpus, LmTrainer};

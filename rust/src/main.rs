@@ -5,7 +5,8 @@
 //!   prune                                       compress a .npy weight matrix
 //!   spmm                                        run the CPU HiNM SpMM on a pruned layer
 //!   info                                        list AOT artifacts
-//!   serve-demo                                  run the batched FFN server briefly
+//!   serve                                       multi-replica batched inference engine
+//!   serve-demo                                  alias: serve --backend pjrt
 //!   train-demo                                  short LM train loop via the AOT step
 
 use anyhow::{bail, Context, Result};
@@ -28,7 +29,13 @@ fn main() {
         "prune" => cmd_prune(args),
         "spmm" => cmd_spmm(args),
         "info" => cmd_info(args),
-        "serve-demo" => cmd_serve_demo(args),
+        "serve" => cmd_serve(args),
+        "serve-demo" => {
+            // Historical alias for the PJRT path; explicit flags still win.
+            let mut full = vec!["--backend".to_string(), "pjrt".to_string()];
+            full.extend(args);
+            cmd_serve(full)
+        }
         "train-demo" => cmd_train_demo(args),
         "--help" | "-h" | "help" => {
             usage();
@@ -56,7 +63,9 @@ fn usage() {
          \x20         ovw+gyro, id+tetris (ocp: gyro|ovw|id; icp: gyro|apex|tetris|id)\n\
          \x20 spmm    --weights w.npy [--batch 8] [--sparsity 75]\n\
          \x20 info    list AOT artifacts and data dumps\n\
-         \x20 serve-demo  [--requests 64]   batched FFN inference via PJRT\n\
+         \x20 serve   [--backend native|pjrt] [--replicas R] [--batch B] [--max-wait-us U]\n\
+         \x20         sharded batched inference engine + closed-loop load demo\n\
+         \x20 serve-demo  alias for: serve --backend pjrt\n\
          \x20 train-demo  [--steps 50]      LM training via AOT train step\n"
     );
 }
@@ -232,55 +241,107 @@ fn cmd_info(_args: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve_demo(args: Vec<String>) -> Result<()> {
-    let cli = Cli::new("hinm serve-demo", "batched FFN inference over PJRT")
-        .opt("requests", Some("64"), "number of requests to fire");
+fn cmd_serve(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm serve", "multi-replica batched HiNM inference engine")
+        .opt("backend", Some("native"), "native | pjrt")
+        .opt("replicas", Some("2"), "worker replicas (each owns a backend instance)")
+        .opt("batch", Some("8"), "batch size per flush (pjrt: fixed by the artifact)")
+        .opt("max-wait-us", Some("200"), "batch window after the first request, µs")
+        .opt("queue-depth", Some("0"), "request-queue bound (0 = replicas*batch*4)")
+        .opt("requests", Some("256"), "closed-loop demo requests")
+        .opt("clients", Some("8"), "concurrent demo clients")
+        .opt("d", Some("256"), "native: model width")
+        .opt("d-ff", Some("512"), "native: hidden width")
+        .opt("sparsity", Some("75"), "native: total sparsity %")
+        .opt("v", Some("32"), "native: vector size V")
+        .opt("seed", Some("7"), "native: synthetic-weight seed");
     let a = cli.parse_tail(args);
-    let n_requests = a.usize_or("requests", 64);
+    let backend = a.get_or("backend", "native");
+    let replicas = a.usize_or("replicas", 2).max(1);
+    let max_wait = std::time::Duration::from_micros(a.u64_or("max-wait-us", 200));
+    let queue_depth = a.usize_or("queue-depth", 0);
+    let n_requests = a.usize_or("requests", 256);
+    let n_clients = a.usize_or("clients", 8).max(1);
 
-    let reg = hinm::runtime::open_default_registry()?;
-    let spec = reg.artifact("ffn_serve")?.clone();
-    let d = spec.meta["d"] as usize;
-    let d_ff = spec.meta["d_ff"] as usize;
-    let batch = spec.meta["batch"] as usize;
-    let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+    let server = match backend.as_str() {
+        "native" => {
+            let d = a.usize_or("d", 256);
+            let d_ff = a.usize_or("d-ff", 512);
+            let cfg = HinmConfig::for_total_sparsity(
+                a.usize_or("v", 32),
+                a.usize_or("sparsity", 75) as f64 / 100.0,
+            );
+            let model = hinm::models::HinmModel::synthetic_ffn(
+                d,
+                d_ff,
+                &cfg,
+                hinm::models::Activation::Relu,
+                a.u64_or("seed", 7),
+            )?;
+            println!(
+                "native backend: {d}→{d_ff}→{d} FFN | V={} total sparsity {:.1}% | {replicas} replicas",
+                cfg.v,
+                cfg.total_sparsity() * 100.0
+            );
+            let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
+                .with_replicas(replicas)
+                .with_queue_depth(queue_depth);
+            hinm::coordinator::BatchServer::start_native(std::sync::Arc::new(model), scfg)?
+        }
+        "pjrt" => {
+            let reg = hinm::runtime::open_default_registry()?;
+            let spec = reg.artifact("ffn_serve")?.clone();
+            let d = spec.meta["d"] as usize;
+            let d_ff = spec.meta["d_ff"] as usize;
+            let batch = spec.meta["batch"] as usize;
+            let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+            println!(
+                "pjrt backend: ffn_serve d={d} d_ff={d_ff} | V={} total sparsity {:.1}% | batch={batch} (artifact) | {replicas} replicas",
+                cfg.v,
+                cfg.total_sparsity() * 100.0
+            );
+            let w1 = reg.load_data("ffn_w1_dense")?;
+            let w2 = reg.load_data("ffn_w2_dense")?;
+            let w1 = hinm::tensor::Matrix::from_vec(d_ff, d, w1.as_f32()?.to_vec());
+            let w2 = hinm::tensor::Matrix::from_vec(d, d_ff, w2.as_f32()?.to_vec());
+            let p1 = hinm::sparsity::prune_oneshot(&w1, &w1.abs(), &cfg).packed;
+            let p2 = hinm::sparsity::prune_oneshot(&w2, &w2.abs(), &cfg).packed;
+            let mut fixed = hinm::coordinator::serve::packed_host_tensors(&p1);
+            fixed.extend(hinm::coordinator::serve::packed_host_tensors(&p2));
+            let scfg = hinm::coordinator::ServeConfig::new(batch, max_wait)
+                .with_replicas(replicas)
+                .with_queue_depth(queue_depth);
+            hinm::coordinator::BatchServer::start_pjrt(spec, fixed, d, d, scfg)?
+        }
+        other => bail!("unknown --backend {other:?} (expected native|pjrt)"),
+    };
 
-    let w1 = reg.load_data("ffn_w1_dense")?;
-    let w2 = reg.load_data("ffn_w2_dense")?;
-    let w1 = hinm::tensor::Matrix::from_vec(d_ff, d, w1.as_f32()?.to_vec());
-    let w2 = hinm::tensor::Matrix::from_vec(d, d_ff, w2.as_f32()?.to_vec());
-    let p1 = hinm::sparsity::prune_oneshot(&w1, &w1.abs(), &cfg).packed;
-    let p2 = hinm::sparsity::prune_oneshot(&w2, &w2.abs(), &cfg).packed;
-    let mut fixed = hinm::coordinator::serve::packed_host_tensors(&p1);
-    fixed.extend(hinm::coordinator::serve::packed_host_tensors(&p2));
-
-    let server = hinm::coordinator::BatchServer::start(
-        spec,
-        fixed,
-        d,
-        d,
-        hinm::coordinator::ServeConfig { batch, max_wait: std::time::Duration::from_millis(2) },
-    )?;
     let handle = server.handle.clone();
+    let d_in = handle.d_in;
+    let per_client = (n_requests / n_clients).max(1);
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
-        for i in 0..n_requests {
+        for c in 0..n_clients {
             let h = handle.clone();
             s.spawn(move || {
-                let x: Vec<f32> = (0..d).map(|j| ((i * 31 + j) % 13) as f32 * 0.05).collect();
-                let y = h.infer(x).expect("inference failed");
-                assert_eq!(y.len(), d);
+                for i in 0..per_client {
+                    let x: Vec<f32> = (0..d_in)
+                        .map(|j| ((c * 131 + i * 17 + j) % 23) as f32 * 0.04 - 0.4)
+                        .collect();
+                    let y = h.infer(x).expect("inference failed");
+                    assert_eq!(y.len(), h.d_out);
+                }
             });
         }
     });
     let wall = t0.elapsed();
-    let m = server.metrics.lock().unwrap().clone();
+    let served = per_client * n_clients;
     println!(
-        "served {n_requests} requests in {:.1} ms ({:.0} req/s) | latency {}",
+        "served {served} requests from {n_clients} clients in {:.1} ms → {:.0} req/s",
         wall.as_secs_f64() * 1e3,
-        n_requests as f64 / wall.as_secs_f64(),
-        m.summary()
+        served as f64 / wall.as_secs_f64()
     );
+    println!("{}", server.metrics.summary());
     server.stop();
     Ok(())
 }

@@ -1,0 +1,277 @@
+//! Multi-layer chains of packed HiNM matrices — the model object the
+//! native serving backend executes.
+//!
+//! A [`HinmModel`] is a feed-forward chain of [`HinmLayer`]s (packed HiNM
+//! GEMM + optional bias + optional activation), the CPU analogue of the
+//! `ffn_serve` artifact's two-GEMM FFN but with arbitrary depth. The chain
+//! runs through [`crate::spmm::spmm_with_scratch`], so a worker that owns a
+//! `SpmmScratch` executes any number of layers with zero hot-path
+//! allocation beyond the inter-layer activations.
+
+use super::synthetic::SyntheticGen;
+use crate::sparsity::{prune_oneshot, HinmConfig, HinmPacked};
+use crate::spmm::{spmm_with_scratch, SpmmScratch};
+use crate::tensor::Matrix;
+use crate::util::rng::Xoshiro256;
+use anyhow::{bail, Result};
+
+/// tanh-approximated GELU — bit-compatible with `jax.nn.gelu`'s default
+/// (`approximate=True`), which is what the `ffn_serve` artifact lowers.
+pub fn gelu(x: f32) -> f32 {
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x3)) as f64).tanh() as f32)
+}
+
+/// Elementwise nonlinearity applied after a layer's GEMM (+ bias).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Gelu,
+}
+
+impl Activation {
+    pub fn apply(self, y: &mut Matrix) {
+        match self {
+            Activation::None => {}
+            Activation::Relu => {
+                for v in &mut y.data {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Activation::Gelu => {
+                for v in &mut y.data {
+                    *v = gelu(*v);
+                }
+            }
+        }
+    }
+}
+
+/// One layer: `act(W_hinm · x + b)`.
+#[derive(Clone, Debug)]
+pub struct HinmLayer {
+    pub packed: HinmPacked,
+    /// Per-output-channel bias, length `packed.rows`.
+    pub bias: Option<Vec<f32>>,
+    pub act: Activation,
+}
+
+impl HinmLayer {
+    pub fn new(packed: HinmPacked) -> Self {
+        Self { packed, bias: None, act: Activation::None }
+    }
+
+    pub fn with_bias(mut self, bias: Vec<f32>) -> Self {
+        self.bias = Some(bias);
+        self
+    }
+
+    pub fn with_activation(mut self, act: Activation) -> Self {
+        self.act = act;
+        self
+    }
+}
+
+/// A validated feed-forward chain of HiNM layers.
+#[derive(Clone, Debug)]
+pub struct HinmModel {
+    layers: Vec<HinmLayer>,
+}
+
+impl HinmModel {
+    /// Validate chain dimensions (layer i's rows feed layer i+1's cols) and
+    /// bias lengths.
+    pub fn new(layers: Vec<HinmLayer>) -> Result<HinmModel> {
+        if layers.is_empty() {
+            bail!("HinmModel needs at least one layer");
+        }
+        for (i, l) in layers.iter().enumerate() {
+            if let Some(b) = &l.bias {
+                if b.len() != l.packed.rows {
+                    bail!("layer {i}: bias length {} != rows {}", b.len(), l.packed.rows);
+                }
+            }
+        }
+        for (i, w) in layers.windows(2).enumerate() {
+            if w[1].packed.cols != w[0].packed.rows {
+                bail!(
+                    "layer {} consumes {} channels but layer {i} produces {}",
+                    i + 1,
+                    w[1].packed.cols,
+                    w[0].packed.rows
+                );
+            }
+        }
+        Ok(HinmModel { layers })
+    }
+
+    pub fn layers(&self) -> &[HinmLayer] {
+        &self.layers
+    }
+
+    /// Uncompressed input channels of the first layer.
+    pub fn d_in(&self) -> usize {
+        self.layers[0].packed.cols
+    }
+
+    /// Output channels of the last layer.
+    pub fn d_out(&self) -> usize {
+        self.layers.last().unwrap().packed.rows
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Forward pass: `x` is `[d_in, batch]`, result `[d_out, batch]`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut scratch = SpmmScratch::new();
+        self.forward_with_scratch(x, &mut scratch)
+    }
+
+    /// Forward pass with caller-owned scratch (hot-path variant).
+    pub fn forward_with_scratch(&self, x: &Matrix, scratch: &mut SpmmScratch) -> Matrix {
+        assert_eq!(x.rows, self.d_in(), "input has {} channels, model wants {}", x.rows, self.d_in());
+        let mut cur: Option<Matrix> = None;
+        for layer in &self.layers {
+            let input = cur.as_ref().unwrap_or(x);
+            let mut y = spmm_with_scratch(&layer.packed, input, scratch);
+            apply_bias(&mut y, layer.bias.as_deref());
+            layer.act.apply(&mut y);
+            cur = Some(y);
+        }
+        cur.unwrap()
+    }
+
+    /// Oracle forward: decompress each layer and dense-multiply.
+    pub fn forward_reference(&self, x: &Matrix) -> Matrix {
+        let mut cur: Option<Matrix> = None;
+        for layer in &self.layers {
+            let input = cur.as_ref().unwrap_or(x);
+            let mut y = crate::spmm::hinm_cpu::spmm_reference(&layer.packed, input);
+            apply_bias(&mut y, layer.bias.as_deref());
+            layer.act.apply(&mut y);
+            cur = Some(y);
+        }
+        cur.unwrap()
+    }
+
+    /// Two-layer FFN (`d → d_ff → d`) with trained-like synthetic weights,
+    /// pruned one-shot at `cfg` — the standard serving-bench model.
+    pub fn synthetic_ffn(
+        d: usize,
+        d_ff: usize,
+        cfg: &HinmConfig,
+        act: Activation,
+        seed: u64,
+    ) -> Result<HinmModel> {
+        cfg.validate(d_ff, d).map_err(|e| anyhow::anyhow!(e))?;
+        cfg.validate(d, d_ff).map_err(|e| anyhow::anyhow!(e))?;
+        let mut rng = Xoshiro256::new(seed);
+        let gen = SyntheticGen::default();
+        let w1 = gen.weights(d_ff, d, &mut rng);
+        let w2 = gen.weights(d, d_ff, &mut rng);
+        let p1 = prune_oneshot(&w1, &w1.abs(), cfg).packed;
+        let p2 = prune_oneshot(&w2, &w2.abs(), cfg).packed;
+        let b1: Vec<f32> = (0..d_ff).map(|_| rng.normal() * 0.01).collect();
+        let b2: Vec<f32> = (0..d).map(|_| rng.normal() * 0.01).collect();
+        HinmModel::new(vec![
+            HinmLayer::new(p1).with_bias(b1).with_activation(act),
+            HinmLayer::new(p2).with_bias(b2),
+        ])
+    }
+}
+
+fn apply_bias(y: &mut Matrix, bias: Option<&[f32]>) {
+    if let Some(b) = bias {
+        for (r, &bv) in b.iter().enumerate() {
+            for v in y.row_mut(r) {
+                *v += bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn packed(rows: usize, cols: usize, seed: u64) -> HinmPacked {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        prune_oneshot(&w, &w.abs(), &cfg).packed
+    }
+
+    #[test]
+    fn ffn_forward_matches_reference() {
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let model = HinmModel::synthetic_ffn(32, 64, &cfg, Activation::Relu, 11).unwrap();
+        assert_eq!(model.d_in(), 32);
+        assert_eq!(model.d_out(), 32);
+        assert_eq!(model.n_layers(), 2);
+        let mut rng = Xoshiro256::new(12);
+        let x = Matrix::randn(32, 6, 1.0, &mut rng);
+        let got = model.forward(&x);
+        let want = model.forward_reference(&x);
+        assert_eq!(got.shape(), (32, 6));
+        assert!(got.max_abs_diff(&want) < 1e-4, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls_is_equivalent() {
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let model = HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Gelu, 21).unwrap();
+        let mut scratch = SpmmScratch::new();
+        let mut rng = Xoshiro256::new(22);
+        for _ in 0..3 {
+            let x = Matrix::randn(16, 3, 1.0, &mut rng);
+            let a = model.forward_with_scratch(&x, &mut scratch);
+            let b = model.forward(&x);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn bias_shifts_and_relu_clamps() {
+        let p = packed(8, 16, 31);
+        let x = Matrix::zeros(16, 2);
+        // Zero input → pre-activation equals the bias exactly.
+        let up = HinmModel::new(vec![
+            HinmLayer::new(p.clone()).with_bias(vec![3.0; 8]).with_activation(Activation::Relu),
+        ])
+        .unwrap();
+        let down = HinmModel::new(vec![
+            HinmLayer::new(p).with_bias(vec![-3.0; 8]).with_activation(Activation::Relu),
+        ])
+        .unwrap();
+        assert!(up.forward(&x).data.iter().all(|&v| v == 3.0));
+        assert!(down.forward(&x).data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn chain_dimension_mismatch_rejected() {
+        let a = packed(8, 16, 41);
+        let b = packed(8, 16, 42); // consumes 16, but `a` produces 8
+        assert!(HinmModel::new(vec![HinmLayer::new(a), HinmLayer::new(b)]).is_err());
+        assert!(HinmModel::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn bad_bias_length_rejected() {
+        let p = packed(8, 16, 43);
+        let layer = HinmLayer::new(p).with_bias(vec![0.0; 5]);
+        assert!(HinmModel::new(vec![layer]).is_err());
+    }
+
+    #[test]
+    fn gelu_sanity() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(3.0) - 3.0).abs() < 0.01);
+        assert!(gelu(-3.0).abs() < 0.01);
+        assert!(gelu(1.0) > 0.8 && gelu(1.0) < 0.9);
+    }
+}

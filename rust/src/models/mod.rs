@@ -8,8 +8,10 @@
 //! (b) small models trained for real in the e2e example. See DESIGN.md §2.
 
 pub mod catalog;
+pub mod chain;
 pub mod conv;
 pub mod synthetic;
 
 pub use catalog::{LayerShape, ModelCatalog};
+pub use chain::{Activation, HinmLayer, HinmModel};
 pub use synthetic::SyntheticGen;

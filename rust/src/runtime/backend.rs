@@ -1,0 +1,249 @@
+//! Swappable SpMM serving backends — the execution layer under the batch
+//! server.
+//!
+//! The paper's serving claim (HiNM layers with runtime channel permutation
+//! at zero extra cost) meets traffic through [`SpmmBackend`]: a backend
+//! owns a fully materialized model and executes one padded activation
+//! batch per call. Two implementations ship:
+//!
+//! * [`NativeCpuBackend`] — the CPU HiNM kernel
+//!   ([`crate::spmm::spmm_with_scratch`]) over a [`HinmModel`] chain, with
+//!   a per-backend reusable [`SpmmScratch`]. Runs everywhere (tests, CI,
+//!   benches) with no artifacts.
+//! * [`PjrtBackend`] — the AOT-lowered XLA/Pallas artifact through the
+//!   PJRT [`Executor`]. PJRT handles are `!Send`, so the batch server
+//!   constructs this backend *on* the worker thread via its factory.
+//!
+//! Backends are stateful (`&mut self`) precisely so weights and scratch are
+//! materialized once at construction and reused across every batch — the
+//! fixed packed-weight literals of the PJRT path are created once and
+//! passed by reference to each `exe.run`, never deep-copied per flush.
+
+use crate::models::chain::HinmModel;
+use crate::runtime::executor::{lit_f32, lit_i32, lit_to_matrix, Executor};
+use crate::runtime::registry::ArtifactSpec;
+use crate::spmm::SpmmScratch;
+use crate::tensor::Matrix;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// A serving execution engine for one fixed model.
+///
+/// `run_batch` consumes an activation batch `x` of shape `[d_in, w]`
+/// (row-major; request `j` in column `j`) and returns `[d_out, w]`. The
+/// width `w` is the backend's [`SpmmBackend::fixed_batch`] when it
+/// declares one (the engine zero-pads stragglers up to it) and exactly the
+/// number of live requests otherwise — so flexible backends never compute
+/// padding columns. Implementations may be `!Send`; the batch server
+/// builds one per worker thread through a `Send + Sync` factory.
+pub trait SpmmBackend {
+    fn name(&self) -> &'static str;
+    /// Uncompressed input channels per request.
+    fn d_in(&self) -> usize;
+    /// Output channels per request.
+    fn d_out(&self) -> usize;
+    /// The batch width this backend was compiled for, if any. `None`
+    /// (default) means any width is accepted and padding is wasted work.
+    fn fixed_batch(&self) -> Option<usize> {
+        None
+    }
+    /// Execute one batch.
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix>;
+}
+
+/// Host-side tensor data, `Send`-able across threads (PJRT literals are
+/// not); a worker thread converts these to literals once at startup.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32(d, s) => lit_f32(d, s),
+            HostTensor::I32(d, s) => lit_i32(d, s),
+        }
+    }
+}
+
+/// Packed HiNM weights as host tensors (vals, vec_idx, nm_idx) — the fixed
+/// inputs of the `ffn_serve` artifact.
+pub fn packed_host_tensors(p: &crate::sparsity::HinmPacked) -> Vec<HostTensor> {
+    let t = p.tiles();
+    let vpr = p.vals_per_row();
+    vec![
+        HostTensor::F32(p.vals.clone(), vec![t, p.cfg.v, vpr]),
+        HostTensor::I32(p.vec_idx.clone(), vec![t, p.k_v]),
+        HostTensor::I32(p.nm_idx.iter().map(|&o| o as i32).collect(), vec![t, p.cfg.v, vpr]),
+    ]
+}
+
+/// CPU backend: the packed-format HiNM kernel over a layer chain.
+///
+/// The model is shared (`Arc`) across replicas — weights exist once in the
+/// process regardless of replica count — while each backend owns its own
+/// scratch, the per-"thread-block" staging buffers of the kernel.
+pub struct NativeCpuBackend {
+    model: Arc<HinmModel>,
+    scratch: SpmmScratch,
+}
+
+impl NativeCpuBackend {
+    pub fn new(model: Arc<HinmModel>) -> Self {
+        Self { model, scratch: SpmmScratch::new() }
+    }
+}
+
+impl SpmmBackend for NativeCpuBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn d_in(&self) -> usize {
+        self.model.d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.model.d_out()
+    }
+
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        ensure!(
+            x.rows == self.model.d_in(),
+            "batch has {} input channels, model wants {}",
+            x.rows,
+            self.model.d_in()
+        );
+        Ok(self.model.forward_with_scratch(x, &mut self.scratch))
+    }
+}
+
+/// PJRT backend: a compiled AOT artifact with its fixed inputs resident.
+///
+/// `inputs` holds the fixed packed-weight literals (created once, at
+/// construction) followed by one slot that is overwritten with each batch's
+/// activation literal — `Executor::run` takes `&[Literal]`, so the fixed
+/// literals are reused by reference across calls instead of being
+/// deep-copied per flush.
+pub struct PjrtBackend {
+    exe: Executor,
+    inputs: Vec<xla::Literal>,
+    d_in: usize,
+    d_out: usize,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(
+        spec: &ArtifactSpec,
+        fixed: &[HostTensor],
+        d_in: usize,
+        d_out: usize,
+        batch: usize,
+    ) -> Result<PjrtBackend> {
+        ensure!(batch > 0, "batch must be positive");
+        let exe = Executor::load(spec)?;
+        let mut inputs = Vec::with_capacity(fixed.len() + 1);
+        for t in fixed {
+            inputs.push(t.to_literal()?);
+        }
+        // Placeholder for the activation literal, replaced on every call.
+        inputs.push(lit_f32(&vec![0.0; d_in * batch], &[d_in, batch])?);
+        Ok(PjrtBackend { exe, inputs, d_in, d_out, batch })
+    }
+
+    /// The artifact's compiled batch dimension.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+impl SpmmBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn fixed_batch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        ensure!(
+            x.rows == self.d_in && x.cols == self.batch,
+            "batch is {}×{}, artifact compiled for {}×{}",
+            x.rows,
+            x.cols,
+            self.d_in,
+            self.batch
+        );
+        let slot = self.inputs.len() - 1;
+        self.inputs[slot] = lit_f32(&x.data, &[self.d_in, self.batch])?;
+        let outs = self.exe.run(&self.inputs)?;
+        lit_to_matrix(&outs[0], self.d_out, self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::chain::Activation;
+    use crate::sparsity::HinmConfig;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn native_backend_matches_model_forward() {
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let model = Arc::new(HinmModel::synthetic_ffn(32, 64, &cfg, Activation::Relu, 5).unwrap());
+        let mut backend = NativeCpuBackend::new(Arc::clone(&model));
+        assert_eq!(backend.name(), "native");
+        assert_eq!((backend.d_in(), backend.d_out()), (32, 32));
+        let mut rng = Xoshiro256::new(6);
+        for _ in 0..3 {
+            let x = Matrix::randn(32, 4, 1.0, &mut rng);
+            let y = backend.run_batch(&x).unwrap();
+            assert_eq!(y, model.forward(&x));
+        }
+    }
+
+    #[test]
+    fn native_backend_rejects_wrong_input_channels() {
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let model = Arc::new(HinmModel::synthetic_ffn(16, 32, &cfg, Activation::None, 7).unwrap());
+        let mut backend = NativeCpuBackend::new(model);
+        assert!(backend.run_batch(&Matrix::zeros(8, 4)).is_err());
+    }
+
+    #[test]
+    fn host_tensor_literal_roundtrip() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let t = HostTensor::I32(vec![7, -3], vec![2]);
+        assert_eq!(t.to_literal().unwrap().to_vec::<i32>().unwrap(), vec![7, -3]);
+    }
+
+    #[test]
+    fn packed_host_tensors_shapes() {
+        let mut rng = Xoshiro256::new(9);
+        let w = Matrix::randn(8, 16, 1.0, &mut rng);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let p = crate::sparsity::prune_oneshot(&w, &w.abs(), &cfg).packed;
+        let ts = packed_host_tensors(&p);
+        assert_eq!(ts.len(), 3);
+        let lits: Vec<_> = ts.iter().map(|t| t.to_literal().unwrap()).collect();
+        assert_eq!(lits[0].element_count(), p.vals.len());
+        assert_eq!(lits[1].element_count(), p.vec_idx.len());
+        assert_eq!(lits[2].element_count(), p.nm_idx.len());
+    }
+}

@@ -1,10 +1,12 @@
-//! PJRT runtime: the Rust↔XLA bridge that loads the AOT artifacts emitted by
-//! `python/compile/aot.py` and executes them on the request path with Python
-//! out of the loop.
+//! Runtime layer: the swappable SpMM serving backends and the Rust↔XLA
+//! bridge that loads the AOT artifacts emitted by `python/compile/aot.py`
+//! and executes them on the request path with Python out of the loop.
 
+pub mod backend;
 pub mod executor;
 pub mod registry;
 
+pub use backend::{NativeCpuBackend, PjrtBackend, SpmmBackend};
 pub use executor::{client, Executor};
 pub use registry::Registry;
 

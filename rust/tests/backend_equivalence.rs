@@ -1,0 +1,103 @@
+//! Backend equivalence: the native CPU backend against the decompress +
+//! dense-GEMM oracle (always), and native vs PJRT on the same packed model
+//! (when `make artifacts` has been run and a real xla crate is linked —
+//! skipped otherwise, like the other artifact-gated integration tests).
+
+use hinm::models::{Activation, HinmLayer, HinmModel};
+use hinm::runtime::backend::{packed_host_tensors, PjrtBackend};
+use hinm::runtime::{NativeCpuBackend, Registry, SpmmBackend};
+use hinm::sparsity::{prune_oneshot, HinmConfig};
+use hinm::tensor::Matrix;
+use hinm::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+#[test]
+fn native_backend_matches_dense_reference_chain() {
+    let cfg = HinmConfig::with_24(8, 0.5);
+    for (seed, act) in [(31u64, Activation::Relu), (32, Activation::Gelu), (33, Activation::None)]
+    {
+        let model = HinmModel::synthetic_ffn(32, 64, &cfg, act, seed).unwrap();
+        let mut backend = NativeCpuBackend::new(Arc::new(model.clone()));
+        let mut rng = Xoshiro256::new(seed + 100);
+        let x = Matrix::randn(32, 8, 1.0, &mut rng);
+        let got = backend.run_batch(&x).unwrap();
+        let want = model.forward_reference(&x);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "native vs reference diff {diff} (act {act:?})");
+    }
+}
+
+#[test]
+fn native_backend_deeper_chain_matches_reference() {
+    let cfg = HinmConfig::with_24(4, 0.5);
+    let mut rng = Xoshiro256::new(51);
+    let dims = [24usize, 16, 32, 8];
+    let mut layers = Vec::new();
+    for w in dims.windows(2) {
+        let (d_in, d_out) = (w[0], w[1]);
+        let m = Matrix::randn(d_out, d_in, 1.0, &mut rng);
+        let p = prune_oneshot(&m, &m.abs(), &cfg).packed;
+        let bias: Vec<f32> = (0..d_out).map(|_| rng.normal() * 0.1).collect();
+        layers.push(HinmLayer::new(p).with_bias(bias).with_activation(Activation::Relu));
+    }
+    let model = HinmModel::new(layers).unwrap();
+    let mut backend = NativeCpuBackend::new(Arc::new(model.clone()));
+    let x = Matrix::randn(24, 5, 1.0, &mut rng);
+    let diff = backend.run_batch(&x).unwrap().max_abs_diff(&model.forward_reference(&x));
+    assert!(diff < 1e-4, "3-layer chain diff {diff}");
+}
+
+fn registry() -> Option<Registry> {
+    match hinm::runtime::open_default_registry() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#})");
+            None
+        }
+    }
+}
+
+#[test]
+fn native_and_pjrt_backends_agree_on_the_packed_ffn() {
+    let Some(reg) = registry() else { return };
+    let spec = reg.artifact("ffn_serve").unwrap().clone();
+    let d = spec.meta["d"] as usize;
+    let d_ff = spec.meta["d_ff"] as usize;
+    let batch = spec.meta["batch"] as usize;
+    let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+
+    let w1 = reg.load_data("ffn_w1_dense").unwrap();
+    let w2 = reg.load_data("ffn_w2_dense").unwrap();
+    let w1 = Matrix::from_vec(d_ff, d, w1.as_f32().unwrap().to_vec());
+    let w2 = Matrix::from_vec(d, d_ff, w2.as_f32().unwrap().to_vec());
+    let p1 = prune_oneshot(&w1, &w1.abs(), &cfg).packed;
+    let p2 = prune_oneshot(&w2, &w2.abs(), &cfg).packed;
+
+    // Same packed tensors on both sides: the native chain mirrors the
+    // artifact's gelu(W1·x) → W2·h (jax.nn.gelu defaults to the tanh
+    // approximation the native Gelu implements).
+    let model = HinmModel::new(vec![
+        HinmLayer::new(p1.clone()).with_activation(Activation::Gelu),
+        HinmLayer::new(p2.clone()),
+    ])
+    .unwrap();
+    let mut native = NativeCpuBackend::new(Arc::new(model));
+
+    let mut fixed = packed_host_tensors(&p1);
+    fixed.extend(packed_host_tensors(&p2));
+    let mut pjrt = match PjrtBackend::new(&spec, &fixed, d, d, batch) {
+        Ok(b) => b,
+        Err(e) => {
+            // Artifacts exist but PJRT itself is stubbed out in this build.
+            eprintln!("SKIP: PJRT backend unavailable ({e:#})");
+            return;
+        }
+    };
+
+    let mut rng = Xoshiro256::new(61);
+    let x = Matrix::randn(d, batch, 0.1, &mut rng);
+    let y_native = native.run_batch(&x).unwrap();
+    let y_pjrt = pjrt.run_batch(&x).unwrap();
+    let diff = y_native.max_abs_diff(&y_pjrt);
+    assert!(diff < 1e-4, "native vs pjrt diff {diff}");
+}

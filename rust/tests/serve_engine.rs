@@ -1,0 +1,349 @@
+//! Engine semantics over a mock `SpmmBackend` — batch assembly/padding,
+//! window anchoring, overflow beyond the batch size, error fan-out,
+//! replica sharing, backpressure, and shutdown draining. None of this
+//! needs PJRT artifacts; it is the unit story the old PJRT-only server
+//! could not tell.
+
+use anyhow::Result;
+use hinm::coordinator::serve::{BackendFactory, BatchServer, ServeConfig};
+use hinm::runtime::SpmmBackend;
+use hinm::tensor::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const D_IN: usize = 4;
+const D_OUT: usize = 2;
+
+/// Mock backend: `y[0][j] = 2 · x[0][j]`, `y[1][j] = 1`. Declares a fixed
+/// batch width (like the PJRT backend), records every padded batch it
+/// executes, and asserts the padding contract.
+struct MockBackend {
+    batch: usize,
+    calls: Arc<AtomicUsize>,
+    seen: Arc<Mutex<Vec<Matrix>>>,
+    fail: bool,
+    delay: Duration,
+}
+
+impl SpmmBackend for MockBackend {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+    fn d_in(&self) -> usize {
+        D_IN
+    }
+    fn d_out(&self) -> usize {
+        D_OUT
+    }
+    fn fixed_batch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        if self.fail {
+            anyhow::bail!("mock backend exploded");
+        }
+        assert_eq!(x.rows, D_IN, "engine must hand the backend d_in rows");
+        assert_eq!(x.cols, self.batch, "engine must pad every batch to the configured size");
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.seen.lock().unwrap().push(x.clone());
+        let b = x.cols;
+        let mut y = Matrix::zeros(D_OUT, b);
+        for j in 0..b {
+            y.data[j] = 2.0 * x.data[j];
+            y.data[b + j] = 1.0;
+        }
+        Ok(y)
+    }
+}
+
+struct Harness {
+    server: BatchServer,
+    calls: Arc<AtomicUsize>,
+    seen: Arc<Mutex<Vec<Matrix>>>,
+}
+
+fn start(cfg: ServeConfig, fail: bool, delay: Duration) -> Harness {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let batch = cfg.batch;
+    let (c2, s2) = (Arc::clone(&calls), Arc::clone(&seen));
+    let factory: BackendFactory = Arc::new(move |_replica| {
+        let b: Box<dyn SpmmBackend> = Box::new(MockBackend {
+            batch,
+            calls: Arc::clone(&c2),
+            seen: Arc::clone(&s2),
+            fail,
+            delay,
+        });
+        Ok(b)
+    });
+    let server = BatchServer::start(factory, cfg).expect("engine start");
+    Harness { server, calls, seen }
+}
+
+/// Request whose id round-trips through the mock: column = [id; 4],
+/// response must be [2·id, 1].
+fn fire(h: &hinm::coordinator::ServerHandle, id: f32) -> Result<Vec<f32>> {
+    h.infer(vec![id; D_IN])
+}
+
+#[test]
+fn batches_are_padded_and_fanned_out_per_request() {
+    let h = start(ServeConfig::new(4, Duration::from_millis(50)), false, Duration::ZERO);
+    let handle = h.server.handle.clone();
+    std::thread::scope(|s| {
+        for id in 1..=3 {
+            let hd = handle.clone();
+            s.spawn(move || {
+                let y = fire(&hd, id as f32).unwrap();
+                assert_eq!(y, vec![2.0 * id as f32, 1.0], "request {id} got someone else's answer");
+            });
+        }
+    });
+    let metrics = Arc::clone(&h.server.metrics);
+    h.server.stop();
+    // 3 requests < batch 4 → every recorded batch is padded to 4 columns;
+    // exactly 3 columns (across however many flushes) carry request data,
+    // the rest are zero padding.
+    let seen = h.seen.lock().unwrap();
+    let mut nonzero_cols = 0;
+    for m in seen.iter() {
+        assert_eq!(m.cols, 4);
+        for j in 0..m.cols {
+            if (0..m.rows).any(|i| m.data[i * m.cols + j] != 0.0) {
+                nonzero_cols += 1;
+            }
+        }
+    }
+    assert_eq!(nonzero_cols, 3, "exactly the 3 real requests occupy columns");
+    assert_eq!(metrics.total_requests(), 3);
+}
+
+#[test]
+fn lone_request_window_is_anchored_at_arrival() {
+    // Pre-fix, the dispatcher re-armed an already-elapsed deadline while
+    // idle, so a lone request could flush nearly immediately OR the loop
+    // busy-spun. Post-fix the window *starts* at the request: a lone
+    // request on an idle server waits ≈ max_wait (batch never fills).
+    let max_wait = Duration::from_millis(300);
+    let h = start(ServeConfig::new(8, max_wait), false, Duration::ZERO);
+    let t0 = Instant::now();
+    let y = fire(&h.server.handle, 5.0).unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(y, vec![10.0, 1.0]);
+    assert!(
+        elapsed >= Duration::from_millis(250),
+        "window must stay open ~max_wait for a lone request, flushed after {elapsed:?}"
+    );
+    assert!(elapsed < Duration::from_secs(10), "flush far beyond the window: {elapsed:?}");
+    h.server.stop();
+}
+
+#[test]
+fn full_batch_flushes_without_waiting_for_the_window() {
+    // With a 10s window, only the batch-full condition can explain a fast
+    // response for `batch` concurrent requests.
+    let h = start(ServeConfig::new(4, Duration::from_secs(10)), false, Duration::ZERO);
+    let handle = h.server.handle.clone();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for id in 1..=4 {
+            let hd = handle.clone();
+            s.spawn(move || {
+                let y = fire(&hd, id as f32).unwrap();
+                assert_eq!(y[0], 2.0 * id as f32);
+            });
+        }
+    });
+    assert!(t0.elapsed() < Duration::from_secs(5), "full batch must short-circuit the window");
+    h.server.stop();
+}
+
+#[test]
+fn overflow_beyond_batch_runs_multiple_flushes() {
+    let h = start(ServeConfig::new(2, Duration::from_millis(10)), false, Duration::ZERO);
+    let handle = h.server.handle.clone();
+    std::thread::scope(|s| {
+        for id in 1..=5 {
+            let hd = handle.clone();
+            s.spawn(move || {
+                let y = fire(&hd, id as f32).unwrap();
+                assert_eq!(y, vec![2.0 * id as f32, 1.0]);
+            });
+        }
+    });
+    let metrics = Arc::clone(&h.server.metrics);
+    h.server.stop();
+    let calls = h.calls.load(Ordering::SeqCst);
+    assert!((3..=5).contains(&calls), "5 requests at batch 2 need 3–5 flushes, got {calls}");
+    assert_eq!(metrics.total_requests(), 5);
+}
+
+#[test]
+fn backend_error_fans_out_to_every_request_in_the_batch() {
+    let h = start(ServeConfig::new(4, Duration::from_millis(20)), true, Duration::ZERO);
+    let handle = h.server.handle.clone();
+    std::thread::scope(|s| {
+        for id in 1..=3 {
+            let hd = handle.clone();
+            s.spawn(move || {
+                let err = fire(&hd, id as f32).unwrap_err();
+                assert!(
+                    format!("{err:#}").contains("mock backend exploded"),
+                    "request {id} must see the backend error, got: {err:#}"
+                );
+            });
+        }
+    });
+    let failed = h.server.metrics.replica_stats(0).errors;
+    assert!(failed >= 1, "failed batches must be counted");
+    assert_eq!(h.server.metrics.total_requests(), 0, "errors are not successes");
+    h.server.stop();
+}
+
+#[test]
+fn shutdown_drains_pending_requests_promptly() {
+    // Regression for the old `stop()`: the stop signal was polled once per
+    // window and one handle-sender clone kept the channel alive, so stop
+    // could stall a full max_wait and queued requests were silently
+    // dropped. Now: enqueue under a 10s window, stop immediately — every
+    // client must still get an answer, and stop must not wait out the
+    // window.
+    let h = start(ServeConfig::new(8, Duration::from_secs(10)), false, Duration::ZERO);
+    let handle = h.server.handle.clone();
+    let clients: Vec<_> = (1..=3)
+        .map(|id| {
+            let hd = handle.clone();
+            std::thread::spawn(move || fire(&hd, id as f32))
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(100)); // let them enqueue
+    let t0 = Instant::now();
+    h.server.stop();
+    assert!(t0.elapsed() < Duration::from_secs(5), "stop must not wait out the batch window");
+    for c in clients {
+        let y = c.join().unwrap().expect("queued request must be answered on shutdown");
+        assert_eq!(y[1], 1.0);
+    }
+    // New submissions after stop fail fast.
+    let err = fire(&handle, 9.0).unwrap_err();
+    assert!(format!("{err:#}").contains("server stopped"));
+}
+
+#[test]
+fn replicas_share_one_queue_and_metrics_add_up() {
+    let h = start(
+        ServeConfig::new(1, Duration::from_millis(1)).with_replicas(4),
+        false,
+        Duration::from_micros(200),
+    );
+    let handle = h.server.handle.clone();
+    std::thread::scope(|s| {
+        for id in 1..=32 {
+            let hd = handle.clone();
+            s.spawn(move || {
+                let y = fire(&hd, id as f32).unwrap();
+                assert_eq!(y[0], 2.0 * id as f32);
+            });
+        }
+    });
+    assert_eq!(h.server.metrics.total_requests(), 32);
+    let per_replica: usize =
+        (0..4).map(|r| h.server.metrics.replica_stats(r).requests).sum();
+    assert_eq!(per_replica, 32, "per-replica counts must sum to the aggregate");
+    h.server.stop();
+}
+
+#[test]
+fn bounded_queue_applies_backpressure_without_losing_requests() {
+    // Queue depth 2 with a slow backend: submitters block instead of
+    // growing an unbounded queue, and every request completes.
+    let h = start(
+        ServeConfig::new(1, Duration::from_millis(1)).with_queue_depth(2),
+        false,
+        Duration::from_millis(2),
+    );
+    let handle = h.server.handle.clone();
+    std::thread::scope(|s| {
+        for id in 1..=16 {
+            let hd = handle.clone();
+            s.spawn(move || {
+                let y = fire(&hd, id as f32).unwrap();
+                assert_eq!(y[0], 2.0 * id as f32);
+            });
+        }
+    });
+    assert_eq!(h.server.metrics.total_requests(), 16);
+    h.server.stop();
+}
+
+#[test]
+fn replica_startup_failure_surfaces_and_joins_cleanly() {
+    let factory: BackendFactory = Arc::new(|replica| {
+        if replica == 1 {
+            anyhow::bail!("replica {replica} refused to start");
+        }
+        let b: Box<dyn SpmmBackend> = Box::new(MockBackend {
+            batch: 2,
+            calls: Arc::new(AtomicUsize::new(0)),
+            seen: Arc::new(Mutex::new(Vec::new())),
+            fail: false,
+            delay: Duration::ZERO,
+        });
+        Ok(b)
+    });
+    let err = match BatchServer::start(
+        factory,
+        ServeConfig::new(2, Duration::from_millis(1)).with_replicas(2),
+    ) {
+        Ok(_) => panic!("startup must fail when a replica's backend fails"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("refused to start"), "got: {err:#}");
+}
+
+#[test]
+fn worker_panic_fails_requests_fast_instead_of_hanging() {
+    // A backend that *panics* (as opposed to returning Err) kills its
+    // worker; the engine must fail clients fast, not strand them on an
+    // open queue forever.
+    struct PanickingBackend;
+    impl SpmmBackend for PanickingBackend {
+        fn name(&self) -> &'static str {
+            "panic"
+        }
+        fn d_in(&self) -> usize {
+            D_IN
+        }
+        fn d_out(&self) -> usize {
+            D_OUT
+        }
+        fn run_batch(&mut self, _x: &Matrix) -> Result<Matrix> {
+            panic!("backend blew up");
+        }
+    }
+    let factory: BackendFactory = Arc::new(|_replica| {
+        let b: Box<dyn SpmmBackend> = Box::new(PanickingBackend);
+        Ok(b)
+    });
+    let server =
+        BatchServer::start(factory, ServeConfig::new(2, Duration::from_millis(1))).expect("start");
+    let handle = server.handle.clone();
+    // Rides into the panicking flush → response sender drops → error.
+    assert!(handle.infer(vec![0.0; D_IN]).is_err());
+    // Queue is closed (or drained) by the worker's unwind guard → errors,
+    // never blocks.
+    assert!(handle.infer(vec![1.0; D_IN]).is_err());
+    server.stop();
+}
+
+#[test]
+fn wrong_input_size_is_rejected_client_side() {
+    let h = start(ServeConfig::new(2, Duration::from_millis(1)), false, Duration::ZERO);
+    assert!(h.server.handle.infer(vec![0.0; D_IN + 1]).is_err());
+    h.server.stop();
+}

@@ -1,7 +1,8 @@
 //! Batch-server integration over the real PJRT executor + ffn_serve
 //! artifact: correctness under concurrency, padding of partial batches,
 //! failure propagation, and clean shutdown. Skipped when artifacts are
-//! absent.
+//! absent (and the engine itself refuses to start when PJRT is stubbed,
+//! which the startup-failure path covers).
 
 use hinm::coordinator::serve::{packed_host_tensors, BatchServer, HostTensor, ServeConfig};
 use hinm::runtime::Registry;
@@ -26,7 +27,7 @@ struct Setup {
     d: usize,
 }
 
-fn start(reg: &Registry) -> Setup {
+fn start(reg: &Registry) -> Option<Setup> {
     let spec = reg.artifact("ffn_serve").unwrap().clone();
     let d = spec.meta["d"] as usize;
     let d_ff = spec.meta["d_ff"] as usize;
@@ -40,20 +41,23 @@ fn start(reg: &Registry) -> Setup {
     let p2 = prune_oneshot(&w2, &w2.abs(), &cfg).packed;
     let mut fixed = packed_host_tensors(&p1);
     fixed.extend(packed_host_tensors(&p2));
-    let server = BatchServer::start(
+    match BatchServer::start_pjrt(
         spec,
         fixed,
         d,
         d,
-        ServeConfig { batch, max_wait: Duration::from_millis(1) },
-    )
-    .unwrap();
-    Setup { server, p1, p2, d }
+        ServeConfig::new(batch, Duration::from_millis(1)),
+    ) {
+        Ok(server) => Some(Setup { server, p1, p2, d }),
+        Err(e) => {
+            eprintln!("SKIP: PJRT backend unavailable ({e:#})");
+            None
+        }
+    }
 }
 
 fn gelu(x: f32) -> f32 {
-    let x3 = x * x * x;
-    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x3)) as f64).tanh() as f32)
+    hinm::models::chain::gelu(x)
 }
 
 fn rust_ffn(p1: &HinmPacked, p2: &HinmPacked, x: &[f32]) -> Vec<f32> {
@@ -66,7 +70,7 @@ fn rust_ffn(p1: &HinmPacked, p2: &HinmPacked, x: &[f32]) -> Vec<f32> {
 #[test]
 fn single_request_partial_batch_is_padded_and_correct() {
     let Some(reg) = registry() else { return };
-    let s = start(&reg);
+    let Some(s) = start(&reg) else { return };
     let x: Vec<f32> = (0..s.d).map(|j| (j as f32 * 0.02).cos()).collect();
     let y = s.server.handle.infer(x.clone()).unwrap();
     let y_ref = rust_ffn(&s.p1, &s.p2, &x);
@@ -78,7 +82,7 @@ fn single_request_partial_batch_is_padded_and_correct() {
 #[test]
 fn concurrent_clients_get_their_own_answers() {
     let Some(reg) = registry() else { return };
-    let s = start(&reg);
+    let Some(s) = start(&reg) else { return };
     let d = s.d;
     let handles: Vec<_> = (0..24)
         .map(|i| {
@@ -95,35 +99,40 @@ fn concurrent_clients_get_their_own_answers() {
         let diff = y.iter().zip(&y_ref).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
         assert!(diff < 2e-3, "concurrent response mismatch: {diff}");
     }
-    assert_eq!(s.server.metrics.lock().unwrap().count(), 24);
+    assert_eq!(s.server.metrics.total_requests(), 24);
     s.server.stop();
 }
 
 #[test]
 fn wrong_input_size_is_rejected_client_side() {
     let Some(reg) = registry() else { return };
-    let s = start(&reg);
+    let Some(s) = start(&reg) else { return };
     assert!(s.server.handle.infer(vec![0.0; 3]).is_err());
     s.server.stop();
 }
 
 #[test]
-fn startup_failure_surfaces_cleanly() {
+fn bad_fixed_inputs_fail_the_first_request_not_hang() {
     let Some(reg) = registry() else { return };
-    // Fixed inputs with a wrong shape → the executor's validation must fail
-    // the *first request*, not hang: startup succeeds (shapes are only
-    // checked at run time), so submit one request and expect Err.
+    // Fixed inputs with a wrong shape: compilation succeeds (shapes are
+    // only validated at run time), so the server starts; the *first
+    // request* must come back as an error rather than hang.
     let spec = reg.artifact("ffn_serve").unwrap().clone();
     let d = spec.meta["d"] as usize;
     let bad_fixed = vec![HostTensor::F32(vec![0.0; 8], vec![8])];
-    let server = BatchServer::start(
+    let server = match BatchServer::start_pjrt(
         spec,
         bad_fixed,
         d,
         d,
-        ServeConfig { batch: 4, max_wait: Duration::from_millis(1) },
-    )
-    .unwrap();
+        ServeConfig::new(4, Duration::from_millis(1)),
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: PJRT backend unavailable ({e:#})");
+            return;
+        }
+    };
     let err = server.handle.infer(vec![0.0; d]);
     assert!(err.is_err(), "bad fixed inputs must fail the request");
     server.stop();

@@ -1,0 +1,291 @@
+//! Host-side stub of the `xla` crate (xla-rs) API subset used by `hinm`.
+//!
+//! The offline build environment has no libxla/PJRT to link, but the
+//! runtime layer's *host* functionality — literals as typed shaped buffers,
+//! shape/dtype introspection, tuple decomposition — is ordinary Rust. This
+//! crate implements that for real, so everything up to the device boundary
+//! (the batch server's host tensors, the trainer's parameter plumbing, the
+//! literal round-trip tests) builds and runs; only the execution entry
+//! points (`PjRtClient::cpu`, `compile`, `execute`) report that PJRT is
+//! unavailable. The artifact-gated integration tests already skip when
+//! `make artifacts` has not run, so the stub keeps the full non-PJRT test
+//! suite green.
+//!
+//! Swapping in the real crate is a one-line change in `rust/Cargo.toml`
+//! (point the `xla` dependency at xla-rs); the signatures here are
+//! compatible with the subset `hinm` calls.
+
+use std::fmt;
+
+/// Stub error type (the real crate's `Error` carries status codes).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error(s.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const NO_PJRT: &str = "PJRT unavailable: built against the in-repo `xla` stub (rust/xla-stub); link the real xla crate to compile/execute AOT artifacts";
+
+/// Element types `hinm` produces, plus enough of the real enum that
+/// downstream wildcard match arms stay reachable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: a typed buffer plus its dimensions.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Shape of an array (non-tuple) literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Rust scalar types that map onto an XLA element type.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn rank1_literal(data: &[Self]) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn rank1_literal(data: &[Self]) -> Literal {
+        Literal { data: Data::F32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error::msg("literal element type is not F32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn rank1_literal(data: &[Self]) -> Literal {
+        Literal { data: Data::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error::msg("literal element type is not S32")),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::rank1_literal(data)
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { data: Data::F32(vec![x]), dims: Vec::new() }
+    }
+
+    /// Tuple literal (as produced by multi-output computations).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { data: Data::Tuple(elements), dims: Vec::new() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::msg(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the buffer out as a host `Vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.data {
+            Data::F32(_) => Ok(ElementType::F32),
+            Data::I32(_) => Ok(ElementType::S32),
+            Data::Tuple(_) => Err(Error::msg("tuple literal has no element type")),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty()? })
+    }
+
+    /// Decompose a tuple literal; a non-tuple comes back as a singleton.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Ok(vec![self]),
+        }
+    }
+}
+
+/// Parsed HLO module. The stub validates the file exists and is readable
+/// (so "missing artifact" errors surface exactly as with the real crate)
+/// but retains nothing compilable.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT CPU client — construction always fails in the stub, which the
+/// callers in `hinm::runtime` surface as a clean "artifacts cannot run
+/// here" error on the PJRT path only.
+#[derive(Clone, Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::msg(NO_PJRT))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::msg(NO_PJRT))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::msg(NO_PJRT))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::msg(NO_PJRT))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_shape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.element_type(), ElementType::F32);
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+    }
+
+    #[test]
+    fn i32_literal_and_type_mismatch() {
+        let lit = Literal::vec1(&[5i32, -7]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![5, -7]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.ty().unwrap(), ElementType::S32);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_element_count() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_has_empty_dims() {
+        let s = Literal::scalar(3.5);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn tuple_decomposes_and_singleton_passthrough() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![2]);
+        let single = Literal::scalar(9.0).to_tuple().unwrap();
+        assert_eq!(single.len(), 1);
+    }
+
+    #[test]
+    fn pjrt_entry_points_report_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+}
