@@ -5,9 +5,15 @@
 //! The "vs 1 replica" column is the scaling acceptance check: on a ≥4-core
 //! machine, 4 replicas should deliver ≥2× the aggregate req/s of 1 replica
 //! at the same batch size. `--smoke` runs a seconds-long CI configuration.
+//!
+//! A second mode (`--http`, always included in `--smoke`) drives the same
+//! closed loop through the real socket path — `HttpFront` on an ephemeral
+//! port, JSON bodies, keep-alive `HttpClient`s — so the serialization +
+//! TCP overhead over the in-process engine is measured, not guessed.
 
 use hinm::coordinator::{BatchServer, ServeConfig};
 use hinm::models::{Activation, HinmModel};
+use hinm::net::{protocol, HttpClient, HttpFront};
 use hinm::sparsity::HinmConfig;
 use hinm::util::bench::Table;
 use hinm::util::cli::Cli;
@@ -24,6 +30,7 @@ fn main() {
         .opt("replicas", Some("1,2,4"), "replica counts to sweep")
         .opt("batches", Some("8,32"), "batch sizes to sweep")
         .opt("max-wait-us", Some("200"), "batch window, µs")
+        .flag("http", "also run the closed loop through the real HTTP/TCP socket path")
         .flag("smoke", "tiny CI configuration (small model, few requests)")
         .flag("bench", "(ignored; injected by `cargo bench`)");
     let a = cli.parse_env();
@@ -109,4 +116,64 @@ fn main() {
     }
     table.print();
     println!("\n(\"vs 1 replica\" = aggregate throughput scaling at the same batch size.)");
+
+    if smoke || a.flag("http") {
+        let replicas = *replica_counts.last().unwrap_or(&2);
+        let batch = *batch_sizes.last().unwrap_or(&4);
+        serve_http_mode(&model, d, replicas, batch, max_wait, n_requests, n_clients);
+    }
+}
+
+/// Closed-loop req/s through the real socket path: `HttpFront` on an
+/// ephemeral port, one keep-alive `HttpClient` per closed-loop client,
+/// JSON request/response bodies. The req/s gap versus the in-process table
+/// above is the HTTP+JSON serving overhead.
+fn serve_http_mode(
+    model: &Arc<HinmModel>,
+    d: usize,
+    replicas: usize,
+    batch: usize,
+    max_wait: Duration,
+    n_requests: usize,
+    n_clients: usize,
+) {
+    let server = BatchServer::start_native(
+        Arc::clone(model),
+        ServeConfig::new(batch, max_wait).with_replicas(replicas),
+    )
+    .expect("server start");
+    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, n_clients.min(16))
+        .expect("http front start");
+    let addr = front.local_addr();
+    let per_client = (n_requests / n_clients).max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            s.spawn(move || {
+                let mut client = HttpClient::connect(addr).expect("connect");
+                for i in 0..per_client {
+                    let x: Vec<f32> = (0..d)
+                        .map(|j| ((c * 31 + i * 7 + j) % 17) as f32 * 0.05 - 0.4)
+                        .collect();
+                    let body = protocol::InferRequest::new(x).to_json().compact();
+                    let (status, resp) =
+                        client.post_json("/v1/infer", &body).expect("http request");
+                    assert_eq!(status, 200, "unexpected response: {resp}");
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let served = per_client * n_clients;
+    let pct = server.metrics.aggregate_latency().percentiles(&[50.0, 99.0]);
+    println!(
+        "\nserve_http ({replicas} replicas, batch {batch}): {served} req over {n_clients} TCP \
+         clients in {:.1} ms → {:.0} req/s | engine p50 {:.0} µs p99 {:.0} µs",
+        wall * 1e3,
+        served as f64 / wall,
+        pct[0],
+        pct[1],
+    );
+    front.stop();
+    server.stop();
 }

@@ -14,6 +14,7 @@ use crate::sparsity::HinmConfig;
 use anyhow::Result;
 
 #[derive(Clone, Debug)]
+/// Configuration for the gradual prune → fine-tune schedule (Tab. 2).
 pub struct GradualConfig {
     /// Target HiNM config at the end of the schedule.
     pub target: HinmConfig,
@@ -23,13 +24,16 @@ pub struct GradualConfig {
     pub total_steps: usize,
     /// Fine-tune SGD steps between mask updates.
     pub ft_steps_per_stage: usize,
+    /// Fine-tune learning rate.
     pub ft_lr: f32,
     /// Use gyro-permutation at each mask update (false = VENOM-style).
     pub permute: bool,
+    /// Permutation tuning used when `permute` is on.
     pub gyro: GyroParams,
 }
 
 impl GradualConfig {
+    /// Defaults (3 vector steps of 5, short fine-tunes) toward `target`.
     pub fn new(target: HinmConfig) -> Self {
         Self {
             target,
@@ -46,6 +50,7 @@ impl GradualConfig {
 /// Per-stage record of a gradual run.
 #[derive(Clone, Debug)]
 pub struct StageReport {
+    /// The schedule point this stage executed.
     pub step: GradualStep,
     /// Weighted retention across pruned tensors at this stage.
     pub retention: f64,

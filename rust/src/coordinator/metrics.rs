@@ -2,6 +2,7 @@
 //! bounded-memory latency percentiles, a throughput meter, and the
 //! per-replica + aggregate views the sharded batch server reports.
 
+use super::serve::Priority;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -34,6 +35,7 @@ impl LatencyRecorder {
     /// Default retained-window capacity (samples).
     pub const DEFAULT_CAP: usize = 65_536;
 
+    /// Recorder with the default retained-window capacity.
     pub fn new() -> Self {
         Self::with_capacity(Self::DEFAULT_CAP)
     }
@@ -43,10 +45,12 @@ impl LatencyRecorder {
         Self { samples_us: Vec::new(), head: 0, total: 0, sum_us: 0.0, cap: cap.max(1) }
     }
 
+    /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
         self.record_us(d.as_secs_f64() * 1e6);
     }
 
+    /// Record one latency sample given in microseconds.
     pub fn record_us(&mut self, us: f64) {
         self.total += 1;
         self.sum_us += us;
@@ -92,10 +96,12 @@ impl LatencyRecorder {
             .collect()
     }
 
+    /// One percentile (in %) over the retained window.
     pub fn percentile(&self, p: f64) -> f64 {
         self.percentiles(&[p])[0]
     }
 
+    /// One-line `n/mean/p50/p95/p99` summary.
     pub fn summary(&self) -> String {
         let pct = self.percentiles(&[50.0, 95.0, 99.0]);
         format!(
@@ -123,23 +129,57 @@ impl Default for Throughput {
 }
 
 impl Throughput {
+    /// Meter starting now with zero items.
     pub fn new() -> Self {
         Self { start: std::time::Instant::now(), items: 0 }
     }
+    /// Count `n` completed items.
     pub fn add(&mut self, n: usize) {
         self.items += n;
     }
+    /// Items per second since construction.
     pub fn per_sec(&self) -> f64 {
         self.items as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
     }
+    /// Total items counted.
     pub fn items(&self) -> usize {
         self.items
+    }
+}
+
+/// Scheduler-level counters: how many requests each [`Priority`] class has
+/// completed, and how many were answered with a timeout error instead of
+/// being computed (split by *where* the expiry was detected).
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerStats {
+    /// Successfully served requests, indexed by [`Priority::index`]
+    /// (High=0, Normal=1, Low=2).
+    pub served: [usize; 3],
+    /// Requests rejected at submission because their deadline had already
+    /// passed; they never entered the queue.
+    pub expired_at_enqueue: usize,
+    /// Requests whose deadline passed while they were queued (or while the
+    /// batch window was open); answered with a timeout error, never
+    /// executed.
+    pub expired_in_queue: usize,
+}
+
+impl SchedulerStats {
+    /// Served count for one priority class.
+    pub fn served_for(&self, p: Priority) -> usize {
+        self.served[p.index()]
+    }
+
+    /// Total requests answered with a timeout error (both expiry points).
+    pub fn expired_total(&self) -> usize {
+        self.expired_at_enqueue + self.expired_in_queue
     }
 }
 
 /// Per-replica counters for the sharded batch server.
 #[derive(Clone, Debug, Default)]
 pub struct ReplicaStats {
+    /// Latency over this replica's successful requests.
     pub latency: LatencyRecorder,
     /// Batches flushed (successful executions).
     pub batches: usize,
@@ -155,17 +195,24 @@ pub struct ReplicaStats {
 /// flush; locks are never nested, so replicas never contend on each other.
 #[derive(Debug)]
 pub struct EngineMetrics {
+    /// Latency over every successful request, across all replicas.
     pub aggregate: Mutex<LatencyRecorder>,
+    /// Successful-request throughput since engine start.
     pub throughput: Mutex<Throughput>,
+    /// One counter block per worker replica.
     pub replicas: Vec<Mutex<ReplicaStats>>,
+    /// Per-priority served counts and deadline-expiry counters.
+    pub scheduler: Mutex<SchedulerStats>,
 }
 
 impl EngineMetrics {
+    /// Fresh metrics for an engine with `replicas` workers.
     pub fn new(replicas: usize) -> Self {
         Self {
             aggregate: Mutex::new(LatencyRecorder::new()),
             throughput: Mutex::new(Throughput::new()),
             replicas: (0..replicas).map(|_| Mutex::new(ReplicaStats::default())).collect(),
+            scheduler: Mutex::new(SchedulerStats::default()),
         }
     }
 
@@ -184,17 +231,33 @@ impl EngineMetrics {
         self.replicas[replica].lock().unwrap().clone()
     }
 
+    /// Snapshot of the scheduler counters (per-priority served + expiry).
+    pub fn scheduler_stats(&self) -> SchedulerStats {
+        self.scheduler.lock().unwrap().clone()
+    }
+
     /// Successful requests per second since the engine started.
     pub fn requests_per_sec(&self) -> f64 {
         self.throughput.lock().unwrap().per_sec()
     }
 
+    /// Multi-line human-readable report: aggregate latency/throughput,
+    /// per-priority + expiry counts, then one line per replica.
     pub fn summary(&self) -> String {
         let mut s = format!(
             "aggregate: {} | {:.0} req/s",
             self.aggregate_latency().summary(),
             self.requests_per_sec()
         );
+        let sched = self.scheduler_stats();
+        s.push_str(&format!(
+            "\n  priorities: high={} normal={} low={} | expired: {} at enqueue, {} in queue",
+            sched.served_for(Priority::High),
+            sched.served_for(Priority::Normal),
+            sched.served_for(Priority::Low),
+            sched.expired_at_enqueue,
+            sched.expired_in_queue
+        ));
         for (i, m) in self.replicas.iter().enumerate() {
             let st = m.lock().unwrap();
             s.push_str(&format!(

@@ -1,6 +1,6 @@
 //! L3 coordinator: the compression pipeline (prune → permute → pack), the
-//! sharded multi-backend inference engine, the Rust-driven fine-tune
-//! trainer, and request metrics.
+//! sharded multi-backend inference engine with priority/deadline
+//! scheduling, the Rust-driven fine-tune trainer, and request metrics.
 
 pub mod gradual;
 pub mod metrics;
@@ -8,7 +8,9 @@ pub mod pipeline;
 pub mod serve;
 pub mod trainer;
 
-pub use metrics::{EngineMetrics, LatencyRecorder, ReplicaStats, Throughput};
+pub use metrics::{EngineMetrics, LatencyRecorder, ReplicaStats, SchedulerStats, Throughput};
 pub use pipeline::{compress_layer, run_pipeline, weighted_retention, LayerJob, Method, PipelineConfig};
-pub use serve::{BackendFactory, BatchServer, ServeConfig, ServerHandle};
+pub use serve::{
+    cached_factory, BackendFactory, BatchServer, InferError, Priority, ServeConfig, ServerHandle,
+};
 pub use trainer::{Corpus, LmTrainer};

@@ -31,6 +31,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Parse a legacy arm name (`gyro`, `noperm`, `v1`, `v2`).
     pub fn parse(s: &str) -> Option<Method> {
         match s {
             "gyro" | "hinm" => Some(Method::HinmGyro),
@@ -40,6 +41,7 @@ impl Method {
             _ => None,
         }
     }
+    /// The paper's arm label (`HiNM`, `HiNM-V1`, …).
     pub fn label(&self) -> &'static str {
         match self {
             Method::HinmGyro => "HiNM",
@@ -68,12 +70,16 @@ impl From<Method> for StrategySpec {
 /// A layer queued for compression.
 #[derive(Clone, Debug)]
 pub struct LayerJob {
+    /// Layer name (reporting only).
     pub name: String,
+    /// Dense weights to compress.
     pub weights: Matrix,
+    /// Saliency grid (same shape as `weights`).
     pub saliency: Matrix,
 }
 
 impl LayerJob {
+    /// Build a job by scoring `w` with a saliency estimator.
     pub fn from_saliency<S: Saliency>(name: &str, w: Matrix, estimator: &S) -> Self {
         let saliency = estimator.score(&w);
         Self { name: name.to_string(), weights: w, saliency }
@@ -83,15 +89,20 @@ impl LayerJob {
 /// Compression output for one layer.
 #[derive(Clone, Debug)]
 pub struct CompressedLayer {
+    /// Layer name, copied from the job.
     pub name: String,
+    /// Packed layer + retention statistics.
     pub result: HinmResult,
+    /// Output-channel permutation the pipeline applied.
     pub ocp_perm: Vec<usize>,
+    /// Wall-clock compression time for this layer.
     pub elapsed_ms: f64,
 }
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
+    /// Target HiNM sparsity configuration.
     pub cfg: HinmConfig,
     /// Which OCP×ICP pair to run (any registry spec; `Method` coerces).
     pub method: StrategySpec,
@@ -107,6 +118,7 @@ pub struct PipelineConfig {
 }
 
 impl PipelineConfig {
+    /// Config with default tuning for a sparsity target + method.
     pub fn new(cfg: HinmConfig, method: impl Into<StrategySpec>) -> Self {
         Self {
             cfg,

@@ -1,7 +1,7 @@
 //! Sharded batched-inference engine over swappable SpMM backends.
 //!
 //! A vLLM-router-style request path: clients submit single activations
-//! into one *bounded* queue (a full queue blocks the submitter —
+//! into one *bounded priority queue* (a full queue blocks the submitter —
 //! backpressure, not unbounded growth); `replicas` worker threads each own
 //! a [`SpmmBackend`] instance built once at startup (weights materialized
 //! per worker, never re-uploaded per batch) and pull batches off the
@@ -14,18 +14,28 @@
 //! fanned back to the waiting clients; latency is recorded per replica and
 //! in aggregate.
 //!
+//! **Scheduling.** Each request carries a [`Priority`] and an optional
+//! deadline. The queue pops strictly by `(priority, arrival)`: a queued
+//! High request always runs before a queued Normal or Low one, and
+//! requests of equal priority run in arrival order. A request whose
+//! deadline has passed is answered with [`InferError::DeadlineExpired`]
+//! *instead of being computed* — checked at enqueue (including while
+//! blocked on a full queue), at pop, and once more just before batch
+//! assembly (see `DESIGN.md` §13 for the exact expiry points).
+//!
 //! Shutdown closes the queue, which wakes every worker and blocked
-//! submitter: already-queued requests are drained and answered, new
-//! submissions fail with "server stopped", and `stop()` returns once all
-//! workers have joined.
+//! submitter: already-queued requests are drained and answered (expired
+//! ones with a timeout error), new submissions fail with
+//! [`InferError::Stopped`], and `stop()` returns once all workers have
+//! joined.
 
 use super::metrics::EngineMetrics;
 use crate::models::chain::HinmModel;
-use crate::runtime::backend::SpmmBackend;
+use crate::runtime::backend::{CacheStats, CachedBackend, SpmmBackend};
 use crate::runtime::registry::ArtifactSpec;
 use crate::tensor::Matrix;
 use anyhow::{Context, Result};
-use std::collections::VecDeque;
+use std::collections::BinaryHeap;
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -33,12 +43,131 @@ use std::time::{Duration, Instant};
 pub use crate::runtime::backend::{packed_host_tensors, HostTensor, NativeCpuBackend, PjrtBackend};
 
 // ---------------------------------------------------------------------------
-// Bounded MPMC queue (condvar-based; std has no bounded multi-consumer
-// channel). Closing wakes all waiters; pops drain remaining items first.
+// Scheduling types
 // ---------------------------------------------------------------------------
 
+/// Scheduling class of a request. The queue always serves a higher
+/// priority before a lower one; within one priority, arrival order wins.
+///
+/// Variants are declared lowest-first so the derived `Ord` gives
+/// `Low < Normal < High`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Best-effort: runs only when no Normal/High work is queued.
+    Low,
+    /// The default class; what [`ServerHandle::infer`] submits.
+    Normal,
+    /// Latency-critical: jumps ahead of everything already queued at
+    /// Normal/Low (it does not preempt a batch that is already executing).
+    High,
+}
+
+impl Priority {
+    /// All priorities, highest first (display/reporting order).
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Wire/CLI name: `"high"`, `"normal"`, or `"low"`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Parse the wire/CLI name (case-sensitive, lowercase).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    /// Dense index for per-priority counters: High=0, Normal=1, Low=2
+    /// (matches [`Priority::ALL`]).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+/// Why an inference request failed. The HTTP front maps these onto status
+/// codes (`DeadlineExpired` → 504, `Stopped` → 503, `BadRequest` → 400,
+/// `Backend` → 500).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InferError {
+    /// The deadline passed before the request was executed; the backend
+    /// never saw it.
+    DeadlineExpired,
+    /// The backend failed while executing the batch carrying this request.
+    Backend(String),
+    /// The server stopped (or a worker died) before the request was
+    /// answered.
+    Stopped,
+    /// The request was malformed (e.g. wrong activation length) and was
+    /// rejected before queuing.
+    BadRequest(String),
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::DeadlineExpired => write!(f, "deadline expired before execution (timeout)"),
+            InferError::Backend(m) => write!(f, "{m}"),
+            InferError::Stopped => write!(f, "server stopped"),
+            InferError::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+// ---------------------------------------------------------------------------
+// Bounded priority queue (condvar-based; std has no bounded multi-consumer
+// channel). A binary heap keyed by (priority, arrival seq): pops return the
+// highest queued priority, FIFO within a priority. Closing wakes all
+// waiters; pops drain remaining items first.
+// ---------------------------------------------------------------------------
+
+/// Heap entry: max-heap order = higher priority first, then *lower*
+/// arrival sequence first (FIFO within a priority class).
+struct HeapEntry<T> {
+    pri: Priority,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.pri == other.pri && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for HeapEntry<T> {}
+
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: compare priority ascending (so High is
+        // greatest), then invert the sequence comparison so the *earliest*
+        // arrival is greatest within a class.
+        self.pri.cmp(&other.pri).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
 struct QueueState<T> {
-    items: VecDeque<T>,
+    items: BinaryHeap<HeapEntry<T>>,
+    next_seq: u64,
     closed: bool,
 }
 
@@ -49,43 +178,75 @@ struct BoundedQueue<T> {
     cap: usize,
 }
 
+/// Why a push did not enqueue; carries the item back to the caller.
+enum PushRejected<T> {
+    /// The queue was closed (server stopping).
+    Closed(T),
+    /// The push deadline passed while blocked on a full queue.
+    Expired(T),
+}
+
 impl<T> BoundedQueue<T> {
     fn new(cap: usize) -> Self {
         Self {
-            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState {
+                items: BinaryHeap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             cap: cap.max(1),
         }
     }
 
-    /// Blocking push (backpressure). Returns the item back if closed.
-    fn push(&self, item: T) -> Result<(), T> {
+    /// Blocking push (backpressure), bounded by an optional `deadline`: a
+    /// deadline-bearing request must not wait out a long backpressure
+    /// stall only to be expired later — it fails fast once its deadline
+    /// passes while the queue is full.
+    fn push(
+        &self,
+        pri: Priority,
+        item: T,
+        deadline: Option<Instant>,
+    ) -> Result<(), PushRejected<T>> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
-                return Err(item);
+                return Err(PushRejected::Closed(item));
             }
             if st.items.len() < self.cap {
                 break;
             }
-            st = self.not_full.wait(st).unwrap();
+            match deadline {
+                None => st = self.not_full.wait(st).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(PushRejected::Expired(item));
+                    }
+                    let (guard, _) = self.not_full.wait_timeout(st, d - now).unwrap();
+                    st = guard;
+                }
+            }
         }
-        st.items.push_back(item);
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.items.push(HeapEntry { pri, seq, item });
         drop(st);
         self.not_empty.notify_one();
         Ok(())
     }
 
-    /// Pop, blocking until an item arrives. `None` only when the queue is
-    /// closed *and* fully drained.
+    /// Pop the highest-priority item, blocking until one arrives. `None`
+    /// only when the queue is closed *and* fully drained.
     fn pop_blocking(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(item) = st.items.pop_front() {
+            if let Some(e) = st.items.pop() {
                 drop(st);
                 self.not_full.notify_one();
-                return Some(item);
+                return Some(e.item);
             }
             if st.closed {
                 return None;
@@ -98,10 +259,10 @@ impl<T> BoundedQueue<T> {
     fn pop_until(&self, deadline: Instant) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(item) = st.items.pop_front() {
+            if let Some(e) = st.items.pop() {
                 drop(st);
                 self.not_full.notify_one();
-                return Some(item);
+                return Some(e.item);
             }
             if st.closed {
                 return None;
@@ -125,7 +286,7 @@ impl<T> BoundedQueue<T> {
 
     /// Non-blocking pop (panic-path draining).
     fn try_pop(&self) -> Option<T> {
-        self.state.lock().unwrap().items.pop_front()
+        self.state.lock().unwrap().items.pop().map(|e| e.item)
     }
 
     #[cfg(test)]
@@ -141,8 +302,18 @@ impl<T> BoundedQueue<T> {
 /// One inference request: a single activation column of length `d_in`.
 struct Request {
     x: Vec<f32>,
+    priority: Priority,
+    /// Absolute expiry instant; past it the request is answered with
+    /// [`InferError::DeadlineExpired`] instead of being computed.
+    deadline: Option<Instant>,
     enqueued: Instant,
-    resp: Sender<Result<Vec<f32>, String>>,
+    resp: Sender<Result<Vec<f32>, InferError>>,
+}
+
+impl Request {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Handle for submitting requests; cheap to clone and share across client
@@ -150,23 +321,69 @@ struct Request {
 #[derive(Clone)]
 pub struct ServerHandle {
     queue: Arc<BoundedQueue<Request>>,
+    metrics: Arc<EngineMetrics>,
+    /// Uncompressed input channels each request must carry.
     pub d_in: usize,
+    /// Output channels each response carries.
     pub d_out: usize,
 }
 
 impl ServerHandle {
-    /// Blocking call: submit one activation, wait for the result. Blocks
-    /// while the request queue is full (backpressure); errors if the server
-    /// has stopped.
+    /// Blocking call: submit one activation at [`Priority::Normal`] with no
+    /// deadline, wait for the result. Blocks while the request queue is
+    /// full (backpressure); errors if the server has stopped.
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
-        anyhow::ensure!(x.len() == self.d_in, "expected {} features, got {}", self.d_in, x.len());
+        self.infer_opts(x, Priority::Normal, None).map_err(anyhow::Error::new)
+    }
+
+    /// Blocking call with explicit scheduling: submit one activation at
+    /// `priority`, optionally bounded by `deadline` (measured from now).
+    ///
+    /// A request whose deadline has already passed at submission — or
+    /// passes while the submitter is blocked on a full queue — is rejected
+    /// with [`InferError::DeadlineExpired`] and never enters the queue;
+    /// one that expires *while queued* is answered with the same error
+    /// without being computed. All are counted in
+    /// [`EngineMetrics::scheduler`].
+    pub fn infer_opts(
+        &self,
+        x: Vec<f32>,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<f32>, InferError> {
+        if x.len() != self.d_in {
+            return Err(InferError::BadRequest(format!(
+                "expected {} features, got {}",
+                self.d_in,
+                x.len()
+            )));
+        }
+        let now = Instant::now();
+        let deadline = deadline.map(|d| now + d);
+        if deadline.is_some_and(|d| d <= now) {
+            self.metrics.scheduler.lock().unwrap().expired_at_enqueue += 1;
+            return Err(InferError::DeadlineExpired);
+        }
         let (tx, rx) = mpsc::channel();
-        self.queue
-            .push(Request { x, enqueued: Instant::now(), resp: tx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rx.recv()
-            .context("server dropped request")?
-            .map_err(|e| anyhow::anyhow!(e))
+        let req = Request { x, priority, deadline, enqueued: now, resp: tx };
+        match self.queue.push(priority, req, deadline) {
+            Ok(()) => {}
+            Err(PushRejected::Closed(_)) => return Err(InferError::Stopped),
+            Err(PushRejected::Expired(_)) => {
+                self.metrics.scheduler.lock().unwrap().expired_at_enqueue += 1;
+                return Err(InferError::DeadlineExpired);
+            }
+        }
+        match rx.recv() {
+            Ok(result) => result,
+            // The worker (and its response sender) died before answering.
+            Err(_) => Err(InferError::Stopped),
+        }
+    }
+
+    /// The engine's metrics (shared with [`BatchServer::metrics`]).
+    pub fn metrics(&self) -> &Arc<EngineMetrics> {
+        &self.metrics
     }
 }
 
@@ -187,15 +404,19 @@ pub struct ServeConfig {
 }
 
 impl ServeConfig {
+    /// Config with the given flush size and batch window; 1 replica,
+    /// default queue depth.
     pub fn new(batch: usize, max_wait: Duration) -> Self {
         Self { batch, max_wait, replicas: 1, queue_depth: 0 }
     }
 
+    /// Set the number of worker replicas.
     pub fn with_replicas(mut self, replicas: usize) -> Self {
         self.replicas = replicas;
         self
     }
 
+    /// Set the request-queue bound (0 = `replicas * batch * 4`).
     pub fn with_queue_depth(mut self, depth: usize) -> Self {
         self.queue_depth = depth;
         self
@@ -214,9 +435,27 @@ impl ServeConfig {
 /// handles are `!Send`, so construction cannot happen on the caller).
 pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn SpmmBackend>> + Send + Sync>;
 
+/// Wrap a backend factory so every replica's backend is decorated with a
+/// [`CachedBackend`] of `capacity` entries, all reporting into one shared
+/// [`CacheStats`].
+pub fn cached_factory(
+    inner: BackendFactory,
+    capacity: usize,
+    stats: Arc<CacheStats>,
+) -> BackendFactory {
+    Arc::new(move |replica| {
+        let backend = (inner)(replica)?;
+        let cached: Box<dyn SpmmBackend> =
+            Box::new(CachedBackend::with_stats(backend, capacity, Arc::clone(&stats)));
+        Ok(cached)
+    })
+}
+
 /// The sharded batch server.
 pub struct BatchServer {
+    /// Submission handle (clone freely across client threads).
     pub handle: ServerHandle,
+    /// Live engine metrics (also reachable via [`ServerHandle::metrics`]).
     pub metrics: Arc<EngineMetrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -319,7 +558,9 @@ impl BatchServer {
         }
         let (d_in, d_out) = dims.expect("at least one replica");
 
-        Ok(BatchServer { handle: ServerHandle { queue, d_in, d_out }, metrics, workers })
+        let handle =
+            ServerHandle { queue, metrics: Arc::clone(&metrics), d_in, d_out };
+        Ok(BatchServer { handle, metrics, workers })
     }
 
     /// Native-backend engine over a shared [`HinmModel`] — runs anywhere,
@@ -366,10 +607,19 @@ impl Drop for BatchServer {
     }
 }
 
+/// Answer an expired request with a timeout error (never executed) and
+/// count it.
+fn expire(req: Request, metrics: &EngineMetrics) {
+    metrics.scheduler.lock().unwrap().expired_in_queue += 1;
+    let _ = req.resp.send(Err(InferError::DeadlineExpired));
+}
+
 /// Per-replica loop: block for the first request (idle costs nothing),
 /// then collect until the batch fills or the window — anchored at that
-/// first arrival — expires; flush; repeat. Exits once the queue is closed
-/// and drained.
+/// first arrival — expires; flush; repeat. Requests that are already past
+/// their deadline when popped are answered with a timeout error and do not
+/// occupy batch slots (an expired request never anchors a window). Exits
+/// once the queue is closed and drained.
 fn worker_loop(
     replica: usize,
     backend: &mut dyn SpmmBackend,
@@ -379,13 +629,23 @@ fn worker_loop(
 ) {
     let mut pending: Vec<Request> = Vec::with_capacity(cfg.batch);
     while let Some(first) = queue.pop_blocking() {
+        if first.expired(Instant::now()) {
+            expire(first, metrics);
+            continue;
+        }
         // Window anchored at the first request's *arrival*: time it spent
         // queued while workers were busy counts against the window.
         let deadline = first.enqueued + cfg.max_wait;
         pending.push(first);
         while pending.len() < cfg.batch {
             match queue.pop_until(deadline) {
-                Some(req) => pending.push(req),
+                Some(req) => {
+                    if req.expired(Instant::now()) {
+                        expire(req, metrics);
+                    } else {
+                        pending.push(req);
+                    }
+                }
                 None => break,
             }
         }
@@ -394,8 +654,10 @@ fn worker_loop(
 }
 
 /// Execute one padded batch and fan results (or the error) back out.
-/// Metrics are updated before responses are sent, so a client observing
-/// its reply also observes its own sample recorded.
+/// Requests that expired while the batch window was open are swept out and
+/// answered with a timeout error first — the backend only ever sees live
+/// requests. Metrics are updated before responses are sent, so a client
+/// observing its reply also observes its own sample recorded.
 fn flush(
     replica: usize,
     backend: &mut dyn SpmmBackend,
@@ -407,7 +669,18 @@ fn flush(
         return;
     }
     debug_assert!(pending.len() <= batch);
-    let reqs: Vec<Request> = pending.drain(..).collect();
+    let now = Instant::now();
+    let mut reqs: Vec<Request> = Vec::with_capacity(pending.len());
+    for r in pending.drain(..) {
+        if r.expired(now) {
+            expire(r, metrics);
+        } else {
+            reqs.push(r);
+        }
+    }
+    if reqs.is_empty() {
+        return;
+    }
     let n = reqs.len();
     let d_in = backend.d_in();
     let d_out = backend.d_out();
@@ -457,6 +730,12 @@ fn flush(
                     agg.record(l);
                 }
             }
+            {
+                let mut sched = metrics.scheduler.lock().unwrap();
+                for r in &reqs {
+                    sched.served[r.priority.index()] += 1;
+                }
+            }
             metrics.throughput.lock().unwrap().add(n);
             for (r, col) in reqs.into_iter().zip(cols) {
                 let _ = r.resp.send(Ok(col));
@@ -466,7 +745,7 @@ fn flush(
             metrics.replicas[replica].lock().unwrap().errors += 1;
             let msg = format!("batch execution failed: {e:#}");
             for r in reqs {
-                let _ = r.resp.send(Err(msg.clone()));
+                let _ = r.resp.send(Err(InferError::Backend(msg.clone())));
             }
         }
     }
@@ -477,20 +756,48 @@ mod tests {
     use super::*;
 
     // Engine-level behaviour (batching, padding, windows, shutdown,
-    // replicas) lives in tests/serve_engine.rs over a mock backend; here we
-    // cover the queue primitive and batch-assembly layout.
+    // replicas, priorities, deadlines) lives in tests/serve_engine.rs and
+    // tests/scheduler.rs over mock backends; here we cover the queue
+    // primitive and batch-assembly layout.
 
     #[test]
-    fn queue_fifo_and_close_drains() {
+    fn queue_fifo_within_priority_and_close_drains() {
         let q: BoundedQueue<u32> = BoundedQueue::new(8);
-        q.push(1).unwrap();
-        q.push(2).unwrap();
+        q.push(Priority::Normal, 1, None).unwrap();
+        q.push(Priority::Normal, 2, None).unwrap();
         q.close();
-        assert!(q.push(3).is_err(), "push after close must fail");
+        assert!(q.push(Priority::Normal, 3, None).is_err(), "push after close must fail");
         assert_eq!(q.pop_blocking(), Some(1));
         assert_eq!(q.pop_blocking(), Some(2));
         assert_eq!(q.pop_blocking(), None);
         assert_eq!(q.pop_until(Instant::now() + Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn queue_pops_by_priority_then_arrival() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(8);
+        q.push(Priority::Low, 1, None).unwrap();
+        q.push(Priority::Normal, 2, None).unwrap();
+        q.push(Priority::High, 3, None).unwrap();
+        q.push(Priority::High, 4, None).unwrap();
+        q.push(Priority::Low, 5, None).unwrap();
+        q.push(Priority::Normal, 6, None).unwrap();
+        let order: Vec<u32> = (0..6).map(|_| q.pop_blocking().unwrap()).collect();
+        assert_eq!(order, vec![3, 4, 2, 6, 1, 5], "(priority, arrival) ordering violated");
+    }
+
+    #[test]
+    fn queue_push_with_deadline_fails_fast_on_a_full_queue() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.push(Priority::Normal, 1, None).unwrap();
+        let t0 = Instant::now();
+        let r = q.push(Priority::High, 2, Some(t0 + Duration::from_millis(50)));
+        assert!(
+            matches!(r, Err(PushRejected::Expired(2))),
+            "a deadline-bearing push must not wait out backpressure past its deadline"
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(40), "returned before the deadline");
+        assert!(t0.elapsed() < Duration::from_secs(5), "blocked far past the deadline");
     }
 
     #[test]
@@ -504,9 +811,9 @@ mod tests {
     #[test]
     fn queue_bounded_push_blocks_until_pop() {
         let q = Arc::new(BoundedQueue::new(1));
-        q.push(10u32).unwrap();
+        q.push(Priority::Normal, 10u32, None).unwrap();
         let q2 = Arc::clone(&q);
-        let pusher = std::thread::spawn(move || q2.push(20u32).is_ok());
+        let pusher = std::thread::spawn(move || q2.push(Priority::Normal, 20u32, None).is_ok());
         std::thread::sleep(Duration::from_millis(50));
         assert_eq!(q.len(), 1, "second push must be blocked by the bound");
         assert_eq!(q.pop_blocking(), Some(10));
@@ -517,12 +824,22 @@ mod tests {
     #[test]
     fn queue_close_wakes_blocked_push() {
         let q = Arc::new(BoundedQueue::new(1));
-        q.push(1u32).unwrap();
+        q.push(Priority::Normal, 1u32, None).unwrap();
         let q2 = Arc::clone(&q);
-        let pusher = std::thread::spawn(move || q2.push(2u32).is_err());
+        let pusher = std::thread::spawn(move || q2.push(Priority::High, 2u32, None).is_err());
         std::thread::sleep(Duration::from_millis(50));
         q.close();
         assert!(pusher.join().unwrap(), "blocked push must error out on close");
+    }
+
+    #[test]
+    fn priority_parse_roundtrip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
     }
 
     #[test]

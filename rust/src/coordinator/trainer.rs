@@ -20,15 +20,22 @@ pub struct LmTrainer {
     params: Vec<Literal>,
     /// Masks, ordered as `manifest.meta.lm_mask_names` (all-ones = dense).
     masks: Vec<Literal>,
+    /// Parameter names, ordered as the artifact expects.
     pub pnames: Vec<String>,
+    /// Mask names, ordered as the artifact expects.
     pub mnames: Vec<String>,
+    /// Compiled batch size.
     pub batch: usize,
+    /// Compiled sequence length.
     pub seq: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Loss per completed step, in order.
     pub losses: Vec<f32>,
 }
 
 impl LmTrainer {
+    /// Load the train/loss artifacts and initial parameters from `reg`.
     pub fn new(reg: &Registry) -> Result<LmTrainer> {
         let step_spec = reg.artifact("lm_train_step")?;
         let loss_spec = reg.artifact("lm_loss")?;
@@ -194,12 +201,15 @@ fn clone_lit(l: &Literal) -> Result<Literal> {
 /// small LM reaches well below the uniform baseline, random enough that it
 /// cannot memorize trivially.
 pub struct Corpus {
+    /// Vocabulary size V.
     pub vocab: usize,
+    /// Probability a token is replaced with a uniform draw.
     pub noise: f32,
     rng: crate::util::rng::Xoshiro256,
 }
 
 impl Corpus {
+    /// Corpus with the given vocabulary, flip-noise rate, and seed.
     pub fn new(vocab: usize, noise: f32, seed: u64) -> Self {
         Self { vocab, noise, rng: crate::util::rng::Xoshiro256::new(seed) }
     }

@@ -32,6 +32,7 @@ pub enum EvalScale {
 }
 
 impl EvalScale {
+    /// Shape divisor for this scale.
     pub fn div(&self) -> usize {
         match self {
             EvalScale::Full => 1,
@@ -39,6 +40,7 @@ impl EvalScale {
             EvalScale::Tiny => 8,
         }
     }
+    /// Cap on distinct layer shapes evaluated.
     pub fn max_layers(&self) -> usize {
         match self {
             EvalScale::Full => usize::MAX,
@@ -46,6 +48,7 @@ impl EvalScale {
             EvalScale::Tiny => 4,
         }
     }
+    /// Parse `full` / `quarter` / `tiny`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "full" => Some(EvalScale::Full),
@@ -59,12 +62,19 @@ impl EvalScale {
 /// The pruning arms evaluated in Figs. 3/4 and Tables 1/3.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MethodArm {
+    /// No pruning (retention 1.0 reference).
     Dense,
+    /// The paper's method: gyro OCP + gyro ICP.
     HinmGyro,
+    /// HiNM with no permutation (`id+id`).
     HinmNoPerm,
+    /// Vector-only OVW baseline (Tan et al.).
     Ovw,
+    /// Element-wise magnitude pruning (upper bound / CAP stand-in).
     Unstructured,
+    /// Ablation V1: OVW OCP + gyro ICP.
     HinmV1,
+    /// Ablation V2: gyro OCP + Apex ICP.
     HinmV2,
     /// Extra ablation arm via the strategy registry: gyro OCP + Tetris-style
     /// swap ICP (`gyro+tetris`).
@@ -72,6 +82,7 @@ pub enum MethodArm {
 }
 
 impl MethodArm {
+    /// The paper's arm label.
     pub fn label(&self) -> &'static str {
         match self {
             MethodArm::Dense => "Dense",
@@ -102,8 +113,11 @@ impl MethodArm {
 
 /// A concrete synthetic layer instance.
 pub struct EvalLayer {
+    /// Layer name from the catalog.
     pub name: String,
+    /// Synthetic trained-like weights at the scaled shape.
     pub weights: Matrix,
+    /// Saliency grid for the chosen estimator.
     pub saliency: Matrix,
     /// Multiplicity weight (layer repeat count × params).
     pub weight: f64,

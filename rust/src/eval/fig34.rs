@@ -11,7 +11,9 @@ use super::common::{materialize, model_retention, EvalScale, MethodArm};
 use crate::models::catalog::{resnet18, resnet50, ModelCatalog};
 use crate::util::bench::Table;
 
+/// Total-sparsity sweep of Figs. 3–4.
 pub const SPARSITIES_PCT: [usize; 4] = [50, 65, 75, 85];
+/// Arms compared in Figs. 3–4.
 pub const ARMS: [MethodArm; 5] = [
     MethodArm::Dense,
     MethodArm::HinmGyro,
@@ -21,9 +23,13 @@ pub const ARMS: [MethodArm; 5] = [
 ];
 
 #[derive(Clone, Debug)]
+/// One (arm, sparsity) measurement.
 pub struct SweepRow {
+    /// Pruning arm.
     pub arm: MethodArm,
+    /// Total sparsity in percent.
     pub sparsity_pct: usize,
+    /// Weighted retained-saliency ratio across layers.
     pub retention: f64,
 }
 

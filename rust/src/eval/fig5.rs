@@ -25,13 +25,19 @@ use crate::util::rng::Xoshiro256;
 /// BERT-base FFN GEMM (the dominant layer): `[3072, 768] × [768, B]`.
 #[derive(Clone, Copy, Debug)]
 pub struct Fig5Case {
+    /// GEMM rows (output channels).
     pub m: usize,
+    /// GEMM cols (input features).
     pub n: usize,
+    /// Activation batch width.
     pub batch: usize,
+    /// HiNM vector size V.
     pub v: usize,
+    /// Total sparsity in `[0,1]`.
     pub total_sparsity: f64,
 }
 
+/// The Fig. 5 case grid (full = paper shapes, else reduced).
 pub fn cases(full: bool) -> Vec<Fig5Case> {
     let (m, n, batch) = if full { (3072, 768, 64) } else { (256, 128, 16) };
     let mut out = Vec::new();
@@ -44,7 +50,9 @@ pub fn cases(full: bool) -> Vec<Fig5Case> {
 }
 
 #[derive(Clone, Debug)]
+/// Measured + modeled latencies for one case.
 pub struct Fig5Row {
+    /// The case configuration.
     pub case: Fig5Case,
     /// Measured CPU kernel µs, identity vec_idx.
     pub cpu_identity_us: f64,
@@ -109,6 +117,7 @@ pub fn run_case(c: &Fig5Case, bencher: &Bencher, seed: u64) -> Fig5Row {
     }
 }
 
+/// Run every Fig. 5 case; `full` selects the paper's shapes.
 pub fn run(full: bool, seed: u64) -> Vec<Fig5Row> {
     let bencher = if full { Bencher::default() } else { Bencher::quick() };
     cases(full)
@@ -118,6 +127,7 @@ pub fn run(full: bool, seed: u64) -> Vec<Fig5Row> {
         .collect()
 }
 
+/// Render the Fig. 5 latency table.
 pub fn render(rows: &[Fig5Row]) -> String {
     let mut t = Table::new(&[
         "V",

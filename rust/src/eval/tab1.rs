@@ -12,7 +12,9 @@ use super::common::{materialize, model_retention, EvalScale, MethodArm};
 use crate::models::catalog::deit_base;
 use crate::util::bench::Table;
 
+/// Sparsity levels of Table 1.
 pub const SPARSITIES_PCT: [usize; 3] = [65, 75, 85];
+/// Arms compared in Table 1 (DeiT, second-order saliency).
 pub const ARMS: [MethodArm; 4] = [
     MethodArm::Dense,
     MethodArm::HinmGyro,
@@ -21,12 +23,17 @@ pub const ARMS: [MethodArm; 4] = [
 ];
 
 #[derive(Clone, Debug)]
+/// One (arm, sparsity) measurement.
 pub struct Tab1Row {
+    /// Pruning arm.
     pub arm: MethodArm,
+    /// Total sparsity in percent.
     pub sparsity_pct: usize,
+    /// Weighted retained-saliency ratio.
     pub retention: f64,
 }
 
+/// Run the Table 1 sweep on the DeiT-base catalog.
 pub fn tab1(scale: EvalScale, seed: u64) -> Vec<Tab1Row> {
     let v = if scale == EvalScale::Full { 32 } else { 8 };
     let layers = materialize(&deit_base(), scale, v, /*second_order=*/ true, seed);
@@ -40,6 +47,7 @@ pub fn tab1(scale: EvalScale, seed: u64) -> Vec<Tab1Row> {
     rows
 }
 
+/// Render the Table 1 report.
 pub fn render(rows: &[Tab1Row]) -> String {
     let mut t = Table::new(&["method", "s=65%", "s=75%", "s=85%"]);
     for &arm in &ARMS {

@@ -15,12 +15,17 @@ use crate::sparsity::hinm::{gradual_schedule, prune_oneshot, step_config};
 use crate::sparsity::HinmConfig;
 use crate::util::bench::Table;
 
+/// Sparsity levels of Table 2.
 pub const SPARSITIES_PCT: [f64; 2] = [75.0, 87.5];
 
 #[derive(Clone, Debug)]
+/// One (method, sparsity) measurement of the gradual comparison.
 pub struct Tab2Row {
+    /// `"HiNM"` or the VENOM-style baseline.
     pub method: &'static str,
+    /// Total sparsity in percent.
     pub sparsity_pct: f64,
+    /// Retention of the final mask.
     pub retention: f64,
 }
 
@@ -67,6 +72,7 @@ fn gradual_venom(
     last
 }
 
+/// Run the Table 2 gradual-schedule comparison.
 pub fn tab2(scale: EvalScale, seed: u64) -> Vec<Tab2Row> {
     let v = if scale == EvalScale::Full { 32 } else { 8 };
     // Base saliency evidence shared by both methods; each method applies its
@@ -102,6 +108,7 @@ pub fn tab2(scale: EvalScale, seed: u64) -> Vec<Tab2Row> {
     rows
 }
 
+/// Render the Table 2 report.
 pub fn render(rows: &[Tab2Row]) -> String {
     let mut t = Table::new(&["method", "s=75%", "s=87.5%"]);
     for method in ["HiNM", "VENOM"] {

@@ -8,16 +8,22 @@ use super::common::{materialize, model_retention, EvalScale, MethodArm};
 use crate::models::catalog::{resnet18, resnet50};
 use crate::util::bench::Table;
 
+/// OCP/ICP ablation arms of Table 3 (+ the V3 extension).
 pub const ARMS: [MethodArm; 4] =
     [MethodArm::HinmGyro, MethodArm::HinmV1, MethodArm::HinmV2, MethodArm::HinmV3];
 
 #[derive(Clone, Debug)]
+/// One (model, arm) measurement.
 pub struct Tab3Row {
+    /// Catalog name (`resnet18` / `resnet50`).
     pub model: &'static str,
+    /// Ablation arm.
     pub arm: MethodArm,
+    /// Weighted retained-saliency ratio at 75%.
     pub retention: f64,
 }
 
+/// Run the Table 3 ablation on both ResNet catalogs.
 pub fn tab3(scale: EvalScale, seed: u64) -> Vec<Tab3Row> {
     let v = if scale == EvalScale::Full { 32 } else { 8 };
     let mut rows = Vec::new();
@@ -31,6 +37,7 @@ pub fn tab3(scale: EvalScale, seed: u64) -> Vec<Tab3Row> {
     rows
 }
 
+/// Render the Table 3 report.
 pub fn render(rows: &[Tab3Row]) -> String {
     let mut t = Table::new(&["model", "method", "spec", "retained ratio"]);
     for r in rows {

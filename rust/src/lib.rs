@@ -8,9 +8,10 @@
 //!   permutation → HiNM pruning → packed format) built on the
 //!   [`permute::strategy`] layer (any OCP×ICP strategy pair from a
 //!   string-keyed registry, executed by a parallel tile engine), the PJRT
-//!   runtime that executes AOT-lowered JAX/Pallas artifacts, a batched
-//!   inference server, and the full evaluation/bench harness reproducing
-//!   every table and figure in the paper.
+//!   runtime that executes AOT-lowered JAX/Pallas artifacts, a sharded
+//!   batch-inference server with priority/deadline scheduling and an
+//!   HTTP/JSON front ([`net`]), and the full evaluation/bench harness
+//!   reproducing every table and figure in the paper.
 //! * **L2 (`python/compile/model.py`)** — JAX forward/backward graphs calling
 //!   the L1 kernel, lowered once to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/hinm_spmm.py`)** — the HiNM SpMM Pallas
@@ -19,9 +20,12 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+#![warn(missing_docs)]
+
 pub mod coordinator;
 pub mod eval;
 pub mod models;
+pub mod net;
 pub mod permute;
 pub mod runtime;
 pub mod saliency;

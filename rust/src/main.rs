@@ -64,7 +64,10 @@ fn usage() {
          \x20 spmm    --weights w.npy [--batch 8] [--sparsity 75]\n\
          \x20 info    list AOT artifacts and data dumps\n\
          \x20 serve   [--backend native|pjrt] [--replicas R] [--batch B] [--max-wait-us U]\n\
-         \x20         sharded batched inference engine + closed-loop load demo\n\
+         \x20         [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
+         \x20         sharded batched inference engine; with --http it serves\n\
+         \x20         POST /v1/infer, GET /v1/metrics, GET /healthz until killed,\n\
+         \x20         otherwise it runs a closed-loop load demo\n\
          \x20 serve-demo  alias for: serve --backend pjrt\n\
          \x20 train-demo  [--steps 50]      LM training via AOT train step\n"
     );
@@ -248,8 +251,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("batch", Some("8"), "batch size per flush (pjrt: fixed by the artifact)")
         .opt("max-wait-us", Some("200"), "batch window after the first request, µs")
         .opt("queue-depth", Some("0"), "request-queue bound (0 = replicas*batch*4)")
-        .opt("requests", Some("256"), "closed-loop demo requests")
-        .opt("clients", Some("8"), "concurrent demo clients")
+        .opt("http", None, "serve HTTP/JSON on this address (e.g. 127.0.0.1:8080) until killed")
+        .opt("http-workers", Some("8"), "HTTP connection-handler threads")
+        .opt("cache-capacity", Some("0"), "per-replica LRU batch-cache entries (0 = off)")
+        .opt("requests", Some("256"), "closed-loop demo requests (no --http)")
+        .opt("clients", Some("8"), "concurrent demo clients (no --http)")
         .opt("d", Some("256"), "native: model width")
         .opt("d-ff", Some("512"), "native: hidden width")
         .opt("sparsity", Some("75"), "native: total sparsity %")
@@ -262,59 +268,107 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let queue_depth = a.usize_or("queue-depth", 0);
     let n_requests = a.usize_or("requests", 256);
     let n_clients = a.usize_or("clients", 8).max(1);
+    let cache_capacity = a.usize_or("cache-capacity", 0);
+    let cache_stats =
+        if cache_capacity > 0 { Some(hinm::runtime::CacheStats::new_shared()) } else { None };
 
-    let server = match backend.as_str() {
-        "native" => {
-            let d = a.usize_or("d", 256);
-            let d_ff = a.usize_or("d-ff", 512);
-            let cfg = HinmConfig::for_total_sparsity(
-                a.usize_or("v", 32),
-                a.usize_or("sparsity", 75) as f64 / 100.0,
-            );
-            let model = hinm::models::HinmModel::synthetic_ffn(
-                d,
-                d_ff,
-                &cfg,
-                hinm::models::Activation::Relu,
-                a.u64_or("seed", 7),
-            )?;
-            println!(
-                "native backend: {d}→{d_ff}→{d} FFN | V={} total sparsity {:.1}% | {replicas} replicas",
-                cfg.v,
-                cfg.total_sparsity() * 100.0
-            );
-            let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
-                .with_replicas(replicas)
-                .with_queue_depth(queue_depth);
-            hinm::coordinator::BatchServer::start_native(std::sync::Arc::new(model), scfg)?
+    // Each branch yields the engine config plus a factory building one
+    // backend per replica; the cache decorator then wraps whichever
+    // backend was picked.
+    let (scfg, base_factory): (hinm::coordinator::ServeConfig, hinm::coordinator::BackendFactory) =
+        match backend.as_str() {
+            "native" => {
+                let d = a.usize_or("d", 256);
+                let d_ff = a.usize_or("d-ff", 512);
+                let cfg = HinmConfig::for_total_sparsity(
+                    a.usize_or("v", 32),
+                    a.usize_or("sparsity", 75) as f64 / 100.0,
+                );
+                let model = std::sync::Arc::new(hinm::models::HinmModel::synthetic_ffn(
+                    d,
+                    d_ff,
+                    &cfg,
+                    hinm::models::Activation::Relu,
+                    a.u64_or("seed", 7),
+                )?);
+                println!(
+                    "native backend: {d}→{d_ff}→{d} FFN | V={} total sparsity {:.1}% | {replicas} replicas",
+                    cfg.v,
+                    cfg.total_sparsity() * 100.0
+                );
+                let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
+                    .with_replicas(replicas)
+                    .with_queue_depth(queue_depth);
+                let factory: hinm::coordinator::BackendFactory =
+                    std::sync::Arc::new(move |_replica| {
+                        let b: Box<dyn hinm::runtime::SpmmBackend> = Box::new(
+                            hinm::runtime::NativeCpuBackend::new(std::sync::Arc::clone(&model)),
+                        );
+                        Ok(b)
+                    });
+                (scfg, factory)
+            }
+            "pjrt" => {
+                let reg = hinm::runtime::open_default_registry()?;
+                let spec = reg.artifact("ffn_serve")?.clone();
+                let d = spec.meta["d"] as usize;
+                let d_ff = spec.meta["d_ff"] as usize;
+                let batch = spec.meta["batch"] as usize;
+                let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
+                println!(
+                    "pjrt backend: ffn_serve d={d} d_ff={d_ff} | V={} total sparsity {:.1}% | batch={batch} (artifact) | {replicas} replicas",
+                    cfg.v,
+                    cfg.total_sparsity() * 100.0
+                );
+                let w1 = reg.load_data("ffn_w1_dense")?;
+                let w2 = reg.load_data("ffn_w2_dense")?;
+                let w1 = hinm::tensor::Matrix::from_vec(d_ff, d, w1.as_f32()?.to_vec());
+                let w2 = hinm::tensor::Matrix::from_vec(d, d_ff, w2.as_f32()?.to_vec());
+                let p1 = hinm::sparsity::prune_oneshot(&w1, &w1.abs(), &cfg).packed;
+                let p2 = hinm::sparsity::prune_oneshot(&w2, &w2.abs(), &cfg).packed;
+                let mut fixed = hinm::coordinator::serve::packed_host_tensors(&p1);
+                fixed.extend(hinm::coordinator::serve::packed_host_tensors(&p2));
+                let scfg = hinm::coordinator::ServeConfig::new(batch, max_wait)
+                    .with_replicas(replicas)
+                    .with_queue_depth(queue_depth);
+                let factory: hinm::coordinator::BackendFactory =
+                    std::sync::Arc::new(move |_replica| {
+                        let b: Box<dyn hinm::runtime::SpmmBackend> = Box::new(
+                            hinm::runtime::PjrtBackend::new(&spec, &fixed, d, d, batch)?,
+                        );
+                        Ok(b)
+                    });
+                (scfg, factory)
+            }
+            other => bail!("unknown --backend {other:?} (expected native|pjrt)"),
+        };
+
+    let factory = match &cache_stats {
+        Some(cs) => {
+            println!("batch cache: {cache_capacity} entries per replica");
+            hinm::coordinator::cached_factory(
+                base_factory,
+                cache_capacity,
+                std::sync::Arc::clone(cs),
+            )
         }
-        "pjrt" => {
-            let reg = hinm::runtime::open_default_registry()?;
-            let spec = reg.artifact("ffn_serve")?.clone();
-            let d = spec.meta["d"] as usize;
-            let d_ff = spec.meta["d_ff"] as usize;
-            let batch = spec.meta["batch"] as usize;
-            let cfg = HinmConfig::with_24(spec.meta["v"] as usize, spec.meta["sv"]);
-            println!(
-                "pjrt backend: ffn_serve d={d} d_ff={d_ff} | V={} total sparsity {:.1}% | batch={batch} (artifact) | {replicas} replicas",
-                cfg.v,
-                cfg.total_sparsity() * 100.0
-            );
-            let w1 = reg.load_data("ffn_w1_dense")?;
-            let w2 = reg.load_data("ffn_w2_dense")?;
-            let w1 = hinm::tensor::Matrix::from_vec(d_ff, d, w1.as_f32()?.to_vec());
-            let w2 = hinm::tensor::Matrix::from_vec(d, d_ff, w2.as_f32()?.to_vec());
-            let p1 = hinm::sparsity::prune_oneshot(&w1, &w1.abs(), &cfg).packed;
-            let p2 = hinm::sparsity::prune_oneshot(&w2, &w2.abs(), &cfg).packed;
-            let mut fixed = hinm::coordinator::serve::packed_host_tensors(&p1);
-            fixed.extend(hinm::coordinator::serve::packed_host_tensors(&p2));
-            let scfg = hinm::coordinator::ServeConfig::new(batch, max_wait)
-                .with_replicas(replicas)
-                .with_queue_depth(queue_depth);
-            hinm::coordinator::BatchServer::start_pjrt(spec, fixed, d, d, scfg)?
-        }
-        other => bail!("unknown --backend {other:?} (expected native|pjrt)"),
+        None => base_factory,
     };
+    let server = hinm::coordinator::BatchServer::start(factory, scfg)?;
+
+    if let Some(addr) = a.get("http") {
+        let front = hinm::net::HttpFront::start(
+            addr,
+            server.handle.clone(),
+            cache_stats.clone(),
+            a.usize_or("http-workers", 8),
+        )?;
+        println!("HTTP front listening on http://{}", front.local_addr());
+        println!("  POST /v1/infer | GET /v1/metrics | GET /healthz  (Ctrl-C to stop)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
 
     let handle = server.handle.clone();
     let d_in = handle.d_in;
@@ -342,6 +396,14 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         served as f64 / wall.as_secs_f64()
     );
     println!("{}", server.metrics.summary());
+    if let Some(cs) = &cache_stats {
+        println!(
+            "cache: {} hits / {} misses ({:.0}% hit rate)",
+            cs.hits(),
+            cs.misses(),
+            cs.hit_rate() * 100.0
+        );
+    }
     server.stop();
     Ok(())
 }

@@ -8,6 +8,7 @@
 /// One prunable layer as a GEMM.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerShape {
+    /// Layer name (paper/framework naming).
     pub name: String,
     /// Output channels (GEMM rows).
     pub out_ch: usize,
@@ -18,9 +19,11 @@ pub struct LayerShape {
 }
 
 impl LayerShape {
+    /// Shape from name + GEMM dimensions + repeat count.
     pub fn new(name: &str, out_ch: usize, in_dim: usize, count: usize) -> Self {
         Self { name: name.to_string(), out_ch, in_dim, count }
     }
+    /// Total parameters across all repeats of this shape.
     pub fn params(&self) -> usize {
         self.out_ch * self.in_dim * self.count
     }
@@ -29,15 +32,19 @@ impl LayerShape {
 /// A named collection of prunable layers.
 #[derive(Clone, Debug)]
 pub struct ModelCatalog {
+    /// Model name (`resnet18`, `deit-base`, …).
     pub name: &'static str,
+    /// Every prunable layer shape of the model.
     pub layers: Vec<LayerShape>,
 }
 
 impl ModelCatalog {
+    /// Prunable parameters across all layers.
     pub fn total_params(&self) -> usize {
         self.layers.iter().map(|l| l.params()).sum()
     }
 
+    /// Look up a built-in catalog by (aliased) name.
     pub fn by_name(name: &str) -> Option<ModelCatalog> {
         match name {
             "resnet18" => Some(resnet18()),

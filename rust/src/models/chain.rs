@@ -25,12 +25,16 @@ pub fn gelu(x: f32) -> f32 {
 /// Elementwise nonlinearity applied after a layer's GEMM (+ bias).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
+    /// Identity (no nonlinearity).
     None,
+    /// `max(0, x)`.
     Relu,
+    /// Tanh-approximation GELU (as in BERT/DeiT).
     Gelu,
 }
 
 impl Activation {
+    /// Apply the nonlinearity elementwise, in place.
     pub fn apply(self, y: &mut Matrix) {
         match self {
             Activation::None => {}
@@ -53,22 +57,27 @@ impl Activation {
 /// One layer: `act(W_hinm · x + b)`.
 #[derive(Clone, Debug)]
 pub struct HinmLayer {
+    /// The layer's weights in packed HiNM form.
     pub packed: HinmPacked,
     /// Per-output-channel bias, length `packed.rows`.
     pub bias: Option<Vec<f32>>,
+    /// Nonlinearity applied after GEMM + bias.
     pub act: Activation,
 }
 
 impl HinmLayer {
+    /// Layer with no bias and no activation.
     pub fn new(packed: HinmPacked) -> Self {
         Self { packed, bias: None, act: Activation::None }
     }
 
+    /// Attach a per-output-channel bias (builder style).
     pub fn with_bias(mut self, bias: Vec<f32>) -> Self {
         self.bias = Some(bias);
         self
     }
 
+    /// Set the activation (builder style).
     pub fn with_activation(mut self, act: Activation) -> Self {
         self.act = act;
         self
@@ -108,6 +117,7 @@ impl HinmModel {
         Ok(HinmModel { layers })
     }
 
+    /// The validated layer sequence.
     pub fn layers(&self) -> &[HinmLayer] {
         &self.layers
     }
@@ -122,6 +132,7 @@ impl HinmModel {
         self.layers.last().unwrap().packed.rows
     }
 
+    /// Number of layers in the chain.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }

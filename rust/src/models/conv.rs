@@ -13,17 +13,24 @@ use crate::tensor::Matrix;
 /// A 2-D convolution shape (stride 1, symmetric zero padding).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvShape {
+    /// Input channels.
     pub c_in: usize,
+    /// Output channels.
     pub c_out: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Symmetric zero padding on each side.
     pub pad: usize,
 }
 
 impl ConvShape {
+    /// Columns of the im2col GEMM: `C_in · kh · kw`.
     pub fn gemm_cols(&self) -> usize {
         self.c_in * self.kh * self.kw
     }
+    /// Output spatial size for an `h×w` input (stride 1).
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
         (h + 2 * self.pad + 1 - self.kh, w + 2 * self.pad + 1 - self.kw)
     }
@@ -32,21 +39,28 @@ impl ConvShape {
 /// Input feature map, CHW layout.
 #[derive(Clone, Debug)]
 pub struct FeatureMap {
+    /// Channels.
     pub c: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// CHW-contiguous storage.
     pub data: Vec<f32>,
 }
 
 impl FeatureMap {
+    /// All-zero feature map.
     pub fn zeros(c: usize, h: usize, w: usize) -> Self {
         Self { c, h, w, data: vec![0.0; c * h * w] }
     }
     #[inline]
+    /// Element at `(channel, y, x)`.
     pub fn at(&self, ch: usize, y: usize, x: usize) -> f32 {
         self.data[(ch * self.h + y) * self.w + x]
     }
     #[inline]
+    /// Mutable element at `(channel, y, x)`.
     pub fn at_mut(&mut self, ch: usize, y: usize, x: usize) -> &mut f32 {
         &mut self.data[(ch * self.h + y) * self.w + x]
     }

@@ -15,6 +15,7 @@ use crate::tensor::Matrix;
 use crate::util::rng::Xoshiro256;
 
 #[derive(Clone, Debug)]
+/// Generator of realistic synthetic weight matrices (see module docs).
 pub struct SyntheticGen {
     /// Std of the log-normal output-channel scales.
     pub row_spread: f32,

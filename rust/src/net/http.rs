@@ -1,0 +1,434 @@
+//! Line-oriented HTTP/1.1 transport over `std::net` — no external deps.
+//!
+//! The offline environment has no hyper/axum, and the serving front needs
+//! only a small, predictable subset of HTTP/1.1: request line + headers +
+//! `Content-Length` body, keep-alive connections, and JSON payloads. This
+//! module implements exactly that subset as a transport layer:
+//!
+//! * [`HttpServer`] — one acceptor thread feeding a bounded worker pool
+//!   over an mpsc channel; each worker runs a keep-alive read loop per
+//!   connection. Routing is a plain `Fn(&HttpRequest) -> HttpResponse`
+//!   handler, so the transport knows nothing about the inference engine
+//!   (the routes live in [`crate::net`]).
+//! * [`HttpClient`] — a matching minimal client (one reused connection,
+//!   blocking request/response) used by the integration tests, the
+//!   `serve_throughput` bench's socket mode, and available to external
+//!   Rust callers.
+//!
+//! Deliberate non-goals: TLS, chunked transfer encoding, HTTP/2,
+//! pipelining. Requests with bodies must send `Content-Length`.
+
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Largest accepted request body; bigger requests are rejected during
+/// header parsing (guards against a client promising a multi-GB body).
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// Longest accepted request/header line in bytes; a longer line is a 400.
+/// Bounds per-connection memory against a client streaming an endless
+/// header (the body is separately bounded by [`MAX_BODY_BYTES`]).
+pub const MAX_LINE_BYTES: u64 = 8 * 1024;
+
+/// Most headers accepted per request; more is a 400.
+pub const MAX_HEADERS: usize = 100;
+
+/// How long a worker waits on an idle keep-alive connection before closing
+/// it. Bounds how long [`HttpServer::stop`] can block on live connections.
+pub const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    /// Request method, uppercase as sent (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target as sent, including any query string.
+    pub path: String,
+    /// Headers with lowercased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Decoded body (empty when no `Content-Length` was sent).
+    pub body: String,
+}
+
+impl HttpRequest {
+    /// First header value for `name` (lowercase), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// One HTTP response: status + JSON (or plain-text) body.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    /// Status code (200, 400, 404, 405, 500, 503, 504, …).
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body.
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// A JSON response with the given status.
+    pub fn json(status: u16, body: String) -> HttpResponse {
+        HttpResponse { status, content_type: "application/json", body }
+    }
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Route/handler function: pure request → response. Must be `Send + Sync`
+/// because every pool worker shares it.
+pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// Threaded HTTP/1.1 server: one acceptor + `workers` handler threads.
+///
+/// Concurrency model: **one worker per live connection** (a worker runs a
+/// connection's keep-alive loop until it closes or idles out after
+/// [`IDLE_TIMEOUT`]), so size `workers` to the expected number of
+/// concurrent keep-alive clients. Accepted-but-unclaimed connections wait
+/// in a *bounded* hand-off queue; when it fills, the acceptor stops
+/// accepting and further clients queue in (and eventually overflow) the
+/// OS listen backlog instead of growing server memory.
+///
+/// `stop()` (or drop) closes the acceptor, lets the workers drain any
+/// already-accepted connections, and joins every thread. A worker parked
+/// on an idle keep-alive connection notices within [`IDLE_TIMEOUT`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    stopping: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting. Every accepted connection is dispatched to one of
+    /// `workers` pool threads running `handler` per request.
+    pub fn start(addr: &str, handler: Handler, workers: usize) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding HTTP listener on {addr}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let stopping = Arc::new(AtomicBool::new(false));
+        // Bounded hand-off: a full queue blocks the acceptor (backpressure
+        // via the OS listen backlog) instead of buffering connections
+        // without limit while every worker is pinned to a live client.
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(workers.max(1) * 4);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let mut pool = Vec::with_capacity(workers.max(1));
+        for w in 0..workers.max(1) {
+            let rx = Arc::clone(&conn_rx);
+            let h = Arc::clone(&handler);
+            let stop = Arc::clone(&stopping);
+            let t = std::thread::Builder::new()
+                .name(format!("hinm-http-{w}"))
+                .spawn(move || loop {
+                    // Hold the lock only while waiting for a connection;
+                    // handling runs unlocked so workers serve in parallel.
+                    let conn = { rx.lock().unwrap().recv() };
+                    match conn {
+                        Ok(stream) => handle_connection(stream, h.as_ref(), &stop),
+                        Err(_) => break, // acceptor gone and queue drained
+                    }
+                })
+                .context("spawning HTTP worker")?;
+            pool.push(t);
+        }
+
+        let stop2 = Arc::clone(&stopping);
+        let acceptor = std::thread::Builder::new()
+            .name("hinm-http-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            if stop2.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            // Persistent accept failures (e.g. fd
+                            // exhaustion) must not busy-spin the acceptor.
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    }
+                }
+                // Dropping conn_tx here lets the pool drain and exit.
+            })
+            .context("spawning HTTP acceptor")?;
+
+        Ok(HttpServer { addr, stopping, acceptor: Some(acceptor), workers: pool })
+    }
+
+    /// The bound socket address (useful with an ephemeral `:0` bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain queued connections, join every thread.
+    pub fn stop(self) {
+        // Drop runs the shutdown sequence.
+    }
+
+    fn shutdown(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        // The acceptor blocks in accept(); a throwaway connection wakes it
+        // so it can observe the flag and exit.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Keep-alive loop: parse a request, run the handler, write the response;
+/// repeat until EOF, `Connection: close`, idle timeout, a malformed
+/// request (answered with 400, then closed), or server shutdown. The
+/// `stopping` flag is checked between requests so an *active* keep-alive
+/// client cannot pin its worker past [`HttpServer::stop`] — the last
+/// response before closing carries `Connection: close`.
+fn handle_connection(
+    stream: TcpStream,
+    handler: &(dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync),
+    stopping: &AtomicBool,
+) {
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut writer = stream;
+    let mut reader = match writer.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    loop {
+        if stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean close from the client
+            Err(e) => {
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    let resp = HttpResponse::json(
+                        400,
+                        format!("{{\"error\": {{\"kind\": \"bad_http\", \"message\": \"{e}\"}}}}"),
+                    );
+                    let _ = write_response(&mut writer, &resp, false);
+                }
+                break; // timeouts and I/O failures close quietly
+            }
+        };
+        let keep_alive = !req
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+            && !stopping.load(Ordering::SeqCst);
+        let resp = handler(&req);
+        if write_response(&mut writer, &resp, keep_alive).is_err() {
+            break;
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+}
+
+fn invalid(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Read one `\n`-terminated line of at most [`MAX_LINE_BYTES`] bytes.
+/// Returns the byte count (0 = EOF); a line hitting the cap without a
+/// newline is `InvalidData`.
+fn read_line_limited(reader: &mut BufReader<TcpStream>, line: &mut String) -> std::io::Result<usize> {
+    let n = reader.by_ref().take(MAX_LINE_BYTES).read_line(line)?;
+    if n as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
+        return Err(invalid("header line too long"));
+    }
+    Ok(n)
+}
+
+/// Read one request. `Ok(None)` = clean EOF before a request started;
+/// `ErrorKind::InvalidData` = malformed request (caller answers 400); any
+/// other error = connection-level failure (caller closes quietly).
+fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    if read_line_limited(reader, &mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| invalid("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| invalid("request line has no target"))?.to_string();
+    if !parts.next().is_some_and(|v| v.starts_with("HTTP/")) {
+        return Err(invalid("request line has no HTTP version"));
+    }
+
+    let mut headers = Vec::new();
+    let mut content_len: Option<usize> = None;
+    loop {
+        if headers.len() > MAX_HEADERS {
+            return Err(invalid("too many headers"));
+        }
+        let mut h = String::new();
+        if read_line_limited(reader, &mut h)? == 0 {
+            return Err(invalid("eof inside headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').ok_or_else(|| invalid("header without ':'"))?;
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim().to_string();
+        if k == "transfer-encoding" {
+            // Only Content-Length framing is spoken here; misparsing a
+            // chunked body as the next request would desync the
+            // connection (request smuggling), so reject it outright.
+            return Err(invalid("Transfer-Encoding is not supported"));
+        }
+        if k == "content-length" {
+            let n: usize = v.parse().map_err(|_| invalid("unparseable Content-Length"))?;
+            if content_len.is_some_and(|prev| prev != n) {
+                return Err(invalid("conflicting Content-Length headers"));
+            }
+            if n > MAX_BODY_BYTES {
+                return Err(invalid("request body too large"));
+            }
+            content_len = Some(n);
+        }
+        headers.push((k, v));
+    }
+    let content_len = content_len.unwrap_or(0);
+
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| invalid("body is not UTF-8"))?;
+    Ok(Some(HttpRequest { method, path, headers, body }))
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &HttpResponse,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        status_reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+/// Minimal blocking HTTP/1.1 client over one keep-alive connection.
+///
+/// Sends `Content-Length`-framed requests and reads framed responses;
+/// exactly the dialect [`HttpServer`] speaks. Used by the integration
+/// tests and the socket-mode load bench.
+pub struct HttpClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect to a server (e.g. the address from
+    /// [`HttpServer::local_addr`]).
+    pub fn connect(addr: SocketAddr) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().context("cloning client stream")?);
+        Ok(HttpClient { stream, reader })
+    }
+
+    /// `GET path` → `(status, body)`.
+    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
+        self.request("GET", path, None)
+    }
+
+    /// `POST path` with a JSON body → `(status, body)`.
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request("POST", path, Some(body))
+    }
+
+    /// Send one request and block for its response.
+    pub fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+        let b = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: hinm\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{b}",
+            b.len()
+        );
+        self.stream.write_all(req.as_bytes()).context("writing request")?;
+        self.stream.flush().context("flushing request")?;
+
+        let mut line = String::new();
+        anyhow::ensure!(
+            self.reader.read_line(&mut line).context("reading status line")? > 0,
+            "server closed the connection before responding"
+        );
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .with_context(|| format!("malformed status line {line:?}"))?
+            .parse()
+            .with_context(|| format!("malformed status in {line:?}"))?;
+
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            anyhow::ensure!(
+                self.reader.read_line(&mut h).context("reading header")? > 0,
+                "eof in response headers"
+            );
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_len =
+                        v.trim().parse().with_context(|| format!("bad Content-Length {v:?}"))?;
+                }
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        self.reader.read_exact(&mut body).context("reading response body")?;
+        Ok((status, String::from_utf8(body).context("response body is not UTF-8")?))
+    }
+}

@@ -1,0 +1,129 @@
+//! Network serving layer: the HTTP/JSON front door over the batch engine.
+//!
+//! PR 2's [`BatchServer`](crate::coordinator::BatchServer) is only
+//! reachable from in-process Rust; this module opens it to external
+//! clients without adding any heavy dependency:
+//!
+//! * [`http`] — the HTTP/1.1 transport (acceptor + worker pool over
+//!   `std::net::TcpListener`) and a matching minimal client.
+//! * [`protocol`] — the `/v1/*` JSON wire types over [`crate::util::json`].
+//! * [`HttpFront`] — binds an address and routes three endpoints onto a
+//!   [`ServerHandle`]:
+//!
+//! | Route | Method | Behaviour |
+//! |---|---|---|
+//! | `/v1/infer` | POST | body `{"x": [...], "priority"?, "deadline_ms"?}` → `{"y": [...]}`; scheduling honored by the engine queue |
+//! | `/v1/metrics` | GET | engine + scheduler + cache counters as JSON |
+//! | `/healthz` | GET | liveness probe, `{"status": "ok"}` |
+//!
+//! Backpressure propagates naturally: a full engine queue blocks the HTTP
+//! worker inside `infer_opts`, which stalls that connection while the
+//! other pool workers keep serving. Engine errors map onto status codes
+//! via [`protocol::status_for`] (timeout → 504, stopped → 503, …).
+
+pub mod http;
+pub mod protocol;
+
+use crate::coordinator::serve::ServerHandle;
+use crate::runtime::backend::CacheStats;
+use crate::util::json::{self, Json};
+use anyhow::Result;
+use http::{Handler, HttpRequest, HttpResponse, HttpServer};
+use protocol::InferRequest;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub use http::HttpClient;
+
+/// The HTTP front door: owns the listener/worker threads and the routes.
+pub struct HttpFront {
+    server: HttpServer,
+}
+
+impl HttpFront {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve the
+    /// engine behind `handle` with `workers` connection-handler threads.
+    /// Pass the engine's shared [`CacheStats`] to expose cache counters on
+    /// `/v1/metrics`.
+    pub fn start(
+        addr: &str,
+        handle: ServerHandle,
+        cache: Option<Arc<CacheStats>>,
+        workers: usize,
+    ) -> Result<HttpFront> {
+        let handler: Handler =
+            Arc::new(move |req: &HttpRequest| route(req, &handle, cache.as_deref()));
+        let server = HttpServer::start(addr, handler, workers)?;
+        Ok(HttpFront { server })
+    }
+
+    /// The bound address (resolves an ephemeral-port bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// Stop accepting and join all HTTP threads. Stop the front *before*
+    /// the engine so in-flight requests still get real answers.
+    pub fn stop(self) {
+        self.server.stop();
+    }
+}
+
+fn route(req: &HttpRequest, engine: &ServerHandle, cache: Option<&CacheStats>) -> HttpResponse {
+    let path = req.path.split('?').next().unwrap_or("");
+    match path {
+        "/healthz" => match req.method.as_str() {
+            "GET" => HttpResponse::json(
+                200,
+                Json::obj(vec![("status", Json::str("ok"))]).compact(),
+            ),
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/metrics" => match req.method.as_str() {
+            "GET" => {
+                HttpResponse::json(200, protocol::metrics_json(engine.metrics(), cache).compact())
+            }
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/infer" => match req.method.as_str() {
+            "POST" => infer_route(req, engine),
+            _ => method_not_allowed(req, "POST"),
+        },
+        _ => HttpResponse::json(
+            404,
+            protocol::error_body("not_found", &format!("no route for {} {}", req.method, path))
+                .compact(),
+        ),
+    }
+}
+
+fn method_not_allowed(req: &HttpRequest, allowed: &str) -> HttpResponse {
+    HttpResponse::json(
+        405,
+        protocol::error_body(
+            "method_not_allowed",
+            &format!("{} {} (use {allowed})", req.method, req.path),
+        )
+        .compact(),
+    )
+}
+
+fn infer_route(req: &HttpRequest, engine: &ServerHandle) -> HttpResponse {
+    let parsed = match json::parse(&req.body) {
+        Ok(v) => v,
+        Err(e) => return HttpResponse::json(400, protocol::error_body("bad_json", &e).compact()),
+    };
+    let ir = match InferRequest::from_json(&parsed) {
+        Ok(r) => r,
+        Err(e) => return HttpResponse::json(400, protocol::error_body("bad_request", &e).compact()),
+    };
+    let deadline = ir.deadline_ms.map(Duration::from_millis);
+    match engine.infer_opts(ir.x, ir.priority, deadline) {
+        Ok(y) => HttpResponse::json(200, protocol::infer_response(&y).compact()),
+        Err(e) => {
+            let (status, kind) = protocol::status_for(&e);
+            HttpResponse::json(status, protocol::error_body(kind, &e.to_string()).compact())
+        }
+    }
+}

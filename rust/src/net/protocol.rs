@@ -1,0 +1,260 @@
+//! Wire types for the `/v1/*` JSON API — hand-rolled over
+//! [`crate::util::json`] (the offline environment has no serde).
+//!
+//! Request body for `POST /v1/infer`:
+//!
+//! ```json
+//! {"x": [0.1, -0.2, …], "priority": "high", "deadline_ms": 50}
+//! ```
+//!
+//! `priority` (optional, default `"normal"`) and `deadline_ms` (optional,
+//! default none) map onto [`Priority`] and the scheduler deadline measured
+//! from the moment the request is submitted. Success response is
+//! `{"y": [...]}`; every error response is
+//! `{"error": {"kind": ..., "message": ...}}` with the status code from
+//! [`status_for`].
+
+use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::serve::{InferError, Priority};
+use crate::runtime::backend::CacheStats;
+use crate::util::json::Json;
+
+/// One parsed `POST /v1/infer` body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    /// The activation column (`d_in` values).
+    pub x: Vec<f32>,
+    /// Scheduling class (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Optional deadline in milliseconds, measured from submission.
+    pub deadline_ms: Option<u64>,
+}
+
+impl InferRequest {
+    /// A normal-priority request with no deadline.
+    pub fn new(x: Vec<f32>) -> InferRequest {
+        InferRequest { x, priority: Priority::Normal, deadline_ms: None }
+    }
+
+    /// Parse a request body; the error string is surfaced to the client in
+    /// a 400 response.
+    pub fn from_json(v: &Json) -> Result<InferRequest, String> {
+        let arr = v
+            .get("x")
+            .as_arr()
+            .ok_or_else(|| "missing required field \"x\" (array of numbers)".to_string())?;
+        let mut x = Vec::with_capacity(arr.len());
+        for e in arr {
+            let f = e.as_f64().ok_or_else(|| "\"x\" must contain only numbers".to_string())? as f32;
+            // Reject values that overflow f32 (e.g. 3.5e38): they would
+            // poison the whole batch with inf/NaN.
+            if !f.is_finite() {
+                return Err("\"x\" must contain only finite f32 values".to_string());
+            }
+            x.push(f);
+        }
+        let priority = match v.get("priority") {
+            Json::Null => Priority::Normal,
+            p => {
+                let s = p
+                    .as_str()
+                    .ok_or_else(|| "\"priority\" must be a string".to_string())?;
+                Priority::parse(s)
+                    .ok_or_else(|| format!("unknown priority {s:?} (expected high|normal|low)"))?
+            }
+        };
+        let deadline_ms = match v.get("deadline_ms") {
+            Json::Null => None,
+            d => {
+                let ms = d
+                    .as_f64()
+                    .ok_or_else(|| "\"deadline_ms\" must be a number".to_string())?;
+                if ms < 0.0 {
+                    return Err("\"deadline_ms\" must be non-negative".to_string());
+                }
+                Some(ms as u64)
+            }
+        };
+        Ok(InferRequest { x, priority, deadline_ms })
+    }
+
+    /// Serialize for sending (used by the bench client and tests).
+    /// Default-valued fields are omitted.
+    pub fn to_json(&self) -> Json {
+        let mut pairs =
+            vec![("x", Json::arr(self.x.iter().map(|&v| Json::num(v as f64))))];
+        if self.priority != Priority::Normal {
+            pairs.push(("priority", Json::str(self.priority.as_str())));
+        }
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Success body for `POST /v1/infer`: `{"y": [...]}`.
+pub fn infer_response(y: &[f32]) -> Json {
+    Json::obj(vec![("y", Json::arr(y.iter().map(|&v| Json::num(v as f64))))])
+}
+
+/// Extract `y` from a success body (client side).
+pub fn parse_infer_response(v: &Json) -> Result<Vec<f32>, String> {
+    let arr = v.get("y").as_arr().ok_or_else(|| "response has no \"y\" array".to_string())?;
+    arr.iter()
+        .map(|e| e.as_f64().map(|f| f as f32).ok_or_else(|| "\"y\" holds a non-number".to_string()))
+        .collect()
+}
+
+/// Uniform error body: `{"error": {"kind": ..., "message": ...}}`.
+pub fn error_body(kind: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![("kind", Json::str(kind)), ("message", Json::str(message))]),
+    )])
+}
+
+/// Map an engine error onto `(HTTP status, machine-readable kind)`.
+pub fn status_for(e: &InferError) -> (u16, &'static str) {
+    match e {
+        InferError::DeadlineExpired => (504, "deadline_expired"),
+        InferError::Backend(_) => (500, "backend_error"),
+        InferError::Stopped => (503, "server_stopped"),
+        InferError::BadRequest(_) => (400, "bad_request"),
+    }
+}
+
+/// `GET /v1/metrics` body: aggregate latency/throughput, per-priority and
+/// expiry counters, per-replica counters, and cache hit/miss stats when a
+/// [`CachedBackend`](crate::runtime::backend::CachedBackend) is active.
+pub fn metrics_json(m: &EngineMetrics, cache: Option<&CacheStats>) -> Json {
+    let lat = m.aggregate_latency();
+    let pct = lat.percentiles(&[50.0, 95.0, 99.0]);
+    let sched = m.scheduler_stats();
+    let replicas: Vec<Json> = (0..m.replicas.len())
+        .map(|r| {
+            let st = m.replica_stats(r);
+            Json::obj(vec![
+                ("batches", Json::num(st.batches as f64)),
+                ("requests", Json::num(st.requests as f64)),
+                ("errors", Json::num(st.errors as f64)),
+                ("p50_us", Json::num(st.latency.percentile(50.0))),
+            ])
+        })
+        .collect();
+    let mut pairs = vec![
+        ("requests", Json::num(lat.count() as f64)),
+        ("req_per_sec", Json::num(m.requests_per_sec())),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("mean", Json::num(lat.mean())),
+                ("p50", Json::num(pct[0])),
+                ("p95", Json::num(pct[1])),
+                ("p99", Json::num(pct[2])),
+            ]),
+        ),
+        (
+            "priorities",
+            Json::obj(vec![
+                ("high", Json::num(sched.served_for(Priority::High) as f64)),
+                ("normal", Json::num(sched.served_for(Priority::Normal) as f64)),
+                ("low", Json::num(sched.served_for(Priority::Low) as f64)),
+            ]),
+        ),
+        (
+            "expired",
+            Json::obj(vec![
+                ("at_enqueue", Json::num(sched.expired_at_enqueue as f64)),
+                ("in_queue", Json::num(sched.expired_in_queue as f64)),
+            ]),
+        ),
+        ("replicas", Json::Arr(replicas)),
+    ];
+    if let Some(c) = cache {
+        pairs.push((
+            "cache",
+            Json::obj(vec![
+                ("hits", Json::num(c.hits() as f64)),
+                ("misses", Json::num(c.misses() as f64)),
+                ("hit_rate", Json::num(c.hit_rate())),
+            ]),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn infer_request_roundtrip_with_defaults() {
+        let r = InferRequest::new(vec![1.0, -2.5, 0.0]);
+        let text = r.to_json().pretty();
+        assert!(!text.contains("priority"), "default priority is omitted: {text}");
+        assert!(!text.contains("deadline_ms"), "absent deadline is omitted: {text}");
+        let back = InferRequest::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn infer_request_roundtrip_with_scheduling() {
+        let r = InferRequest {
+            x: vec![0.5; 4],
+            priority: Priority::High,
+            deadline_ms: Some(250),
+        };
+        let back =
+            InferRequest::from_json(&json::parse(&r.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn infer_request_rejects_malformed_bodies() {
+        for (body, needle) in [
+            (r#"{}"#, "missing required field"),
+            (r#"{"x": "nope"}"#, "missing required field"),
+            (r#"{"x": [1, "two"]}"#, "only numbers"),
+            (r#"{"x": [3.5e38]}"#, "finite"),
+            (r#"{"x": [1e999]}"#, "finite"),
+            (r#"{"x": [1], "priority": "urgent"}"#, "unknown priority"),
+            (r#"{"x": [1], "priority": 3}"#, "must be a string"),
+            (r#"{"x": [1], "deadline_ms": "soon"}"#, "must be a number"),
+            (r#"{"x": [1], "deadline_ms": -5}"#, "non-negative"),
+        ] {
+            let err = InferRequest::from_json(&json::parse(body).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "body {body}: expected {needle:?} in {err:?}");
+        }
+    }
+
+    #[test]
+    fn infer_response_roundtrip() {
+        let y = vec![1.5f32, -3.25, 0.0];
+        let v = infer_response(&y);
+        let back = parse_infer_response(&json::parse(&v.pretty()).unwrap()).unwrap();
+        assert_eq!(back, y);
+    }
+
+    #[test]
+    fn status_mapping_is_stable() {
+        assert_eq!(status_for(&InferError::DeadlineExpired).0, 504);
+        assert_eq!(status_for(&InferError::Stopped).0, 503);
+        assert_eq!(status_for(&InferError::Backend("x".into())).0, 500);
+        assert_eq!(status_for(&InferError::BadRequest("x".into())).0, 400);
+    }
+
+    #[test]
+    fn metrics_json_has_the_documented_shape() {
+        let m = EngineMetrics::new(2);
+        m.scheduler.lock().unwrap().served[Priority::High.index()] = 3;
+        let v = metrics_json(&m, None);
+        assert_eq!(v.get("priorities").get("high").as_usize(), Some(3));
+        assert_eq!(v.get("replicas").as_arr().unwrap().len(), 2);
+        assert!(v.get("cache").as_obj().is_none(), "no cache block without a cache");
+        let stats = CacheStats::new_shared();
+        let v = metrics_json(&m, Some(stats.as_ref()));
+        assert_eq!(v.get("cache").get("hits").as_usize(), Some(0));
+    }
+}

@@ -9,12 +9,14 @@ use crate::sparsity::config::HinmConfig;
 use crate::util::rng::Xoshiro256;
 
 #[derive(Clone, Debug)]
+/// Tuning knobs for the Apex-style pairwise-swap ICP (Pool & Yu).
 pub struct ApexParams {
     /// Full sweeps over all column pairs.
     pub max_sweeps: usize,
     /// Escape attempts (random swap accepted regardless) when a sweep
     /// finds no improving swap — Apex's bounded-regression trick.
     pub escapes: usize,
+    /// RNG seed for escape-move selection.
     pub seed: u64,
 }
 

@@ -12,10 +12,13 @@ use crate::tensor::Matrix;
 use crate::util::rng::Xoshiro256;
 
 #[derive(Clone, Debug)]
+/// Tuning knobs for the Tetris two-axis swap search.
 pub struct TetrisParams {
+    /// Alternating row/column rounds before stopping.
     pub max_rounds: usize,
     /// Candidate swaps evaluated per round per axis.
     pub swaps_per_round: usize,
+    /// RNG seed for candidate-swap selection.
     pub seed: u64,
 }
 
@@ -26,10 +29,15 @@ impl Default for TetrisParams {
 }
 
 #[derive(Clone, Debug)]
+/// Outcome of [`tetris_permute`].
 pub struct TetrisResult {
+    /// Final row order: position `i` holds original row `row_perm[i]`.
     pub row_perm: Vec<usize>,
+    /// Final column order, same convention.
     pub col_perm: Vec<usize>,
+    /// Hierarchical retention of the final arrangement.
     pub retained: f64,
+    /// Rounds actually executed (early stop on no improvement).
     pub rounds_run: usize,
 }
 

@@ -19,8 +19,11 @@ use crate::tensor::Matrix;
 pub use super::strategy::PermuteOutcome as GyroOutcome;
 
 #[derive(Clone, Debug, Default)]
+/// Combined OCP + ICP configuration for the full gyro run.
 pub struct GyroParams {
+    /// Output-channel-permutation (vector level) parameters.
     pub ocp: OcpParams,
+    /// Intra-channel-permutation (N:M level) parameters.
     pub icp: IcpParams,
     /// Skip OCP (ablation arms that replace it).
     pub skip_ocp: bool,

@@ -13,9 +13,13 @@ use crate::sparsity::config::HinmConfig;
 use crate::util::rng::{mix_seed, Xoshiro256};
 
 #[derive(Clone, Debug)]
+/// Tuning knobs for the gyro ICP (per-tile Hungarian refinement).
 pub struct IcpParams {
+    /// Maximum refinement iterations.
     pub max_iters: usize,
+    /// Stop after this many consecutive non-improving iterations.
     pub patience: usize,
+    /// Base RNG seed (per-tile streams derive via `mix_seed`).
     pub seed: u64,
     /// Cap on partitions per ICP block. Wide layers (e.g. ResNet conv3x3:
     /// K_v = 2304 → 576 partitions) would make the O(P³) Hungarian the
@@ -31,14 +35,18 @@ impl Default for IcpParams {
 }
 
 #[derive(Clone, Debug)]
+/// Outcome of one tile's ICP refinement.
 pub struct IcpResult {
     /// Order over the tile's kept columns: position `i` holds kept-column
     /// index `order[i]` (an index into the tile's ascending kept list).
     pub order: Vec<usize>,
     /// Eq. 3 retained saliency of the final arrangement.
     pub retained: f64,
+    /// Retained value per accepted iteration (for convergence plots).
     pub history: Vec<f64>,
+    /// Iterations actually executed.
     pub iters_run: usize,
+    /// Iterations that improved the objective.
     pub accepted: usize,
 }
 

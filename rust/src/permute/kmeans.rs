@@ -12,6 +12,7 @@ use crate::util::rng::Xoshiro256;
 /// Result: `clusters[c]` = indices (into the input point list) of cluster c.
 #[derive(Clone, Debug)]
 pub struct Clustering {
+    /// `clusters[c]` lists the point indices assigned to cluster `c`.
     pub clusters: Vec<Vec<usize>>,
 }
 

@@ -12,6 +12,7 @@ use crate::tensor::Matrix;
 use crate::util::rng::Xoshiro256;
 
 #[derive(Clone, Debug)]
+/// Tuning knobs for the gyro OCP (sampling → clustering → assignment).
 pub struct OcpParams {
     /// Maximum sampling/clustering/assignment iterations.
     pub max_iters: usize,
@@ -20,6 +21,7 @@ pub struct OcpParams {
     /// Use the hierarchical-aware cost (retention after vector *and* N:M)
     /// instead of the Eq. 2 vector-level cost. Slower; see DESIGN §7.
     pub hinm_aware: bool,
+    /// Base RNG seed for sampling and clustering.
     pub seed: u64,
 }
 
@@ -30,6 +32,7 @@ impl Default for OcpParams {
 }
 
 #[derive(Clone, Debug)]
+/// Outcome of the OCP search.
 pub struct OcpResult {
     /// `perm[i]` = original output-channel id at permuted position `i`.
     pub perm: Vec<usize>,
@@ -37,7 +40,9 @@ pub struct OcpResult {
     pub retained: f64,
     /// Retained per accepted iteration (for convergence plots).
     pub history: Vec<f64>,
+    /// Iterations actually executed.
     pub iters_run: usize,
+    /// Iterations that improved the objective.
     pub accepted: usize,
 }
 

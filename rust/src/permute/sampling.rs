@@ -38,6 +38,7 @@ impl SampleSchedule {
         self.ladder[iter % self.ladder.len()]
     }
 
+    /// Length of one warm-restart cycle.
     pub fn cycle_len(&self) -> usize {
         self.ladder.len()
     }

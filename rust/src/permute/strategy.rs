@@ -53,6 +53,7 @@ pub struct TileCols<'a> {
 }
 
 impl<'a> TileCols<'a> {
+    /// Borrow a filled scratch buffer as a tile view; `data.len()` must be `v * k_v`.
     pub fn new(data: &'a [f32], v: usize, k_v: usize) -> Self {
         debug_assert_eq!(data.len(), v * k_v);
         Self { data, v, k_v }
@@ -92,6 +93,7 @@ pub trait OcpStrategy: Send + Sync {
     fn is_identity(&self) -> bool {
         false
     }
+    /// Produce the output-channel permutation for one saliency grid.
     fn permute(&self, sal: &Matrix, cfg: &HinmConfig) -> OcpOutcome;
 }
 
@@ -101,7 +103,9 @@ pub struct IcpTileOutcome {
     /// Permutation of `0..k_v` (positions into the tile's ascending kept
     /// list), consumed by the packer's N:M grouping.
     pub order: Vec<usize>,
+    /// Refinement iterations the strategy executed for this tile.
     pub iters_run: usize,
+    /// Iterations that improved the strategy's objective.
     pub accepted: usize,
 }
 
@@ -114,6 +118,7 @@ pub trait IcpStrategy: Send + Sync {
     fn is_identity(&self) -> bool {
         false
     }
+    /// Order the tile's kept columns; randomness must derive from `(seed, tile)` only.
     fn order_tile(&self, cols: &TileCols<'_>, cfg: &HinmConfig, tile: usize) -> IcpTileOutcome;
 }
 
@@ -124,6 +129,7 @@ pub trait IcpStrategy: Send + Sync {
 /// Gyro OCP: sampling → clustering → Hungarian assignment (the paper's §4.2).
 #[derive(Clone, Debug, Default)]
 pub struct GyroOcp {
+    /// Gyro OCP tuning (iterations, sampling, seed).
     pub params: OcpParams,
 }
 
@@ -141,6 +147,7 @@ impl OcpStrategy for GyroOcp {
 /// (Tan et al., NeurIPS'22 — the HiNM-V1 ablation arm).
 #[derive(Clone, Debug)]
 pub struct OvwOcp {
+    /// Seed for the balanced K-means initialization.
     pub seed: u64,
 }
 
@@ -176,6 +183,7 @@ impl OcpStrategy for IdentityOcp {
 /// Gyro ICP: one-sample-per-partition extraction + Hungarian assignment.
 #[derive(Clone, Debug, Default)]
 pub struct GyroIcp {
+    /// Gyro ICP tuning (iterations, patience, base seed).
     pub params: IcpParams,
 }
 
@@ -197,6 +205,7 @@ impl IcpStrategy for GyroIcp {
 /// natural order; the pipeline guard covers it.
 #[derive(Clone, Debug, Default)]
 pub struct ApexIcp {
+    /// Apex swap-search tuning (sweeps, escapes, seed).
     pub params: ApexParams,
 }
 
@@ -217,9 +226,11 @@ impl IcpStrategy for ApexIcp {
 /// accepted, so unlike the global Tetris search it is monotone per tile.
 #[derive(Clone, Debug)]
 pub struct TetrisIcp {
+    /// Alternating hill-climb rounds before stopping.
     pub max_rounds: usize,
     /// Candidate swaps per round.
     pub swaps_per_round: usize,
+    /// Base seed (per-tile streams derive via `mix_seed`).
     pub seed: u64,
 }
 
@@ -300,10 +311,15 @@ impl IcpStrategy for IdentityIcp {
 /// pipeline run keeps seeds explicit and every table reproducible.
 #[derive(Clone, Debug)]
 pub struct StrategyParams {
+    /// Gyro OCP tuning, also the seed source for OVW.
     pub ocp: OcpParams,
+    /// Gyro ICP tuning.
     pub icp: IcpParams,
+    /// Apex ICP tuning.
     pub apex: ApexParams,
+    /// Tetris ICP tuning (the strategy is its own params).
     pub tetris: TetrisIcp,
+    /// Seed for the OVW one-shot clustering.
     pub ovw_seed: u64,
 }
 
@@ -345,11 +361,14 @@ fn canon_key(key: &str) -> &str {
 /// A parsed `<ocp>+<icp>` method specification over canonical registry keys.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StrategySpec {
+    /// Canonical OCP key (`gyro`, `ovw`, `id`, or custom).
     pub ocp: String,
+    /// Canonical ICP key (`gyro`, `apex`, `tetris`, `id`, or custom).
     pub icp: String,
 }
 
 impl StrategySpec {
+    /// Spec from two keys; aliases (`identity`/`none`) are canonicalized.
     pub fn new(ocp: &str, icp: &str) -> Self {
         Self { ocp: canon_key(ocp).to_string(), icp: canon_key(icp).to_string() }
     }
@@ -394,6 +413,7 @@ pub struct StrategyRegistry {
 }
 
 impl StrategyRegistry {
+    /// Registry with every strategy the paper compares pre-registered.
     pub fn builtin() -> Self {
         let mut ocp: BTreeMap<&'static str, OcpFactory> = BTreeMap::new();
         ocp.insert("gyro", |p| Box::new(GyroOcp { params: p.ocp.clone() }));
@@ -427,6 +447,7 @@ impl StrategyRegistry {
         self.icp.keys().copied().collect()
     }
 
+    /// True when both keys of `spec` are registered.
     pub fn supports(&self, spec: &StrategySpec) -> bool {
         self.ocp.contains_key(spec.ocp.as_str()) && self.icp.contains_key(spec.icp.as_str())
     }
@@ -452,10 +473,12 @@ impl StrategyRegistry {
         }
     }
 
+    /// Instantiate the OCP strategy under `key`, or `None` if unregistered.
     pub fn build_ocp(&self, key: &str, params: &StrategyParams) -> Option<Box<dyn OcpStrategy>> {
         self.ocp.get(canon_key(key)).map(|f| f(params))
     }
 
+    /// Instantiate the ICP strategy under `key`, or `None` if unregistered.
     pub fn build_icp(&self, key: &str, params: &StrategyParams) -> Option<Box<dyn IcpStrategy>> {
         self.icp.get(canon_key(key)).map(|f| f(params))
     }
@@ -520,6 +543,7 @@ impl Default for PermutePipeline {
 }
 
 impl PermutePipeline {
+    /// Pipeline with an explicit tile-engine worker count (guard on).
     pub fn with_workers(workers: usize) -> Self {
         Self { workers, ..Self::default() }
     }

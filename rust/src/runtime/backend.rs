@@ -14,6 +14,13 @@
 //!   PJRT [`Executor`]. PJRT handles are `!Send`, so the batch server
 //!   constructs this backend *on* the worker thread via its factory.
 //!
+//! A third implementation is a *decorator*: [`CachedBackend`] wraps any
+//! backend with an LRU memo keyed by the (hashed, then bit-exact-verified)
+//! activation batch, so repeated identical batches skip the kernel
+//! entirely and return a bit-identical stored result. Hit/miss counters
+//! live in a shared [`CacheStats`] so multiple replicas can report into
+//! one place.
+//!
 //! Backends are stateful (`&mut self`) precisely so weights and scratch are
 //! materialized once at construction and reused across every batch — the
 //! fixed packed-weight literals of the PJRT path are created once and
@@ -25,6 +32,8 @@ use crate::runtime::registry::ArtifactSpec;
 use crate::spmm::SpmmScratch;
 use crate::tensor::Matrix;
 use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// A serving execution engine for one fixed model.
@@ -37,6 +46,7 @@ use std::sync::Arc;
 /// padding columns. Implementations may be `!Send`; the batch server
 /// builds one per worker thread through a `Send + Sync` factory.
 pub trait SpmmBackend {
+    /// Short backend identifier for logs/reports.
     fn name(&self) -> &'static str;
     /// Uncompressed input channels per request.
     fn d_in(&self) -> usize;
@@ -55,11 +65,14 @@ pub trait SpmmBackend {
 /// not); a worker thread converts these to literals once at startup.
 #[derive(Clone, Debug)]
 pub enum HostTensor {
+    /// f32 data + shape.
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data + shape.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl HostTensor {
+    /// Convert to an XLA literal (on the consuming thread).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             HostTensor::F32(d, s) => lit_f32(d, s),
@@ -91,6 +104,7 @@ pub struct NativeCpuBackend {
 }
 
 impl NativeCpuBackend {
+    /// Backend over a shared model with fresh private scratch.
     pub fn new(model: Arc<HinmModel>) -> Self {
         Self { model, scratch: SpmmScratch::new() }
     }
@@ -136,6 +150,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Compile `spec` and materialize the fixed literals once.
     pub fn new(
         spec: &ArtifactSpec,
         fixed: &[HostTensor],
@@ -193,6 +208,190 @@ impl SpmmBackend for PjrtBackend {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Cached decorator
+// ---------------------------------------------------------------------------
+
+/// Hit/miss counters for one (or several) [`CachedBackend`]s.
+///
+/// Lock-free so the serving hot path never blocks on metrics; share one
+/// instance across all replicas of an engine to get a single aggregate
+/// view (see [`crate::coordinator::serve::cached_factory`]).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheStats {
+    /// A fresh, shareable counter block.
+    pub fn new_shared() -> Arc<CacheStats> {
+        Arc::new(CacheStats::default())
+    }
+
+    /// Batches answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Batches that had to run on the wrapped backend.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Hit fraction in `[0, 1]` (0 when nothing was looked up yet).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+/// One memoized batch: the full key (for bit-exact verification against
+/// hash collisions) plus the stored result and an LRU stamp.
+struct CacheEntry {
+    x_rows: usize,
+    x_cols: usize,
+    x_data: Vec<f32>,
+    y: Matrix,
+    last_used: u64,
+}
+
+/// FNV-1a over the batch shape and the bit patterns of its elements.
+/// Bit patterns (not float values) so `-0.0`/`0.0` and NaN payloads hash
+/// deterministically.
+fn hash_batch(x: &Matrix) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for b in [x.rows as u64, x.cols as u64] {
+        h ^= b;
+        h = h.wrapping_mul(PRIME);
+    }
+    for v in &x.data {
+        // Fold each f32 in as its raw bits.
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// LRU-memoizing decorator over any [`SpmmBackend`].
+///
+/// `run_batch` hashes the incoming activation batch; on a hit (hash match
+/// *and* bit-exact data match — collisions can never return wrong results)
+/// the stored output is cloned back without touching the wrapped backend,
+/// so a cache hit is bit-identical to the miss that populated it. The map
+/// holds at most `capacity` entries; inserting past capacity evicts the
+/// least-recently-used entry.
+///
+/// Invariants (see `DESIGN.md` §13): the decorator is exactly transparent
+/// — same outputs, same errors, same dimensions as the wrapped backend —
+/// and never caches failed executions.
+pub struct CachedBackend {
+    inner: Box<dyn SpmmBackend>,
+    capacity: usize,
+    entries: HashMap<u64, CacheEntry>,
+    tick: u64,
+    stats: Arc<CacheStats>,
+}
+
+impl CachedBackend {
+    /// Wrap `inner` with an LRU of `capacity` entries (min 1) and private
+    /// stats.
+    pub fn new(inner: Box<dyn SpmmBackend>, capacity: usize) -> CachedBackend {
+        Self::with_stats(inner, capacity, CacheStats::new_shared())
+    }
+
+    /// Wrap `inner`, reporting hits/misses into a shared `stats` block.
+    pub fn with_stats(
+        inner: Box<dyn SpmmBackend>,
+        capacity: usize,
+        stats: Arc<CacheStats>,
+    ) -> CachedBackend {
+        CachedBackend {
+            inner,
+            capacity: capacity.max(1),
+            entries: HashMap::new(),
+            tick: 0,
+            stats,
+        }
+    }
+
+    /// The shared hit/miss counters.
+    pub fn stats(&self) -> &Arc<CacheStats> {
+        &self.stats
+    }
+
+    /// Entries currently resident (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn evict_lru(&mut self) {
+        let victim =
+            self.entries.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
+        if let Some(k) = victim {
+            self.entries.remove(&k);
+        }
+    }
+}
+
+impl SpmmBackend for CachedBackend {
+    fn name(&self) -> &'static str {
+        "cached"
+    }
+
+    fn d_in(&self) -> usize {
+        self.inner.d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.inner.d_out()
+    }
+
+    fn fixed_batch(&self) -> Option<usize> {
+        self.inner.fixed_batch()
+    }
+
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        let key = hash_batch(x);
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            if e.x_rows == x.rows && e.x_cols == x.cols && e.x_data == x.data {
+                e.last_used = self.tick;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(e.y.clone());
+            }
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let y = self.inner.run_batch(x)?;
+        if self.entries.len() >= self.capacity && !self.entries.contains_key(&key) {
+            self.evict_lru();
+        }
+        self.entries.insert(
+            key,
+            CacheEntry {
+                x_rows: x.rows,
+                x_cols: x.cols,
+                x_data: x.data.clone(),
+                y: y.clone(),
+                last_used: self.tick,
+            },
+        );
+        Ok(y)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +430,94 @@ mod tests {
         assert_eq!(lit.element_count(), 4);
         let t = HostTensor::I32(vec![7, -3], vec![2]);
         assert_eq!(t.to_literal().unwrap().to_vec::<i32>().unwrap(), vec![7, -3]);
+    }
+
+    /// Trivial backend (`y = x + 1`); the cache's hit/miss counters are the
+    /// oracle for whether it actually ran.
+    struct AddOneBackend;
+
+    impl SpmmBackend for AddOneBackend {
+        fn name(&self) -> &'static str {
+            "add-one"
+        }
+        fn d_in(&self) -> usize {
+            4
+        }
+        fn d_out(&self) -> usize {
+            4
+        }
+        fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+            let mut y = x.clone();
+            for v in &mut y.data {
+                *v += 1.0;
+            }
+            Ok(y)
+        }
+    }
+
+    #[test]
+    fn cached_backend_hits_are_bit_identical_and_skip_the_inner_backend() {
+        let mut cb = CachedBackend::new(Box::new(AddOneBackend), 4);
+        let mut rng = Xoshiro256::new(3);
+        let x = Matrix::randn(4, 2, 1.0, &mut rng);
+        let miss = cb.run_batch(&x).unwrap();
+        let hit = cb.run_batch(&x).unwrap();
+        assert_eq!(
+            miss.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            hit.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "cache hit must be bit-identical to the miss that populated it"
+        );
+        assert_eq!(cb.stats().hits(), 1);
+        assert_eq!(cb.stats().misses(), 1);
+        assert_eq!(cb.len(), 1);
+        // A different batch is a miss.
+        let x2 = Matrix::randn(4, 2, 1.0, &mut rng);
+        cb.run_batch(&x2).unwrap();
+        assert_eq!(cb.stats().misses(), 2);
+    }
+
+    #[test]
+    fn cached_backend_evicts_least_recently_used() {
+        let mut cb = CachedBackend::new(Box::new(AddOneBackend), 2);
+        let a = Matrix::from_vec(4, 1, vec![1.0, 0.0, 0.0, 0.0]);
+        let b = Matrix::from_vec(4, 1, vec![2.0, 0.0, 0.0, 0.0]);
+        let c = Matrix::from_vec(4, 1, vec![3.0, 0.0, 0.0, 0.0]);
+        cb.run_batch(&a).unwrap(); // miss → {a}
+        cb.run_batch(&b).unwrap(); // miss → {a, b}
+        cb.run_batch(&a).unwrap(); // hit, refreshes a
+        cb.run_batch(&c).unwrap(); // miss, evicts b (LRU) → {a, c}
+        assert_eq!(cb.len(), 2);
+        cb.run_batch(&a).unwrap(); // still cached
+        cb.run_batch(&c).unwrap(); // still cached
+        assert_eq!(cb.stats().hits(), 3);
+        cb.run_batch(&b).unwrap(); // evicted earlier → miss again
+        assert_eq!(cb.stats().misses(), 4);
+    }
+
+    #[test]
+    fn cached_backend_is_transparent_over_the_native_backend() {
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let model = Arc::new(HinmModel::synthetic_ffn(32, 64, &cfg, Activation::Relu, 5).unwrap());
+        let mut plain = NativeCpuBackend::new(Arc::clone(&model));
+        let mut cached =
+            CachedBackend::new(Box::new(NativeCpuBackend::new(Arc::clone(&model))), 8);
+        assert_eq!((cached.d_in(), cached.d_out()), (plain.d_in(), plain.d_out()));
+        assert_eq!(cached.fixed_batch(), plain.fixed_batch());
+        let mut rng = Xoshiro256::new(11);
+        let x = Matrix::randn(32, 4, 1.0, &mut rng);
+        let y_plain = plain.run_batch(&x).unwrap();
+        assert_eq!(cached.run_batch(&x).unwrap(), y_plain, "miss path must match");
+        assert_eq!(cached.run_batch(&x).unwrap(), y_plain, "hit path must match");
+    }
+
+    #[test]
+    fn hash_batch_distinguishes_shape_and_bits() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(hash_batch(&a), hash_batch(&b), "shape must be part of the key");
+        let z1 = Matrix::from_vec(1, 1, vec![0.0]);
+        let z2 = Matrix::from_vec(1, 1, vec![-0.0]);
+        assert_ne!(hash_batch(&z1), hash_batch(&z2), "keying is by bit pattern");
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub fn client() -> Result<PjRtClient> {
 
 /// A compiled artifact ready to execute.
 pub struct Executor {
+    /// The artifact this executor was compiled from.
     pub spec: ArtifactSpec,
     exe: PjRtLoadedExecutable,
 }

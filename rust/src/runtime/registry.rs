@@ -9,7 +9,9 @@ use std::path::{Path, PathBuf};
 /// Dtype of an artifact input.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float (`<f4`).
     F32,
+    /// 32-bit signed int (`<i4`).
     I32,
 }
 
@@ -26,12 +28,16 @@ impl Dtype {
 /// One positional input of an artifact.
 #[derive(Clone, Debug)]
 pub struct InputSpec {
+    /// Input name from the manifest.
     pub name: String,
+    /// Element dtype.
     pub dtype: Dtype,
+    /// Dimensions, C-order.
     pub shape: Vec<usize>,
 }
 
 impl InputSpec {
+    /// Total element count of this input.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -40,9 +46,13 @@ impl InputSpec {
 /// One AOT-lowered HLO artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// Path to the HLO text file.
     pub file: PathBuf,
+    /// Positional input specs, in call order.
     pub inputs: Vec<InputSpec>,
+    /// Number of outputs the artifact returns.
     pub n_outputs: usize,
     /// Free-form metadata (shapes, hyperparams) recorded at lowering time.
     pub meta: BTreeMap<String, f64>,
@@ -51,18 +61,24 @@ pub struct ArtifactSpec {
 /// One `.npy` data dump (initial params, demo packed tensors).
 #[derive(Clone, Debug)]
 pub struct DataSpec {
+    /// Dump name (manifest key).
     pub name: String,
+    /// Path to the `.npy` file.
     pub file: PathBuf,
 }
 
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Registry {
+    /// Artifact root directory.
     pub root: PathBuf,
+    /// Artifacts by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Data dumps by name.
     pub data: BTreeMap<String, DataSpec>,
     /// Ordered LM parameter / mask names (for the trainer).
     pub lm_param_names: Vec<String>,
+    /// Ordered LM mask names (for the trainer).
     pub lm_mask_names: Vec<String>,
 }
 
@@ -76,6 +92,7 @@ impl Registry {
         Self::from_json(&root, &text)
     }
 
+    /// Parse a manifest document rooted at `root`.
     pub fn from_json(root: &Path, text: &str) -> Result<Registry> {
         let doc = parse(text).map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
         let mut artifacts = BTreeMap::new();
@@ -128,6 +145,7 @@ impl Registry {
         })
     }
 
+    /// Look up an artifact by name, with a helpful error.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)

@@ -9,7 +9,9 @@ use crate::tensor::Matrix;
 /// A saliency estimator maps weights (plus optional curvature evidence) to a
 /// nonnegative per-element importance grid.
 pub trait Saliency {
+    /// Estimator name for reports.
     fn name(&self) -> &'static str;
+    /// Score every weight; output has the same shape as `w`.
     fn score(&self, w: &Matrix) -> Matrix;
 }
 
@@ -95,7 +97,9 @@ impl Saliency for SecondOrder {
 /// pair-wise correlation term of the OBS objective at group granularity.
 #[derive(Clone, Debug)]
 pub struct PairwiseSecondOrder {
+    /// The underlying per-element second-order estimator.
     pub inner: SecondOrder,
+    /// Group width M the pair-wise term averages over.
     pub m_group: usize,
     /// Mixing weight of the group term in [0, 1].
     pub lambda: f32,

@@ -42,6 +42,7 @@ impl HinmConfig {
         1.0 - (1.0 - self.vector_sparsity) * self.nm_density()
     }
 
+    /// Fraction of weights the N:M level keeps (`n_keep / m_group`).
     pub fn nm_density(&self) -> f64 {
         self.n_keep as f64 / self.m_group as f64
     }

@@ -21,9 +21,11 @@ use anyhow::{bail, Result};
 /// A weight matrix compressed to the HiNM format.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HinmPacked {
+    /// The sparsity configuration this layer was packed with.
     pub cfg: HinmConfig,
     /// Original (uncompressed) shape.
     pub rows: usize,
+    /// Original (uncompressed) column count.
     pub cols: usize,
     /// Kept columns per tile.
     pub k_v: usize,
@@ -36,10 +38,12 @@ pub struct HinmPacked {
 }
 
 impl HinmPacked {
+    /// Number of V-row tiles (`rows / V`).
     pub fn tiles(&self) -> usize {
         self.rows / self.cfg.v
     }
 
+    /// Stored values per row: `k_v · N / M`.
     pub fn vals_per_row(&self) -> usize {
         self.k_v * self.cfg.n_keep / self.cfg.m_group
     }
@@ -56,6 +60,7 @@ impl HinmPacked {
         &self.vals[base..base + vpr]
     }
 
+    /// In-group N:M offsets of row `r` within tile `t`, parallel to the values.
     pub fn tile_row_nm(&self, t: usize, r: usize) -> &[u8] {
         let vpr = self.vals_per_row();
         let base = (t * self.cfg.v + r) * vpr;

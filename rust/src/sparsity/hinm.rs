@@ -11,7 +11,9 @@ use crate::tensor::Matrix;
 /// Outcome of HiNM pruning a single layer.
 #[derive(Clone, Debug)]
 pub struct HinmResult {
+    /// The layer in packed HiNM form.
     pub packed: HinmPacked,
+    /// Dense boolean mask equivalent of the packed layer.
     pub mask: Mask,
     /// `‖M ⊙ ρ‖₁` — the Eq. 1 objective value.
     pub retained: f64,
@@ -96,8 +98,11 @@ pub fn gather_tile_colmajor(sal: &Matrix, cfg: &HinmConfig, t: usize, cols: &[us
 /// switches on for the remaining steps.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GradualStep {
+    /// Schedule step index.
     pub step: usize,
+    /// Vector-level sparsity at this step.
     pub vector_sparsity: f64,
+    /// Whether the N:M level is switched on yet.
     pub nm_active: bool,
 }
 

@@ -5,36 +5,44 @@ use crate::tensor::Matrix;
 /// A dense boolean mask with matrix shape. `true` = kept weight.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mask {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
     bits: Vec<bool>,
 }
 
 impl Mask {
+    /// Mask with every bit set to `value`.
     pub fn new_all(rows: usize, cols: usize, value: bool) -> Self {
         Self { rows, cols, bits: vec![value; rows * cols] }
     }
 
+    /// All-kept mask.
     pub fn ones(rows: usize, cols: usize) -> Self {
         Self::new_all(rows, cols, true)
     }
 
+    /// All-pruned mask.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self::new_all(rows, cols, false)
     }
 
     #[inline]
+    /// Bit at `(r, c)`.
     pub fn get(&self, r: usize, c: usize) -> bool {
         debug_assert!(r < self.rows && c < self.cols);
         self.bits[r * self.cols + c]
     }
 
     #[inline]
+    /// Set the bit at `(r, c)`.
     pub fn set(&mut self, r: usize, c: usize, v: bool) {
         debug_assert!(r < self.rows && c < self.cols);
         self.bits[r * self.cols + c] = v;
     }
 
+    /// Number of kept weights.
     pub fn count_kept(&self) -> usize {
         self.bits.iter().filter(|&&b| b).count()
     }
@@ -97,6 +105,7 @@ impl Mask {
         out
     }
 
+    /// The mask as a 0.0/1.0 matrix.
     pub fn as_matrix(&self) -> Matrix {
         Matrix {
             rows: self.rows,

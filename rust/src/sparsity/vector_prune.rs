@@ -15,6 +15,7 @@ use crate::tensor::Matrix;
 pub struct VectorPruneResult {
     /// `kept[t]` = ascending original column indices kept in tile `t`.
     pub kept: Vec<Vec<usize>>,
+    /// Dense mask equivalent (vector level only).
     pub mask: Mask,
 }
 

@@ -21,6 +21,7 @@ pub struct SpmmScratch {
 }
 
 impl SpmmScratch {
+    /// Empty scratch; buffers grow on first use and are reused after.
     pub fn new() -> Self {
         Self { xbuf: Vec::new(), acc: Vec::new() }
     }

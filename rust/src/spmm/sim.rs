@@ -14,6 +14,7 @@
 /// Device parameters (defaults ≈ RTX 3090; RTX 4090 constructor provided).
 #[derive(Clone, Debug)]
 pub struct GpuParams {
+    /// Device name for reports.
     pub name: &'static str,
     /// Global-memory bandwidth, bytes/s.
     pub hbm_bw: f64,
@@ -28,6 +29,7 @@ pub struct GpuParams {
 }
 
 impl GpuParams {
+    /// RTX 3090 parameters (the paper's primary device).
     pub fn rtx3090() -> Self {
         Self {
             name: "rtx3090",
@@ -38,6 +40,7 @@ impl GpuParams {
             launch_overhead: 5.0e-6,
         }
     }
+    /// RTX 4090 parameters.
     pub fn rtx4090() -> Self {
         Self {
             name: "rtx4090",
@@ -64,8 +67,11 @@ pub enum BankStrategy {
 /// A GEMM workload `Y[m,b] = W[m,n] · X[n,b]` at HiNM sparsity.
 #[derive(Clone, Copy, Debug)]
 pub struct Workload {
+    /// Output channels (GEMM rows).
     pub m: usize,
+    /// Input features (GEMM cols).
     pub n: usize,
+    /// Activation batch width.
     pub batch: usize,
     /// Vector size V.
     pub v: usize,
@@ -76,6 +82,7 @@ pub struct Workload {
 }
 
 impl Workload {
+    /// Number of V-row tiles.
     pub fn tiles(&self) -> usize {
         self.m / self.v
     }
@@ -84,10 +91,15 @@ impl Workload {
 /// Latency breakdown in seconds.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyModel {
+    /// Global-memory traffic time.
     pub global_mem_s: f64,
+    /// Shared-memory bank-conflict serialization time.
     pub smem_conflict_s: f64,
+    /// Tensor-core compute time.
     pub compute_s: f64,
+    /// Runtime index-translation time (Tetris-style only).
     pub index_translation_s: f64,
+    /// Kernel launch + epilogue overhead.
     pub launch_s: f64,
 }
 
@@ -100,6 +112,7 @@ impl LatencyModel {
             + self.index_translation_s
             + self.launch_s
     }
+    /// Total modeled latency in microseconds.
     pub fn total_us(&self) -> f64 {
         self.total() * 1e6
     }

@@ -6,21 +6,27 @@ use crate::util::rng::Xoshiro256;
 /// Dense row-major matrix of `f32`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major storage: element `(r, c)` at `data[r * cols + c]`.
     pub data: Vec<f32>,
 }
 
 impl Matrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap existing row-major data; panics on a shape/length mismatch.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Self { rows, cols, data }
     }
 
+    /// Build elementwise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for r in 0..rows {
@@ -37,31 +43,37 @@ impl Matrix {
     }
 
     #[inline]
+    /// Element at `(r, c)`.
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Mutable element at `(r, c)`.
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
         debug_assert!(r < self.rows && c < self.cols);
         &mut self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Row `r` as a contiguous slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
     #[inline]
+    /// Row `r` as a mutable slice.
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Column `c`, copied out (columns are strided in row-major storage).
     pub fn col(&self, c: usize) -> Vec<f32> {
         (0..self.rows).map(|r| self.at(r, c)).collect()
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -112,18 +124,22 @@ impl Matrix {
         }
     }
 
+    /// Sum of all entries (accumulated in `f64`).
     pub fn sum(&self) -> f64 {
         self.data.iter().map(|&x| x as f64).sum()
     }
 
+    /// L1 norm: sum of absolute entries (accumulated in `f64`).
     pub fn l1(&self) -> f64 {
         self.data.iter().map(|&x| x.abs() as f64).sum()
     }
 
+    /// Squared Frobenius norm (accumulated in `f64`).
     pub fn frob2(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
     }
 
+    /// Largest elementwise absolute difference against `other`.
     pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -138,10 +154,12 @@ impl Matrix {
         self.data.iter().filter(|&&x| x != 0.0).count()
     }
 
+    /// Fraction of non-zero entries.
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / self.data.len() as f64
     }
 
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }

@@ -13,41 +13,53 @@ use std::path::Path;
 const MAGIC: &[u8; 6] = b"\x93NUMPY";
 
 #[derive(Clone, Debug, PartialEq)]
+/// Typed payload of a loaded/savable array.
 pub enum NpyData {
+    /// Little-endian `<f4` data.
     F32(Vec<f32>),
+    /// Little-endian `<i4` data.
     I32(Vec<i32>),
 }
 
 #[derive(Clone, Debug, PartialEq)]
+/// An in-memory `.npy` array: shape + typed data.
 pub struct NpyArray {
+    /// Dimensions, C-order (rank 1–2 in practice).
     pub shape: Vec<usize>,
+    /// The element payload.
     pub data: NpyData,
 }
 
 impl NpyArray {
+    /// An f32 array; panics if `shape` does not match `data.len()`.
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape, data: NpyData::F32(data) }
     }
+    /// An i32 array; panics if `shape` does not match `data.len()`.
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape, data: NpyData::I32(data) }
     }
+    /// The f32 payload, or an error for an i32 array.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             NpyData::F32(v) => Ok(v),
             _ => bail!("expected f32 array"),
         }
     }
+    /// The i32 payload, or an error for an f32 array.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             NpyData::I32(v) => Ok(v),
             _ => bail!("expected i32 array"),
         }
     }
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
+    /// True when the array has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -190,6 +202,7 @@ fn parse_shape(header: &str) -> Result<Vec<usize>> {
     Ok(shape)
 }
 
+/// Write an array to `path` in `.npy` v1.0 format.
 pub fn save<P: AsRef<Path>>(path: P, arr: &NpyArray) -> Result<()> {
     let mut f = std::fs::File::create(&path)
         .with_context(|| format!("create {}", path.as_ref().display()))?;
@@ -197,6 +210,7 @@ pub fn save<P: AsRef<Path>>(path: P, arr: &NpyArray) -> Result<()> {
     Ok(())
 }
 
+/// Read a (little-endian f32/i32, C-order) `.npy` file.
 pub fn load<P: AsRef<Path>>(path: P) -> Result<NpyArray> {
     let mut f = std::fs::File::open(&path)
         .with_context(|| format!("open {}", path.as_ref().display()))?;

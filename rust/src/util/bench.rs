@@ -8,23 +8,34 @@
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
+/// Summary statistics for one benchmarked case (all times per iteration).
 pub struct BenchStats {
+    /// Case label, as passed to [`Bencher::run`].
     pub name: String,
+    /// Measured iterations (after warmup/calibration).
     pub iters: usize,
+    /// Mean per-iteration time, nanoseconds.
     pub mean_ns: f64,
+    /// Median per-iteration time, nanoseconds.
     pub median_ns: f64,
+    /// 95th-percentile per-iteration time, nanoseconds.
     pub p95_ns: f64,
+    /// Standard deviation, nanoseconds.
     pub std_ns: f64,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
 }
 
 impl BenchStats {
+    /// Mean per-iteration time in microseconds.
     pub fn mean_us(&self) -> f64 {
         self.mean_ns / 1e3
     }
+    /// Median per-iteration time in microseconds.
     pub fn median_us(&self) -> f64 {
         self.median_ns / 1e3
     }
+    /// Median per-iteration time in milliseconds.
     pub fn median_ms(&self) -> f64 {
         self.median_ns / 1e6
     }
@@ -32,9 +43,13 @@ impl BenchStats {
 
 /// Benchmark runner with a fixed time budget per case.
 pub struct Bencher {
+    /// Warmup/calibration budget before measurement starts.
     pub warmup: Duration,
+    /// Target total measurement time per case.
     pub measure: Duration,
+    /// Hard cap on measured iterations.
     pub max_iters: usize,
+    /// Floor on measured iterations (slow cases still get stats).
     pub min_iters: usize,
 }
 
@@ -56,6 +71,7 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 impl Bencher {
+    /// Reduced budgets for CI/smoke runs.
     pub fn quick() -> Self {
         Self {
             warmup: Duration::from_millis(30),
@@ -115,16 +131,19 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Self {
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
         }
     }
+    /// Append one row; arity must match the headers.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
+    /// Render as an aligned markdown-style text table.
     pub fn render(&self) -> String {
         let cols = self.headers.len();
         let mut widths = vec![0usize; cols];
@@ -157,6 +176,7 @@ impl Table {
         }
         out
     }
+    /// Print [`Table::render`] to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

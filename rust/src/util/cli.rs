@@ -7,10 +7,15 @@
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug)]
+/// Declaration of one option or flag (see [`Cli::opt`]/[`Cli::flag`]).
 pub struct OptSpec {
+    /// Option name without the leading `--`.
     pub name: &'static str,
+    /// One-line help text shown in usage output.
     pub help: &'static str,
+    /// Default value; `None` means the option may be absent.
     pub default: Option<&'static str>,
+    /// True for boolean flags (no value token).
     pub is_flag: bool,
 }
 
@@ -19,29 +24,36 @@ pub struct OptSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Tokens that were not options, in order.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// Raw value of `--name`, if set (or defaulted).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
+    /// Value of `--name`, or `default` when absent.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
+    /// True when the boolean flag `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+    /// `--name` parsed as `usize`; panics with a clear message on a bad value.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
             .unwrap_or(default)
     }
+    /// `--name` parsed as `u64`; panics with a clear message on a bad value.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
             .unwrap_or(default)
     }
+    /// `--name` parsed as `f64`; panics with a clear message on a bad value.
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}")))
@@ -62,26 +74,32 @@ impl Args {
 
 /// A simple command parser: `Cli::new("desc").opt(...).flag(...).parse(argv)`.
 pub struct Cli {
+    /// Program/subcommand name shown in usage.
     pub name: &'static str,
+    /// One-line description shown in usage.
     pub about: &'static str,
     specs: Vec<OptSpec>,
 }
 
 impl Cli {
+    /// Parser for a (sub)command with no options declared yet.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Self { name, about, specs: Vec::new() }
     }
 
+    /// Declare a value option `--name <v>` (builder style).
     pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
         self.specs.push(OptSpec { name, help, default, is_flag: false });
         self
     }
 
+    /// Declare a boolean flag `--name` (builder style).
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(OptSpec { name, help, default: None, is_flag: true });
         self
     }
 
+    /// Render the full usage/help text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
         for spec in &self.specs {

@@ -12,36 +12,47 @@ use std::fmt::Write as _;
 /// shapes and scalar metadata, all exactly representable).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as `f64`).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object with sorted keys (`BTreeMap` keeps output stable).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The `&str` payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key→value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -57,15 +68,19 @@ impl Json {
         }
     }
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Build an array from any iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
+    /// Build a number.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+    /// Build a string.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
@@ -77,6 +92,47 @@ impl Json {
         out
     }
 
+    /// Serialize without any whitespace — the wire format of the HTTP
+    /// front, where pretty-printing would roughly double payload sizes.
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         let pad = "  ".repeat(indent);
         let pad1 = "  ".repeat(indent + 1);
@@ -85,13 +141,7 @@ impl Json {
             Json::Bool(b) => {
                 let _ = write!(out, "{b}");
             }
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
+            Json::Num(n) => write_num(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 if a.is_empty() {
@@ -130,6 +180,19 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// JSON has no `inf`/`NaN` tokens; emitting them would produce output no
+/// parser (including [`parse`]) accepts, so non-finite numbers serialize
+/// as `null` (the same choice `JSON.stringify` makes).
+fn write_num(out: &mut String, n: f64) {
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
     }
 }
 
@@ -357,6 +420,28 @@ mod tests {
         let v = Json::str("a\"b\\c\nd\te");
         let text = v.pretty();
         assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_roundtrips_and_has_no_whitespace() {
+        let v = Json::obj(vec![
+            ("y", Json::arr([1.5, -2.0, 0.25].map(Json::num))),
+            ("ok", Json::Bool(true)),
+            ("s", Json::str("a b")),
+        ]);
+        let text = v.compact();
+        assert!(!text.contains('\n') && !text.contains(": "), "not compact: {text}");
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            assert_eq!(Json::num(bad).compact(), "null");
+            assert_eq!(Json::num(bad).pretty(), "null");
+        }
+        let v = Json::arr([Json::num(1.0), Json::num(f64::NAN)]);
+        assert_eq!(parse(&v.compact()).unwrap(), Json::arr([Json::num(1.0), Json::Null]));
     }
 
     #[test]

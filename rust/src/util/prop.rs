@@ -10,7 +10,9 @@ use crate::util::rng::Xoshiro256;
 /// Configuration for a property run.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base seed; every case derives its own stream from it.
     pub seed: u64,
 }
 
@@ -23,6 +25,7 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Default config with a custom case count.
     pub fn cases(n: usize) -> Self {
         Self { cases: n, ..Self::default() }
     }
@@ -30,13 +33,17 @@ impl Config {
 
 /// A generator produces a value from the RNG and a size hint in `[0,1]`.
 pub trait Gen {
+    /// The type of values this generator produces.
     type Value;
+    /// Produce one value; `size` in `[0,1]` scales the magnitude/shape.
     fn generate(&self, rng: &mut Xoshiro256, size: f64) -> Self::Value;
 }
 
 /// Integer in [lo, hi] inclusive, scaled with size.
 pub struct IntIn {
+    /// Inclusive lower bound.
     pub lo: usize,
+    /// Inclusive upper bound.
     pub hi: usize,
 }
 
@@ -51,8 +58,11 @@ impl Gen for IntIn {
 
 /// Multiple-of-`k` integer in [lo, hi].
 pub struct MultipleOf {
+    /// The divisor every generated value is a multiple of.
     pub k: usize,
+    /// Inclusive lower bound.
     pub lo: usize,
+    /// Inclusive upper bound.
     pub hi: usize,
 }
 
@@ -70,6 +80,7 @@ impl Gen for MultipleOf {
 /// Vector of f32 drawn from a mixture distribution resembling trained-weight
 /// saliency (mostly small magnitudes, occasional heavy outliers).
 pub struct WeightVec {
+    /// Number of elements per generated vector.
     pub len: usize,
 }
 
@@ -92,7 +103,9 @@ impl Gen for WeightVec {
 /// Result of a property run.
 #[derive(Debug)]
 pub enum PropResult {
+    /// Every case passed.
     Ok,
+    /// A case failed; `seed` reproduces it exactly.
     Failed { case: usize, seed: u64, message: String },
 }
 

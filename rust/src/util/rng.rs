@@ -15,11 +15,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Start a SplitMix64 stream at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -65,6 +67,7 @@ impl Xoshiro256 {
     }
 
     #[inline]
+    /// Next 64-bit output (the ** scrambler).
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

@@ -1,0 +1,214 @@
+//! End-to-end HTTP front tests: a real `BatchServer` (native backend)
+//! behind `HttpFront` on an ephemeral TCP port, driven through
+//! `net::HttpClient` over real sockets — round-tripping inference,
+//! scheduling fields, metrics, health, and every error status.
+
+use hinm::coordinator::{BatchServer, ServeConfig};
+use hinm::models::{Activation, HinmModel};
+use hinm::net::{protocol, HttpClient, HttpFront};
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::Matrix;
+use hinm::util::json;
+use std::sync::Arc;
+use std::time::Duration;
+
+const D: usize = 32;
+
+struct Setup {
+    front: HttpFront,
+    server: BatchServer,
+    model: Arc<HinmModel>,
+}
+
+fn start() -> Setup {
+    let cfg = HinmConfig::with_24(8, 0.5);
+    let model =
+        Arc::new(HinmModel::synthetic_ffn(D, 64, &cfg, Activation::Relu, 17).unwrap());
+    let server = BatchServer::start_native(
+        Arc::clone(&model),
+        ServeConfig::new(4, Duration::from_millis(2)).with_replicas(2),
+    )
+    .expect("engine start");
+    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, 4)
+        .expect("http front start");
+    Setup { front, server, model }
+}
+
+fn client(s: &Setup) -> HttpClient {
+    HttpClient::connect(s.front.local_addr()).expect("connect")
+}
+
+fn activation(seed: usize) -> Vec<f32> {
+    (0..D).map(|i| ((seed * 31 + i * 7) % 13) as f32 * 0.1 - 0.6).collect()
+}
+
+fn infer_body(x: &[f32]) -> String {
+    protocol::InferRequest::new(x.to_vec()).to_json().pretty()
+}
+
+#[test]
+fn healthz_answers_ok() {
+    let s = start();
+    let mut c = client(&s);
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    assert_eq!(json::parse(&body).unwrap().get("status").as_str(), Some("ok"));
+    drop(c);
+    s.front.stop();
+    s.server.stop();
+}
+
+#[test]
+fn infer_round_trips_over_a_real_socket() {
+    let s = start();
+    let mut c = client(&s);
+    let x = activation(1);
+    let (status, body) = c.post_json("/v1/infer", &infer_body(&x)).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let y = protocol::parse_infer_response(&json::parse(&body).unwrap()).unwrap();
+
+    // The HTTP path must agree bit-for-bit with an in-process forward of
+    // the same single activation column.
+    let x_col = Matrix::from_vec(D, 1, x);
+    let expect = s.model.forward(&x_col);
+    assert_eq!(y.len(), expect.data.len());
+    assert_eq!(
+        y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        expect.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "HTTP round-trip must be lossless (shortest-roundtrip JSON floats)"
+    );
+    drop(c);
+    s.front.stop();
+    s.server.stop();
+}
+
+#[test]
+fn keep_alive_connection_serves_many_requests_and_metrics_count_them() {
+    let s = start();
+    let mut c = client(&s);
+    for i in 0..8 {
+        let (status, _) = c.post_json("/v1/infer", &infer_body(&activation(i))).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (status, body) = c.get("/v1/metrics").unwrap();
+    assert_eq!(status, 200);
+    let m = json::parse(&body).unwrap();
+    assert_eq!(m.get("requests").as_usize(), Some(8));
+    assert_eq!(m.get("priorities").get("normal").as_usize(), Some(8));
+    assert_eq!(m.get("expired").get("in_queue").as_usize(), Some(0));
+    assert_eq!(m.get("replicas").as_arr().unwrap().len(), 2);
+    drop(c);
+    s.front.stop();
+    s.server.stop();
+}
+
+#[test]
+fn concurrent_http_clients_all_get_their_own_answer() {
+    let s = start();
+    let addr = s.front.local_addr();
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            scope.spawn(move || {
+                let mut c = HttpClient::connect(addr).expect("connect");
+                for i in 0..6 {
+                    let x = activation(t * 100 + i);
+                    let (status, body) =
+                        c.post_json("/v1/infer", &infer_body(&x)).unwrap();
+                    assert_eq!(status, 200, "client {t} req {i}: {body}");
+                    let y =
+                        protocol::parse_infer_response(&json::parse(&body).unwrap()).unwrap();
+                    assert_eq!(y.len(), D);
+                }
+            });
+        }
+    });
+    assert_eq!(s.server.metrics.total_requests(), 24);
+    s.front.stop();
+    s.server.stop();
+}
+
+#[test]
+fn scheduling_fields_are_honored_over_http() {
+    let s = start();
+    let mut c = client(&s);
+
+    // High priority accepted and counted per class.
+    let body = format!(
+        "{{\"x\": {}, \"priority\": \"high\"}}",
+        json::Json::arr(activation(3).iter().map(|&v| json::Json::num(v as f64))).pretty()
+    );
+    let (status, _) = c.post_json("/v1/infer", &body).unwrap();
+    assert_eq!(status, 200);
+
+    // deadline_ms: 0 is already expired at enqueue → 504, never computed.
+    let body = format!(
+        "{{\"x\": {}, \"deadline_ms\": 0}}",
+        json::Json::arr(activation(4).iter().map(|&v| json::Json::num(v as f64))).pretty()
+    );
+    let (status, body) = c.post_json("/v1/infer", &body).unwrap();
+    assert_eq!(status, 504, "body: {body}");
+    let err = json::parse(&body).unwrap();
+    assert_eq!(err.get("error").get("kind").as_str(), Some("deadline_expired"));
+
+    let (_, body) = c.get("/v1/metrics").unwrap();
+    let m = json::parse(&body).unwrap();
+    assert_eq!(m.get("priorities").get("high").as_usize(), Some(1));
+    assert_eq!(m.get("expired").get("at_enqueue").as_usize(), Some(1));
+    drop(c);
+    s.front.stop();
+    s.server.stop();
+}
+
+#[test]
+fn error_statuses_are_mapped() {
+    let s = start();
+    let mut c = client(&s);
+
+    // Unknown route → 404.
+    let (status, _) = c.get("/nope").unwrap();
+    assert_eq!(status, 404);
+
+    // Wrong method on a known route → 405.
+    let (status, _) = c.get("/v1/infer").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = c.post_json("/healthz", "{}").unwrap();
+    assert_eq!(status, 405);
+
+    // Unparseable JSON → 400.
+    let (status, body) = c.post_json("/v1/infer", "{not json").unwrap();
+    assert_eq!(status, 400);
+    assert_eq!(
+        json::parse(&body).unwrap().get("error").get("kind").as_str(),
+        Some("bad_json")
+    );
+
+    // Parseable JSON but missing "x" → 400.
+    let (status, _) = c.post_json("/v1/infer", "{\"y\": [1]}").unwrap();
+    assert_eq!(status, 400);
+
+    // Wrong activation length → 400 from the engine's validation.
+    let (status, body) = c.post_json("/v1/infer", &infer_body(&[1.0, 2.0])).unwrap();
+    assert_eq!(status, 400, "body: {body}");
+    assert_eq!(
+        json::parse(&body).unwrap().get("error").get("kind").as_str(),
+        Some("bad_request")
+    );
+    drop(c);
+    s.front.stop();
+    s.server.stop();
+}
+
+#[test]
+fn stopped_engine_maps_to_503() {
+    let s = start();
+    let mut c = client(&s);
+    s.server.stop();
+    let (status, body) = c.post_json("/v1/infer", &infer_body(&activation(9))).unwrap();
+    assert_eq!(status, 503, "body: {body}");
+    assert_eq!(
+        json::parse(&body).unwrap().get("error").get("kind").as_str(),
+        Some("server_stopped")
+    );
+    drop(c);
+    s.front.stop();
+}

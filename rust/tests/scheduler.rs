@@ -1,0 +1,226 @@
+//! Scheduler semantics of the batch engine: priority ordering under
+//! contention, deadline expiry at enqueue and in the queue (expired
+//! requests are answered with a timeout error and never computed), the
+//! per-priority/expiry counters, and bit-identical cache hits through the
+//! whole engine path. Runs everywhere — mock + native backends only.
+
+use anyhow::Result;
+use hinm::coordinator::serve::{BackendFactory, BatchServer, InferError, Priority, ServeConfig};
+use hinm::coordinator::cached_factory;
+use hinm::models::{Activation, HinmModel};
+use hinm::runtime::{CacheStats, SpmmBackend};
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::Matrix;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const D_IN: usize = 2;
+
+/// Identity-ish mock: `y[0][j] = x[0][j]`, records the first row of every
+/// batch it executes, optionally sleeping to keep the worker busy.
+struct RecordingBackend {
+    seen: Arc<Mutex<Vec<Vec<f32>>>>,
+    delay: Duration,
+}
+
+impl SpmmBackend for RecordingBackend {
+    fn name(&self) -> &'static str {
+        "recording"
+    }
+    fn d_in(&self) -> usize {
+        D_IN
+    }
+    fn d_out(&self) -> usize {
+        1
+    }
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.seen.lock().unwrap().push(x.data[..x.cols].to_vec());
+        let mut y = Matrix::zeros(1, x.cols);
+        y.data.copy_from_slice(&x.data[..x.cols]);
+        Ok(y)
+    }
+}
+
+fn start_recording(cfg: ServeConfig, delay: Duration) -> (BatchServer, Arc<Mutex<Vec<Vec<f32>>>>) {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let s2 = Arc::clone(&seen);
+    let factory: BackendFactory = Arc::new(move |_replica| {
+        let b: Box<dyn SpmmBackend> =
+            Box::new(RecordingBackend { seen: Arc::clone(&s2), delay });
+        Ok(b)
+    });
+    let server = BatchServer::start(factory, cfg).expect("engine start");
+    (server, seen)
+}
+
+#[test]
+fn deadline_already_expired_at_enqueue_is_rejected_without_queuing() {
+    let (server, seen) = start_recording(
+        ServeConfig::new(1, Duration::from_millis(1)),
+        Duration::ZERO,
+    );
+    let err = server
+        .handle
+        .infer_opts(vec![7.0; D_IN], Priority::Normal, Some(Duration::ZERO))
+        .unwrap_err();
+    assert_eq!(err, InferError::DeadlineExpired);
+    let sched = server.metrics.scheduler_stats();
+    assert_eq!(sched.expired_at_enqueue, 1, "expiry at enqueue must be counted");
+    assert_eq!(sched.expired_in_queue, 0);
+    server.stop();
+    assert!(
+        seen.lock().unwrap().is_empty(),
+        "an expired-at-enqueue request must never reach the backend"
+    );
+}
+
+#[test]
+fn request_expiring_in_the_queue_gets_timeout_and_is_never_computed() {
+    // One slow replica at batch 1: a blocker occupies the worker for
+    // ~150ms while a 30ms-deadline request waits in the queue. By the time
+    // the worker pops it, it is dead — it must be answered with a timeout
+    // error, and its payload must never reach the backend.
+    let (server, seen) = start_recording(
+        ServeConfig::new(1, Duration::from_millis(1)),
+        Duration::from_millis(150),
+    );
+    let handle = server.handle.clone();
+    let blocker = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.infer(vec![1.0; D_IN]))
+    };
+    std::thread::sleep(Duration::from_millis(40)); // let the worker pick it up
+    let t0 = Instant::now();
+    let err = handle
+        .infer_opts(vec![99.0; D_IN], Priority::High, Some(Duration::from_millis(30)))
+        .unwrap_err();
+    assert_eq!(err, InferError::DeadlineExpired);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "expiry must be answered as soon as the worker sees the request"
+    );
+    blocker.join().unwrap().expect("blocker must still be served");
+    let metrics = Arc::clone(&server.metrics);
+    server.stop();
+    let seen = seen.lock().unwrap();
+    assert!(
+        seen.iter().all(|batch| !batch.contains(&99.0)),
+        "expired request was computed anyway: {seen:?}"
+    );
+    assert_eq!(metrics.scheduler_stats().expired_in_queue, 1);
+}
+
+#[test]
+fn queued_high_priority_overtakes_earlier_low_priority() {
+    // Priority-inversion check: Low is enqueued BEFORE High while the only
+    // worker is busy; when the worker frees up it must execute High first.
+    let (server, seen) = start_recording(
+        ServeConfig::new(1, Duration::from_millis(1)),
+        Duration::from_millis(120),
+    );
+    let handle = server.handle.clone();
+    let blocker = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.infer(vec![1.0; D_IN]))
+    };
+    std::thread::sleep(Duration::from_millis(30)); // worker now busy with the blocker
+    let low = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.infer_opts(vec![10.0; D_IN], Priority::Low, None))
+    };
+    std::thread::sleep(Duration::from_millis(30)); // Low is queued first…
+    let high = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.infer_opts(vec![20.0; D_IN], Priority::High, None))
+    };
+    blocker.join().unwrap().unwrap();
+    assert_eq!(high.join().unwrap().unwrap(), vec![20.0]);
+    assert_eq!(low.join().unwrap().unwrap(), vec![10.0]);
+    let metrics = Arc::clone(&server.metrics);
+    server.stop();
+
+    let seen = seen.lock().unwrap();
+    let first_high = seen.iter().position(|b| b.contains(&20.0)).expect("High executed");
+    let first_low = seen.iter().position(|b| b.contains(&10.0)).expect("Low executed");
+    assert!(
+        first_high < first_low,
+        "High (queued after Low) must run first; execution order: {seen:?}"
+    );
+
+    let sched = metrics.scheduler_stats();
+    assert_eq!(sched.served_for(Priority::High), 1);
+    assert_eq!(sched.served_for(Priority::Low), 1);
+    assert_eq!(sched.served_for(Priority::Normal), 1, "the blocker ran at Normal");
+}
+
+#[test]
+fn generous_deadline_does_not_fail_the_request() {
+    let (server, _seen) = start_recording(
+        ServeConfig::new(2, Duration::from_millis(1)),
+        Duration::ZERO,
+    );
+    let y = server
+        .handle
+        .infer_opts(vec![3.0; D_IN], Priority::Normal, Some(Duration::from_secs(30)))
+        .expect("a far-future deadline must not reject the request");
+    assert_eq!(y, vec![3.0]);
+    assert_eq!(server.metrics.scheduler_stats().expired_total(), 0);
+    server.stop();
+}
+
+#[test]
+fn cache_hit_through_the_engine_is_bit_identical_to_the_miss() {
+    // Full path: cached_factory over the native backend, batch 1 so two
+    // identical lone requests produce identical batch matrices.
+    let cfg = HinmConfig::with_24(8, 0.5);
+    let model =
+        Arc::new(HinmModel::synthetic_ffn(32, 64, &cfg, Activation::Relu, 42).unwrap());
+    let stats = CacheStats::new_shared();
+    let base: BackendFactory = Arc::new(move |_replica| {
+        let b: Box<dyn SpmmBackend> =
+            Box::new(hinm::runtime::NativeCpuBackend::new(Arc::clone(&model)));
+        Ok(b)
+    });
+    let factory = cached_factory(base, 8, Arc::clone(&stats));
+    let server = BatchServer::start(factory, ServeConfig::new(1, Duration::from_millis(1)))
+        .expect("engine start");
+
+    let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+    let miss = server.handle.infer(x.clone()).unwrap();
+    let hit = server.handle.infer(x).unwrap();
+    assert_eq!(
+        miss.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        hit.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "cache hit must be bit-identical to the miss that populated it"
+    );
+    assert_eq!(stats.misses(), 1);
+    assert_eq!(stats.hits(), 1);
+    server.stop();
+}
+
+#[test]
+fn priority_counters_add_up_under_mixed_load() {
+    let (server, _seen) = start_recording(
+        ServeConfig::new(4, Duration::from_millis(1)).with_replicas(2),
+        Duration::ZERO,
+    );
+    let handle = server.handle.clone();
+    std::thread::scope(|s| {
+        for i in 0..30 {
+            let h = handle.clone();
+            let pri = Priority::ALL[i % 3];
+            s.spawn(move || {
+                h.infer_opts(vec![i as f32; D_IN], pri, None).unwrap();
+            });
+        }
+    });
+    let sched = server.metrics.scheduler_stats();
+    assert_eq!(sched.served_for(Priority::High), 10);
+    assert_eq!(sched.served_for(Priority::Normal), 10);
+    assert_eq!(sched.served_for(Priority::Low), 10);
+    assert_eq!(server.metrics.total_requests(), 30);
+    server.stop();
+}
