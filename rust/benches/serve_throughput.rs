@@ -6,10 +6,18 @@
 //! machine, 4 replicas should deliver ≥2× the aggregate req/s of 1 replica
 //! at the same batch size. `--smoke` runs a seconds-long CI configuration.
 //!
+//! `--kernel-threads K` gives every replica a K-lane kernel pool (the
+//! planned tile-parallel engine); responses are bit-identical across K, so
+//! the knob trades per-request latency against replica-level parallelism.
+//!
 //! A second mode (`--http`, always included in `--smoke`) drives the same
 //! closed loop through the real socket path — `HttpFront` on an ephemeral
 //! port, JSON bodies, keep-alive `HttpClient`s — so the serialization +
 //! TCP overhead over the in-process engine is measured, not guessed.
+//!
+//! `--json PATH` writes `{bench, provenance, rows: [...]}`
+//! (`BENCH_serve.json` in CI; uploaded as a workflow artifact) for the
+//! machine-readable perf trajectory next to `BENCH_spmm.json`.
 
 use hinm::coordinator::{BatchServer, ServeConfig};
 use hinm::models::{Activation, HinmModel};
@@ -17,6 +25,7 @@ use hinm::net::{protocol, HttpClient, HttpFront};
 use hinm::sparsity::HinmConfig;
 use hinm::util::bench::Table;
 use hinm::util::cli::Cli;
+use hinm::util::json::Json;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -30,6 +39,8 @@ fn main() {
         .opt("replicas", Some("1,2,4"), "replica counts to sweep")
         .opt("batches", Some("8,32"), "batch sizes to sweep")
         .opt("max-wait-us", Some("200"), "batch window, µs")
+        .opt("kernel-threads", Some("1"), "kernel lanes per replica (0 = all cores)")
+        .opt("json", None, "write machine-readable results to this path")
         .flag("http", "also run the closed loop through the real HTTP/TCP socket path")
         .flag("smoke", "tiny CI configuration (small model, few requests)")
         .flag("bench", "(ignored; injected by `cargo bench`)");
@@ -49,10 +60,12 @@ fn main() {
         if smoke { vec![1, 2] } else { a.usize_list_or("replicas", &[1, 2, 4]) };
     let batch_sizes = if smoke { vec![4] } else { a.usize_list_or("batches", &[8, 32]) };
     let max_wait = Duration::from_micros(a.u64_or("max-wait-us", 200));
+    let kernel_threads = a.usize_or("kernel-threads", 1);
     let cfg = HinmConfig::for_total_sparsity(32, a.usize_or("sparsity", 75) as f64 / 100.0);
 
     println!(
-        "== serve_throughput ==  {d}→{d_ff}→{d} FFN at {:.1}% sparsity, {n_requests} requests × {n_clients} clients\n",
+        "== serve_throughput ==  {d}→{d_ff}→{d} FFN at {:.1}% sparsity, {n_requests} requests × \
+         {n_clients} clients, {kernel_threads} kernel threads/replica\n",
         cfg.total_sparsity() * 100.0
     );
     let model =
@@ -62,17 +75,20 @@ fn main() {
         "backend",
         "replicas",
         "batch",
+        "threads",
         "req/s",
         "p50 µs",
         "p99 µs",
         "vs 1 replica",
     ]);
+    let mut json_rows: Vec<Json> = Vec::new();
     for &batch in &batch_sizes {
         let mut base_rps: Option<f64> = None;
         for &replicas in &replica_counts {
-            let server = BatchServer::start_native(
+            let server = BatchServer::start_native_threads(
                 Arc::clone(&model),
                 ServeConfig::new(batch, max_wait).with_replicas(replicas),
+                kernel_threads,
             )
             .expect("server start");
             let handle = server.handle.clone();
@@ -106,11 +122,21 @@ fn main() {
                 "native".into(),
                 replicas.to_string(),
                 batch.to_string(),
+                kernel_threads.to_string(),
                 format!("{rps:.0}"),
                 format!("{:.0}", pct[0]),
                 format!("{:.0}", pct[1]),
                 scale,
             ]);
+            json_rows.push(Json::obj(vec![
+                ("backend", Json::str("native")),
+                ("replicas", Json::num(replicas as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("threads", Json::num(kernel_threads as f64)),
+                ("req_per_sec", Json::num(rps)),
+                ("p50_us", Json::num(pct[0])),
+                ("p99_us", Json::num(pct[1])),
+            ]));
             server.stop();
         }
     }
@@ -120,26 +146,53 @@ fn main() {
     if smoke || a.flag("http") {
         let replicas = *replica_counts.last().unwrap_or(&2);
         let batch = *batch_sizes.last().unwrap_or(&4);
-        serve_http_mode(&model, d, replicas, batch, max_wait, n_requests, n_clients);
+        let row = serve_http_mode(HttpMode {
+            model: &model,
+            d,
+            replicas,
+            batch,
+            max_wait,
+            kernel_threads,
+            n_requests,
+            n_clients,
+        });
+        json_rows.push(row);
     }
+
+    if let Some(path) = a.get("json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("serve_throughput")),
+            ("provenance", hinm::util::bench::provenance(smoke)),
+            ("rows", Json::Arr(json_rows)),
+        ]);
+        std::fs::write(path, doc.pretty()).expect("writing bench JSON");
+        eprintln!("wrote {path}");
+    }
+}
+
+/// Configuration of the socket-path closed loop.
+struct HttpMode<'a> {
+    model: &'a Arc<HinmModel>,
+    d: usize,
+    replicas: usize,
+    batch: usize,
+    max_wait: Duration,
+    kernel_threads: usize,
+    n_requests: usize,
+    n_clients: usize,
 }
 
 /// Closed-loop req/s through the real socket path: `HttpFront` on an
 /// ephemeral port, one keep-alive `HttpClient` per closed-loop client,
 /// JSON request/response bodies. The req/s gap versus the in-process table
-/// above is the HTTP+JSON serving overhead.
-fn serve_http_mode(
-    model: &Arc<HinmModel>,
-    d: usize,
-    replicas: usize,
-    batch: usize,
-    max_wait: Duration,
-    n_requests: usize,
-    n_clients: usize,
-) {
-    let server = BatchServer::start_native(
+/// above is the HTTP+JSON serving overhead. Returns the JSON row.
+fn serve_http_mode(cfg: HttpMode<'_>) -> Json {
+    let HttpMode { model, d, replicas, batch, max_wait, kernel_threads, n_requests, n_clients } =
+        cfg;
+    let server = BatchServer::start_native_threads(
         Arc::clone(model),
         ServeConfig::new(batch, max_wait).with_replicas(replicas),
+        kernel_threads,
     )
     .expect("server start");
     let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, n_clients.min(16))
@@ -165,15 +218,25 @@ fn serve_http_mode(
     });
     let wall = t0.elapsed().as_secs_f64();
     let served = per_client * n_clients;
+    let rps = served as f64 / wall;
     let pct = server.metrics.aggregate_latency().percentiles(&[50.0, 99.0]);
     println!(
-        "\nserve_http ({replicas} replicas, batch {batch}): {served} req over {n_clients} TCP \
-         clients in {:.1} ms → {:.0} req/s | engine p50 {:.0} µs p99 {:.0} µs",
+        "\nserve_http ({replicas} replicas, batch {batch}, {kernel_threads} kernel threads): \
+         {served} req over {n_clients} TCP clients in {:.1} ms → {rps:.0} req/s | engine p50 \
+         {:.0} µs p99 {:.0} µs",
         wall * 1e3,
-        served as f64 / wall,
         pct[0],
         pct[1],
     );
     front.stop();
     server.stop();
+    Json::obj(vec![
+        ("backend", Json::str("native+http")),
+        ("replicas", Json::num(replicas as f64)),
+        ("batch", Json::num(batch as f64)),
+        ("threads", Json::num(kernel_threads as f64)),
+        ("req_per_sec", Json::num(rps)),
+        ("p50_us", Json::num(pct[0])),
+        ("p99_us", Json::num(pct[1])),
+    ])
 }

@@ -564,10 +564,26 @@ impl BatchServer {
     }
 
     /// Native-backend engine over a shared [`HinmModel`] — runs anywhere,
-    /// no artifacts needed.
+    /// no artifacts needed. Kernels execute inline on each replica thread;
+    /// see [`BatchServer::start_native_threads`] for a per-replica kernel
+    /// worker pool.
     pub fn start_native(model: Arc<HinmModel>, cfg: ServeConfig) -> Result<BatchServer> {
+        Self::start_native_threads(model, cfg, 1)
+    }
+
+    /// Native-backend engine where every replica owns a pool of
+    /// `kernel_threads` kernel lanes (0 = available parallelism) — the
+    /// `--kernel-threads` CLI flag lands here. Total kernel threads in the
+    /// process is `replicas × kernel_threads`; responses are bit-identical
+    /// for any `kernel_threads` setting (DESIGN.md §14).
+    pub fn start_native_threads(
+        model: Arc<HinmModel>,
+        cfg: ServeConfig,
+        kernel_threads: usize,
+    ) -> Result<BatchServer> {
         let factory: BackendFactory = Arc::new(move |_replica| {
-            let b: Box<dyn SpmmBackend> = Box::new(NativeCpuBackend::new(Arc::clone(&model)));
+            let b: Box<dyn SpmmBackend> =
+                Box::new(NativeCpuBackend::with_threads(Arc::clone(&model), kernel_threads));
             Ok(b)
         });
         Self::start(factory, cfg)

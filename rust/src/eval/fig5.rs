@@ -4,9 +4,12 @@
 //! consumed by the global→shared gather) adds **no detectable latency** at
 //! any sparsity ratio or vector size. Two reproductions (DESIGN.md §2):
 //!
-//! 1. **Measured** — wall-clock of the Rust CPU kernel on the packed format
-//!    with identity vs gyro-permuted `vec_idx` (identical traffic, so the
-//!    delta should be noise).
+//! 1. **Measured** — wall-clock of the planned tile-parallel CPU kernel
+//!    ([`crate::spmm::SpmmPlan`] through a single-lane engine, the
+//!    per-replica serving default) on the packed format with identity vs
+//!    gyro-permuted `vec_idx`. Permutation changes only the gather order,
+//!    the planned streams are the same size — so the delta should be
+//!    noise.
 //! 2. **Modeled** — the STC cost model (`spmm::sim`) with the same toggle,
 //!    plus the arms the paper discusses: dense, VENOM-style padding, and
 //!    Tetris-style index translation.
@@ -17,7 +20,7 @@ use crate::permute::gyro_permute_and_prune;
 use crate::sparsity::hinm::prune_oneshot;
 use crate::sparsity::{HinmConfig, HinmPacked};
 use crate::spmm::sim::{model_dense, model_hinm_spmm, BankStrategy, GpuParams, Workload};
-use crate::spmm::{spmm_with_scratch, SpmmScratch};
+use crate::spmm::{Epilogue, SpmmEngine, SpmmPlan};
 use crate::tensor::Matrix;
 use crate::util::bench::{black_box, Bencher, Table};
 use crate::util::rng::Xoshiro256;
@@ -87,15 +90,21 @@ fn pack_pair(c: &Fig5Case, seed: u64) -> (HinmPacked, HinmPacked, Matrix) {
     (identity, permuted, x)
 }
 
-/// Run one case: measure both kernels, model the GPU arms.
+/// Run one case: measure both planned kernels, model the GPU arms.
 pub fn run_case(c: &Fig5Case, bencher: &Bencher, seed: u64) -> Fig5Row {
     let (identity, permuted, x) = pack_pair(c, seed);
-    let mut scratch = SpmmScratch::new();
+    let engine = SpmmEngine::single();
+    let id_plan = SpmmPlan::new(&identity);
+    let perm_plan = SpmmPlan::new(&permuted);
+    let epi = Epilogue::default();
+    let mut y = Matrix::zeros(c.m, c.batch);
     let id_stats = bencher.run("identity", || {
-        black_box(spmm_with_scratch(&identity, &x, &mut scratch));
+        engine.execute(&id_plan, &x, &mut y, &epi);
+        black_box(y.data[0]);
     });
     let perm_stats = bencher.run("permuted", || {
-        black_box(spmm_with_scratch(&permuted, &x, &mut scratch));
+        engine.execute(&perm_plan, &x, &mut y, &epi);
+        black_box(y.data[0]);
     });
 
     let gpu = GpuParams::rtx3090();

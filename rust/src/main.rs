@@ -64,10 +64,10 @@ fn usage() {
          \x20 spmm    --weights w.npy [--batch 8] [--sparsity 75]\n\
          \x20 info    list AOT artifacts and data dumps\n\
          \x20 serve   [--backend native|pjrt] [--replicas R] [--batch B] [--max-wait-us U]\n\
-         \x20         [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
+         \x20         [--kernel-threads K] [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
          \x20         sharded batched inference engine; with --http it serves\n\
-         \x20         POST /v1/infer, GET /v1/metrics, GET /healthz until killed,\n\
-         \x20         otherwise it runs a closed-loop load demo\n\
+         \x20         POST /v1/infer, GET /v1/metrics[?format=prometheus], GET /healthz\n\
+         \x20         until killed, otherwise it runs a closed-loop load demo\n\
          \x20 serve-demo  alias for: serve --backend pjrt\n\
          \x20 train-demo  [--steps 50]      LM training via AOT train step\n"
     );
@@ -251,6 +251,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("batch", Some("8"), "batch size per flush (pjrt: fixed by the artifact)")
         .opt("max-wait-us", Some("200"), "batch window after the first request, µs")
         .opt("queue-depth", Some("0"), "request-queue bound (0 = replicas*batch*4)")
+        .opt(
+            "kernel-threads",
+            Some("1"),
+            "native: kernel worker lanes per replica (0 = all cores); bit-identical output",
+        )
         .opt("http", None, "serve HTTP/JSON on this address (e.g. 127.0.0.1:8080) until killed")
         .opt("http-workers", Some("8"), "HTTP connection-handler threads")
         .opt("cache-capacity", Some("0"), "per-replica LRU batch-cache entries (0 = off)")
@@ -280,6 +285,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "native" => {
                 let d = a.usize_or("d", 256);
                 let d_ff = a.usize_or("d-ff", 512);
+                let kernel_threads = a.usize_or("kernel-threads", 1);
                 let cfg = HinmConfig::for_total_sparsity(
                     a.usize_or("v", 32),
                     a.usize_or("sparsity", 75) as f64 / 100.0,
@@ -292,18 +298,23 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     a.u64_or("seed", 7),
                 )?);
                 println!(
-                    "native backend: {d}→{d_ff}→{d} FFN | V={} total sparsity {:.1}% | {replicas} replicas",
+                    "native backend: {d}→{d_ff}→{d} FFN | V={} total sparsity {:.1}% | {replicas} replicas × {kernel_threads} kernel threads",
                     cfg.v,
                     cfg.total_sparsity() * 100.0
                 );
                 let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
                     .with_replicas(replicas)
                     .with_queue_depth(queue_depth);
+                // The planned tile-parallel backend: each replica gets its
+                // own kernel pool; tiles write disjoint Y rows, so output
+                // is bit-identical for any --kernel-threads setting.
                 let factory: hinm::coordinator::BackendFactory =
                     std::sync::Arc::new(move |_replica| {
-                        let b: Box<dyn hinm::runtime::SpmmBackend> = Box::new(
-                            hinm::runtime::NativeCpuBackend::new(std::sync::Arc::clone(&model)),
-                        );
+                        let b: Box<dyn hinm::runtime::SpmmBackend> =
+                            Box::new(hinm::runtime::NativeCpuBackend::with_threads(
+                                std::sync::Arc::clone(&model),
+                                kernel_threads,
+                            ));
                         Ok(b)
                     });
                 (scfg, factory)

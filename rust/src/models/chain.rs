@@ -3,56 +3,26 @@
 //!
 //! A [`HinmModel`] is a feed-forward chain of [`HinmLayer`]s (packed HiNM
 //! GEMM + optional bias + optional activation), the CPU analogue of the
-//! `ffn_serve` artifact's two-GEMM FFN but with arbitrary depth. The chain
-//! runs through [`crate::spmm::spmm_with_scratch`], so a worker that owns a
-//! `SpmmScratch` executes any number of layers with zero hot-path
-//! allocation beyond the inter-layer activations.
+//! `ffn_serve` artifact's two-GEMM FFN but with arbitrary depth. At
+//! construction the model **plans** every layer ([`SpmmPlan`], DESIGN.md
+//! §14); [`HinmModel::forward_planned`] then runs the chain through a
+//! caller-owned [`SpmmEngine`] with bias/activation fused into the kernel
+//! epilogue and ping-pong [`ActivationBuffers`] for the inter-layer
+//! activations — a forward pass of any depth performs zero hot-path
+//! allocation beyond the returned output matrix.
+//!
+//! The pre-engine scratch path ([`HinmModel::forward_with_scratch`] over
+//! [`crate::spmm::spmm_with_scratch`]) is kept as the unplanned baseline
+//! the benches compare against.
 
 use super::synthetic::SyntheticGen;
 use crate::sparsity::{prune_oneshot, HinmConfig, HinmPacked};
-use crate::spmm::{spmm_with_scratch, SpmmScratch};
+use crate::spmm::{spmm_with_scratch, Epilogue, SpmmEngine, SpmmPlan, SpmmScratch};
 use crate::tensor::Matrix;
 use crate::util::rng::Xoshiro256;
 use anyhow::{bail, Result};
 
-/// tanh-approximated GELU — bit-compatible with `jax.nn.gelu`'s default
-/// (`approximate=True`), which is what the `ffn_serve` artifact lowers.
-pub fn gelu(x: f32) -> f32 {
-    let x3 = x * x * x;
-    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x3)) as f64).tanh() as f32)
-}
-
-/// Elementwise nonlinearity applied after a layer's GEMM (+ bias).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Activation {
-    /// Identity (no nonlinearity).
-    None,
-    /// `max(0, x)`.
-    Relu,
-    /// Tanh-approximation GELU (as in BERT/DeiT).
-    Gelu,
-}
-
-impl Activation {
-    /// Apply the nonlinearity elementwise, in place.
-    pub fn apply(self, y: &mut Matrix) {
-        match self {
-            Activation::None => {}
-            Activation::Relu => {
-                for v in &mut y.data {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
-            Activation::Gelu => {
-                for v in &mut y.data {
-                    *v = gelu(*v);
-                }
-            }
-        }
-    }
-}
+pub use crate::spmm::epilogue::{gelu, gelu_fast, Activation};
 
 /// One layer: `act(W_hinm · x + b)`.
 #[derive(Clone, Debug)]
@@ -84,15 +54,46 @@ impl HinmLayer {
     }
 }
 
-/// A validated feed-forward chain of HiNM layers.
+/// Ping-pong inter-layer activation buffers for
+/// [`HinmModel::forward_planned`]: two matrices that grow to the widest
+/// layer once and are reused for every subsequent forward pass.
+#[derive(Clone, Debug)]
+pub struct ActivationBuffers {
+    ping: Matrix,
+    pong: Matrix,
+}
+
+impl ActivationBuffers {
+    /// Empty buffers; they size themselves on first use.
+    pub fn new() -> ActivationBuffers {
+        ActivationBuffers { ping: Matrix::zeros(0, 0), pong: Matrix::zeros(0, 0) }
+    }
+}
+
+impl Default for ActivationBuffers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Reshape a reusable buffer in place; contents are left stale because the
+/// kernel overwrites every element of its output.
+fn ensure_shape(m: &mut Matrix, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.resize(rows * cols, 0.0);
+}
+
+/// A validated feed-forward chain of HiNM layers, planned at construction.
 #[derive(Clone, Debug)]
 pub struct HinmModel {
     layers: Vec<HinmLayer>,
+    plans: Vec<SpmmPlan>,
 }
 
 impl HinmModel {
     /// Validate chain dimensions (layer i's rows feed layer i+1's cols) and
-    /// bias lengths.
+    /// bias lengths, then compile one [`SpmmPlan`] per layer.
     pub fn new(layers: Vec<HinmLayer>) -> Result<HinmModel> {
         if layers.is_empty() {
             bail!("HinmModel needs at least one layer");
@@ -114,12 +115,18 @@ impl HinmModel {
                 );
             }
         }
-        Ok(HinmModel { layers })
+        let plans = layers.iter().map(|l| SpmmPlan::new(&l.packed)).collect();
+        Ok(HinmModel { layers, plans })
     }
 
     /// The validated layer sequence.
     pub fn layers(&self) -> &[HinmLayer] {
         &self.layers
+    }
+
+    /// The per-layer execution plans (compiled once, in [`HinmModel::new`]).
+    pub fn plans(&self) -> &[SpmmPlan] {
+        &self.plans
     }
 
     /// Uncompressed input channels of the first layer.
@@ -138,12 +145,48 @@ impl HinmModel {
     }
 
     /// Forward pass: `x` is `[d_in, batch]`, result `[d_out, batch]`.
+    /// Convenience wrapper over [`HinmModel::forward_planned`] with a
+    /// throwaway single-lane engine; hot paths own their engine/buffers.
     pub fn forward(&self, x: &Matrix) -> Matrix {
-        let mut scratch = SpmmScratch::new();
-        self.forward_with_scratch(x, &mut scratch)
+        let engine = SpmmEngine::single();
+        let mut bufs = ActivationBuffers::new();
+        self.forward_planned(x, &engine, &mut bufs)
     }
 
-    /// Forward pass with caller-owned scratch (hot-path variant).
+    /// Planned forward pass (the serving hot path): each layer executes
+    /// through `engine` with its bias/activation fused into the kernel
+    /// epilogue; inter-layer activations ping-pong through `bufs`, so the
+    /// only allocation is the returned output matrix. Bit-identical for
+    /// any engine lane count.
+    pub fn forward_planned(
+        &self,
+        x: &Matrix,
+        engine: &SpmmEngine,
+        bufs: &mut ActivationBuffers,
+    ) -> Matrix {
+        assert_eq!(x.rows, self.d_in(), "input has {} channels, model wants {}", x.rows, self.d_in());
+        let batch = x.cols;
+        let last = self.layers.len() - 1;
+        let mut out = Matrix::zeros(self.d_out(), batch);
+        for (i, (layer, plan)) in self.layers.iter().zip(&self.plans).enumerate() {
+            let epi = Epilogue::new(layer.bias.as_deref(), layer.act);
+            let input = if i == 0 { x } else { &bufs.ping };
+            if i == last {
+                engine.execute(plan, input, &mut out, &epi);
+            } else {
+                ensure_shape(&mut bufs.pong, layer.packed.rows, batch);
+                engine.execute(plan, input, &mut bufs.pong, &epi);
+                std::mem::swap(&mut bufs.ping, &mut bufs.pong);
+            }
+        }
+        out
+    }
+
+    /// Forward pass over the **unplanned** scratch kernel
+    /// ([`crate::spmm::spmm_with_scratch`] + separate bias/activation
+    /// sweeps, one fresh matrix per layer). Kept as the pre-engine
+    /// baseline for benches; `Gelu` goes through the `f64::tanh` oracle
+    /// here, so its bits differ slightly from the planned fast-tanh path.
     pub fn forward_with_scratch(&self, x: &Matrix, scratch: &mut SpmmScratch) -> Matrix {
         assert_eq!(x.rows, self.d_in(), "input has {} channels, model wants {}", x.rows, self.d_in());
         let mut cur: Option<Matrix> = None;
@@ -217,6 +260,10 @@ mod tests {
         prune_oneshot(&w, &w.abs(), &cfg).packed
     }
 
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
     #[test]
     fn ffn_forward_matches_reference() {
         let cfg = HinmConfig::with_24(8, 0.5);
@@ -224,6 +271,7 @@ mod tests {
         assert_eq!(model.d_in(), 32);
         assert_eq!(model.d_out(), 32);
         assert_eq!(model.n_layers(), 2);
+        assert_eq!(model.plans().len(), 2);
         let mut rng = Xoshiro256::new(12);
         let x = Matrix::randn(32, 6, 1.0, &mut rng);
         let got = model.forward(&x);
@@ -233,16 +281,46 @@ mod tests {
     }
 
     #[test]
-    fn scratch_reuse_across_calls_is_equivalent() {
+    fn planned_buffer_reuse_is_bit_stable() {
         let cfg = HinmConfig::with_24(4, 0.5);
         let model = HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Gelu, 21).unwrap();
-        let mut scratch = SpmmScratch::new();
+        let engine = SpmmEngine::new(3);
+        let mut bufs = ActivationBuffers::new();
         let mut rng = Xoshiro256::new(22);
         for _ in 0..3 {
             let x = Matrix::randn(16, 3, 1.0, &mut rng);
-            let a = model.forward_with_scratch(&x, &mut scratch);
+            let a = model.forward_planned(&x, &engine, &mut bufs);
             let b = model.forward(&x);
-            assert_eq!(a, b);
+            assert_eq!(bits(&a), bits(&b), "buffer/engine reuse must not change bits");
+        }
+    }
+
+    #[test]
+    fn deep_chain_ping_pongs_through_mixed_widths() {
+        // 3 layers with different widths exercise both buffers + resizing.
+        let l1 = HinmLayer::new(packed(32, 16, 31)).with_activation(Activation::Relu);
+        let l2 = HinmLayer::new(packed(8, 32, 32)).with_bias(vec![0.1; 8]);
+        let l3 = HinmLayer::new(packed(16, 8, 33)).with_activation(Activation::Gelu);
+        let model = HinmModel::new(vec![l1, l2, l3]).unwrap();
+        let mut rng = Xoshiro256::new(34);
+        let x = Matrix::randn(16, 5, 1.0, &mut rng);
+        let got = model.forward(&x);
+        let want = model.forward_reference(&x);
+        assert_eq!(got.shape(), (16, 5));
+        assert!(got.max_abs_diff(&want) < 1e-4, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn scratch_path_still_matches_reference() {
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let model = HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Relu, 23).unwrap();
+        let mut scratch = SpmmScratch::new();
+        let mut rng = Xoshiro256::new(24);
+        for _ in 0..2 {
+            let x = Matrix::randn(16, 3, 1.0, &mut rng);
+            let a = model.forward_with_scratch(&x, &mut scratch);
+            let want = model.forward_reference(&x);
+            assert!(a.max_abs_diff(&want) < 1e-4);
         }
     }
 

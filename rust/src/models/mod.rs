@@ -13,5 +13,5 @@ pub mod conv;
 pub mod synthetic;
 
 pub use catalog::{LayerShape, ModelCatalog};
-pub use chain::{Activation, HinmLayer, HinmModel};
+pub use chain::{Activation, ActivationBuffers, HinmLayer, HinmModel};
 pub use synthetic::SyntheticGen;

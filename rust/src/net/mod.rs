@@ -13,7 +13,7 @@
 //! | Route | Method | Behaviour |
 //! |---|---|---|
 //! | `/v1/infer` | POST | body `{"x": [...], "priority"?, "deadline_ms"?}` → `{"y": [...]}`; scheduling honored by the engine queue |
-//! | `/v1/metrics` | GET | engine + scheduler + cache counters as JSON |
+//! | `/v1/metrics` | GET | engine + scheduler + cache counters as JSON; `?format=prometheus` renders the same counters in the Prometheus text exposition format |
 //! | `/healthz` | GET | liveness probe, `{"status": "ok"}` |
 //!
 //! Backpressure propagates naturally: a full engine queue blocks the HTTP
@@ -81,9 +81,7 @@ fn route(req: &HttpRequest, engine: &ServerHandle, cache: Option<&CacheStats>) -
             _ => method_not_allowed(req, "GET"),
         },
         "/v1/metrics" => match req.method.as_str() {
-            "GET" => {
-                HttpResponse::json(200, protocol::metrics_json(engine.metrics(), cache).compact())
-            }
+            "GET" => metrics_route(req, engine, cache),
             _ => method_not_allowed(req, "GET"),
         },
         "/v1/infer" => match req.method.as_str() {
@@ -94,6 +92,39 @@ fn route(req: &HttpRequest, engine: &ServerHandle, cache: Option<&CacheStats>) -
             404,
             protocol::error_body("not_found", &format!("no route for {} {}", req.method, path))
                 .compact(),
+        ),
+    }
+}
+
+/// Content type of the Prometheus text exposition format.
+const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// `GET /v1/metrics`: JSON by default, Prometheus text exposition with
+/// `?format=prometheus`; any other `format` value is a 400.
+fn metrics_route(
+    req: &HttpRequest,
+    engine: &ServerHandle,
+    cache: Option<&CacheStats>,
+) -> HttpResponse {
+    let query = req.path.split_once('?').map(|(_, q)| q).unwrap_or("");
+    let format = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("format="))
+        .unwrap_or("json");
+    match format {
+        "json" => HttpResponse::json(200, protocol::metrics_json(engine.metrics(), cache).compact()),
+        "prometheus" => HttpResponse {
+            status: 200,
+            content_type: PROMETHEUS_CONTENT_TYPE,
+            body: protocol::metrics_prometheus(engine.metrics(), cache),
+        },
+        other => HttpResponse::json(
+            400,
+            protocol::error_body(
+                "bad_request",
+                &format!("unknown metrics format {other:?} (expected json|prometheus)"),
+            )
+            .compact(),
         ),
     }
 }

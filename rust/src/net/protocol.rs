@@ -184,6 +184,144 @@ pub fn metrics_json(m: &EngineMetrics, cache: Option<&CacheStats>) -> Json {
     Json::obj(pairs)
 }
 
+/// `GET /v1/metrics?format=prometheus` body: the same counters as
+/// [`metrics_json`] rendered in the Prometheus text exposition format
+/// (version 0.0.4) — latency as a `summary` with quantile labels,
+/// per-priority / per-replica counters as labeled `counter` families, and
+/// cache hit/miss counters when a cache is active.
+pub fn metrics_prometheus(m: &EngineMetrics, cache: Option<&CacheStats>) -> String {
+    // One family = HELP + TYPE + its samples, emitted as a single group
+    // (the exposition format forbids interleaving a family's samples with
+    // other families).
+    fn family(out: &mut String, name: &str, kind: &str, help: &str, samples: &[String]) {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        for s in samples {
+            out.push_str(s);
+            out.push('\n');
+        }
+    }
+
+    let lat = m.aggregate_latency();
+    let pct = lat.percentiles(&[50.0, 95.0, 99.0]);
+    let sched = m.scheduler_stats();
+    let mut out = String::new();
+
+    family(
+        &mut out,
+        "hinm_requests_total",
+        "counter",
+        "Requests answered successfully across all replicas.",
+        &[format!("hinm_requests_total {}", lat.count())],
+    );
+    family(
+        &mut out,
+        "hinm_requests_per_second",
+        "gauge",
+        "Successful requests per second since engine start.",
+        &[format!("hinm_requests_per_second {}", m.requests_per_sec())],
+    );
+
+    let mut latency = Vec::new();
+    for (q, v) in [("0.5", pct[0]), ("0.95", pct[1]), ("0.99", pct[2])] {
+        latency.push(format!("hinm_request_latency_microseconds{{quantile=\"{q}\"}} {v}"));
+    }
+    latency.push(format!(
+        "hinm_request_latency_microseconds_sum {}",
+        lat.mean() * lat.count() as f64
+    ));
+    latency.push(format!("hinm_request_latency_microseconds_count {}", lat.count()));
+    family(
+        &mut out,
+        "hinm_request_latency_microseconds",
+        "summary",
+        "End-to-end request latency over the retained window.",
+        &latency,
+    );
+
+    let served: Vec<String> = Priority::ALL
+        .iter()
+        .map(|p| {
+            format!(
+                "hinm_requests_served_total{{priority=\"{}\"}} {}",
+                p.as_str(),
+                sched.served_for(*p)
+            )
+        })
+        .collect();
+    family(
+        &mut out,
+        "hinm_requests_served_total",
+        "counter",
+        "Successfully served requests by scheduling priority.",
+        &served,
+    );
+
+    family(
+        &mut out,
+        "hinm_requests_expired_total",
+        "counter",
+        "Requests answered with a deadline-expired error, by expiry stage.",
+        &[
+            format!("hinm_requests_expired_total{{stage=\"enqueue\"}} {}", sched.expired_at_enqueue),
+            format!("hinm_requests_expired_total{{stage=\"queue\"}} {}", sched.expired_in_queue),
+        ],
+    );
+
+    let stats: Vec<_> = (0..m.replicas.len()).map(|r| m.replica_stats(r)).collect();
+    family(
+        &mut out,
+        "hinm_replica_batches_total",
+        "counter",
+        "Batches flushed per replica.",
+        &stats
+            .iter()
+            .enumerate()
+            .map(|(r, st)| format!("hinm_replica_batches_total{{replica=\"{r}\"}} {}", st.batches))
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "hinm_replica_requests_total",
+        "counter",
+        "Requests answered successfully per replica.",
+        &stats
+            .iter()
+            .enumerate()
+            .map(|(r, st)| format!("hinm_replica_requests_total{{replica=\"{r}\"}} {}", st.requests))
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "hinm_replica_errors_total",
+        "counter",
+        "Failed batch executions per replica.",
+        &stats
+            .iter()
+            .enumerate()
+            .map(|(r, st)| format!("hinm_replica_errors_total{{replica=\"{r}\"}} {}", st.errors))
+            .collect::<Vec<_>>(),
+    );
+
+    if let Some(c) = cache {
+        family(
+            &mut out,
+            "hinm_cache_hits_total",
+            "counter",
+            "Batches answered from the LRU batch cache.",
+            &[format!("hinm_cache_hits_total {}", c.hits())],
+        );
+        family(
+            &mut out,
+            "hinm_cache_misses_total",
+            "counter",
+            "Batches that ran on the wrapped backend.",
+            &[format!("hinm_cache_misses_total {}", c.misses())],
+        );
+    }
+
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +381,36 @@ mod tests {
         assert_eq!(status_for(&InferError::Stopped).0, 503);
         assert_eq!(status_for(&InferError::Backend("x".into())).0, 500);
         assert_eq!(status_for(&InferError::BadRequest("x".into())).0, 400);
+    }
+
+    #[test]
+    fn metrics_prometheus_groups_families_and_honors_the_cache() {
+        let m = EngineMetrics::new(2);
+        m.scheduler.lock().unwrap().served[Priority::High.index()] = 3;
+        let text = metrics_prometheus(&m, None);
+        assert!(text.contains("# TYPE hinm_requests_total counter"), "{text}");
+        assert!(text.contains("# TYPE hinm_request_latency_microseconds summary"));
+        assert!(text.contains("hinm_requests_served_total{priority=\"high\"} 3"));
+        assert!(text.contains("hinm_replica_batches_total{replica=\"1\"} 0"));
+        assert!(!text.contains("hinm_cache_hits_total"), "no cache family without a cache");
+        // Every family is one contiguous group: a TYPE line, then only that
+        // family's samples until the next comment line.
+        let mut current: Option<String> = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                current = Some(rest.split_whitespace().next().unwrap().to_string());
+            } else if !line.starts_with('#') && !line.is_empty() {
+                let fam = current.as_ref().expect("sample before any TYPE line");
+                assert!(
+                    line.starts_with(fam.as_str()),
+                    "sample {line:?} outside its family {fam:?}"
+                );
+            }
+        }
+        let stats = CacheStats::new_shared();
+        let text = metrics_prometheus(&m, Some(stats.as_ref()));
+        assert!(text.contains("hinm_cache_hits_total 0"));
+        assert!(text.contains("hinm_cache_misses_total 0"));
     }
 
     #[test]

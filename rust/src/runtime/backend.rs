@@ -6,10 +6,13 @@
 //! owns a fully materialized model and executes one padded activation
 //! batch per call. Two implementations ship:
 //!
-//! * [`NativeCpuBackend`] — the CPU HiNM kernel
-//!   ([`crate::spmm::spmm_with_scratch`]) over a [`HinmModel`] chain, with
-//!   a per-backend reusable [`SpmmScratch`]. Runs everywhere (tests, CI,
-//!   benches) with no artifacts.
+//! * [`NativeCpuBackend`] — the planned tile-parallel CPU kernel
+//!   ([`crate::spmm::SpmmEngine`] over the model's precompiled
+//!   [`crate::spmm::SpmmPlan`]s, DESIGN.md §14) over a [`HinmModel`]
+//!   chain, with per-backend ping-pong activation buffers and an optional
+//!   per-backend kernel worker pool (`--kernel-threads`). Runs everywhere
+//!   (tests, CI, benches) with no artifacts; output is bit-identical for
+//!   any kernel-thread count.
 //! * [`PjrtBackend`] — the AOT-lowered XLA/Pallas artifact through the
 //!   PJRT [`Executor`]. PJRT handles are `!Send`, so the batch server
 //!   constructs this backend *on* the worker thread via its factory.
@@ -26,10 +29,10 @@
 //! fixed packed-weight literals of the PJRT path are created once and
 //! passed by reference to each `exe.run`, never deep-copied per flush.
 
-use crate::models::chain::HinmModel;
+use crate::models::chain::{ActivationBuffers, HinmModel};
 use crate::runtime::executor::{lit_f32, lit_i32, lit_to_matrix, Executor};
 use crate::runtime::registry::ArtifactSpec;
-use crate::spmm::SpmmScratch;
+use crate::spmm::SpmmEngine;
 use crate::tensor::Matrix;
 use anyhow::{ensure, Result};
 use std::collections::HashMap;
@@ -93,20 +96,40 @@ pub fn packed_host_tensors(p: &crate::sparsity::HinmPacked) -> Vec<HostTensor> {
     ]
 }
 
-/// CPU backend: the packed-format HiNM kernel over a layer chain.
+/// CPU backend: the planned tile-parallel HiNM kernel over a layer chain.
 ///
-/// The model is shared (`Arc`) across replicas — weights exist once in the
-/// process regardless of replica count — while each backend owns its own
-/// scratch, the per-"thread-block" staging buffers of the kernel.
+/// The model (weights + compiled [`crate::spmm::SpmmPlan`]s) is shared
+/// (`Arc`) across replicas — plans exist once in the process regardless of
+/// replica count — while each backend owns its own [`SpmmEngine`] (kernel
+/// worker pool + per-lane staging scratch) and ping-pong activation
+/// buffers, so a forward pass of any depth allocates only its output.
 pub struct NativeCpuBackend {
     model: Arc<HinmModel>,
-    scratch: SpmmScratch,
+    engine: SpmmEngine,
+    bufs: ActivationBuffers,
 }
 
 impl NativeCpuBackend {
-    /// Backend over a shared model with fresh private scratch.
+    /// Backend over a shared model, executing kernels inline on the
+    /// replica thread (one lane).
     pub fn new(model: Arc<HinmModel>) -> Self {
-        Self { model, scratch: SpmmScratch::new() }
+        Self::with_threads(model, 1)
+    }
+
+    /// Backend with a private pool of `kernel_threads` kernel lanes
+    /// (0 = available parallelism). Tiles are distributed over the lanes;
+    /// the result is bit-identical for any lane count.
+    pub fn with_threads(model: Arc<HinmModel>, kernel_threads: usize) -> Self {
+        Self {
+            model,
+            engine: SpmmEngine::new(kernel_threads),
+            bufs: ActivationBuffers::new(),
+        }
+    }
+
+    /// Kernel lanes this backend runs tiles on.
+    pub fn kernel_threads(&self) -> usize {
+        self.engine.lanes()
     }
 }
 
@@ -130,7 +153,7 @@ impl SpmmBackend for NativeCpuBackend {
             x.rows,
             self.model.d_in()
         );
-        Ok(self.model.forward_with_scratch(x, &mut self.scratch))
+        Ok(self.model.forward_planned(x, &self.engine, &mut self.bufs))
     }
 }
 
@@ -412,6 +435,28 @@ mod tests {
             let x = Matrix::randn(32, 4, 1.0, &mut rng);
             let y = backend.run_batch(&x).unwrap();
             assert_eq!(y, model.forward(&x));
+        }
+    }
+
+    #[test]
+    fn native_backend_kernel_threads_do_not_change_bits() {
+        let cfg = HinmConfig::with_24(8, 0.5);
+        let model =
+            Arc::new(HinmModel::synthetic_ffn(32, 64, &cfg, Activation::Gelu, 15).unwrap());
+        let mut rng = Xoshiro256::new(16);
+        let x = Matrix::randn(32, 6, 1.0, &mut rng);
+        let mut single = NativeCpuBackend::new(Arc::clone(&model));
+        assert_eq!(single.kernel_threads(), 1);
+        let want = single.run_batch(&x).unwrap();
+        for threads in [2usize, 4] {
+            let mut b = NativeCpuBackend::with_threads(Arc::clone(&model), threads);
+            assert_eq!(b.kernel_threads(), threads);
+            let got = b.run_batch(&x).unwrap();
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{threads} kernel threads"
+            );
         }
     }
 

@@ -67,22 +67,38 @@ impl HinmPacked {
         &self.nm_idx[base..base + vpr]
     }
 
+    /// Resolve every slot's in-group offset to its **flat compact column**
+    /// `g·M + nm_idx[slot]` (in `0..k_v`), in storage order (parallel to
+    /// `vals`). This is the per-call index arithmetic the SpMM kernels
+    /// would otherwise redo; [`crate::spmm::SpmmPlan`] hoists it here, and
+    /// within a row the resolved offsets are strictly ascending (group
+    /// base ascending, offsets strictly ascending within a group).
+    pub fn slot_compact_cols(&self) -> Vec<u32> {
+        let n = self.cfg.n_keep;
+        let m = self.cfg.m_group;
+        self.nm_idx
+            .iter()
+            .enumerate()
+            .map(|(i, &off)| {
+                let slot = i % self.vals_per_row().max(1);
+                ((slot / n) * m + off as usize) as u32
+            })
+            .collect()
+    }
+
     /// Decompress to the dense masked matrix (for testing / verification).
     pub fn to_dense(&self) -> Matrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
         let vpr = self.vals_per_row();
-        let n = self.cfg.n_keep;
-        let m = self.cfg.m_group;
+        let compact = self.slot_compact_cols();
         for t in 0..self.tiles() {
             let vidx = self.tile_vec_idx(t);
             for r in 0..self.cfg.v {
                 let vals = self.tile_row_vals(t, r);
-                let offs = self.tile_row_nm(t, r);
-                for slot in 0..vpr {
-                    let g = slot / n;
-                    let compact_col = g * m + offs[slot] as usize;
-                    let orig_col = vidx[compact_col] as usize;
-                    *out.at_mut(t * self.cfg.v + r, orig_col) = vals[slot];
+                let base = (t * self.cfg.v + r) * vpr;
+                for (slot, &w) in vals.iter().enumerate() {
+                    let orig_col = vidx[compact[base + slot] as usize] as usize;
+                    *out.at_mut(t * self.cfg.v + r, orig_col) = w;
                 }
             }
         }
@@ -320,6 +336,22 @@ mod tests {
         let r1: f32 = p1.vals.iter().sum();
         assert_eq!(r1, 30.0);
         p1.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn slot_compact_cols_are_row_ascending_and_in_range() {
+        let (w, sal, cfg) = make(8, 32, 0.5, 9);
+        let vp = vector_prune(&sal, &cfg);
+        let p = pack(&w, &sal, &cfg, &vp.kept, None);
+        let flat = p.slot_compact_cols();
+        assert_eq!(flat.len(), p.vals.len());
+        let vpr = p.vals_per_row();
+        for row in flat.chunks_exact(vpr) {
+            for pair in row.windows(2) {
+                assert!(pair[0] < pair[1], "compact cols not strictly ascending: {row:?}");
+            }
+            assert!((row[vpr - 1] as usize) < p.k_v);
+        }
     }
 
     #[test]

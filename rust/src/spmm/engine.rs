@@ -1,0 +1,433 @@
+//! Tile-parallel SpMM execution: a persistent scoped worker pool plus the
+//! per-lane scratch that turns an [`SpmmPlan`] into throughput.
+//!
+//! The permute layer's tile engine spawns scoped threads per call, which
+//! is fine for second-long offline jobs; a serving kernel that runs in
+//! tens of microseconds cannot pay a thread spawn per call. [`KernelPool`]
+//! therefore keeps its workers parked on a condvar between calls: `run`
+//! publishes a borrowed job, wakes everyone, contributes the calling
+//! thread as the last lane, and returns only after every lane finished —
+//! which is exactly what makes handing workers a non-`'static` borrow
+//! sound.
+//!
+//! **Determinism.** [`SpmmEngine::execute`] parallelizes over *tiles*;
+//! a tile owns `V` output rows, every tile is computed by the same
+//! single-threaded code path regardless of which lane claims it, and tiles
+//! write disjoint row ranges of `Y`. The result is bit-identical for any
+//! lane count — the same guarantee the permute tile engine makes
+//! (DESIGN.md §4), now on the serving hot path (§14).
+
+use super::epilogue::Epilogue;
+use super::plan::SpmmPlan;
+use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Raw pointer to the currently published job. Stored in the shared pool
+/// state, so it must cross threads; the pointee is only dereferenced while
+/// the publishing `run` call keeps the borrow alive (see `run`).
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointer is only dereferenced by workers between the moment
+// `run` publishes it and the moment `run` observes `remaining == 0`; the
+// referenced closure is `Sync` and outlives that window by construction.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    job: Option<JobPtr>,
+    /// Bumped once per published job; workers run a job exactly once.
+    epoch: u64,
+    /// Worker lanes still executing the current job.
+    remaining: usize,
+    shutdown: bool,
+    /// Set when a worker lane panicked mid-job: its thread is gone, so the
+    /// output is incomplete and later jobs could never finish. `run`
+    /// propagates this as a panic instead of returning a partial result.
+    poisoned: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The publisher parks here until `remaining` drains to zero.
+    done: Condvar,
+}
+
+/// A persistent pool of kernel worker threads that execute borrowed jobs.
+///
+/// `new(lanes)` keeps `lanes - 1` parked worker threads (so `lanes == 1`
+/// spawns nothing and `run` degenerates to an inline call); `run(job)`
+/// invokes `job(lane)` once per lane in `0..lanes`, with the calling
+/// thread executing the last lane, and blocks until all lanes return.
+/// Concurrent `run` calls from different threads are serialized by an
+/// internal gate.
+pub struct KernelPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    lanes: usize,
+    /// Serializes concurrent `run` calls (one published job at a time).
+    gate: Mutex<()>,
+}
+
+impl KernelPool {
+    /// Pool with `lanes` total compute lanes (0 = available parallelism).
+    /// `lanes - 1` worker threads are spawned and parked immediately.
+    pub fn new(lanes: usize) -> KernelPool {
+        let lanes = if lanes == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            lanes
+        };
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                remaining: 0,
+                shutdown: false,
+                poisoned: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..lanes.saturating_sub(1))
+            .map(|lane| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hinm-kernel-{lane}"))
+                    .spawn(move || worker_loop(&sh, lane))
+                    .expect("spawning kernel worker")
+            })
+            .collect();
+        KernelPool { shared, workers, lanes, gate: Mutex::new(()) }
+    }
+
+    /// Total compute lanes (worker threads + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `job(lane)` once per lane in `0..lanes()`, blocking until every
+    /// lane has returned. The calling thread executes the last lane.
+    ///
+    /// # Panics
+    ///
+    /// Panics if a worker lane panics while executing `job` (now or in a
+    /// previous `run`): the lane's thread is gone and the output is
+    /// incomplete, so returning normally would hand back garbage — and a
+    /// later job would wait forever on the dead lane. The panic propagates
+    /// to the serving replica, whose existing fail-fast path closes the
+    /// queue instead of hanging clients.
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() {
+            job(0);
+            return;
+        }
+        // A panicking publisher poisons this gate's mutex; recover the
+        // guard regardless — the pool's own `poisoned` flag is the real
+        // health signal and gives the clearer panic message below.
+        let _gate = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // Check-and-release before panicking: unwinding while the
+            // state guard is live would poison the mutex and turn every
+            // later lock (including KernelPool::drop) into an abort.
+            let poisoned = st.poisoned;
+            if poisoned {
+                drop(st);
+                panic!("kernel pool poisoned by an earlier worker panic");
+            }
+            debug_assert!(st.job.is_none() && st.remaining == 0);
+            st.job = Some(JobPtr(job as *const _));
+            st.epoch += 1;
+            st.remaining = self.workers.len();
+            self.shared.work.notify_all();
+        }
+        // Ensure the borrow published above stays alive until every worker
+        // is done, even if our own lane's share panics.
+        let wait = WaitForWorkers(&self.shared);
+        job(self.lanes - 1);
+        drop(wait);
+        let poisoned = self.shared.state.lock().unwrap().poisoned;
+        assert!(
+            !poisoned,
+            "kernel worker lane panicked; output is incomplete and the pool is dead"
+        );
+    }
+}
+
+/// Blocks (on drop) until the current job's workers all finished, then
+/// retires the job pointer — the publisher's half of the borrow-safety
+/// argument in [`KernelPool::run`].
+struct WaitForWorkers<'a>(&'a PoolShared);
+
+impl Drop for WaitForWorkers<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.0.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch bumped without a job");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // Decrement even if the job panics, so the publisher never hangs.
+        let _done = SignalDone(shared);
+        // SAFETY: `run` published this pointer and does not return (or
+        // unwind) before observing `remaining == 0`, which happens only
+        // after `_done` drops below — so the closure is alive here.
+        let f: &(dyn Fn(usize) + Sync) = unsafe { &*job.0 };
+        f(lane);
+    }
+}
+
+/// Decrements `remaining` on drop and wakes the publisher at zero; a drop
+/// during unwind additionally poisons the pool (the worker thread is about
+/// to die, so no future job could ever complete on it).
+struct SignalDone<'a>(&'a PoolShared);
+
+impl Drop for SignalDone<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        if std::thread::panicking() {
+            st.poisoned = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.0.done.notify_one();
+        }
+    }
+}
+
+/// Per-lane kernel scratch: the staged input panel and the row-local
+/// accumulator (the "shared memory" of a software thread block).
+#[derive(Default)]
+struct LaneScratch {
+    xbuf: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+/// The planned-SpMM execution engine: a [`KernelPool`] plus one reusable
+/// scratch block per lane. Build it once (per backend / per bench) and run
+/// any number of plans through it — the hot path never allocates.
+pub struct SpmmEngine {
+    pool: KernelPool,
+    lanes: Vec<Mutex<LaneScratch>>,
+}
+
+impl SpmmEngine {
+    /// Engine with `threads` compute lanes (0 = available parallelism).
+    pub fn new(threads: usize) -> SpmmEngine {
+        let pool = KernelPool::new(threads);
+        let lanes = (0..pool.lanes()).map(|_| Mutex::new(LaneScratch::default())).collect();
+        SpmmEngine { pool, lanes }
+    }
+
+    /// Single-lane engine (no worker threads; `execute` runs inline).
+    pub fn single() -> SpmmEngine {
+        SpmmEngine::new(1)
+    }
+
+    /// Compute lanes this engine runs tiles on.
+    pub fn lanes(&self) -> usize {
+        self.pool.lanes()
+    }
+
+    /// Execute `Y = act(plan · X + bias)` into a caller-owned `Y` of shape
+    /// `[plan.rows(), x.cols]`. Every element of `Y` is overwritten.
+    ///
+    /// Tiles are claimed off an atomic counter by the pool lanes; each
+    /// tile writes only its own `V` rows of `Y`, so the output is
+    /// bit-identical for any lane count.
+    pub fn execute(&self, plan: &SpmmPlan, x: &Matrix, y: &mut Matrix, epi: &Epilogue<'_>) {
+        assert_eq!(x.rows, plan.cols(), "X rows must equal uncompressed input channels");
+        assert_eq!(
+            (y.rows, y.cols),
+            (plan.rows(), x.cols),
+            "Y must be [plan rows × batch]"
+        );
+        if let Some(bias) = epi.bias {
+            assert_eq!(bias.len(), plan.rows(), "bias length must equal output rows");
+        }
+        let batch = x.cols;
+        if batch == 0 {
+            return;
+        }
+        let tiles = plan.tiles();
+        let tile_len = plan.v() * batch;
+
+        if self.lanes() == 1 || tiles <= 1 {
+            let mut guard = self.lanes[0].lock().unwrap();
+            let sc = &mut *guard;
+            for (t, ytile) in y.data.chunks_mut(tile_len).enumerate() {
+                plan.run_tile(t, x, ytile, epi, &mut sc.xbuf, &mut sc.acc);
+            }
+            return;
+        }
+
+        let next = AtomicUsize::new(0);
+        let ybase = SendPtr(y.data.as_mut_ptr());
+        let job = |lane: usize| {
+            let mut guard = self.lanes[lane].lock().unwrap();
+            let sc = &mut *guard;
+            loop {
+                let t = next.fetch_add(1, Ordering::Relaxed);
+                if t >= tiles {
+                    break;
+                }
+                // SAFETY: tile `t` exclusively owns rows `t·V..(t+1)·V` of
+                // `Y` — a contiguous, disjoint `tile_len` chunk of `y.data`
+                // (claimed at most once via the atomic counter) — and the
+                // `&mut Matrix` borrow held by `execute` outlives the pool
+                // run, so no other access aliases it.
+                let ytile = unsafe {
+                    std::slice::from_raw_parts_mut(ybase.0.add(t * tile_len), tile_len)
+                };
+                plan.run_tile(t, x, ytile, epi, &mut sc.xbuf, &mut sc.acc);
+            }
+        };
+        self.pool.run(&job);
+    }
+
+    /// Allocating convenience: `plan · X` with an empty epilogue.
+    pub fn spmm_planned(&self, plan: &SpmmPlan, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(plan.rows(), x.cols);
+        self.execute(plan, x, &mut y, &Epilogue::default());
+        y
+    }
+}
+
+/// `*mut f32` that may cross into pool lanes (see the SAFETY argument at
+/// its use site in [`SpmmEngine::execute`]).
+struct SendPtr(*mut f32);
+
+// SAFETY: lanes write disjoint tile-sized chunks behind this pointer, and
+// the owning `&mut Matrix` borrow outlives the pool run.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::config::HinmConfig;
+    use crate::sparsity::hinm::prune_oneshot;
+    use crate::spmm::hinm_cpu::spmm_reference;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn pool_runs_every_lane_and_is_reusable() {
+        for lanes in [1usize, 2, 5] {
+            let pool = KernelPool::new(lanes);
+            assert_eq!(pool.lanes(), lanes);
+            for _ in 0..3 {
+                let hits: Vec<AtomicUsize> = (0..lanes).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(&|lane| {
+                    hits[lane].fetch_add(1, Ordering::Relaxed);
+                });
+                for (lane, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "lane {lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_auto_lane_count_is_positive() {
+        assert!(KernelPool::new(0).lanes() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_poisons_the_pool_instead_of_returning_partial_output() {
+        let pool = KernelPool::new(3);
+        // Lane 0 is a worker thread (the caller runs the last lane).
+        let boom: &(dyn Fn(usize) + Sync) = &|lane| {
+            if lane == 0 {
+                panic!("lane 0 dies");
+            }
+        };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(boom)));
+        assert!(r.is_err(), "run must not return normally after a lane panic");
+        // The pool is dead: further jobs are refused rather than deadlocking
+        // on the lane whose thread is gone.
+        let ok: &(dyn Fn(usize) + Sync) = &|_| {};
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(ok)));
+        assert!(r.is_err(), "a poisoned pool must refuse further jobs");
+    }
+
+    #[test]
+    fn engine_lane_count_does_not_change_bits() {
+        let mut rng = Xoshiro256::new(95);
+        let w = Matrix::randn(32, 64, 1.0, &mut rng);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let p = prune_oneshot(&w, &w.abs(), &cfg).packed;
+        let plan = SpmmPlan::new(&p);
+        let x = Matrix::randn(64, 9, 1.0, &mut rng);
+        let want = spmm_reference(&p, &x);
+        for lanes in [1usize, 2, 8] {
+            let engine = SpmmEngine::new(lanes);
+            let got = engine.spmm_planned(&plan, &x);
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "lanes {lanes}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_reuse_across_calls_and_shapes() {
+        let mut rng = Xoshiro256::new(96);
+        let engine = SpmmEngine::new(3);
+        for (m, n) in [(8usize, 16usize), (32, 64), (8, 16)] {
+            let w = Matrix::randn(m, n, 1.0, &mut rng);
+            let cfg = HinmConfig::with_24(4, 0.5);
+            let p = prune_oneshot(&w, &w.abs(), &cfg).packed;
+            let plan = SpmmPlan::new(&p);
+            let x = Matrix::randn(n, 6, 1.0, &mut rng);
+            let got = engine.spmm_planned(&plan, &x);
+            assert!(got.max_abs_diff(&spmm_reference(&p, &x)) == 0.0, "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let mut rng = Xoshiro256::new(97);
+        let w = Matrix::randn(8, 16, 1.0, &mut rng);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let p = prune_oneshot(&w, &w.abs(), &cfg).packed;
+        let plan = SpmmPlan::new(&p);
+        let y = SpmmEngine::single().spmm_planned(&plan, &Matrix::zeros(16, 0));
+        assert_eq!(y.shape(), (8, 0));
+    }
+}

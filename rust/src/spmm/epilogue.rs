@@ -1,0 +1,331 @@
+//! Fused kernel epilogues: bias + activation applied as the planned SpMM
+//! kernel writes each output row, plus the f32 fast-tanh GELU.
+//!
+//! The [`Activation`] enum used to live in `models::chain`; it moved here so
+//! the kernel layer can fuse it without depending on the model layer
+//! (`models::chain` re-exports it, so existing paths keep working).
+//!
+//! **Fusion contract** (DESIGN.md §14): for `None` and `Relu`,
+//! `Epilogue::apply_slice` is bit-identical to running the unfused sequence
+//! (copy accumulator → add bias → activation) on the same values — the
+//! fused form performs exactly the same f32 operations in the same order.
+//! `Gelu` is the one deliberate divergence: the fused path evaluates
+//! [`gelu_fast`] (polynomial `expm1`, no `f64::tanh` libm call) while
+//! [`Activation::apply`] keeps the `f64::tanh` oracle; [`tanh_fast`] is
+//! within 2 ulp of the oracle (bounded by a test over randn inputs).
+
+use crate::tensor::Matrix;
+
+/// tanh-approximated GELU — bit-compatible with `jax.nn.gelu`'s default
+/// (`approximate=True`), which is what the `ffn_serve` artifact lowers.
+/// This is the **oracle** path: the inner tanh is evaluated by `f64::tanh`.
+pub fn gelu(x: f32) -> f32 {
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x3)) as f64).tanh() as f32)
+}
+
+/// Fast GELU for the planned-kernel epilogue: identical to [`gelu`] except
+/// the inner tanh is [`tanh_fast`] (no libm call). The tanh argument is
+/// computed with exactly the same f32 expression as the oracle, so the two
+/// paths differ only through the tanh evaluation — ≤ 2 ulp on the tanh.
+pub fn gelu_fast(x: f32) -> f32 {
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + tanh_fast(0.7978845608 * (x + 0.044715 * x3)))
+}
+
+/// Past this magnitude `tanh` rounds to ±1 in f32: `2·e^(-2x) < 2⁻²⁵`
+/// (half an ulp of 1) once `x > 13·ln 2 ≈ 9.01`.
+const TANH_SATURATE: f64 = 9.02;
+
+/// Below this magnitude `tanh(u)` rounds to `u` in f32: the cubic term
+/// `u³/3 < u·2⁻²⁶` is under half an ulp of `u` once `|u| < 1e-4`.
+const TANH_TINY: f64 = 1.0e-4;
+
+/// f32 tanh without a libm `tanh` call: `tanh(|u|) = E/(E+2)` with
+/// `E = expm1(2|u|)` evaluated by a degree-12 polynomial after range
+/// reduction — no cancellation anywhere, every intermediate in f64, one
+/// final rounding. Result is within 1 ulp of the correctly rounded f32
+/// tanh (tests bound it at ≤ 2 ulp against the `f64::tanh` oracle).
+pub fn tanh_fast(u: f32) -> f32 {
+    let a = (u as f64).abs();
+    if a >= TANH_SATURATE {
+        return if u.is_sign_negative() { -1.0 } else { 1.0 };
+    }
+    if a < TANH_TINY {
+        // Includes ±0.0 (and preserves its sign, like the oracle).
+        return u;
+    }
+    let em = expm1_pos(2.0 * a);
+    let t = (em / (em + 2.0)) as f32;
+    if u.is_sign_negative() {
+        -t
+    } else {
+        t
+    }
+}
+
+/// `e^z − 1` for `z ∈ (0, 2·TANH_SATURATE)` in f64, accurate to ~1e-15
+/// relative: range-reduce `z = k·ln2 + r` with `|r| ≤ ln2/2`, evaluate
+/// `expm1(r) = r·(1 + r/2·(1 + r/3·(…)))` to depth 12 (truncation ~5e-16),
+/// reconstruct `2^k·expm1(r) + (2^k − 1)` — `2^k − 1` is exact for k ≤ 53.
+fn expm1_pos(z: f64) -> f64 {
+    // 1/n for n = 12, 11, …, 2 (precomputed so the Horner chain is
+    // multiply-add only; an f64 divide per step would dominate the cost).
+    const INV: [f64; 11] = [
+        1.0 / 12.0,
+        1.0 / 11.0,
+        1.0 / 10.0,
+        1.0 / 9.0,
+        1.0 / 8.0,
+        1.0 / 7.0,
+        1.0 / 6.0,
+        1.0 / 5.0,
+        1.0 / 4.0,
+        1.0 / 3.0,
+        1.0 / 2.0,
+    ];
+    let k = (z * std::f64::consts::LOG2_E).round();
+    let r = z - k * std::f64::consts::LN_2;
+    let mut s = 1.0;
+    for &inv in &INV {
+        s = 1.0 + r * inv * s;
+    }
+    let q = r * s; // expm1(r)
+    // 2^k by exponent-field construction; k ∈ [0, 27] here.
+    let p2k = f64::from_bits(((1023 + k as i64) as u64) << 52);
+    p2k * q + (p2k - 1.0)
+}
+
+/// Distance between two f32 values in units in the last place, measured on
+/// the monotone integer line (so it is well defined across ±0 and across
+/// exponent boundaries). NaN inputs give an unspecified large value.
+pub fn ulp_diff(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let bits = x.to_bits() as i32;
+        // Map the sign-magnitude f32 encoding onto a monotone line:
+        // negative floats mirror below zero.
+        if bits < 0 {
+            (i32::MIN - bits) as i64
+        } else {
+            bits as i64
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// Elementwise nonlinearity applied after a layer's GEMM (+ bias).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Activation {
+    /// Identity (no nonlinearity).
+    #[default]
+    None,
+    /// `max(0, x)`.
+    Relu,
+    /// Tanh-approximation GELU (as in BERT/DeiT).
+    Gelu,
+}
+
+impl Activation {
+    /// Apply the nonlinearity elementwise, in place. This is the unfused
+    /// **oracle** path (`Gelu` goes through `f64::tanh`); the planned
+    /// kernel fuses the activation into its epilogue instead, where `Gelu`
+    /// uses [`gelu_fast`].
+    pub fn apply(self, y: &mut Matrix) {
+        match self {
+            Activation::None => {}
+            Activation::Relu => {
+                for v in &mut y.data {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Activation::Gelu => {
+                for v in &mut y.data {
+                    *v = gelu(*v);
+                }
+            }
+        }
+    }
+}
+
+/// A fused per-row epilogue: `out[j] = act(acc[j] + bias[row])`, applied as
+/// the planned kernel finishes each output-row segment — the separate
+/// bias/activation sweeps (and their extra pass over `Y`) disappear.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Epilogue<'a> {
+    /// Per-output-channel bias (length = output rows), or `None`.
+    pub bias: Option<&'a [f32]>,
+    /// Nonlinearity applied after the bias.
+    pub act: Activation,
+}
+
+impl<'a> Epilogue<'a> {
+    /// Epilogue from a layer's optional bias and activation.
+    pub fn new(bias: Option<&'a [f32]>, act: Activation) -> Epilogue<'a> {
+        Epilogue { bias, act }
+    }
+
+    /// Write one finished accumulator segment into the output row `row`.
+    /// With no bias and no activation this is a plain copy — the planned
+    /// kernel stays bit-identical to `spmm_reference`.
+    pub fn apply_slice(&self, row: usize, acc: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(acc.len(), out.len());
+        match self.bias {
+            None => match self.act {
+                Activation::None => out.copy_from_slice(acc),
+                Activation::Relu => {
+                    for (o, &a) in out.iter_mut().zip(acc) {
+                        *o = if a < 0.0 { 0.0 } else { a };
+                    }
+                }
+                Activation::Gelu => {
+                    for (o, &a) in out.iter_mut().zip(acc) {
+                        *o = gelu_fast(a);
+                    }
+                }
+            },
+            Some(bias) => {
+                let b = bias[row];
+                match self.act {
+                    Activation::None => {
+                        for (o, &a) in out.iter_mut().zip(acc) {
+                            *o = a + b;
+                        }
+                    }
+                    Activation::Relu => {
+                        for (o, &a) in out.iter_mut().zip(acc) {
+                            let v = a + b;
+                            *o = if v < 0.0 { 0.0 } else { v };
+                        }
+                    }
+                    Activation::Gelu => {
+                        for (o, &a) in out.iter_mut().zip(acc) {
+                            *o = gelu_fast(a + b);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn gelu_sanity() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(3.0) - 3.0).abs() < 0.01);
+        assert!(gelu(-3.0).abs() < 0.01);
+        assert!(gelu(1.0) > 0.8 && gelu(1.0) < 0.9);
+    }
+
+    #[test]
+    fn tanh_fast_within_2ulp_of_the_oracle_on_randn() {
+        let mut rng = Xoshiro256::new(41);
+        for i in 0..20_000 {
+            // Mix of unit-normal and wide-spread inputs so both the
+            // polynomial core and the saturation band are exercised.
+            let scale = if i % 3 == 0 { 4.0 } else { 1.0 };
+            let u = rng.normal() * scale;
+            let fast = tanh_fast(u);
+            let oracle = ((u as f64).tanh()) as f32;
+            let d = ulp_diff(fast, oracle);
+            assert!(d <= 2, "tanh_fast({u}) = {fast} vs oracle {oracle}: {d} ulp");
+        }
+    }
+
+    #[test]
+    fn tanh_fast_within_2ulp_on_a_dense_sweep() {
+        // 40k evenly spaced points across the full non-trivial range.
+        let n = 40_000;
+        for i in 0..=n {
+            let u = -10.0 + 20.0 * (i as f32) / (n as f32);
+            let fast = tanh_fast(u);
+            let oracle = ((u as f64).tanh()) as f32;
+            assert!(
+                ulp_diff(fast, oracle) <= 2,
+                "tanh_fast({u}) = {fast} vs oracle {oracle}"
+            );
+        }
+    }
+
+    #[test]
+    fn tanh_fast_edge_cases() {
+        assert_eq!(tanh_fast(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(tanh_fast(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(tanh_fast(20.0), 1.0);
+        assert_eq!(tanh_fast(-20.0), -1.0);
+        assert!(tanh_fast(f32::NAN).is_nan());
+        // Odd symmetry is exact by construction.
+        for u in [0.3f32, 1.7, 5.0, 9.5] {
+            assert_eq!(tanh_fast(-u).to_bits(), (-tanh_fast(u)).to_bits());
+        }
+    }
+
+    #[test]
+    fn gelu_fast_tracks_the_oracle() {
+        let mut rng = Xoshiro256::new(42);
+        for _ in 0..10_000 {
+            let x = rng.normal() * 2.0;
+            let d = (gelu_fast(x) - gelu(x)).abs();
+            // The two paths share the f32 tanh argument; the ≤2-ulp tanh
+            // divergence leaves the GELU within a few 1e-7 of the oracle
+            // for unit-scale inputs.
+            assert!(d <= 1e-5, "gelu_fast({x}) = {} vs {}", gelu_fast(x), gelu(x));
+        }
+        assert_eq!(gelu_fast(0.0), 0.0);
+    }
+
+    #[test]
+    fn ulp_diff_is_a_metric_across_zero() {
+        assert_eq!(ulp_diff(1.0, 1.0), 0);
+        assert_eq!(ulp_diff(0.0, -0.0), 0);
+        assert_eq!(ulp_diff(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(ulp_diff(tiny, -tiny), 2);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_the_unfused_sequence_bitwise() {
+        let mut rng = Xoshiro256::new(43);
+        let acc: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        for act in [Activation::None, Activation::Relu] {
+            for row in [0usize, 7] {
+                let fused = {
+                    let mut out = vec![0.0f32; acc.len()];
+                    Epilogue::new(Some(&bias), act).apply_slice(row, &acc, &mut out);
+                    out
+                };
+                let unfused = {
+                    let mut m = Matrix::from_vec(1, acc.len(), acc.clone());
+                    for v in &mut m.data {
+                        *v += bias[row];
+                    }
+                    act.apply(&mut m);
+                    m.data
+                };
+                assert_eq!(
+                    fused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    unfused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "act {act:?} row {row}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_epilogue_is_a_copy() {
+        let acc = vec![1.5f32, -0.0, 3.0];
+        let mut out = vec![9.0f32; 3];
+        Epilogue::default().apply_slice(0, &acc, &mut out);
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            acc.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -60,21 +60,22 @@ pub fn spmm_with_scratch(p: &HinmPacked, x: &Matrix, scratch: &mut SpmmScratch) 
             scratch.xbuf[j * batch..(j + 1) * batch].copy_from_slice(src);
         }
 
-        // --- compute: per output row, 2:4-select from the staged buffer ---
-        // Hot loop (EXPERIMENTS.md §Perf): the two kept values of each
-        // group are processed as paired FMA chains over the batch so the
-        // autovectorizer emits two independent accumulation streams, and
-        // the group's X base pointer is resolved once.
-        if n == 2 {
-            for r in 0..v {
-                let vals = p.tile_row_vals(t, r);
-                let offs = p.tile_row_nm(t, r);
-                let yrow = y.row_mut(t * v + r);
-                // Row-local accumulator: lets LLVM keep the whole batch
-                // vector in registers across the group loop instead of
-                // re-loading yrow every group (§Perf iteration 2).
-                scratch.acc.resize(batch, 0.0);
-                scratch.acc.fill(0.0);
+        // --- compute: per output row, N:M-select from the staged buffer ---
+        // Hot loop (EXPERIMENTS.md §Perf): both N cases accumulate into the
+        // row-local `scratch.acc`, which lets LLVM keep the whole batch
+        // vector in registers across the group loop instead of re-loading
+        // `yrow` once per group (§Perf iteration 2; the general-N path
+        // originally re-walked `yrow` per slot). n == 2 additionally runs
+        // the paired-FMA form — two independent accumulation streams per
+        // group with the group's X base resolved once. The planned kernel
+        // ([`crate::spmm::SpmmPlan`]) is the production descendant of this
+        // loop, with the index arithmetic hoisted out of the call entirely.
+        for r in 0..v {
+            let vals = p.tile_row_vals(t, r);
+            let offs = p.tile_row_nm(t, r);
+            scratch.acc.resize(batch, 0.0);
+            scratch.acc.fill(0.0);
+            if n == 2 {
                 for g in 0..vpr / 2 {
                     let base = (g * m) * batch;
                     let w0 = vals[2 * g];
@@ -85,26 +86,16 @@ pub fn spmm_with_scratch(p: &HinmPacked, x: &Matrix, scratch: &mut SpmmScratch) 
                         *yv += w0 * a + w1 * b;
                     }
                 }
-                yrow.copy_from_slice(&scratch.acc);
-            }
-        } else {
-            for r in 0..v {
-                let vals = p.tile_row_vals(t, r);
-                let offs = p.tile_row_nm(t, r);
-                let yrow = y.row_mut(t * v + r);
-                for g in 0..vpr / n {
-                    let base_col = g * m;
-                    for j in 0..n {
-                        let slot = g * n + j;
-                        let w = vals[slot];
-                        let col = base_col + offs[slot] as usize;
-                        let xrow = &scratch.xbuf[col * batch..col * batch + batch];
-                        for (yv, &xv) in yrow.iter_mut().zip(xrow) {
-                            *yv += w * xv;
-                        }
+            } else {
+                for (slot, (&w, &off)) in vals.iter().zip(offs).enumerate() {
+                    let col = (slot / n) * m + off as usize;
+                    let xrow = &scratch.xbuf[col * batch..col * batch + batch];
+                    for (yv, &xv) in scratch.acc.iter_mut().zip(xrow) {
+                        *yv += w * xv;
                     }
                 }
             }
+            y.row_mut(t * v + r).copy_from_slice(&scratch.acc);
         }
     }
     y
@@ -179,6 +170,17 @@ mod tests {
             let b = spmm(&p, &x);
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn general_n_fallback_matches_reference() {
+        // 1:4 exercises the non-paired path (including odd vals-per-row).
+        let mut rng = Xoshiro256::new(87);
+        let w = Matrix::randn(8, 32, 1.0, &mut rng);
+        let cfg = HinmConfig { v: 4, n_keep: 1, m_group: 4, vector_sparsity: 0.5 };
+        let p = prune_oneshot(&w, &w.abs(), &cfg).packed;
+        let x = Matrix::randn(32, 5, 1.0, &mut rng);
+        assert!(spmm(&p, &x).max_abs_diff(&spmm_reference(&p, &x)) < 1e-4);
     }
 
     #[test]

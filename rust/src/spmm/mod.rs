@@ -1,9 +1,17 @@
 //! Sparse matrix multiplication: the dense baseline, the CPU HiNM kernel
-//! (structured like the paper's CUDA schedule), and the analytical GPU cost
-//! model used for the Fig. 5 latency study.
+//! (structured like the paper's CUDA schedule), the planned tile-parallel
+//! execution engine that serves traffic ([`SpmmPlan`] + [`SpmmEngine`],
+//! DESIGN.md §14), and the analytical GPU cost model used for the Fig. 5
+//! latency study.
 
 pub mod dense;
+pub mod engine;
+pub mod epilogue;
 pub mod hinm_cpu;
+pub mod plan;
 pub mod sim;
 
-pub use hinm_cpu::{spmm, spmm_with_scratch, SpmmScratch};
+pub use engine::{KernelPool, SpmmEngine};
+pub use epilogue::{gelu, gelu_fast, tanh_fast, ulp_diff, Activation, Epilogue};
+pub use hinm_cpu::{spmm, spmm_reference, spmm_with_scratch, SpmmScratch};
+pub use plan::SpmmPlan;

@@ -1,0 +1,273 @@
+//! The precompiled SpMM execution plan — per-`HinmPacked` index streams
+//! that make the hot loop pure streaming FMA.
+//!
+//! `spmm_with_scratch` re-derives `g·M + nm_idx[slot]` and re-widens the
+//! `u8` offsets on every call; NM-SpMM (arXiv:2503.01253) and VENOM
+//! (arXiv:2310.02065) both get their throughput from resolving that index
+//! arithmetic *once* into a linear stream the kernel merely walks. An
+//! [`SpmmPlan`] does exactly that for the CPU kernel:
+//!
+//! * `weights`/`xoff` — the `(w, off)` pairs of every slot, interleaved in
+//!   execution order (tile-major, row-major, slot order) as two parallel
+//!   SoA arrays; `xoff` is the **flat compact column** `g·M + nm_idx`,
+//!   pre-widened to `u32`, so the inner loop does one shift-free indexed
+//!   load per operand and zero index arithmetic.
+//! * `gather` — `vec_idx` pre-widened, consumed by the global→"shared"
+//!   panel gather.
+//! * `batch_block` — the batch-blocking width: the staged `xbuf` panel is
+//!   `k_v × batch_block` floats, sized to stay resident in L1/L2 while
+//!   every one of the tile's `V` rows streams over it (DESIGN.md §14).
+//!
+//! Numerics: per output element the kernel folds its kept terms in slot
+//! order as a strict serial chain `((0 + w₀x₀) + w₁x₁) + …` — plain
+//! mul-then-add, never `mul_add` — which is the same f32 operation
+//! sequence the dense reference performs over the kept (nonzero) columns.
+//! For an unpermuted packing the slot order *is* ascending column order,
+//! so the planned kernel is **bit-identical to `spmm_reference`** for any
+//! batch-block width and any worker count (`tests/spmm_plan.rs`).
+
+use super::epilogue::Epilogue;
+use crate::sparsity::format::HinmPacked;
+use crate::tensor::Matrix;
+
+/// Target size of the staged `xbuf` panel (`k_v × batch_block` f32s) in
+/// bytes — comfortably inside L2 with the hot half in L1.
+const PANEL_TARGET_BYTES: usize = 48 * 1024;
+
+/// A compiled execution plan for one packed HiNM matrix.
+///
+/// Construction resolves every slot's compact column to a flat `u32`
+/// offset and copies the weights into the matching SoA stream; `execute`
+/// (via [`super::SpmmEngine`]) then runs tiles over the plan with no
+/// per-call index math. The plan borrows nothing from the `HinmPacked` it
+/// was built from.
+#[derive(Clone, Debug)]
+pub struct SpmmPlan {
+    rows: usize,
+    cols: usize,
+    v: usize,
+    k_v: usize,
+    tiles: usize,
+    vpr: usize,
+    /// `[tiles · V · vpr]` weights in execution order.
+    weights: Vec<f32>,
+    /// `[tiles · V · vpr]` flat compact-column offsets, parallel to
+    /// `weights` (`xoff[s] = g·M + nm_idx[s]`, in `0..k_v`).
+    xoff: Vec<u32>,
+    /// `[tiles · k_v]` original input-channel ids for the panel gather.
+    gather: Vec<u32>,
+    /// Batch-blocking width (panel columns staged per gather pass).
+    batch_block: usize,
+}
+
+impl SpmmPlan {
+    /// Compile a plan from a packed matrix (one-time cost, linear in the
+    /// number of stored values).
+    pub fn new(p: &HinmPacked) -> SpmmPlan {
+        let k_v = p.k_v;
+        SpmmPlan {
+            rows: p.rows,
+            cols: p.cols,
+            v: p.cfg.v,
+            k_v,
+            tiles: p.tiles(),
+            vpr: p.vals_per_row(),
+            weights: p.vals.clone(),
+            xoff: p.slot_compact_cols(),
+            gather: p.vec_idx.iter().map(|&c| c as u32).collect(),
+            batch_block: pick_batch_block(k_v),
+        }
+    }
+
+    /// Override the batch-blocking width (test/bench hook; the constructor
+    /// picks a cache-sized default). Any `bb ≥ 1` computes identical bits.
+    pub fn with_batch_block(mut self, bb: usize) -> SpmmPlan {
+        assert!(bb >= 1, "batch block must be ≥ 1");
+        self.batch_block = bb;
+        self
+    }
+
+    /// Output rows (uncompressed output channels).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Input columns (uncompressed input channels).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Vector size V (output rows per tile).
+    pub fn v(&self) -> usize {
+        self.v
+    }
+
+    /// Number of V-row tiles.
+    pub fn tiles(&self) -> usize {
+        self.tiles
+    }
+
+    /// The chosen batch-blocking width.
+    pub fn batch_block(&self) -> usize {
+        self.batch_block
+    }
+
+    /// Plan footprint in bytes (weights + offset stream + gather indices).
+    pub fn storage_bytes(&self) -> usize {
+        self.weights.len() * 4 + self.xoff.len() * 4 + self.gather.len() * 4
+    }
+
+    /// Execute one tile into its output slice (`V` rows × `batch`,
+    /// row-major). `ytile` must be exactly the tile's rows of `Y`; every
+    /// element of it is written. `xbuf`/`acc` are caller-owned scratch
+    /// (grown on first use, reused across tiles/calls).
+    pub(crate) fn run_tile(
+        &self,
+        t: usize,
+        x: &Matrix,
+        ytile: &mut [f32],
+        epi: &Epilogue<'_>,
+        xbuf: &mut Vec<f32>,
+        acc: &mut Vec<f32>,
+    ) {
+        let batch = x.cols;
+        debug_assert_eq!(ytile.len(), self.v * batch);
+        let bb = self.batch_block.min(batch).max(1);
+        xbuf.resize(self.k_v * bb, 0.0);
+        acc.resize(bb, 0.0);
+        let gather = &self.gather[t * self.k_v..(t + 1) * self.k_v];
+
+        let mut b0 = 0;
+        while b0 < batch {
+            let bw = bb.min(batch - b0);
+            // --- global → panel: gather the kept input rows, one batch
+            // block at a time, in vec_idx order (runtime input-channel
+            // permutation for free, exactly like the unplanned kernel).
+            for (j, &c) in gather.iter().enumerate() {
+                let src = &x.row(c as usize)[b0..b0 + bw];
+                xbuf[j * bb..j * bb + bw].copy_from_slice(src);
+            }
+            // --- compute: stream the (w, off) pairs over the panel.
+            for r in 0..self.v {
+                let row = t * self.v + r;
+                let base = row * self.vpr;
+                let wts = &self.weights[base..base + self.vpr];
+                let offs = &self.xoff[base..base + self.vpr];
+                let a = &mut acc[..bw];
+                a.fill(0.0);
+                // Two slots per pass: halves the loop overhead while each
+                // batch lane still folds its terms as the strict serial
+                // chain ((a + w₀x₀) + w₁x₁) — the bit-level contract.
+                let mut s = 0;
+                while s + 2 <= self.vpr {
+                    let w0 = wts[s];
+                    let w1 = wts[s + 1];
+                    let x0 = &xbuf[offs[s] as usize * bb..][..bw];
+                    let x1 = &xbuf[offs[s + 1] as usize * bb..][..bw];
+                    for ((av, &b), &c2) in a.iter_mut().zip(x0).zip(x1) {
+                        let partial = *av + w0 * b;
+                        *av = partial + w1 * c2;
+                    }
+                    s += 2;
+                }
+                if s < self.vpr {
+                    let w0 = wts[s];
+                    let x0 = &xbuf[offs[s] as usize * bb..][..bw];
+                    for (av, &b) in a.iter_mut().zip(x0) {
+                        *av += w0 * b;
+                    }
+                }
+                // --- fused epilogue: bias + activation on the way out.
+                epi.apply_slice(row, a, &mut ytile[r * batch + b0..r * batch + b0 + bw]);
+            }
+            b0 += bw;
+        }
+    }
+}
+
+/// Batch-block width for a given panel height: the largest multiple of 8
+/// in `[8, 64]` that keeps `k_v · bb · 4` bytes near [`PANEL_TARGET_BYTES`].
+fn pick_batch_block(k_v: usize) -> usize {
+    let bb = PANEL_TARGET_BYTES / (4 * k_v.max(1));
+    (bb & !7).clamp(8, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::config::HinmConfig;
+    use crate::sparsity::hinm::prune_oneshot;
+    use crate::spmm::engine::SpmmEngine;
+    use crate::spmm::hinm_cpu::spmm_reference;
+    use crate::util::rng::Xoshiro256;
+
+    fn packed(m: usize, n: usize, v: usize, sv: f64, seed: u64) -> HinmPacked {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Matrix::randn(m, n, 1.0, &mut rng);
+        let sal = w.abs();
+        let cfg = HinmConfig::with_24(v, sv);
+        prune_oneshot(&w, &sal, &cfg).packed
+    }
+
+    #[test]
+    fn plan_matches_reference_bitwise() {
+        let p = packed(16, 32, 4, 0.5, 90);
+        let plan = SpmmPlan::new(&p);
+        let engine = SpmmEngine::single();
+        let mut rng = Xoshiro256::new(91);
+        for b in [1usize, 5, 64] {
+            let x = Matrix::randn(32, b, 1.0, &mut rng);
+            let got = engine.spmm_planned(&plan, &x);
+            let want = spmm_reference(&p, &x);
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "batch {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_block_width_does_not_change_bits() {
+        let p = packed(8, 48, 4, 0.5, 92);
+        let engine = SpmmEngine::single();
+        let mut rng = Xoshiro256::new(93);
+        let x = Matrix::randn(48, 13, 1.0, &mut rng);
+        let base = engine.spmm_planned(&SpmmPlan::new(&p), &x);
+        for bb in [1usize, 3, 8, 64] {
+            let plan = SpmmPlan::new(&p).with_batch_block(bb);
+            let y = engine.spmm_planned(&plan, &x);
+            assert_eq!(y, base, "batch block {bb}");
+            assert_eq!(
+                y.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                base.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "batch block {bb} (bits)"
+            );
+        }
+    }
+
+    #[test]
+    fn block_sizing_tracks_panel_height() {
+        assert_eq!(pick_batch_block(384), 32);
+        assert_eq!(pick_batch_block(768), 16);
+        assert_eq!(pick_batch_block(8), 64);
+        assert_eq!(pick_batch_block(100_000), 8);
+        // Always a multiple of 8 inside [8, 64].
+        for k in [1usize, 7, 33, 511, 5000] {
+            let bb = pick_batch_block(k);
+            assert!(bb % 8 == 0 && (8..=64).contains(&bb), "k_v={k} → {bb}");
+        }
+    }
+
+    #[test]
+    fn plan_storage_accounting() {
+        let p = packed(16, 32, 4, 0.5, 94);
+        let plan = SpmmPlan::new(&p);
+        assert_eq!(plan.rows(), 16);
+        assert_eq!(plan.cols(), 32);
+        assert_eq!(plan.v(), 4);
+        assert_eq!(plan.tiles(), 4);
+        assert!(plan.storage_bytes() > 0);
+        assert_eq!(plan.storage_bytes(), (p.vals.len() * 2 + p.vec_idx.len()) * 4);
+    }
+}

@@ -5,7 +5,21 @@
 //! mean, std) plus a plain-text table emitter so bench output mirrors the
 //! paper's tables.
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
+
+/// Machine-shape record embedded in every bench `--json` dump (OS, arch,
+/// core count, smoke flag) so checked-in snapshots and CI artifacts are
+/// comparable at a glance (EXPERIMENTS.md §Perf).
+pub fn provenance(smoke: bool) -> Json {
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(0);
+    Json::obj(vec![
+        ("os", Json::str(std::env::consts::OS)),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("cores", Json::num(cores as f64)),
+        ("smoke", Json::num(if smoke { 1.0 } else { 0.0 })),
+    ])
+}
 
 #[derive(Clone, Debug)]
 /// Summary statistics for one benchmarked case (all times per iteration).
@@ -194,6 +208,15 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn provenance_has_the_documented_shape() {
+        let p = provenance(true);
+        assert_eq!(p.get("smoke").as_f64(), Some(1.0));
+        assert_eq!(provenance(false).get("smoke").as_f64(), Some(0.0));
+        assert!(p.get("cores").as_f64().is_some());
+        assert!(p.get("os").as_str().is_some());
+    }
 
     #[test]
     fn bench_produces_sane_stats() {

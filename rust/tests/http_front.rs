@@ -103,6 +103,48 @@ fn keep_alive_connection_serves_many_requests_and_metrics_count_them() {
 }
 
 #[test]
+fn metrics_prometheus_format_over_http() {
+    let s = start();
+    let mut c = client(&s);
+    let (status, _) = c.post_json("/v1/infer", &infer_body(&activation(5))).unwrap();
+    assert_eq!(status, 200);
+
+    let (status, body) = c.get("/v1/metrics?format=prometheus").unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    assert!(body.contains("# TYPE hinm_requests_total counter"), "{body}");
+    assert!(body.contains("# TYPE hinm_request_latency_microseconds summary"));
+    assert!(body.contains("hinm_requests_served_total{priority=\"normal\"} 1"), "{body}");
+    assert!(body.contains("hinm_requests_expired_total{stage=\"enqueue\"} 0"));
+    assert!(body.contains("hinm_replica_requests_total{replica=\"1\"}"));
+    let line = body
+        .lines()
+        .find(|l| l.starts_with("hinm_requests_total "))
+        .expect("hinm_requests_total sample");
+    assert_eq!(line, "hinm_requests_total 1");
+    // No cache is configured in this setup, so no cache families.
+    assert!(!body.contains("hinm_cache_hits_total"), "{body}");
+
+    // Explicit json format and the bare route stay JSON.
+    let (status, body) = c.get("/v1/metrics?format=json").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(json::parse(&body).unwrap().get("requests").as_usize(), Some(1));
+    let (status, body) = c.get("/v1/metrics").unwrap();
+    assert_eq!(status, 200);
+    json::parse(&body).unwrap();
+
+    // An unknown format is a 400 with the uniform error body.
+    let (status, body) = c.get("/v1/metrics?format=xml").unwrap();
+    assert_eq!(status, 400, "body: {body}");
+    assert_eq!(
+        json::parse(&body).unwrap().get("error").get("kind").as_str(),
+        Some("bad_request")
+    );
+    drop(c);
+    s.front.stop();
+    s.server.stop();
+}
+
+#[test]
 fn concurrent_http_clients_all_get_their_own_answer() {
     let s = start();
     let addr = s.front.local_addr();

@@ -1,0 +1,189 @@
+//! Property tests for the planned tile-parallel SpMM execution engine
+//! (DESIGN.md §14): planned / batch-blocked / threaded kernels must be
+//! **bit-identical** to `spmm_reference` across odd shapes, V ∈ {4, 8},
+//! 1:4 and 2:4 patterns, and batch sizes that don't divide the batch
+//! block — and the serve path must return bit-identical responses for any
+//! `--kernel-threads` setting.
+
+use hinm::coordinator::{BatchServer, ServeConfig};
+use hinm::models::{Activation, ActivationBuffers, HinmLayer, HinmModel};
+use hinm::sparsity::{prune_oneshot, HinmConfig, HinmPacked};
+use hinm::spmm::{spmm_reference, Epilogue, SpmmEngine, SpmmPlan};
+use hinm::tensor::Matrix;
+use hinm::util::rng::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn packed_for(m: usize, n: usize, cfg: &HinmConfig, seed: u64) -> HinmPacked {
+    let mut rng = Xoshiro256::new(seed);
+    let w = Matrix::randn(m, n, 1.0, &mut rng);
+    let p = prune_oneshot(&w, &w.abs(), cfg).packed;
+    p.check_invariants().expect("packed invariants");
+    p
+}
+
+/// The full acceptance sweep: odd shapes × V ∈ {4, 8} × {1:4, 2:4} ×
+/// vector sparsities × awkward batch sizes, engines at 1 and 8 lanes plus
+/// a deliberately misaligned batch block — all bit-identical to the dense
+/// reference.
+#[test]
+fn planned_blocked_threaded_kernels_match_reference_bitwise() {
+    let shapes: &[(usize, usize, usize)] = &[
+        (8, 20, 4),   // odd column count (20 % 8 ≠ 0)
+        (24, 36, 4),  // both dims non-round
+        (16, 52, 8),  // V = 8, odd columns
+        (40, 28, 8),  // more tiles than lanes is false here: 5 tiles, 8 lanes
+    ];
+    let engines = [SpmmEngine::single(), SpmmEngine::new(8)];
+    let mut rng = Xoshiro256::new(500);
+    let mut cases = 0usize;
+    for &(m, n, v) in shapes {
+        for &(n_keep, m_group) in &[(1usize, 4usize), (2, 4)] {
+            for &sv in &[0.0, 0.5] {
+                let cfg = HinmConfig { v, n_keep, m_group, vector_sparsity: sv };
+                if cfg.validate(m, n).is_err() {
+                    continue;
+                }
+                let p = packed_for(m, n, &cfg, 500 + cases as u64);
+                let plan = SpmmPlan::new(&p);
+                // A block width the batch sizes below do not divide.
+                let blocked = SpmmPlan::new(&p).with_batch_block(5);
+                for &batch in &[1usize, 3, 7, 33] {
+                    let x = Matrix::randn(n, batch, 1.0, &mut rng);
+                    let want = bits(&spmm_reference(&p, &x));
+                    for (e, engine) in engines.iter().enumerate() {
+                        let got = engine.spmm_planned(&plan, &x);
+                        assert_eq!(
+                            bits(&got),
+                            want,
+                            "({m}×{n} V={v} {n_keep}:{m_group} sv={sv} b={batch}) engine {e}"
+                        );
+                        let got = engine.spmm_planned(&blocked, &x);
+                        assert_eq!(
+                            bits(&got),
+                            want,
+                            "({m}×{n} V={v} {n_keep}:{m_group} sv={sv} b={batch}) engine {e} bb=5"
+                        );
+                    }
+                    cases += 1;
+                }
+            }
+        }
+    }
+    assert!(cases >= 48, "sweep unexpectedly small: {cases} cases");
+}
+
+/// Fused bias+ReLU epilogue is bit-identical to the unfused sequence
+/// (kernel → add bias → activation) on the same batch.
+#[test]
+fn fused_epilogue_is_bit_identical_to_the_unfused_sequence() {
+    let cfg = HinmConfig::with_24(4, 0.5);
+    let p = packed_for(16, 32, &cfg, 600);
+    let plan = SpmmPlan::new(&p);
+    let engine = SpmmEngine::new(4);
+    let mut rng = Xoshiro256::new(601);
+    let bias: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+    let x = Matrix::randn(32, 9, 1.0, &mut rng);
+
+    let mut fused = Matrix::zeros(16, 9);
+    engine.execute(&plan, &x, &mut fused, &Epilogue::new(Some(&bias), Activation::Relu));
+
+    let mut unfused = engine.spmm_planned(&plan, &x);
+    for (r, &b) in bias.iter().enumerate() {
+        for v in unfused.row_mut(r) {
+            *v += b;
+        }
+    }
+    Activation::Relu.apply(&mut unfused);
+    assert_eq!(bits(&fused), bits(&unfused));
+}
+
+/// The model-level planned forward is bit-stable across engines, lane
+/// counts, and buffer reuse — including a GELU layer (fast-tanh epilogue).
+#[test]
+fn model_forward_bit_stable_across_lanes_and_buffer_reuse() {
+    let cfg = HinmConfig::with_24(8, 0.5);
+    let model = HinmModel::synthetic_ffn(32, 64, &cfg, Activation::Gelu, 610).unwrap();
+    let mut rng = Xoshiro256::new(611);
+    let xs: Vec<Matrix> = (0..3).map(|_| Matrix::randn(32, 5, 1.0, &mut rng)).collect();
+    let want: Vec<Vec<u32>> = xs.iter().map(|x| bits(&model.forward(x))).collect();
+    for lanes in [2usize, 8] {
+        let engine = SpmmEngine::new(lanes);
+        let mut bufs = ActivationBuffers::new();
+        for (x, w) in xs.iter().zip(&want) {
+            let got = model.forward_planned(x, &engine, &mut bufs);
+            assert_eq!(&bits(&got), w, "{lanes} lanes");
+        }
+    }
+}
+
+/// A deeper chain (4 layers, mixed widths/activations) still matches the
+/// dense oracle within tolerance — the ping-pong buffers never leak state
+/// between layers or calls.
+#[test]
+fn deep_planned_chain_matches_the_dense_oracle() {
+    let cfg = HinmConfig::with_24(4, 0.5);
+    let layers = vec![
+        HinmLayer::new(packed_for(64, 24, &cfg, 620)).with_activation(Activation::Relu),
+        HinmLayer::new(packed_for(32, 64, &cfg, 621))
+            .with_bias(vec![0.05; 32])
+            .with_activation(Activation::Gelu),
+        HinmLayer::new(packed_for(16, 32, &cfg, 622)).with_bias(vec![-0.02; 16]),
+        HinmLayer::new(packed_for(8, 16, &cfg, 623)).with_activation(Activation::Relu),
+    ];
+    let model = HinmModel::new(layers).unwrap();
+    let engine = SpmmEngine::new(3);
+    let mut bufs = ActivationBuffers::new();
+    let mut rng = Xoshiro256::new(624);
+    for batch in [1usize, 6, 17] {
+        let x = Matrix::randn(24, batch, 1.0, &mut rng);
+        let got = model.forward_planned(&x, &engine, &mut bufs);
+        let want = model.forward_reference(&x);
+        assert_eq!(got.shape(), (8, batch));
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "batch {batch}: diff {diff}");
+    }
+}
+
+/// Serve-path acceptance: the same requests through engines whose replicas
+/// run 1 vs 4 kernel threads produce bit-identical responses.
+#[test]
+fn serve_responses_bit_identical_across_kernel_thread_counts() {
+    let cfg = HinmConfig::with_24(8, 0.5);
+    let model =
+        Arc::new(HinmModel::synthetic_ffn(32, 64, &cfg, Activation::Gelu, 630).unwrap());
+    let requests: Vec<Vec<f32>> = (0..16)
+        .map(|i| (0..32).map(|j| ((i * 37 + j * 11) % 19) as f32 * 0.07 - 0.6).collect())
+        .collect();
+    let mut per_setting: Vec<Vec<Vec<u32>>> = Vec::new();
+    for kernel_threads in [1usize, 4] {
+        let server = BatchServer::start_native_threads(
+            Arc::clone(&model),
+            ServeConfig::new(4, Duration::from_micros(200)).with_replicas(2),
+            kernel_threads,
+        )
+        .expect("server start");
+        let handle = server.handle.clone();
+        let outs: Vec<Vec<u32>> = requests
+            .iter()
+            .map(|x| {
+                handle
+                    .infer(x.clone())
+                    .expect("inference")
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect()
+            })
+            .collect();
+        per_setting.push(outs);
+        server.stop();
+    }
+    assert_eq!(
+        per_setting[0], per_setting[1],
+        "--kernel-threads must not change a single response bit"
+    );
+}
