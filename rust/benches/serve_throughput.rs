@@ -15,11 +15,17 @@
 //! port, JSON bodies, keep-alive `HttpClient`s — so the serialization +
 //! TCP overhead over the in-process engine is measured, not guessed.
 //!
+//! `--pipeline-stages K1,K2,…` adds a third arm: a deep (4-layer) model
+//! sharded across K stage workers (`PipelineServer` + `PipelinedBackend`,
+//! DESIGN.md §15) under the same closed loop, with `stages=1` as the
+//! unsharded baseline — the replicas-vs-stages crossover for
+//! EXPERIMENTS.md §Perf. Responses stay bit-identical across K.
+//!
 //! `--json PATH` writes `{bench, provenance, rows: [...]}`
 //! (`BENCH_serve.json` in CI; uploaded as a workflow artifact) for the
 //! machine-readable perf trajectory next to `BENCH_spmm.json`.
 
-use hinm::coordinator::{BatchServer, ServeConfig};
+use hinm::coordinator::{BatchServer, PipelineServer, ServeConfig};
 use hinm::models::{Activation, HinmModel};
 use hinm::net::{protocol, HttpClient, HttpFront};
 use hinm::sparsity::HinmConfig;
@@ -40,6 +46,11 @@ fn main() {
         .opt("batches", Some("8,32"), "batch sizes to sweep")
         .opt("max-wait-us", Some("200"), "batch window, µs")
         .opt("kernel-threads", Some("1"), "kernel lanes per replica (0 = all cores)")
+        .opt(
+            "pipeline-stages",
+            None,
+            "comma list of pipeline stage counts for the deep-model arm (omit = skip)",
+        )
         .opt("json", None, "write machine-readable results to this path")
         .flag("http", "also run the closed loop through the real HTTP/TCP socket path")
         .flag("smoke", "tiny CI configuration (small model, few requests)")
@@ -91,26 +102,7 @@ fn main() {
                 kernel_threads,
             )
             .expect("server start");
-            let handle = server.handle.clone();
-            let per_client = (n_requests / n_clients).max(1);
-            let t0 = Instant::now();
-            std::thread::scope(|s| {
-                for c in 0..n_clients {
-                    let h = handle.clone();
-                    s.spawn(move || {
-                        for i in 0..per_client {
-                            let x: Vec<f32> = (0..d)
-                                .map(|j| ((c * 31 + i * 7 + j) % 17) as f32 * 0.05 - 0.4)
-                                .collect();
-                            h.infer(x).expect("inference");
-                        }
-                    });
-                }
-            });
-            let wall = t0.elapsed().as_secs_f64();
-            let served = per_client * n_clients;
-            let rps = served as f64 / wall;
-            let pct = server.metrics.aggregate_latency().percentiles(&[50.0, 99.0]);
+            let (rps, p50, p99) = closed_loop(&server, d, n_requests, n_clients);
             let scale = match base_rps {
                 None => {
                     base_rps = Some(rps);
@@ -124,8 +116,8 @@ fn main() {
                 batch.to_string(),
                 kernel_threads.to_string(),
                 format!("{rps:.0}"),
-                format!("{:.0}", pct[0]),
-                format!("{:.0}", pct[1]),
+                format!("{p50:.0}"),
+                format!("{p99:.0}"),
                 scale,
             ]);
             json_rows.push(Json::obj(vec![
@@ -134,14 +126,94 @@ fn main() {
                 ("batch", Json::num(batch as f64)),
                 ("threads", Json::num(kernel_threads as f64)),
                 ("req_per_sec", Json::num(rps)),
-                ("p50_us", Json::num(pct[0])),
-                ("p99_us", Json::num(pct[1])),
+                ("p50_us", Json::num(p50)),
+                ("p99_us", Json::num(p99)),
             ]));
             server.stop();
         }
     }
     table.print();
     println!("\n(\"vs 1 replica\" = aggregate throughput scaling at the same batch size.)");
+
+    let stage_counts = a.usize_list_or("pipeline-stages", &[]);
+    if !stage_counts.is_empty() {
+        let replicas = *replica_counts.last().unwrap_or(&2);
+        let batch = *batch_sizes.last().unwrap_or(&4);
+        // Pipeline parallelism needs depth to shard: a 2-block stack
+        // (4 layers) of the same widths as the flat-arm model.
+        let deep = Arc::new(
+            HinmModel::synthetic_deep(d, d_ff, 2, &cfg, Activation::Relu, 7)
+                .expect("deep model"),
+        );
+        // Clamp to the chain depth and drop configurations that collapse
+        // onto the same stage count, so no row is measured twice.
+        let mut swept: Vec<usize> =
+            stage_counts.iter().map(|&k| k.clamp(1, deep.n_layers())).collect();
+        swept.dedup();
+        println!(
+            "\n== pipeline arm ==  {} layers, {replicas} replicas, batch {batch} \
+             (\"vs first\" scales against the first row — pass 1 first for an \
+             unsharded baseline; responses bit-identical across stages)",
+            deep.n_layers()
+        );
+        let mut ptable = Table::new(&[
+            "backend",
+            "stages",
+            "replicas",
+            "batch",
+            "threads",
+            "req/s",
+            "p50 µs",
+            "p99 µs",
+            "vs first",
+        ]);
+        let mut base_rps: Option<f64> = None;
+        for &k in &swept {
+            let pipeline = PipelineServer::start(&deep, k, kernel_threads, 0)
+                .expect("pipeline start");
+            let server = BatchServer::start(
+                pipeline.backend_factory(),
+                ServeConfig::new(batch, max_wait).with_replicas(replicas),
+            )
+            .expect("server start");
+            let (rps, p50, p99) = closed_loop(&server, d, n_requests, n_clients);
+            let scale = match base_rps {
+                None => {
+                    base_rps = Some(rps);
+                    "1.00×".to_string()
+                }
+                Some(b) => format!("{:.2}×", rps / b),
+            };
+            ptable.row(vec![
+                "pipeline".into(),
+                k.to_string(),
+                replicas.to_string(),
+                batch.to_string(),
+                kernel_threads.to_string(),
+                format!("{rps:.0}"),
+                format!("{p50:.0}"),
+                format!("{p99:.0}"),
+                scale,
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("backend", Json::str("pipeline")),
+                ("stages", Json::num(k as f64)),
+                ("replicas", Json::num(replicas as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("threads", Json::num(kernel_threads as f64)),
+                ("req_per_sec", Json::num(rps)),
+                ("p50_us", Json::num(p50)),
+                ("p99_us", Json::num(p99)),
+            ]));
+            server.stop();
+            pipeline.stop();
+        }
+        ptable.print();
+        println!(
+            "\n(compare req/s here against the replicas sweep above for the \
+             replicas-vs-stages crossover, EXPERIMENTS.md §Perf.)"
+        );
+    }
 
     if smoke || a.flag("http") {
         let replicas = *replica_counts.last().unwrap_or(&2);
@@ -168,6 +240,33 @@ fn main() {
         std::fs::write(path, doc.pretty()).expect("writing bench JSON");
         eprintln!("wrote {path}");
     }
+}
+
+/// Drive `n_requests` over `n_clients` closed-loop client threads through
+/// the in-process handle; returns `(req/s, p50 µs, p99 µs)` from the
+/// engine's aggregate recorder.
+fn closed_loop(server: &BatchServer, d: usize, n_requests: usize, n_clients: usize) -> (f64, f64, f64) {
+    let handle = server.handle.clone();
+    let per_client = (n_requests / n_clients).max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let h = handle.clone();
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let x: Vec<f32> = (0..d)
+                        .map(|j| ((c * 31 + i * 7 + j) % 17) as f32 * 0.05 - 0.4)
+                        .collect();
+                    h.infer(x).expect("inference");
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let served = per_client * n_clients;
+    let rps = served as f64 / wall;
+    let pct = server.metrics.aggregate_latency().percentiles(&[50.0, 99.0]);
+    (rps, pct[0], pct[1])
 }
 
 /// Configuration of the socket-path closed loop.

@@ -11,6 +11,7 @@ pub mod trainer;
 pub use metrics::{EngineMetrics, LatencyRecorder, ReplicaStats, SchedulerStats, Throughput};
 pub use pipeline::{compress_layer, run_pipeline, weighted_retention, LayerJob, Method, PipelineConfig};
 pub use serve::{
-    cached_factory, BackendFactory, BatchServer, InferError, Priority, ServeConfig, ServerHandle,
+    cached_factory, BackendFactory, BatchServer, InferError, PipelineHandle, PipelineServer,
+    PipelineStage, Priority, ServeConfig, ServerHandle,
 };
 pub use trainer::{Corpus, LmTrainer};

@@ -28,11 +28,24 @@
 //! ones with a timeout error), new submissions fail with
 //! [`InferError::Stopped`], and `stop()` returns once all workers have
 //! joined.
+//!
+//! **Pipeline parallelism.** For deep chains a second axis of parallelism
+//! lives below the batch server: [`PipelineServer`] shards a
+//! [`HinmModel`] into contiguous stages balanced by planned FLOPs
+//! ([`HinmModel::split_stages`]), runs each stage on its own worker
+//! thread with bounded hand-off queues in between, and recycles the
+//! inter-stage activation buffers so the steady state allocates nothing.
+//! A [`crate::runtime::PipelinedBackend`] submits whole batches into
+//! stage 0 and blocks for the final stage's output, so the pipeline
+//! slots under the existing engine unchanged — batch-server replicas
+//! keep several batches in flight, each executing a different stage
+//! concurrently (DESIGN.md §15).
 
 use super::metrics::EngineMetrics;
-use crate::models::chain::HinmModel;
+use crate::models::chain::{ActivationBuffers, HinmModel};
 use crate::runtime::backend::{CacheStats, CachedBackend, SpmmBackend};
 use crate::runtime::registry::ArtifactSpec;
+use crate::spmm::SpmmEngine;
 use crate::tensor::Matrix;
 use anyhow::{Context, Result};
 use std::collections::BinaryHeap;
@@ -576,6 +589,28 @@ impl BatchServer {
     /// `--kernel-threads` CLI flag lands here. Total kernel threads in the
     /// process is `replicas × kernel_threads`; responses are bit-identical
     /// for any `kernel_threads` setting (DESIGN.md §14).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hinm::coordinator::{BatchServer, ServeConfig};
+    /// use hinm::models::{Activation, HinmModel};
+    /// use hinm::sparsity::HinmConfig;
+    /// use std::sync::Arc;
+    /// use std::time::Duration;
+    ///
+    /// let cfg = HinmConfig::with_24(4, 0.5);
+    /// let model = Arc::new(HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Relu, 7)?);
+    /// let server = BatchServer::start_native_threads(
+    ///     Arc::clone(&model),
+    ///     ServeConfig::new(4, Duration::from_micros(100)).with_replicas(2),
+    ///     1,
+    /// )?;
+    /// let y = server.handle.infer(vec![0.25; 16])?;
+    /// assert_eq!(y.len(), 16);
+    /// server.stop();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn start_native_threads(
         model: Arc<HinmModel>,
         cfg: ServeConfig,
@@ -767,14 +802,374 @@ fn flush(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pipeline-parallel serving (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// One stage of a [`PipelineServer`]: consumes a `[d_in, batch]`
+/// activation batch and writes its `[d_out, batch]` output into a
+/// recycled, caller-provided matrix.
+///
+/// The production implementation is the model-backed stage built by
+/// [`PipelineServer::start`] (a contiguous [`HinmModel`] sub-chain run
+/// through its own [`SpmmEngine`]); tests inject mock stages through
+/// [`PipelineServer::start_stages`] to pin hand-off, shutdown, and
+/// poisoning semantics backend-independently — the same seam
+/// [`BackendFactory`] gives the batch server.
+pub trait PipelineStage: Send {
+    /// Input channels this stage consumes.
+    fn d_in(&self) -> usize;
+    /// Output channels this stage produces.
+    fn d_out(&self) -> usize;
+    /// Execute the stage. `out` arrives with arbitrary prior shape (it is
+    /// a recycled hand-off buffer); implementations must reshape it to
+    /// `[d_out, batch]` and overwrite every element. An `Err` fails only
+    /// the current batch ([`InferError::Backend`] to its submitter); a
+    /// *panic* poisons the whole pipeline.
+    fn run(&mut self, x: &Matrix, out: &mut Matrix) -> Result<()>;
+}
+
+/// The model-backed stage: a contiguous sub-chain of a [`HinmModel`]
+/// executed through a private engine, exactly like [`NativeCpuBackend`]
+/// but writing into the recycled hand-off buffer.
+struct ModelStage {
+    model: HinmModel,
+    engine: SpmmEngine,
+    bufs: ActivationBuffers,
+}
+
+impl PipelineStage for ModelStage {
+    fn d_in(&self) -> usize {
+        self.model.d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.model.d_out()
+    }
+
+    fn run(&mut self, x: &Matrix, out: &mut Matrix) -> Result<()> {
+        anyhow::ensure!(
+            x.rows == self.model.d_in(),
+            "stage batch has {} input channels, stage wants {}",
+            x.rows,
+            self.model.d_in()
+        );
+        self.model.forward_planned_into(x, &self.engine, &mut self.bufs, out);
+        Ok(())
+    }
+}
+
+/// One in-flight batch traveling the pipeline: the activation matrix
+/// (input of the next stage / output of the previous one) plus the
+/// submitter's response channel.
+struct PipeJob {
+    x: Matrix,
+    resp: Sender<Result<Matrix, InferError>>,
+}
+
+/// How many spare hand-off buffers a link retains for its producer. Two
+/// suffice for steady-state ping-pong at queue depth 1; a little slack
+/// covers depth-2 links without ever letting the pool grow unboundedly.
+const PIPE_RECYCLE_CAP: usize = 4;
+
+/// The hand-off edge *into* one stage: a bounded FIFO of jobs (the
+/// [`BoundedQueue`] at a single priority — same backpressure, close, and
+/// drain semantics the batch server proved) plus the returned buffers the
+/// link's producer reuses for its next output.
+struct PipeLink {
+    jobs: BoundedQueue<PipeJob>,
+    recycle: Mutex<Vec<Matrix>>,
+}
+
+impl PipeLink {
+    fn new(depth: usize) -> PipeLink {
+        PipeLink { jobs: BoundedQueue::new(depth), recycle: Mutex::new(Vec::new()) }
+    }
+
+    /// A spare buffer previously returned by this link's consumer, or an
+    /// empty matrix on a cold start (stages reshape it in place).
+    fn take_buffer(&self) -> Matrix {
+        self.recycle.lock().unwrap().pop().unwrap_or_else(|| Matrix::zeros(0, 0))
+    }
+
+    /// Return a consumed hand-off buffer to this link's producer; extras
+    /// beyond the cap are simply dropped.
+    fn put_buffer(&self, m: Matrix) {
+        let mut pool = self.recycle.lock().unwrap();
+        if pool.len() < PIPE_RECYCLE_CAP {
+            pool.push(m);
+        }
+    }
+}
+
+/// Submission handle onto a running [`PipelineServer`]; cheap to clone
+/// and share across threads (each [`crate::runtime::PipelinedBackend`]
+/// replica holds one).
+#[derive(Clone)]
+pub struct PipelineHandle {
+    entry: Arc<PipeLink>,
+    /// Input channels every submitted batch must carry.
+    pub d_in: usize,
+    /// Output channels every returned batch carries.
+    pub d_out: usize,
+}
+
+impl PipelineHandle {
+    /// Run one `[d_in, batch]` activation batch through every stage and
+    /// return the `[d_out, batch]` result, bit-identical to
+    /// [`HinmModel::forward_planned`] on the unsplit model. Blocks while
+    /// the entry queue is full (backpressure); errors with
+    /// [`InferError::Stopped`] once the pipeline has stopped or poisoned.
+    pub fn infer_batch(&self, x: &Matrix) -> Result<Matrix, InferError> {
+        if x.rows != self.d_in {
+            return Err(InferError::BadRequest(format!(
+                "batch has {} input channels, pipeline wants {}",
+                x.rows, self.d_in
+            )));
+        }
+        // Stage the submission in a recycled entry buffer (reusing its
+        // capacity) so steady-state submission allocates nothing.
+        let mut staged = self.entry.take_buffer();
+        staged.rows = x.rows;
+        staged.cols = x.cols;
+        staged.data.clear();
+        staged.data.extend_from_slice(&x.data);
+        let (tx, rx) = mpsc::channel();
+        if self.entry.jobs.push(Priority::Normal, PipeJob { x: staged, resp: tx }, None).is_err() {
+            return Err(InferError::Stopped);
+        }
+        match rx.recv() {
+            Ok(result) => result,
+            // A stage worker (and the job's response sender) died.
+            Err(_) => Err(InferError::Stopped),
+        }
+    }
+}
+
+/// Pipeline-parallel execution engine for one layer chain: each stage
+/// owns a contiguous sub-chain on its own worker thread, stages hand
+/// activations forward through bounded FIFO links (the entry link is
+/// multi-producer — every submitting replica pushes into it; the
+/// inter-stage links have a single producer; every link has exactly one
+/// consumer), and consumed hand-off buffers flow back upstream for
+/// reuse.
+/// With several batches in flight (e.g. one per batch-server replica)
+/// every stage computes concurrently, so steady-state throughput
+/// approaches `1/max(stage_time)` instead of `sum(stage_time)` — see
+/// DESIGN.md §15 for the full semantics.
+///
+/// Shutdown mirrors [`BatchServer`]: closing the entry link cascades
+/// stage by stage, each worker draining and *answering* everything still
+/// queued before closing the next link. A panicking stage poisons the
+/// pipeline — every link is closed and drained, in-flight submitters get
+/// an error immediately, and later submissions fail fast.
+pub struct PipelineServer {
+    handle: PipelineHandle,
+    n_stages: usize,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PipelineServer {
+    /// Split `model` into `stages` contiguous sub-chains balanced by
+    /// planned FLOPs ([`HinmModel::split_stages`]) and start one worker
+    /// per stage, each owning a private [`SpmmEngine`] with
+    /// `kernel_threads` lanes (0 = available parallelism). `depth` bounds
+    /// every hand-off queue (0 picks the default of 2). Errors if
+    /// `stages` is 0 or exceeds the layer count.
+    pub fn start(
+        model: &HinmModel,
+        stages: usize,
+        kernel_threads: usize,
+        depth: usize,
+    ) -> Result<PipelineServer> {
+        let stage_models = model.split_stages(stages)?;
+        let boxed: Vec<Box<dyn PipelineStage>> = stage_models
+            .into_iter()
+            .map(|m| {
+                Box::new(ModelStage {
+                    model: m,
+                    engine: SpmmEngine::new(kernel_threads),
+                    bufs: ActivationBuffers::new(),
+                }) as Box<dyn PipelineStage>
+            })
+            .collect();
+        Self::start_stages(boxed, depth)
+    }
+
+    /// Start a pipeline over explicit stage implementations (the test
+    /// seam; production code uses [`PipelineServer::start`]). Validates
+    /// that consecutive stages agree on channel counts.
+    pub fn start_stages(
+        stages: Vec<Box<dyn PipelineStage>>,
+        depth: usize,
+    ) -> Result<PipelineServer> {
+        anyhow::ensure!(!stages.is_empty(), "pipeline needs at least one stage");
+        for (i, w) in stages.windows(2).enumerate() {
+            anyhow::ensure!(
+                w[1].d_in() == w[0].d_out(),
+                "stage {} consumes {} channels but stage {i} produces {}",
+                i + 1,
+                w[1].d_in(),
+                w[0].d_out()
+            );
+        }
+        let depth = if depth == 0 { 2 } else { depth };
+        let n = stages.len();
+        let d_in = stages[0].d_in();
+        let d_out = stages[n - 1].d_out();
+        let links: Vec<Arc<PipeLink>> =
+            (0..n).map(|_| Arc::new(PipeLink::new(depth))).collect();
+        let mut workers = Vec::with_capacity(n);
+        for (i, stage) in stages.into_iter().enumerate() {
+            let inlink = Arc::clone(&links[i]);
+            let outlink = links.get(i + 1).map(Arc::clone);
+            let all = links.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("hinm-stage-{i}"))
+                .spawn(move || stage_loop(stage, &inlink, outlink.as_deref(), all));
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    links[0].jobs.close();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(e).context("spawning pipeline stage worker");
+                }
+            }
+        }
+        let handle = PipelineHandle { entry: Arc::clone(&links[0]), d_in, d_out };
+        Ok(PipelineServer { handle, n_stages: n, workers })
+    }
+
+    /// A submission handle (clone freely; see
+    /// [`crate::runtime::PipelinedBackend`] for the [`SpmmBackend`]
+    /// adapter).
+    pub fn handle(&self) -> PipelineHandle {
+        self.handle.clone()
+    }
+
+    /// Number of stage workers.
+    pub fn n_stages(&self) -> usize {
+        self.n_stages
+    }
+
+    /// A [`BackendFactory`] producing one
+    /// [`crate::runtime::PipelinedBackend`] per batch-server replica, all
+    /// submitting into this pipeline — the composition point that lets
+    /// the batch window, priority/deadline queue, [`CachedBackend`], and
+    /// HTTP front run unchanged above pipeline-parallel execution.
+    /// The pipeline must outlive the [`BatchServer`] using the factory;
+    /// stop the batch server first.
+    pub fn backend_factory(&self) -> BackendFactory {
+        let handle = self.handle();
+        Arc::new(move |_replica| {
+            let b: Box<dyn SpmmBackend> =
+                Box::new(crate::runtime::backend::PipelinedBackend::new(handle.clone()));
+            Ok(b)
+        })
+    }
+
+    /// Stop the pipeline: close the entry link, let every stage drain and
+    /// answer what is queued (the cascade), join all workers.
+    pub fn stop(self) {
+        // Drop runs the shutdown sequence.
+    }
+}
+
+impl Drop for PipelineServer {
+    fn drop(&mut self) {
+        self.handle.entry.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Fails the pipeline fast when a stage worker *panics* (a stage bug):
+/// closes every link — new submissions error instead of blocking — and
+/// drops everything queued, which drops those jobs' response senders and
+/// errors their waiting submitters. The pipeline analogue of the batch
+/// server's `CloseOnExit`; normal worker exit happens only after the
+/// inbound link is closed and drained, so this acts on panics only.
+struct PoisonPipeline(Vec<Arc<PipeLink>>);
+
+impl Drop for PoisonPipeline {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            for l in &self.0 {
+                l.jobs.close();
+                while l.jobs.try_pop().is_some() {}
+            }
+        }
+    }
+}
+
+/// Per-stage worker loop: pop a batch, compute into a buffer recycled
+/// from the outbound link (the final stage allocates its output — that
+/// matrix is handed to the submitter), pass the job forward, and return
+/// the consumed input buffer upstream. On inbound close + drain, close
+/// the outbound link so shutdown cascades stage by stage with every
+/// queued batch answered.
+fn stage_loop(
+    mut stage: Box<dyn PipelineStage>,
+    inlink: &PipeLink,
+    outlink: Option<&PipeLink>,
+    all_links: Vec<Arc<PipeLink>>,
+) {
+    let _guard = PoisonPipeline(all_links);
+    while let Some(mut job) = inlink.jobs.pop_blocking() {
+        let mut out = match outlink {
+            Some(next) => next.take_buffer(),
+            None => Matrix::zeros(0, 0),
+        };
+        match stage.run(&job.x, &mut out) {
+            Ok(()) => {
+                let input = std::mem::replace(&mut job.x, out);
+                inlink.put_buffer(input);
+                match outlink {
+                    Some(next) => {
+                        if let Err(rejected) = next.jobs.push(Priority::Normal, job, None) {
+                            // Only possible mid-poison: the downstream
+                            // link closed under us. Fail the client fast.
+                            let (PushRejected::Closed(j) | PushRejected::Expired(j)) = rejected;
+                            let _ = j.resp.send(Err(InferError::Stopped));
+                        }
+                    }
+                    None => {
+                        let PipeJob { x, resp } = job;
+                        let _ = resp.send(Ok(x));
+                    }
+                }
+            }
+            Err(e) => {
+                // A stage error fails this batch only; the pipeline keeps
+                // serving (mirrors a backend `Err` in the batch server).
+                if let Some(next) = outlink {
+                    next.put_buffer(out);
+                }
+                let PipeJob { x, resp } = job;
+                inlink.put_buffer(x);
+                let _ = resp.send(Err(InferError::Backend(format!(
+                    "pipeline stage failed: {e:#}"
+                ))));
+            }
+        }
+    }
+    if let Some(next) = outlink {
+        next.jobs.close();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // Engine-level behaviour (batching, padding, windows, shutdown,
     // replicas, priorities, deadlines) lives in tests/serve_engine.rs and
-    // tests/scheduler.rs over mock backends; here we cover the queue
-    // primitive and batch-assembly layout.
+    // tests/scheduler.rs over mock backends; pipeline semantics
+    // (bit-identity, drain, poisoning) live in tests/pipeline_serve.rs.
+    // Here we cover the queue primitive and batch-assembly layout.
 
     #[test]
     fn queue_fifo_within_priority_and_close_drains() {

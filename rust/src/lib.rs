@@ -9,15 +9,19 @@
 //!   [`permute::strategy`] layer (any OCP×ICP strategy pair from a
 //!   string-keyed registry, executed by a parallel tile engine), the PJRT
 //!   runtime that executes AOT-lowered JAX/Pallas artifacts, a sharded
-//!   batch-inference server with priority/deadline scheduling and an
-//!   HTTP/JSON front ([`net`]), and the full evaluation/bench harness
+//!   batch-inference server with priority/deadline scheduling, optional
+//!   pipeline-parallel layer sharding
+//!   ([`coordinator::serve::PipelineServer`], DESIGN.md §15), and an
+//!   HTTP/JSON front ([`net`]), plus the full evaluation/bench harness
 //!   reproducing every table and figure in the paper.
 //! * **L2 (`python/compile/model.py`)** — JAX forward/backward graphs calling
 //!   the L1 kernel, lowered once to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/hinm_spmm.py`)** — the HiNM SpMM Pallas
 //!   kernel (interpret mode on CPU).
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! Start with `ARCHITECTURE.md` for the top-to-bottom system narrative
+//! (one data-flow diagram per layer); `DESIGN.md` is the per-subsystem
+//! reference its anchors point into, and `EXPERIMENTS.md` records
 //! paper-vs-measured results.
 
 #![warn(missing_docs)]

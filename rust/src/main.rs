@@ -64,10 +64,13 @@ fn usage() {
          \x20 spmm    --weights w.npy [--batch 8] [--sparsity 75]\n\
          \x20 info    list AOT artifacts and data dumps\n\
          \x20 serve   [--backend native|pjrt] [--replicas R] [--batch B] [--max-wait-us U]\n\
-         \x20         [--kernel-threads K] [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
+         \x20         [--kernel-threads K] [--pipeline-stages S] [--blocks N]\n\
+         \x20         [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
          \x20         sharded batched inference engine; with --http it serves\n\
          \x20         POST /v1/infer, GET /v1/metrics[?format=prometheus], GET /healthz\n\
-         \x20         until killed, otherwise it runs a closed-loop load demo\n\
+         \x20         until killed, otherwise it runs a closed-loop load demo;\n\
+         \x20         --pipeline-stages S shards the layer chain across S stage\n\
+         \x20         workers (native only, bit-identical responses)\n\
          \x20 serve-demo  alias for: serve --backend pjrt\n\
          \x20 train-demo  [--steps 50]      LM training via AOT train step\n"
     );
@@ -256,6 +259,12 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             Some("1"),
             "native: kernel worker lanes per replica (0 = all cores); bit-identical output",
         )
+        .opt(
+            "pipeline-stages",
+            Some("1"),
+            "native: shard the layer chain across this many pipeline stage workers (1 = off); bit-identical output",
+        )
+        .opt("blocks", Some("1"), "native: FFN blocks in the synthetic model (2·blocks layers)")
         .opt("http", None, "serve HTTP/JSON on this address (e.g. 127.0.0.1:8080) until killed")
         .opt("http-workers", Some("8"), "HTTP connection-handler threads")
         .opt("cache-capacity", Some("0"), "per-replica LRU batch-cache entries (0 = off)")
@@ -277,6 +286,12 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let cache_stats =
         if cache_capacity > 0 { Some(hinm::runtime::CacheStats::new_shared()) } else { None };
 
+    let pipeline_stages = a.usize_or("pipeline-stages", 1).max(1);
+    // Keeps the stage workers alive for as long as the engine runs; the
+    // engine is stopped first, the pipeline after (see the end of this
+    // function).
+    let mut pipeline: Option<hinm::coordinator::PipelineServer> = None;
+
     // Each branch yields the engine config plus a factory building one
     // backend per replica; the cache decorator then wraps whichever
     // backend was picked.
@@ -285,30 +300,65 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "native" => {
                 let d = a.usize_or("d", 256);
                 let d_ff = a.usize_or("d-ff", 512);
+                let blocks = a.usize_or("blocks", 1).max(1);
                 let kernel_threads = a.usize_or("kernel-threads", 1);
                 let cfg = HinmConfig::for_total_sparsity(
                     a.usize_or("v", 32),
                     a.usize_or("sparsity", 75) as f64 / 100.0,
                 );
-                let model = std::sync::Arc::new(hinm::models::HinmModel::synthetic_ffn(
-                    d,
-                    d_ff,
-                    &cfg,
-                    hinm::models::Activation::Relu,
-                    a.u64_or("seed", 7),
-                )?);
+                let seed = a.u64_or("seed", 7);
+                let model = if blocks == 1 {
+                    hinm::models::HinmModel::synthetic_ffn(
+                        d,
+                        d_ff,
+                        &cfg,
+                        hinm::models::Activation::Relu,
+                        seed,
+                    )?
+                } else {
+                    hinm::models::HinmModel::synthetic_deep(
+                        d,
+                        d_ff,
+                        blocks,
+                        &cfg,
+                        hinm::models::Activation::Relu,
+                        seed,
+                    )?
+                };
+                let model = std::sync::Arc::new(model);
                 println!(
-                    "native backend: {d}→{d_ff}→{d} FFN | V={} total sparsity {:.1}% | {replicas} replicas × {kernel_threads} kernel threads",
+                    "native backend: {d}→{d_ff}→{d} FFN × {blocks} block(s) ({} layers) | V={} total sparsity {:.1}% | {replicas} replicas × {kernel_threads} kernel threads",
+                    model.n_layers(),
                     cfg.v,
                     cfg.total_sparsity() * 100.0
                 );
                 let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
                     .with_replicas(replicas)
                     .with_queue_depth(queue_depth);
-                // The planned tile-parallel backend: each replica gets its
-                // own kernel pool; tiles write disjoint Y rows, so output
-                // is bit-identical for any --kernel-threads setting.
-                let factory: hinm::coordinator::BackendFactory =
+                let factory: hinm::coordinator::BackendFactory = if pipeline_stages > 1 {
+                    // Pipeline-parallel mode: the chain is sharded across
+                    // stage workers; each replica's backend submits whole
+                    // batches into stage 0, so replicas keep several
+                    // batches in flight at different stages. Responses
+                    // stay bit-identical to the unsplit model.
+                    let ps = hinm::coordinator::PipelineServer::start(
+                        &model,
+                        pipeline_stages,
+                        kernel_threads,
+                        0,
+                    )?;
+                    println!(
+                        "pipeline: {} stages × {kernel_threads} kernel threads (stages balanced by planned FLOPs)",
+                        ps.n_stages()
+                    );
+                    let f = ps.backend_factory();
+                    pipeline = Some(ps);
+                    f
+                } else {
+                    // The planned tile-parallel backend: each replica gets
+                    // its own kernel pool; tiles write disjoint Y rows, so
+                    // output is bit-identical for any --kernel-threads
+                    // setting.
                     std::sync::Arc::new(move |_replica| {
                         let b: Box<dyn hinm::runtime::SpmmBackend> =
                             Box::new(hinm::runtime::NativeCpuBackend::with_threads(
@@ -316,10 +366,14 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                                 kernel_threads,
                             ));
                         Ok(b)
-                    });
+                    })
+                };
                 (scfg, factory)
             }
             "pjrt" => {
+                if pipeline_stages > 1 {
+                    bail!("--pipeline-stages is native-only (the PJRT artifact is a single compiled graph)");
+                }
                 let reg = hinm::runtime::open_default_registry()?;
                 let spec = reg.artifact("ffn_serve")?.clone();
                 let d = spec.meta["d"] as usize;
@@ -416,6 +470,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         );
     }
     server.stop();
+    if let Some(ps) = pipeline {
+        // Stage workers stop only after the engine above them: in-flight
+        // batches get real answers.
+        ps.stop();
+    }
     Ok(())
 }
 

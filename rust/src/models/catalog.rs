@@ -1,9 +1,17 @@
-//! Layer-shape catalogs for the paper's evaluation models.
+//! Layer-shape catalogs for the paper's evaluation models, plus the small
+//! executable serving catalog ([`serving_models`]) the pipeline
+//! bit-identity tests sweep.
 //!
 //! Conv2d layers are listed as their im2col GEMM equivalents
 //! (`out_ch × in_ch·kh·kw`), which is exactly the granularity HiNM pruning
 //! operates at (the paper prunes "all the Conv2d layers", V along output
 //! channels). Linear layers are `out_features × in_features`.
+
+use super::chain::{Activation, HinmLayer, HinmModel};
+use crate::sparsity::{prune_oneshot, HinmConfig};
+use crate::tensor::Matrix;
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
 
 /// One prunable layer as a GEMM.
 #[derive(Clone, Debug, PartialEq)]
@@ -109,6 +117,60 @@ pub fn deit_base() -> ModelCatalog {
     }
 }
 
+/// The executable serving catalog: small, CI-fast [`HinmModel`]s covering
+/// every chain shape family the serving stack must preserve bit-exactly —
+/// a shallow ReLU FFN, deep GELU stacks (miniature DeiT/BERT-style MLP
+/// towers), and a mixed-width chain with biased and bias-free layers.
+///
+/// The pipeline-parallel bit-identity suite (`tests/pipeline_serve.rs`,
+/// DESIGN.md §15) iterates exactly this list, so a new chain shape added
+/// here is automatically swept across stage counts and batch sizes.
+/// (The throughput benches use larger purpose-built models instead —
+/// these are sized for test speed, not for measurement.)
+pub fn serving_models(seed: u64) -> Result<Vec<(&'static str, HinmModel)>> {
+    let packed = |rows: usize, cols: usize, stream: u64| {
+        let mut rng = Xoshiro256::new(seed ^ (stream << 8));
+        let w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let cfg = HinmConfig::with_24(4, 0.5);
+        prune_oneshot(&w, &w.abs(), &cfg).packed
+    };
+    let mixed = HinmModel::new(vec![
+        HinmLayer::new(packed(32, 16, 1)).with_activation(Activation::Relu),
+        HinmLayer::new(packed(8, 32, 2)).with_bias(vec![0.05; 8]),
+        HinmLayer::new(packed(16, 8, 3)).with_activation(Activation::Gelu),
+        HinmLayer::new(packed(16, 16, 4)).with_bias(vec![-0.02; 16]),
+    ])?;
+    Ok(vec![
+        (
+            "ffn-relu",
+            HinmModel::synthetic_ffn(32, 64, &HinmConfig::with_24(8, 0.5), Activation::Relu, seed)?,
+        ),
+        (
+            "deit-mini",
+            HinmModel::synthetic_deep(
+                32,
+                64,
+                2,
+                &HinmConfig::with_24(4, 0.5),
+                Activation::Gelu,
+                seed + 1,
+            )?,
+        ),
+        (
+            "bert-mini",
+            HinmModel::synthetic_deep(
+                16,
+                32,
+                3,
+                &HinmConfig::with_24(4, 0.5),
+                Activation::Gelu,
+                seed + 2,
+            )?,
+        ),
+        ("mixed-width", mixed),
+    ])
+}
+
 /// BERT-base encoder linear layers.
 pub fn bert_base() -> ModelCatalog {
     let d = 768;
@@ -156,6 +218,20 @@ mod tests {
         // Encoder linears of BERT-base ≈ 85M.
         let p = bert_base().total_params();
         assert!((80_000_000..90_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn serving_catalog_is_diverse_and_forward_matches_reference() {
+        let models = serving_models(7).unwrap();
+        assert!(models.len() >= 4);
+        assert!(models.iter().any(|(_, m)| m.n_layers() >= 4), "need deep chains for stages=4");
+        let mut rng = Xoshiro256::new(8);
+        for (name, m) in &models {
+            let x = Matrix::randn(m.d_in(), 3, 1.0, &mut rng);
+            let got = m.forward(&x);
+            let want = m.forward_reference(&x);
+            assert!(got.max_abs_diff(&want) < 1e-3, "{name}: diff {}", got.max_abs_diff(&want));
+        }
     }
 
     #[test]

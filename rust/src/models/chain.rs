@@ -164,22 +164,71 @@ impl HinmModel {
         engine: &SpmmEngine,
         bufs: &mut ActivationBuffers,
     ) -> Matrix {
+        let mut out = Matrix::zeros(self.d_out(), x.cols);
+        self.forward_planned_into(x, engine, bufs, &mut out);
+        out
+    }
+
+    /// [`HinmModel::forward_planned`] into a caller-owned output matrix:
+    /// `out` is reshaped in place to `[d_out, batch]` and every element is
+    /// overwritten, so a recycled buffer of any prior shape works and the
+    /// hot path allocates nothing once buffers have grown. This is what
+    /// pipeline stage workers run so inter-stage hand-off buffers can be
+    /// reused (DESIGN.md §15); the bits written are identical to
+    /// [`HinmModel::forward_planned`]'s.
+    pub fn forward_planned_into(
+        &self,
+        x: &Matrix,
+        engine: &SpmmEngine,
+        bufs: &mut ActivationBuffers,
+        out: &mut Matrix,
+    ) {
         assert_eq!(x.rows, self.d_in(), "input has {} channels, model wants {}", x.rows, self.d_in());
         let batch = x.cols;
         let last = self.layers.len() - 1;
-        let mut out = Matrix::zeros(self.d_out(), batch);
+        ensure_shape(out, self.d_out(), batch);
         for (i, (layer, plan)) in self.layers.iter().zip(&self.plans).enumerate() {
             let epi = Epilogue::new(layer.bias.as_deref(), layer.act);
             let input = if i == 0 { x } else { &bufs.ping };
             if i == last {
-                engine.execute(plan, input, &mut out, &epi);
+                engine.execute(plan, input, out, &epi);
             } else {
                 ensure_shape(&mut bufs.pong, layer.packed.rows, batch);
                 engine.execute(plan, input, &mut bufs.pong, &epi);
                 std::mem::swap(&mut bufs.ping, &mut bufs.pong);
             }
         }
-        out
+    }
+
+    /// Partition the chain into `k` contiguous stages, each a standalone
+    /// [`HinmModel`], balanced so the *costliest* stage is as cheap as
+    /// possible. The cost measure is planned FLOPs per batch column
+    /// ([`crate::spmm::SpmmPlan::flops_per_col`]), so the split minimizes
+    /// the pipeline's steady-state bottleneck `max(stage_time)` rather
+    /// than naively dealing layers round-robin (DESIGN.md §15).
+    ///
+    /// Per-layer execution is untouched — running the stages back to back
+    /// produces output bit-identical to [`HinmModel::forward_planned`] on
+    /// the whole chain. Stage models clone the layers *and the already
+    /// compiled plans* (a contiguous sub-chain of a validated chain is
+    /// itself valid), so splitting never recompiles a plan. Errors if `k`
+    /// is 0 or exceeds the layer count.
+    pub fn split_stages(&self, k: usize) -> Result<Vec<HinmModel>> {
+        if k == 0 {
+            bail!("pipeline needs at least one stage");
+        }
+        if k > self.layers.len() {
+            bail!("cannot split {} layers into {k} stages", self.layers.len());
+        }
+        let costs: Vec<u64> =
+            self.plans.iter().map(|p| p.flops_per_col() as u64).collect();
+        Ok(balanced_partition(&costs, k)
+            .into_iter()
+            .map(|(a, b)| HinmModel {
+                layers: self.layers[a..b].to_vec(),
+                plans: self.plans[a..b].to_vec(),
+            })
+            .collect())
     }
 
     /// Forward pass over the **unplanned** scratch kernel
@@ -237,6 +286,86 @@ impl HinmModel {
             HinmLayer::new(p2).with_bias(b2),
         ])
     }
+
+    /// Deep FFN stack: `blocks` repetitions of `d → d_ff → d` (so
+    /// `2·blocks` layers, `d_in == d_out == d`) with trained-like synthetic
+    /// weights pruned one-shot at `cfg`. Every layer but the last applies
+    /// `act`. This is the model the pipeline-parallel serving mode
+    /// (`hinm serve --pipeline-stages`, DESIGN.md §15) splits across stage
+    /// workers; `blocks = 1` matches [`HinmModel::synthetic_ffn`]'s shape
+    /// (with its own weight stream).
+    pub fn synthetic_deep(
+        d: usize,
+        d_ff: usize,
+        blocks: usize,
+        cfg: &HinmConfig,
+        act: Activation,
+        seed: u64,
+    ) -> Result<HinmModel> {
+        if blocks == 0 {
+            bail!("synthetic_deep needs at least one block");
+        }
+        cfg.validate(d_ff, d).map_err(|e| anyhow::anyhow!(e))?;
+        cfg.validate(d, d_ff).map_err(|e| anyhow::anyhow!(e))?;
+        let mut rng = Xoshiro256::new(seed);
+        let gen = SyntheticGen::default();
+        let mut layers = Vec::with_capacity(2 * blocks);
+        for b in 0..blocks {
+            let w1 = gen.weights(d_ff, d, &mut rng);
+            let p1 = prune_oneshot(&w1, &w1.abs(), cfg).packed;
+            let b1: Vec<f32> = (0..d_ff).map(|_| rng.normal() * 0.01).collect();
+            layers.push(HinmLayer::new(p1).with_bias(b1).with_activation(act));
+            let w2 = gen.weights(d, d_ff, &mut rng);
+            let p2 = prune_oneshot(&w2, &w2.abs(), cfg).packed;
+            let b2: Vec<f32> = (0..d).map(|_| rng.normal() * 0.01).collect();
+            let down = HinmLayer::new(p2).with_bias(b2);
+            let down = if b + 1 < blocks { down.with_activation(act) } else { down };
+            layers.push(down);
+        }
+        HinmModel::new(layers)
+    }
+}
+
+/// Contiguous min-max partition of `costs` into `k` non-empty runs: the
+/// classic linear-partition DP (`O(n²k)`, trivial at chain depths), which
+/// returns the `[start, end)` ranges minimizing the most expensive run —
+/// exactly the objective pipeline throughput cares about, since steady
+/// state runs at `1/max(stage_time)`.
+fn balanced_partition(costs: &[u64], k: usize) -> Vec<(usize, usize)> {
+    let n = costs.len();
+    debug_assert!(k >= 1 && k <= n);
+    let mut prefix = vec![0u64; n + 1];
+    for (i, &c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a];
+    // dp[j][i] = cheapest possible costliest-run over the first i items
+    // split into j runs; cut[j][i] = where the last run starts.
+    let mut dp = vec![vec![u64::MAX; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0;
+    for j in 1..=k {
+        for i in j..=n {
+            for c in (j - 1)..i {
+                if dp[j - 1][c] == u64::MAX {
+                    continue;
+                }
+                let cand = dp[j - 1][c].max(seg(c, i));
+                if cand < dp[j][i] {
+                    dp[j][i] = cand;
+                    cut[j][i] = c;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![(0usize, 0usize); k];
+    let mut end = n;
+    for j in (1..=k).rev() {
+        let start = cut[j][end];
+        bounds[j - 1] = (start, end);
+        end = start;
+    }
+    bounds
 }
 
 fn apply_bias(y: &mut Matrix, bias: Option<&[f32]>) {
@@ -362,5 +491,101 @@ mod tests {
         assert!((gelu(3.0) - 3.0).abs() < 0.01);
         assert!(gelu(-3.0).abs() < 0.01);
         assert!(gelu(1.0) > 0.8 && gelu(1.0) < 0.9);
+    }
+
+    #[test]
+    fn forward_planned_into_reuses_any_prior_shape_bitwise() {
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let model = HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Gelu, 51).unwrap();
+        let engine = SpmmEngine::single();
+        let mut bufs = ActivationBuffers::new();
+        let mut rng = Xoshiro256::new(52);
+        let mut out = Matrix::zeros(3, 7); // deliberately wrong shape
+        for batch in [1usize, 4, 2] {
+            let x = Matrix::randn(16, batch, 1.0, &mut rng);
+            model.forward_planned_into(&x, &engine, &mut bufs, &mut out);
+            assert_eq!(out.shape(), (16, batch));
+            let want = model.forward(&x);
+            assert_eq!(bits(&out), bits(&want), "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn split_stages_composes_bit_identically() {
+        let l1 = HinmLayer::new(packed(32, 16, 61)).with_activation(Activation::Relu);
+        let l2 = HinmLayer::new(packed(8, 32, 62)).with_bias(vec![0.2; 8]);
+        let l3 = HinmLayer::new(packed(16, 8, 63)).with_activation(Activation::Gelu);
+        let l4 = HinmLayer::new(packed(16, 16, 64)).with_bias(vec![-0.1; 16]);
+        let model = HinmModel::new(vec![l1, l2, l3, l4]).unwrap();
+        let engine = SpmmEngine::single();
+        let mut rng = Xoshiro256::new(65);
+        let x = Matrix::randn(16, 5, 1.0, &mut rng);
+        let mut bufs = ActivationBuffers::new();
+        let want = model.forward_planned(&x, &engine, &mut bufs);
+        for k in 1..=4usize {
+            let stages = model.split_stages(k).unwrap();
+            assert_eq!(stages.len(), k);
+            assert_eq!(stages.iter().map(|s| s.n_layers()).sum::<usize>(), 4);
+            assert_eq!(stages[0].d_in(), model.d_in());
+            assert_eq!(stages[k - 1].d_out(), model.d_out());
+            for w in stages.windows(2) {
+                assert_eq!(w[1].d_in(), w[0].d_out(), "stage chaining broken at k={k}");
+            }
+            let mut cur = x.clone();
+            for s in &stages {
+                let mut sb = ActivationBuffers::new();
+                cur = s.forward_planned(&cur, &engine, &mut sb);
+            }
+            assert_eq!(bits(&cur), bits(&want), "k={k} stages must not change bits");
+        }
+        assert!(model.split_stages(0).is_err());
+        assert!(model.split_stages(5).is_err());
+    }
+
+    #[test]
+    fn balanced_partition_minimizes_the_costliest_run() {
+        // [10, 1, 1, 10] into 2 → {10,1,1 | 10} or {10 | 1,1,10}: max 12.
+        let b = balanced_partition(&[10, 1, 1, 10], 2);
+        let worst = b.iter().map(|&(a, e)| (a..e).count()).max().unwrap();
+        assert!(worst <= 3);
+        let max_cost = |bounds: &[(usize, usize)], costs: &[u64]| {
+            bounds.iter().map(|&(a, e)| costs[a..e].iter().sum::<u64>()).max().unwrap()
+        };
+        assert_eq!(max_cost(&b, &[10, 1, 1, 10]), 12);
+        // A dominant middle layer gets a stage of its own.
+        let b = balanced_partition(&[1, 100, 1], 3);
+        assert_eq!(b, vec![(0, 1), (1, 2), (2, 3)]);
+        // k == n degenerates to one layer per stage.
+        let b = balanced_partition(&[5, 5, 5, 5], 4);
+        assert_eq!(b, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        // Runs tile the index range in order, never empty.
+        let costs = [3u64, 9, 2, 2, 8, 1];
+        for k in 1..=costs.len() {
+            let b = balanced_partition(&costs, k);
+            assert_eq!(b.len(), k);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[k - 1].1, costs.len());
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                assert!(w[0].0 < w[0].1);
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_deep_builds_alternating_stacks() {
+        let cfg = HinmConfig::with_24(4, 0.5);
+        let model = HinmModel::synthetic_deep(16, 32, 3, &cfg, Activation::Relu, 71).unwrap();
+        assert_eq!(model.n_layers(), 6);
+        assert_eq!((model.d_in(), model.d_out()), (16, 16));
+        // Hidden layers carry the activation; the final projection is linear.
+        assert_eq!(model.layers()[0].act, Activation::Relu);
+        assert_eq!(model.layers()[5].act, Activation::None);
+        let mut rng = Xoshiro256::new(72);
+        let x = Matrix::randn(16, 4, 1.0, &mut rng);
+        let got = model.forward(&x);
+        let want = model.forward_reference(&x);
+        assert!(got.max_abs_diff(&want) < 1e-3, "diff {}", got.max_abs_diff(&want));
+        assert!(HinmModel::synthetic_deep(16, 32, 0, &cfg, Activation::Relu, 71).is_err());
     }
 }

@@ -12,6 +12,6 @@ pub mod chain;
 pub mod conv;
 pub mod synthetic;
 
-pub use catalog::{LayerShape, ModelCatalog};
+pub use catalog::{serving_models, LayerShape, ModelCatalog};
 pub use chain::{Activation, ActivationBuffers, HinmLayer, HinmModel};
 pub use synthetic::SyntheticGen;

@@ -37,6 +37,34 @@ use std::time::Duration;
 pub use http::HttpClient;
 
 /// The HTTP front door: owns the listener/worker threads and the routes.
+///
+/// # Examples
+///
+/// ```
+/// use hinm::coordinator::{BatchServer, ServeConfig};
+/// use hinm::models::{Activation, HinmModel};
+/// use hinm::net::{HttpClient, HttpFront};
+/// use hinm::sparsity::HinmConfig;
+/// use std::sync::Arc;
+/// use std::time::Duration;
+///
+/// let cfg = HinmConfig::with_24(4, 0.5);
+/// let model = Arc::new(HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Relu, 7)?);
+/// let server = BatchServer::start_native(
+///     model,
+///     ServeConfig::new(4, Duration::from_micros(100)),
+/// )?;
+/// // Port 0 binds an ephemeral port; `local_addr` resolves it.
+/// let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, 2)?;
+/// let mut client = HttpClient::connect(front.local_addr())?;
+/// let (status, body) = client.get("/healthz")?;
+/// assert_eq!(status, 200);
+/// assert!(body.contains("ok"));
+/// // Stop the front before the engine so in-flight requests get answers.
+/// front.stop();
+/// server.stop();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct HttpFront {
     server: HttpServer,
 }

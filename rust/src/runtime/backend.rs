@@ -232,6 +232,59 @@ impl SpmmBackend for PjrtBackend {
 }
 
 // ---------------------------------------------------------------------------
+// Pipelined backend
+// ---------------------------------------------------------------------------
+
+/// Backend adapter onto a running
+/// [`PipelineServer`](crate::coordinator::serve::PipelineServer):
+/// `run_batch` submits the activation batch to stage 0 and blocks until
+/// the final stage answers, so the batch server, [`CachedBackend`], the
+/// priority/deadline queue, and the HTTP front all compose unchanged over
+/// pipeline-parallel execution (DESIGN.md §15).
+///
+/// A single replica calling `run_batch` serially keeps only one batch in
+/// flight — no overlap. Give *each* engine replica its own
+/// `PipelinedBackend` (they all clone one
+/// [`PipelineHandle`](crate::coordinator::serve::PipelineHandle), see
+/// [`PipelineServer::backend_factory`](crate::coordinator::serve::PipelineServer::backend_factory))
+/// and the replicas keep several batches in flight, each executing a
+/// different stage concurrently — which is where the
+/// `1/max(stage_time)` steady state comes from.
+///
+/// Output is bit-identical to [`NativeCpuBackend`] over the unsplit model
+/// for any stage count (`tests/pipeline_serve.rs`).
+pub struct PipelinedBackend {
+    handle: crate::coordinator::serve::PipelineHandle,
+}
+
+impl PipelinedBackend {
+    /// Adapter over a (cloned) pipeline submission handle.
+    pub fn new(handle: crate::coordinator::serve::PipelineHandle) -> PipelinedBackend {
+        PipelinedBackend { handle }
+    }
+}
+
+impl SpmmBackend for PipelinedBackend {
+    fn name(&self) -> &'static str {
+        "pipeline"
+    }
+
+    fn d_in(&self) -> usize {
+        self.handle.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.handle.d_out
+    }
+
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        self.handle
+            .infer_batch(x)
+            .map_err(|e| anyhow::anyhow!("pipeline inference failed: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Cached decorator
 // ---------------------------------------------------------------------------
 

@@ -6,7 +6,9 @@ pub mod backend;
 pub mod executor;
 pub mod registry;
 
-pub use backend::{CacheStats, CachedBackend, NativeCpuBackend, PjrtBackend, SpmmBackend};
+pub use backend::{
+    CacheStats, CachedBackend, NativeCpuBackend, PipelinedBackend, PjrtBackend, SpmmBackend,
+};
 pub use executor::{client, Executor};
 pub use registry::Registry;
 

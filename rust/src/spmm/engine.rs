@@ -241,6 +241,26 @@ struct LaneScratch {
 /// The planned-SpMM execution engine: a [`KernelPool`] plus one reusable
 /// scratch block per lane. Build it once (per backend / per bench) and run
 /// any number of plans through it — the hot path never allocates.
+///
+/// # Examples
+///
+/// ```
+/// use hinm::sparsity::{prune_oneshot, HinmConfig};
+/// use hinm::spmm::{SpmmEngine, SpmmPlan};
+/// use hinm::tensor::Matrix;
+/// use hinm::util::rng::Xoshiro256;
+///
+/// let mut rng = Xoshiro256::new(2);
+/// let w = Matrix::randn(8, 16, 1.0, &mut rng);
+/// let cfg = HinmConfig::with_24(4, 0.5);
+/// let plan = SpmmPlan::new(&prune_oneshot(&w, &w.abs(), &cfg).packed);
+/// let x = Matrix::randn(16, 5, 1.0, &mut rng);
+///
+/// // Lane count is a pure throughput knob: output bits never change.
+/// let single = SpmmEngine::single().spmm_planned(&plan, &x);
+/// let pooled = SpmmEngine::new(4).spmm_planned(&plan, &x);
+/// assert_eq!(single, pooled);
+/// ```
 pub struct SpmmEngine {
     pool: KernelPool,
     lanes: Vec<Mutex<LaneScratch>>,

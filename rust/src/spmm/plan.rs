@@ -41,6 +41,26 @@ const PANEL_TARGET_BYTES: usize = 48 * 1024;
 /// (via [`super::SpmmEngine`]) then runs tiles over the plan with no
 /// per-call index math. The plan borrows nothing from the `HinmPacked` it
 /// was built from.
+///
+/// # Examples
+///
+/// ```
+/// use hinm::sparsity::{prune_oneshot, HinmConfig};
+/// use hinm::spmm::{SpmmEngine, SpmmPlan};
+/// use hinm::tensor::Matrix;
+/// use hinm::util::rng::Xoshiro256;
+///
+/// let mut rng = Xoshiro256::new(1);
+/// let w = Matrix::randn(8, 16, 1.0, &mut rng);
+/// let cfg = HinmConfig::with_24(4, 0.5);
+/// let packed = prune_oneshot(&w, &w.abs(), &cfg).packed;
+///
+/// // Compile once, execute many times through an engine.
+/// let plan = SpmmPlan::new(&packed);
+/// let x = Matrix::randn(16, 3, 1.0, &mut rng);
+/// let y = SpmmEngine::single().spmm_planned(&plan, &x);
+/// assert_eq!(y.shape(), (8, 3));
+/// ```
 #[derive(Clone, Debug)]
 pub struct SpmmPlan {
     rows: usize,
@@ -115,6 +135,15 @@ impl SpmmPlan {
     /// Plan footprint in bytes (weights + offset stream + gather indices).
     pub fn storage_bytes(&self) -> usize {
         self.weights.len() * 4 + self.xoff.len() * 4 + self.gather.len() * 4
+    }
+
+    /// Floating-point operations this plan performs per batch column: one
+    /// multiply and one add per stored weight. This is the cost measure
+    /// [`crate::models::chain::HinmModel::split_stages`] balances pipeline
+    /// stages by (DESIGN.md §15) — it depends only on the packing, not on
+    /// the batch width or lane count.
+    pub fn flops_per_col(&self) -> usize {
+        2 * self.weights.len()
     }
 
     /// Execute one tile into its output slice (`V` rows × `batch`,
@@ -269,5 +298,6 @@ mod tests {
         assert_eq!(plan.tiles(), 4);
         assert!(plan.storage_bytes() > 0);
         assert_eq!(plan.storage_bytes(), (p.vals.len() * 2 + p.vec_idx.len()) * 4);
+        assert_eq!(plan.flops_per_col(), 2 * p.vals.len());
     }
 }

@@ -1,0 +1,326 @@
+//! Pipeline-parallel serving semantics (DESIGN.md §15): bit-identity of
+//! pipelined execution against `forward_planned` across the serving
+//! catalog × stage counts × batch sizes, composition with the batch
+//! server / cache / HTTP front, shutdown draining, per-batch stage
+//! errors, and panic poisoning — mirroring the engine-level suite in
+//! `tests/serve_engine.rs` over mock stages where backend independence
+//! matters.
+
+use anyhow::Result;
+use hinm::coordinator::serve::{PipelineServer, PipelineStage};
+use hinm::coordinator::{cached_factory, BatchServer, InferError, ServeConfig};
+use hinm::models::chain::ActivationBuffers;
+use hinm::models::{serving_models, HinmModel};
+use hinm::net::{protocol, HttpClient, HttpFront};
+use hinm::runtime::CacheStats;
+use hinm::spmm::SpmmEngine;
+use hinm::tensor::Matrix;
+use hinm::util::json;
+use hinm::util::rng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn vec_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Reference output through the unsplit planned path.
+fn planned(model: &HinmModel, x: &Matrix) -> Matrix {
+    let engine = SpmmEngine::single();
+    let mut bufs = ActivationBuffers::new();
+    model.forward_planned(x, &engine, &mut bufs)
+}
+
+#[test]
+fn pipelined_output_is_bit_identical_across_catalog_stages_and_batches() {
+    for (name, model) in serving_models(7).unwrap() {
+        let mut rng = Xoshiro256::new(11);
+        for &batch in &[1usize, 7, 33] {
+            let x = Matrix::randn(model.d_in(), batch, 1.0, &mut rng);
+            let want = planned(&model, &x);
+            let mut stage_counts: Vec<usize> =
+                [1usize, 2, 4].iter().map(|&k| k.min(model.n_layers())).collect();
+            stage_counts.dedup();
+            for k in stage_counts {
+                let ps = PipelineServer::start(&model, k, 1, 0).unwrap();
+                assert_eq!(ps.n_stages(), k);
+                let h = ps.handle();
+                // Two rounds so the recycled hand-off buffers are hit.
+                for round in 0..2 {
+                    let got = h.infer_batch(&x).unwrap();
+                    assert_eq!(got.shape(), (model.d_out(), batch));
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "{name}: stages={k} batch={batch} round={round} changed bits"
+                    );
+                }
+                ps.stop();
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_backend_composes_with_batch_server_and_cache_bit_exactly() {
+    let (_, model) =
+        serving_models(7).unwrap().into_iter().find(|(n, _)| *n == "deit-mini").unwrap();
+    let ps = PipelineServer::start(&model, 2, 1, 0).unwrap();
+    let stats = CacheStats::new_shared();
+    let factory = cached_factory(ps.backend_factory(), 8, Arc::clone(&stats));
+    let server = BatchServer::start(
+        factory,
+        ServeConfig::new(1, Duration::from_millis(1)),
+    )
+    .unwrap();
+
+    let xcol: Vec<f32> = (0..model.d_in()).map(|i| (i % 5) as f32 * 0.3 - 0.6).collect();
+    let want = planned(&model, &Matrix::from_vec(model.d_in(), 1, xcol.clone()));
+    let y1 = server.handle.infer(xcol.clone()).unwrap();
+    assert_eq!(vec_bits(&y1), bits(&want), "pipelined engine response must match forward_planned");
+    // Same activation again: the replica's cache answers without touching
+    // the pipeline, bit-identically.
+    let y2 = server.handle.infer(xcol).unwrap();
+    assert_eq!(vec_bits(&y2), vec_bits(&y1));
+    assert!(stats.hits() >= 1, "second identical request must hit the batch cache");
+    server.stop();
+    ps.stop();
+}
+
+#[test]
+fn concurrent_replicas_keep_the_pipeline_busy_and_answers_correct() {
+    let (_, model) =
+        serving_models(7).unwrap().into_iter().find(|(n, _)| *n == "bert-mini").unwrap();
+    let ps = PipelineServer::start(&model, 3, 1, 0).unwrap();
+    let server = BatchServer::start(
+        ps.backend_factory(),
+        ServeConfig::new(2, Duration::from_millis(1)).with_replicas(4),
+    )
+    .unwrap();
+    let handle = server.handle.clone();
+    let d_in = model.d_in();
+    std::thread::scope(|s| {
+        for c in 0..16 {
+            let h = handle.clone();
+            let model = &model;
+            s.spawn(move || {
+                let xcol: Vec<f32> = (0..d_in).map(|i| ((c * 7 + i) % 9) as f32 * 0.1).collect();
+                let want = planned(model, &Matrix::from_vec(d_in, 1, xcol.clone()));
+                let y = h.infer(xcol).unwrap();
+                assert_eq!(vec_bits(&y), bits(&want), "client {c} got a wrong answer");
+            });
+        }
+    });
+    assert_eq!(server.metrics.total_requests(), 16);
+    server.stop();
+    ps.stop();
+}
+
+#[test]
+fn http_round_trip_over_the_pipeline_is_bit_exact() {
+    let (_, model) =
+        serving_models(7).unwrap().into_iter().find(|(n, _)| *n == "mixed-width").unwrap();
+    let ps = PipelineServer::start(&model, 2, 1, 0).unwrap();
+    let server = BatchServer::start(
+        ps.backend_factory(),
+        ServeConfig::new(2, Duration::from_millis(1)).with_replicas(2),
+    )
+    .unwrap();
+    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, 2).unwrap();
+
+    let xcol: Vec<f32> = (0..model.d_in()).map(|i| (i as f32) * 0.17 - 1.1).collect();
+    let want = planned(&model, &Matrix::from_vec(model.d_in(), 1, xcol.clone()));
+    let mut client = HttpClient::connect(front.local_addr()).unwrap();
+    let body = protocol::InferRequest::new(xcol).to_json().compact();
+    let (status, resp) = client.post_json("/v1/infer", &body).unwrap();
+    assert_eq!(status, 200, "unexpected response: {resp}");
+    let y = protocol::parse_infer_response(&json::parse(&resp).unwrap()).unwrap();
+    assert_eq!(vec_bits(&y), bits(&want), "HTTP→engine→pipeline must round-trip bit-exactly");
+
+    front.stop();
+    server.stop();
+    ps.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Mock stages: hand-off / shutdown / failure semantics without models.
+// ---------------------------------------------------------------------------
+
+const D: usize = 4;
+
+/// `y = x + 1` elementwise (square stage), with optional delay, switchable
+/// failure, and a panic trigger.
+struct MockStage {
+    delay: Duration,
+    fail: Option<Arc<AtomicBool>>,
+    panic_now: bool,
+    calls: Arc<AtomicUsize>,
+}
+
+impl MockStage {
+    fn ok(delay: Duration) -> Box<dyn PipelineStage> {
+        Box::new(MockStage {
+            delay,
+            fail: None,
+            panic_now: false,
+            calls: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+}
+
+impl PipelineStage for MockStage {
+    fn d_in(&self) -> usize {
+        D
+    }
+
+    fn d_out(&self) -> usize {
+        D
+    }
+
+    fn run(&mut self, x: &Matrix, out: &mut Matrix) -> Result<()> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        if self.panic_now {
+            panic!("stage exploded");
+        }
+        if let Some(f) = &self.fail {
+            if f.load(Ordering::SeqCst) {
+                anyhow::bail!("stage refused");
+            }
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        out.rows = D;
+        out.cols = x.cols;
+        out.data.clear();
+        out.data.resize(D * x.cols, 0.0);
+        for (o, &v) in out.data.iter_mut().zip(&x.data) {
+            *o = v + 1.0;
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn shutdown_drains_queued_batches_and_then_fails_new_submissions() {
+    let stages = vec![
+        MockStage::ok(Duration::from_millis(5)),
+        MockStage::ok(Duration::from_millis(5)),
+    ];
+    let ps = PipelineServer::start_stages(stages, 8).unwrap();
+    let h = ps.handle();
+    let clients: Vec<_> = (0..6)
+        .map(|i| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                h.infer_batch(&Matrix::from_vec(D, 1, vec![i as f32; D])).map(|y| (i, y))
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(50)); // let them enqueue
+    let t0 = Instant::now();
+    ps.stop();
+    assert!(t0.elapsed() < Duration::from_secs(5), "stop must not hang");
+    for c in clients {
+        let (i, y) = c
+            .join()
+            .unwrap()
+            .expect("a batch queued before shutdown must still be answered");
+        assert_eq!(y.data[0], i as f32 + 2.0, "two +1 stages");
+    }
+    // The pipeline is gone: new submissions fail fast.
+    let err = h.infer_batch(&Matrix::zeros(D, 1)).unwrap_err();
+    assert_eq!(err, InferError::Stopped);
+}
+
+#[test]
+fn stage_error_fails_only_that_batch() {
+    let fail = Arc::new(AtomicBool::new(true));
+    let stages: Vec<Box<dyn PipelineStage>> = vec![
+        MockStage::ok(Duration::ZERO),
+        Box::new(MockStage {
+            delay: Duration::ZERO,
+            fail: Some(Arc::clone(&fail)),
+            panic_now: false,
+            calls: Arc::new(AtomicUsize::new(0)),
+        }),
+    ];
+    let ps = PipelineServer::start_stages(stages, 0).unwrap();
+    let h = ps.handle();
+    let err = h.infer_batch(&Matrix::zeros(D, 2)).unwrap_err();
+    match err {
+        InferError::Backend(msg) => assert!(msg.contains("stage refused"), "got: {msg}"),
+        other => panic!("expected a backend error, got {other:?}"),
+    }
+    // The pipeline survives a stage `Err` and keeps serving.
+    fail.store(false, Ordering::SeqCst);
+    let y = h.infer_batch(&Matrix::zeros(D, 2)).unwrap();
+    assert!(y.data.iter().all(|&v| v == 2.0));
+    ps.stop();
+}
+
+#[test]
+fn stage_panic_poisons_the_pipeline_and_fails_in_flight_requests_fast() {
+    let stages: Vec<Box<dyn PipelineStage>> = vec![
+        MockStage::ok(Duration::ZERO),
+        Box::new(MockStage {
+            delay: Duration::ZERO,
+            fail: None,
+            panic_now: true,
+            calls: Arc::new(AtomicUsize::new(0)),
+        }),
+    ];
+    let ps = PipelineServer::start_stages(stages, 0).unwrap();
+    let h = ps.handle();
+    // Rides into the panicking stage → response sender drops → error, not
+    // a hang.
+    assert!(h.infer_batch(&Matrix::zeros(D, 1)).is_err());
+    // The poison guard closed every link: later submissions error fast
+    // instead of blocking on a dead pipeline.
+    let t0 = Instant::now();
+    assert!(h.infer_batch(&Matrix::zeros(D, 1)).is_err());
+    assert!(t0.elapsed() < Duration::from_secs(5), "post-poison submission must fail fast");
+    ps.stop();
+}
+
+#[test]
+fn mismatched_stage_dimensions_are_rejected_at_startup() {
+    struct Wide;
+    impl PipelineStage for Wide {
+        fn d_in(&self) -> usize {
+            2 * D
+        }
+        fn d_out(&self) -> usize {
+            2 * D
+        }
+        fn run(&mut self, _x: &Matrix, _out: &mut Matrix) -> Result<()> {
+            unreachable!("never started")
+        }
+    }
+    let stages: Vec<Box<dyn PipelineStage>> = vec![MockStage::ok(Duration::ZERO), Box::new(Wide)];
+    let err = PipelineServer::start_stages(stages, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("consumes"), "got: {err:#}");
+    assert!(PipelineServer::start_stages(Vec::new(), 0).is_err(), "empty pipeline rejected");
+}
+
+#[test]
+fn wrong_input_channel_count_is_rejected_client_side() {
+    let ps = PipelineServer::start_stages(vec![MockStage::ok(Duration::ZERO)], 0).unwrap();
+    let err = ps.handle().infer_batch(&Matrix::zeros(D + 1, 1)).unwrap_err();
+    assert!(matches!(err, InferError::BadRequest(_)), "got {err:?}");
+    ps.stop();
+}
+
+#[test]
+fn split_stage_counts_beyond_layers_are_rejected() {
+    let (_, model) =
+        serving_models(7).unwrap().into_iter().find(|(n, _)| *n == "ffn-relu").unwrap();
+    assert_eq!(model.n_layers(), 2);
+    assert!(PipelineServer::start(&model, 3, 1, 0).is_err());
+    assert!(PipelineServer::start(&model, 0, 1, 0).is_err());
+}
