@@ -294,8 +294,9 @@ fn serve_http_mode(cfg: HttpMode<'_>) -> Json {
         kernel_threads,
     )
     .expect("server start");
-    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, n_clients.min(16))
-        .expect("http front start");
+    let front =
+        HttpFront::start("127.0.0.1:0", server.handle.clone(), None, None, n_clients.min(16))
+            .expect("http front start");
     let addr = front.local_addr();
     let per_client = (n_requests / n_clients).max(1);
     let t0 = Instant::now();

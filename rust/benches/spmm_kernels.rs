@@ -12,13 +12,25 @@
 //! target (meant for dedicated ≥ 4-core hardware, not shared CI runners,
 //! where scheduler jitter would make a hard gate flaky).
 //!
+//! Microkernel variants (ISSUE 6): a second sweep at 3072×768 / batch 32
+//! / 75% forces every available kernel tier × value format through
+//! [`SpmmPlan::with_isa`]/[`SpmmPlan::with_values`] and prints each
+//! variant's speedup over scalar-f32. Targets: `avx2-f32` ≥ 2× scalar at
+//! batch 32 (when AVX2 is available), and bf16 ≥ 1.3× its f32 counterpart
+//! at the dispatched tier. Both are printed every run and enforced only
+//! under `--strict` (same shared-runner caveat as above).
+//!
 //! `--json PATH` additionally writes `{bench, provenance, rows: [...]}`
 //! (`BENCH_spmm.json` in CI; uploaded as a workflow artifact) so the perf
-//! trajectory is machine-readable across commits.
+//! trajectory is machine-readable across commits; variant-sweep rows carry
+//! a `"variant"` tag (e.g. `"avx2-bf16"`).
 
 use hinm::models::SyntheticGen;
 use hinm::sparsity::{prune_oneshot, HinmConfig};
-use hinm::spmm::{dense, spmm_with_scratch, Epilogue, SpmmEngine, SpmmPlan, SpmmScratch};
+use hinm::spmm::{
+    dense, spmm_with_scratch, Epilogue, KernelIsa, SpmmEngine, SpmmPlan, SpmmScratch,
+    ValueFormat,
+};
 use hinm::tensor::Matrix;
 use hinm::util::bench::{black_box, Bencher, Table};
 use hinm::util::cli::Cli;
@@ -27,6 +39,10 @@ use hinm::util::rng::Xoshiro256;
 
 /// The acceptance configuration: `(m, n, batch, total sparsity)`.
 const ACCEPTANCE: (usize, usize, usize, f64) = (3072, 768, 64, 0.75);
+
+/// The microkernel variant-sweep configuration: `(m, n, batch, total
+/// sparsity)` — batch 32 so the default batch block runs tail-free.
+const VARIANTS: (usize, usize, usize, f64) = (3072, 768, 32, 0.75);
 
 /// One `(shape, batch)` sweep entry with its sparsity and thread grids.
 struct SweepCase {
@@ -48,6 +64,9 @@ struct Row {
     median_us: f64,
     eff_gflops: f64,
     vs_scratch: Option<f64>,
+    /// Microkernel variant tag (`"avx2-f32"`, `"scalar-bf16"`, …) for the
+    /// forced-dispatch sweep; `None` for the main (auto-dispatched) sweep.
+    variant: Option<String>,
 }
 
 impl Row {
@@ -64,6 +83,9 @@ impl Row {
         ];
         if let Some(s) = self.vs_scratch {
             pairs.push(("speedup_vs_scratch", Json::num(s)));
+        }
+        if let Some(v) = &self.variant {
+            pairs.push(("variant", Json::str(v)));
         }
         Json::obj(pairs)
     }
@@ -174,6 +196,7 @@ fn main() {
             median_us: dense_stats.median_us(),
             eff_gflops: dense_flops / dense_stats.median_ns,
             vs_scratch: None,
+            variant: None,
         });
 
         for &total in sparsities {
@@ -207,6 +230,7 @@ fn main() {
                 median_us: scratch_stats.median_us(),
                 eff_gflops: dense_flops / scratch_stats.median_ns,
                 vs_scratch: Some(1.0),
+                variant: None,
             });
 
             // The planned tile-parallel engine at each lane count; the
@@ -255,6 +279,7 @@ fn main() {
                     median_us: stats.median_us(),
                     eff_gflops: dense_flops / stats.median_ns,
                     vs_scratch: Some(vs_scratch),
+                    variant: None,
                 });
             }
         }
@@ -277,6 +302,85 @@ fn main() {
         None => println!(
             "acceptance @ 3072×768 b64 75%: not measured at ≥ 4 threads (pass ≥4 via --threads)"
         ),
+    }
+
+    // ---- microkernel variant sweep: forced ISA × value format ----
+    // One shape, one thread: isolate the row fold itself. Batch 32 is one
+    // full batch block at the default 48 KiB panel target, so the SIMD
+    // register blocks run with no ragged tail.
+    let (vm, vn, vbatch, vtotal) = VARIANTS;
+    println!(
+        "\n== microkernel variants @ {vm}×{vn} b{vbatch} {:.0}% (1 thread, forced dispatch) ==\n",
+        vtotal * 100.0
+    );
+    let w = SyntheticGen::default().weights(vm, vn, &mut rng);
+    let x = Matrix::randn(vn, vbatch, 1.0, &mut rng);
+    let cfg = HinmConfig::for_total_sparsity(32, vtotal);
+    let packed = prune_oneshot(&w, &w.abs(), &cfg).packed;
+    let dense_flops = 2.0 * (vm * vn * vbatch) as f64;
+    let engine = SpmmEngine::single();
+    let mut vtable =
+        Table::new(&["variant", "median µs", "eff GFLOP/s", "vs scalar-f32"]);
+    // (isa, format, median ns) per variant; scalar-f32 is always first
+    // (KernelIsa::available() leads with Scalar).
+    let mut medians: Vec<(KernelIsa, ValueFormat, f64)> = Vec::new();
+    for &isa in KernelIsa::available() {
+        for fmt in [ValueFormat::F32, ValueFormat::Bf16] {
+            let variant = format!("{}-{}", isa.as_str(), fmt.as_str());
+            let plan = SpmmPlan::new(&packed).with_values(fmt).with_isa(isa);
+            let mut y = Matrix::zeros(vm, vbatch);
+            let epi = Epilogue::default();
+            let stats = bencher.run(&variant, || {
+                engine.execute(&plan, &x, &mut y, &epi);
+                black_box(y.data[0]);
+            });
+            let vs_scalar = medians.first().map(|m| m.2 / stats.median_ns);
+            vtable.row(vec![
+                variant.clone(),
+                format!("{:.0}", stats.median_us()),
+                format!("{:.2}", dense_flops / stats.median_ns),
+                vs_scalar.map_or("1.00×".into(), |r| format!("{r:.2}×")),
+            ]);
+            rows.push(Row {
+                kernel: "planned".into(),
+                m: vm,
+                n: vn,
+                batch: vbatch,
+                threads: 1,
+                sparsity: vtotal,
+                median_us: stats.median_us(),
+                eff_gflops: dense_flops / stats.median_ns,
+                vs_scratch: None,
+                variant: Some(variant),
+            });
+            medians.push((isa, fmt, stats.median_ns));
+        }
+    }
+    vtable.print();
+
+    let variant_ns = |isa: KernelIsa, fmt: ValueFormat| {
+        medians.iter().find(|r| r.0 == isa && r.1 == fmt).map(|r| r.2)
+    };
+    let scalar_f32 = variant_ns(KernelIsa::Scalar, ValueFormat::F32).expect("scalar-f32 row");
+    match variant_ns(KernelIsa::Avx2, ValueFormat::F32) {
+        Some(avx2) => {
+            let r = scalar_f32 / avx2;
+            println!(
+                "variant gate @ b{vbatch}: avx2-f32 = {r:.2}× scalar-f32 (target ≥ 2×)"
+            );
+            below_target |= r < 2.0;
+        }
+        None => println!("variant gate: AVX2 unavailable on this host — avx2-f32 not measured"),
+    }
+    let best = KernelIsa::detect();
+    if let (Some(f32_ns), Some(bf16_ns)) =
+        (variant_ns(best, ValueFormat::F32), variant_ns(best, ValueFormat::Bf16))
+    {
+        let r = f32_ns / bf16_ns;
+        println!(
+            "variant gate @ b{vbatch}: {best}-bf16 = {r:.2}× {best}-f32 (target ≥ 1.3× at batch ≥ 32)"
+        );
+        below_target |= r < 1.3;
     }
 
     if let Some(path) = a.get("json") {

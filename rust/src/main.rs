@@ -65,7 +65,7 @@ fn usage() {
          \x20 info    list AOT artifacts and data dumps\n\
          \x20 serve   [--backend native|pjrt] [--replicas R] [--batch B] [--max-wait-us U]\n\
          \x20         [--kernel-threads K] [--pipeline-stages S] [--blocks N]\n\
-         \x20         [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
+         \x20         [--values f32|bf16] [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
          \x20         sharded batched inference engine; with --http it serves\n\
          \x20         POST /v1/infer, GET /v1/metrics[?format=prometheus], GET /healthz\n\
          \x20         until killed, otherwise it runs a closed-loop load demo;\n\
@@ -265,6 +265,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "native: shard the layer chain across this many pipeline stage workers (1 = off); bit-identical output",
         )
         .opt("blocks", Some("1"), "native: FFN blocks in the synthetic model (2·blocks layers)")
+        .opt(
+            "values",
+            Some("f32"),
+            "native: packed kernel value format (f32 = bit-exact; bf16 = half the kernel memory traffic, f32 accumulate)",
+        )
         .opt("http", None, "serve HTTP/JSON on this address (e.g. 127.0.0.1:8080) until killed")
         .opt("http-workers", Some("8"), "HTTP connection-handler threads")
         .opt("cache-capacity", Some("0"), "per-replica LRU batch-cache entries (0 = off)")
@@ -285,6 +290,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let cache_capacity = a.usize_or("cache-capacity", 0);
     let cache_stats =
         if cache_capacity > 0 { Some(hinm::runtime::CacheStats::new_shared()) } else { None };
+    let values = {
+        let s = a.get_or("values", "f32");
+        hinm::spmm::ValueFormat::parse(&s)
+            .with_context(|| format!("bad --values {s:?} (expected f32|bf16)"))?
+    };
 
     let pipeline_stages = a.usize_or("pipeline-stages", 1).max(1);
     // Keeps the stage workers alive for as long as the engine runs; the
@@ -325,13 +335,17 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                         seed,
                     )?
                 };
-                let model = std::sync::Arc::new(model);
+                let model = std::sync::Arc::new(model.with_value_format(values));
                 println!(
                     "native backend: {d}→{d_ff}→{d} FFN × {blocks} block(s) ({} layers) | V={} total sparsity {:.1}% | {replicas} replicas × {kernel_threads} kernel threads",
                     model.n_layers(),
                     cfg.v,
                     cfg.total_sparsity() * 100.0
                 );
+                // Which microkernel this process actually dispatches to —
+                // ISA tier, value format, and the cache sizes that set the
+                // panel budget (DESIGN.md §16).
+                println!("kernel: {}", hinm::spmm::KernelInfo::current(values));
                 let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
                     .with_replicas(replicas)
                     .with_queue_depth(queue_depth);
@@ -373,6 +387,9 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "pjrt" => {
                 if pipeline_stages > 1 {
                     bail!("--pipeline-stages is native-only (the PJRT artifact is a single compiled graph)");
+                }
+                if values != hinm::spmm::ValueFormat::F32 {
+                    bail!("--values bf16 is native-only (the PJRT artifact fixes its own value types)");
                 }
                 let reg = hinm::runtime::open_default_registry()?;
                 let spec = reg.artifact("ffn_serve")?.clone();
@@ -422,10 +439,15 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let server = hinm::coordinator::BatchServer::start(factory, scfg)?;
 
     if let Some(addr) = a.get("http") {
+        // Native kernels carry a dispatch identity worth exposing on
+        // /v1/metrics; the PJRT path runs whatever the artifact compiled.
+        let kernel_info = (backend == "native")
+            .then(|| hinm::spmm::KernelInfo::current(values));
         let front = hinm::net::HttpFront::start(
             addr,
             server.handle.clone(),
             cache_stats.clone(),
+            kernel_info,
             a.usize_or("http-workers", 8),
         )?;
         println!("HTTP front listening on http://{}", front.local_addr());

@@ -17,7 +17,7 @@
 
 use super::synthetic::SyntheticGen;
 use crate::sparsity::{prune_oneshot, HinmConfig, HinmPacked};
-use crate::spmm::{spmm_with_scratch, Epilogue, SpmmEngine, SpmmPlan, SpmmScratch};
+use crate::spmm::{spmm_with_scratch, Epilogue, SpmmEngine, SpmmPlan, SpmmScratch, ValueFormat};
 use crate::tensor::Matrix;
 use crate::util::rng::Xoshiro256;
 use anyhow::{bail, Result};
@@ -89,6 +89,8 @@ fn ensure_shape(m: &mut Matrix, rows: usize, cols: usize) {
 pub struct HinmModel {
     layers: Vec<HinmLayer>,
     plans: Vec<SpmmPlan>,
+    /// Packed-value format every plan was compiled with (DESIGN.md §16).
+    values: ValueFormat,
 }
 
 impl HinmModel {
@@ -116,7 +118,32 @@ impl HinmModel {
             }
         }
         let plans = layers.iter().map(|l| SpmmPlan::new(&l.packed)).collect();
-        Ok(HinmModel { layers, plans })
+        Ok(HinmModel { layers, plans, values: ValueFormat::F32 })
+    }
+
+    /// Recompile every layer's plan with the given packed-value format
+    /// (builder style). `Bf16` halves kernel memory traffic at the
+    /// accuracy cost documented in DESIGN.md §16; `F32` restores the
+    /// bit-exact default. Recompiling from the retained `HinmPacked`
+    /// layers makes the switch lossless in both directions.
+    pub fn with_value_format(mut self, fmt: ValueFormat) -> HinmModel {
+        if fmt != self.values {
+            self.values = fmt;
+            self.plans = self
+                .layers
+                .iter()
+                .map(|l| match fmt {
+                    ValueFormat::F32 => SpmmPlan::new(&l.packed),
+                    ValueFormat::Bf16 => SpmmPlan::new(&l.packed).with_values(fmt),
+                })
+                .collect();
+        }
+        self
+    }
+
+    /// The packed-value format the plans were compiled with.
+    pub fn value_format(&self) -> ValueFormat {
+        self.values
     }
 
     /// The validated layer sequence.
@@ -227,6 +254,7 @@ impl HinmModel {
             .map(|(a, b)| HinmModel {
                 layers: self.layers[a..b].to_vec(),
                 plans: self.plans[a..b].to_vec(),
+                values: self.values,
             })
             .collect())
     }
@@ -540,6 +568,40 @@ mod tests {
         }
         assert!(model.split_stages(0).is_err());
         assert!(model.split_stages(5).is_err());
+    }
+
+    #[test]
+    fn value_format_recompiles_plans_both_ways() {
+        let l1 = HinmLayer::new(packed(32, 16, 71)).with_activation(Activation::Relu);
+        let l2 = HinmLayer::new(packed(16, 32, 72)).with_bias(vec![0.1; 16]);
+        let model = HinmModel::new(vec![l1, l2]).unwrap();
+        let engine = SpmmEngine::single();
+        let mut rng = Xoshiro256::new(73);
+        let x = Matrix::randn(16, 5, 1.0, &mut rng);
+        let mut bufs = ActivationBuffers::new();
+        let want = model.forward_planned(&x, &engine, &mut bufs);
+
+        let model16 = model.clone().with_value_format(ValueFormat::Bf16);
+        assert_eq!(model16.value_format(), ValueFormat::Bf16);
+        assert!(model16.plans().iter().all(|p| p.values() == ValueFormat::Bf16));
+        // Stages inherit the format (split clones plans, never recompiles).
+        let stages = model16.split_stages(2).unwrap();
+        assert!(stages.iter().all(|s| s.value_format() == ValueFormat::Bf16));
+        assert!(stages.iter().flat_map(|s| s.plans()).all(|p| p.values() == ValueFormat::Bf16));
+        // bf16 tracks the f32 forward closely (per-element bounds are the
+        // business of tests/spmm_microkernel.rs; this checks the plumbing).
+        let got = model16.forward_planned(&x, &engine, &mut bufs);
+        assert_eq!(got.shape(), want.shape());
+        let den: f32 = want.data.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let num: f32 =
+            got.data.iter().zip(&want.data).map(|(g, w)| (g - w) * (g - w)).sum::<f32>().sqrt();
+        assert!(num <= 0.05 * den.max(1.0), "relative error {} too large", num / den.max(1.0));
+        // Switching back recompiles from the retained packed layers, so the
+        // f32 path is restored bit-exactly.
+        let back = model16.with_value_format(ValueFormat::F32);
+        assert_eq!(back.value_format(), ValueFormat::F32);
+        let again = back.forward_planned(&x, &engine, &mut bufs);
+        assert_eq!(bits(&again), bits(&want));
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod protocol;
 
 use crate::coordinator::serve::ServerHandle;
 use crate::runtime::backend::CacheStats;
+use crate::spmm::KernelInfo;
 use crate::util::json::{self, Json};
 use anyhow::Result;
 use http::{Handler, HttpRequest, HttpResponse, HttpServer};
@@ -55,7 +56,7 @@ pub use http::HttpClient;
 ///     ServeConfig::new(4, Duration::from_micros(100)),
 /// )?;
 /// // Port 0 binds an ephemeral port; `local_addr` resolves it.
-/// let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, 2)?;
+/// let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, None, 2)?;
 /// let mut client = HttpClient::connect(front.local_addr())?;
 /// let (status, body) = client.get("/healthz")?;
 /// assert_eq!(status, 200);
@@ -73,15 +74,18 @@ impl HttpFront {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve the
     /// engine behind `handle` with `workers` connection-handler threads.
     /// Pass the engine's shared [`CacheStats`] to expose cache counters on
-    /// `/v1/metrics`.
+    /// `/v1/metrics`, and the backend's [`KernelInfo`] (native backends:
+    /// [`crate::runtime::backend::NativeCpuBackend::kernel_info`]) to
+    /// label the metrics with the dispatched microkernel variant.
     pub fn start(
         addr: &str,
         handle: ServerHandle,
         cache: Option<Arc<CacheStats>>,
+        kernel: Option<KernelInfo>,
         workers: usize,
     ) -> Result<HttpFront> {
         let handler: Handler =
-            Arc::new(move |req: &HttpRequest| route(req, &handle, cache.as_deref()));
+            Arc::new(move |req: &HttpRequest| route(req, &handle, cache.as_deref(), kernel));
         let server = HttpServer::start(addr, handler, workers)?;
         Ok(HttpFront { server })
     }
@@ -98,7 +102,12 @@ impl HttpFront {
     }
 }
 
-fn route(req: &HttpRequest, engine: &ServerHandle, cache: Option<&CacheStats>) -> HttpResponse {
+fn route(
+    req: &HttpRequest,
+    engine: &ServerHandle,
+    cache: Option<&CacheStats>,
+    kernel: Option<KernelInfo>,
+) -> HttpResponse {
     let path = req.path.split('?').next().unwrap_or("");
     match path {
         "/healthz" => match req.method.as_str() {
@@ -109,7 +118,7 @@ fn route(req: &HttpRequest, engine: &ServerHandle, cache: Option<&CacheStats>) -
             _ => method_not_allowed(req, "GET"),
         },
         "/v1/metrics" => match req.method.as_str() {
-            "GET" => metrics_route(req, engine, cache),
+            "GET" => metrics_route(req, engine, cache, kernel),
             _ => method_not_allowed(req, "GET"),
         },
         "/v1/infer" => match req.method.as_str() {
@@ -133,6 +142,7 @@ fn metrics_route(
     req: &HttpRequest,
     engine: &ServerHandle,
     cache: Option<&CacheStats>,
+    kernel: Option<KernelInfo>,
 ) -> HttpResponse {
     let query = req.path.split_once('?').map(|(_, q)| q).unwrap_or("");
     let format = query
@@ -140,11 +150,14 @@ fn metrics_route(
         .find_map(|kv| kv.strip_prefix("format="))
         .unwrap_or("json");
     match format {
-        "json" => HttpResponse::json(200, protocol::metrics_json(engine.metrics(), cache).compact()),
+        "json" => HttpResponse::json(
+            200,
+            protocol::metrics_json(engine.metrics(), cache, kernel.as_ref()).compact(),
+        ),
         "prometheus" => HttpResponse {
             status: 200,
             content_type: PROMETHEUS_CONTENT_TYPE,
-            body: protocol::metrics_prometheus(engine.metrics(), cache),
+            body: protocol::metrics_prometheus(engine.metrics(), cache, kernel.as_ref()),
         },
         other => HttpResponse::json(
             400,

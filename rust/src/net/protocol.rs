@@ -17,6 +17,7 @@
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::serve::{InferError, Priority};
 use crate::runtime::backend::CacheStats;
+use crate::spmm::KernelInfo;
 use crate::util::json::Json;
 
 /// One parsed `POST /v1/infer` body.
@@ -125,9 +126,16 @@ pub fn status_for(e: &InferError) -> (u16, &'static str) {
 }
 
 /// `GET /v1/metrics` body: aggregate latency/throughput, per-priority and
-/// expiry counters, per-replica counters, and cache hit/miss stats when a
-/// [`CachedBackend`](crate::runtime::backend::CachedBackend) is active.
-pub fn metrics_json(m: &EngineMetrics, cache: Option<&CacheStats>) -> Json {
+/// expiry counters, per-replica counters, cache hit/miss stats when a
+/// [`CachedBackend`](crate::runtime::backend::CachedBackend) is active,
+/// and — when the serving backend exposes one — a `kernel` block with the
+/// dispatched microkernel variant and detected cache sizes (DESIGN.md
+/// §16), so operators can see which kernel a replica actually runs.
+pub fn metrics_json(
+    m: &EngineMetrics,
+    cache: Option<&CacheStats>,
+    kernel: Option<&KernelInfo>,
+) -> Json {
     let lat = m.aggregate_latency();
     let pct = lat.percentiles(&[50.0, 95.0, 99.0]);
     let sched = m.scheduler_stats();
@@ -181,15 +189,36 @@ pub fn metrics_json(m: &EngineMetrics, cache: Option<&CacheStats>) -> Json {
             ]),
         ));
     }
+    if let Some(k) = kernel {
+        let mut kp = vec![
+            ("isa", Json::str(k.isa.as_str())),
+            ("values", Json::str(k.values.as_str())),
+            ("variant", Json::str(&k.variant())),
+            ("panel_target_bytes", Json::num(k.panel_target_bytes as f64)),
+        ];
+        if let Some(b) = k.cache.l1d_bytes {
+            kp.push(("l1d_bytes", Json::num(b as f64)));
+        }
+        if let Some(b) = k.cache.l2_bytes {
+            kp.push(("l2_bytes", Json::num(b as f64)));
+        }
+        pairs.push(("kernel", Json::obj(kp)));
+    }
     Json::obj(pairs)
 }
 
 /// `GET /v1/metrics?format=prometheus` body: the same counters as
 /// [`metrics_json`] rendered in the Prometheus text exposition format
 /// (version 0.0.4) — latency as a `summary` with quantile labels,
-/// per-priority / per-replica counters as labeled `counter` families, and
-/// cache hit/miss counters when a cache is active.
-pub fn metrics_prometheus(m: &EngineMetrics, cache: Option<&CacheStats>) -> String {
+/// per-priority / per-replica counters as labeled `counter` families,
+/// cache hit/miss counters when a cache is active, and the dispatched
+/// microkernel as an info-style gauge (`hinm_kernel_info{isa=…,values=…} 1`
+/// plus panel/cache byte gauges) when the backend exposes one.
+pub fn metrics_prometheus(
+    m: &EngineMetrics,
+    cache: Option<&CacheStats>,
+    kernel: Option<&KernelInfo>,
+) -> String {
     // One family = HELP + TYPE + its samples, emitted as a single group
     // (the exposition format forbids interleaving a family's samples with
     // other families).
@@ -319,6 +348,43 @@ pub fn metrics_prometheus(m: &EngineMetrics, cache: Option<&CacheStats>) -> Stri
         );
     }
 
+    if let Some(k) = kernel {
+        family(
+            &mut out,
+            "hinm_kernel_info",
+            "gauge",
+            "Dispatched SpMM microkernel (labels carry the identity; value is always 1).",
+            &[format!(
+                "hinm_kernel_info{{isa=\"{}\",values=\"{}\"}} 1",
+                k.isa.as_str(),
+                k.values.as_str()
+            )],
+        );
+        family(
+            &mut out,
+            "hinm_kernel_panel_target_bytes",
+            "gauge",
+            "Cache-derived byte budget used to size the staged xbuf panel.",
+            &[format!("hinm_kernel_panel_target_bytes {}", k.panel_target_bytes)],
+        );
+        let mut caches = Vec::new();
+        if let Some(b) = k.cache.l1d_bytes {
+            caches.push(format!("hinm_kernel_cache_bytes{{level=\"l1d\"}} {b}"));
+        }
+        if let Some(b) = k.cache.l2_bytes {
+            caches.push(format!("hinm_kernel_cache_bytes{{level=\"l2\"}} {b}"));
+        }
+        if !caches.is_empty() {
+            family(
+                &mut out,
+                "hinm_kernel_cache_bytes",
+                "gauge",
+                "Data-cache sizes detected from sysfs at kernel dispatch.",
+                &caches,
+            );
+        }
+    }
+
     out
 }
 
@@ -387,12 +453,13 @@ mod tests {
     fn metrics_prometheus_groups_families_and_honors_the_cache() {
         let m = EngineMetrics::new(2);
         m.scheduler.lock().unwrap().served[Priority::High.index()] = 3;
-        let text = metrics_prometheus(&m, None);
+        let text = metrics_prometheus(&m, None, None);
         assert!(text.contains("# TYPE hinm_requests_total counter"), "{text}");
         assert!(text.contains("# TYPE hinm_request_latency_microseconds summary"));
         assert!(text.contains("hinm_requests_served_total{priority=\"high\"} 3"));
         assert!(text.contains("hinm_replica_batches_total{replica=\"1\"} 0"));
         assert!(!text.contains("hinm_cache_hits_total"), "no cache family without a cache");
+        assert!(!text.contains("hinm_kernel_info"), "no kernel family without a kernel");
         // Every family is one contiguous group: a TYPE line, then only that
         // family's samples until the next comment line.
         let mut current: Option<String> = None;
@@ -408,21 +475,37 @@ mod tests {
             }
         }
         let stats = CacheStats::new_shared();
-        let text = metrics_prometheus(&m, Some(stats.as_ref()));
+        let ki = KernelInfo::current(crate::spmm::ValueFormat::Bf16);
+        let text = metrics_prometheus(&m, Some(stats.as_ref()), Some(&ki));
         assert!(text.contains("hinm_cache_hits_total 0"));
         assert!(text.contains("hinm_cache_misses_total 0"));
+        assert!(text.contains("values=\"bf16\"} 1"), "{text}");
+        assert!(
+            text.contains(&format!("hinm_kernel_info{{isa=\"{}\"", ki.isa.as_str())),
+            "{text}"
+        );
+        assert!(text
+            .contains(&format!("hinm_kernel_panel_target_bytes {}", ki.panel_target_bytes)));
     }
 
     #[test]
     fn metrics_json_has_the_documented_shape() {
         let m = EngineMetrics::new(2);
         m.scheduler.lock().unwrap().served[Priority::High.index()] = 3;
-        let v = metrics_json(&m, None);
+        let v = metrics_json(&m, None, None);
         assert_eq!(v.get("priorities").get("high").as_usize(), Some(3));
         assert_eq!(v.get("replicas").as_arr().unwrap().len(), 2);
         assert!(v.get("cache").as_obj().is_none(), "no cache block without a cache");
+        assert!(v.get("kernel").as_obj().is_none(), "no kernel block without a kernel");
         let stats = CacheStats::new_shared();
-        let v = metrics_json(&m, Some(stats.as_ref()));
+        let ki = KernelInfo::current(crate::spmm::ValueFormat::F32);
+        let v = metrics_json(&m, Some(stats.as_ref()), Some(&ki));
         assert_eq!(v.get("cache").get("hits").as_usize(), Some(0));
+        assert_eq!(v.get("kernel").get("values").as_str(), Some("f32"));
+        assert_eq!(v.get("kernel").get("isa").as_str(), Some(ki.isa.as_str()));
+        assert_eq!(
+            v.get("kernel").get("panel_target_bytes").as_usize(),
+            Some(ki.panel_target_bytes)
+        );
     }
 }

@@ -32,7 +32,7 @@
 use crate::models::chain::{ActivationBuffers, HinmModel};
 use crate::runtime::executor::{lit_f32, lit_i32, lit_to_matrix, Executor};
 use crate::runtime::registry::ArtifactSpec;
-use crate::spmm::SpmmEngine;
+use crate::spmm::{KernelInfo, SpmmEngine};
 use crate::tensor::Matrix;
 use anyhow::{ensure, Result};
 use std::collections::HashMap;
@@ -130,6 +130,13 @@ impl NativeCpuBackend {
     /// Kernel lanes this backend runs tiles on.
     pub fn kernel_threads(&self) -> usize {
         self.engine.lanes()
+    }
+
+    /// The microkernel identity this backend's plans dispatch to (ISA
+    /// tier, value format, panel budget + detected caches) — what the
+    /// serve startup log and `/v1/metrics` report (DESIGN.md §16).
+    pub fn kernel_info(&self) -> KernelInfo {
+        KernelInfo::current(self.model.value_format())
     }
 }
 

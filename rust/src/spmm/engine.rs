@@ -18,6 +18,7 @@
 //! (DESIGN.md §4), now on the serving hot path (§14).
 
 use super::epilogue::Epilogue;
+use super::microkernel::TileScratch;
 use super::plan::SpmmPlan;
 use crate::tensor::Matrix;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -230,14 +231,6 @@ impl Drop for SignalDone<'_> {
     }
 }
 
-/// Per-lane kernel scratch: the staged input panel and the row-local
-/// accumulator (the "shared memory" of a software thread block).
-#[derive(Default)]
-struct LaneScratch {
-    xbuf: Vec<f32>,
-    acc: Vec<f32>,
-}
-
 /// The planned-SpMM execution engine: a [`KernelPool`] plus one reusable
 /// scratch block per lane. Build it once (per backend / per bench) and run
 /// any number of plans through it — the hot path never allocates.
@@ -263,14 +256,14 @@ struct LaneScratch {
 /// ```
 pub struct SpmmEngine {
     pool: KernelPool,
-    lanes: Vec<Mutex<LaneScratch>>,
+    lanes: Vec<Mutex<TileScratch>>,
 }
 
 impl SpmmEngine {
     /// Engine with `threads` compute lanes (0 = available parallelism).
     pub fn new(threads: usize) -> SpmmEngine {
         let pool = KernelPool::new(threads);
-        let lanes = (0..pool.lanes()).map(|_| Mutex::new(LaneScratch::default())).collect();
+        let lanes = (0..pool.lanes()).map(|_| Mutex::new(TileScratch::default())).collect();
         SpmmEngine { pool, lanes }
     }
 
@@ -311,7 +304,7 @@ impl SpmmEngine {
             let mut guard = self.lanes[0].lock().unwrap();
             let sc = &mut *guard;
             for (t, ytile) in y.data.chunks_mut(tile_len).enumerate() {
-                plan.run_tile(t, x, ytile, epi, &mut sc.xbuf, &mut sc.acc);
+                plan.run_tile(t, x, ytile, epi, sc);
             }
             return;
         }
@@ -334,7 +327,7 @@ impl SpmmEngine {
                 let ytile = unsafe {
                     std::slice::from_raw_parts_mut(ybase.0.add(t * tile_len), tile_len)
                 };
-                plan.run_tile(t, x, ytile, epi, &mut sc.xbuf, &mut sc.acc);
+                plan.run_tile(t, x, ytile, epi, sc);
             }
         };
         self.pool.run(&job);

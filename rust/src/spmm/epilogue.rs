@@ -319,6 +319,34 @@ mod tests {
     }
 
     #[test]
+    fn fused_epilogue_handles_sub_vector_tail_widths() {
+        // The planned kernel hands the epilogue accumulator segments of
+        // whatever width the batch tail left over — including widths
+        // narrower than any SIMD register block. Fused must stay
+        // bit-identical to unfused at every such width.
+        let mut rng = Xoshiro256::new(44);
+        let bias = [0.25f32];
+        for width in [1usize, 2, 3, 5, 7, 9, 15] {
+            let acc: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+            let mut fused = vec![0.0f32; width];
+            Epilogue::new(Some(&bias), Activation::Relu).apply_slice(0, &acc, &mut fused);
+            let unfused = {
+                let mut m = Matrix::from_vec(1, width, acc.clone());
+                for v in &mut m.data {
+                    *v += bias[0];
+                }
+                Activation::Relu.apply(&mut m);
+                m.data
+            };
+            assert_eq!(
+                fused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                unfused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "width {width}"
+            );
+        }
+    }
+
+    #[test]
     fn empty_epilogue_is_a_copy() {
         let acc = vec![1.5f32, -0.0, 3.0];
         let mut out = vec![9.0f32; 3];

@@ -1,0 +1,909 @@
+//! Register-blocked, runtime-dispatched SpMM row microkernels (DESIGN.md
+//! §16): the innermost fold of [`super::SpmmPlan`], vectorized across
+//! batch lanes with `std::arch`, plus the machinery that decides *which*
+//! kernel runs — ISA detection, packed-value format, and cache-size
+//! driven panel sizing.
+//!
+//! NM-SpMM (arXiv:2503.01253) gets dense-class throughput out of N:M
+//! layouts by (a) resolving all sparse index math ahead of time and
+//! (b) running the surviving inner loop as a dense, register-blocked
+//! vector pipeline; VENOM (arXiv:2310.02065) shows the same for V-grouped
+//! formats, whose vector rows map 1:1 onto our HiNM V-vectors. The plan
+//! layer already did (a) — this module is (b) for the CPU serving path.
+//!
+//! **Dispatch.** [`KernelIsa::detect`] probes the host once (cached) with
+//! `is_x86_feature_detected!`: AVX2+FMA → [`KernelIsa::Avx2`], else SSE2 →
+//! [`KernelIsa::Sse2`], else the portable scalar fold. The scalar kernel
+//! is also the bitwise oracle the vector paths are tested against, and
+//! `HINM_FORCE_KERNEL=scalar|sse2|avx2` force-*downgrades* the dispatch
+//! (never upgrades past what the host supports) so CI can pin the
+//! fallback paths on any runner.
+//!
+//! **Bit-identity.** Every output element folds its kept terms in slot
+//! order as the strict serial chain `((0 + w₀x₀) + w₁x₁) + …` with plain
+//! mul-then-add — never `mul_add`, because FMA contracts the intermediate
+//! rounding step and changes bits. The vector kernels put *batch lanes*
+//! in SIMD lanes: lane `j` of the accumulator register performs exactly
+//! the scalar chain for batch column `j`, just eight (or four) columns at
+//! a time, so AVX2/SSE2/scalar all produce identical bits (enforced by
+//! `tests/spmm_microkernel.rs`).
+//!
+//! **bf16.** [`ValueFormat::Bf16`] stores the weight stream and the
+//! staged panel as bfloat16 (f32 with the low 16 mantissa bits dropped,
+//! round-to-nearest-even) and accumulates in f32. That halves the bytes
+//! the hot loop streams — the binding constraint NM-SpMM identifies at
+//! serving batch widths — at a bounded accuracy cost: each operand
+//! carries ≤ 2⁻⁸ relative rounding error, so per output element
+//! `|y_bf16 − y_f32| ≤ 2⁻⁷ · Σᵢ|wᵢxᵢ|` (one 2⁻⁸ for each operand of the
+//! product, first order). The bound is checked property-style against
+//! the f32 oracle, with a pure ulp bound on cancellation-free sweeps,
+//! in the same discipline as the §13 `gelu_fast` tests.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Numeric format of a plan's packed value stream and staged panel
+/// (accumulation is always f32); see [`super::SpmmPlan::with_values`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ValueFormat {
+    /// 32-bit IEEE floats end to end — the bit-exact default.
+    #[default]
+    F32,
+    /// bfloat16 weights + panel, f32 accumulate: half the memory traffic,
+    /// accuracy bounded as documented in the module docs / DESIGN.md §16.
+    Bf16,
+}
+
+impl ValueFormat {
+    /// Stable lowercase name (`"f32"` / `"bf16"`), used in logs, metrics
+    /// labels, and bench row tags.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ValueFormat::F32 => "f32",
+            ValueFormat::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a `--values` flag value (case-insensitive). Returns `None`
+    /// for anything that is not `f32` or `bf16`.
+    pub fn parse(s: &str) -> Option<ValueFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" => Some(ValueFormat::F32),
+            "bf16" => Some(ValueFormat::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored value in this format.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            ValueFormat::F32 => 4,
+            ValueFormat::Bf16 => 2,
+        }
+    }
+}
+
+impl fmt::Display for ValueFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The instruction-set tier a plan's row fold dispatches to. Ordered:
+/// `Scalar < Sse2 < Avx2`, so "downgrade" is meaningful.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelIsa {
+    /// Portable Rust fold — the bitwise oracle and the only tier on
+    /// non-x86_64 targets.
+    Scalar,
+    /// SSE2 128-bit lanes (baseline on every x86_64).
+    Sse2,
+    /// AVX2 256-bit lanes (detected together with FMA, though the f32
+    /// fold deliberately never contracts to FMA — see module docs).
+    Avx2,
+}
+
+impl KernelIsa {
+    /// Stable lowercase name (`"scalar"` / `"sse2"` / `"avx2"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Sse2 => "sse2",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a tier name (case-insensitive): `scalar`, `sse2`, or `avx2`.
+    pub fn parse(s: &str) -> Option<KernelIsa> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelIsa::Scalar),
+            "sse2" => Some(KernelIsa::Sse2),
+            "avx2" => Some(KernelIsa::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Every tier the host can actually execute, ascending (always starts
+    /// with `Scalar`). Tests sweep this list so they stay meaningful on
+    /// hosts without AVX2.
+    pub fn available() -> &'static [KernelIsa] {
+        static AVAILABLE: OnceLock<Vec<KernelIsa>> = OnceLock::new();
+        AVAILABLE.get_or_init(|| {
+            let mut tiers = vec![KernelIsa::Scalar];
+            #[cfg(target_arch = "x86_64")]
+            {
+                if is_x86_feature_detected!("sse2") {
+                    tiers.push(KernelIsa::Sse2);
+                }
+                if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                    tiers.push(KernelIsa::Avx2);
+                }
+            }
+            tiers
+        })
+    }
+
+    /// The tier new plans dispatch to: the best available one, probed once
+    /// per process and cached. `HINM_FORCE_KERNEL=scalar|sse2|avx2` caps
+    /// the result (downgrade-only: forcing a tier the host lacks, or a
+    /// tier above the detected one, has no effect) so the fallback paths
+    /// can be exercised on capable hardware — see `.github/workflows/ci.yml`.
+    pub fn detect() -> KernelIsa {
+        static DETECTED: OnceLock<KernelIsa> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            let best = *KernelIsa::available().last().unwrap_or(&KernelIsa::Scalar);
+            match std::env::var("HINM_FORCE_KERNEL").ok().as_deref().and_then(KernelIsa::parse) {
+                Some(forced) => best.min(forced),
+                None => best,
+            }
+        })
+    }
+}
+
+impl fmt::Display for KernelIsa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bf16 conversion
+// ---------------------------------------------------------------------------
+
+/// Convert f32 → bf16 with round-to-nearest-even (the top 16 bits of the
+/// f32, rounded). NaNs are quieted so a payload truncation can never
+/// produce an infinity.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Add 0x7FFF + (lsb of the kept part) then truncate: classic RNE.
+    // Values that round past f32::MAX correctly carry into the bf16
+    // infinity encoding.
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Convert bf16 → f32 (exact: bf16 is a prefix of the f32 encoding).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// Cache detection and panel sizing
+// ---------------------------------------------------------------------------
+
+/// Fallback byte budget for the staged `xbuf` panel when no cache size
+/// can be detected — the historical compile-time constant (comfortably
+/// inside L2 with the hot half in L1 on common parts).
+pub const PANEL_TARGET_BYTES: usize = 48 * 1024;
+
+/// Data-cache sizes detected at runtime (Linux sysfs); `None` fields mean
+/// the probe found nothing, not a zero-sized cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheInfo {
+    /// Per-core L1 data cache in bytes.
+    pub l1d_bytes: Option<usize>,
+    /// L2 (unified or data) cache in bytes.
+    pub l2_bytes: Option<usize>,
+}
+
+/// Cache sizes for this host, probed once per process from
+/// `/sys/devices/system/cpu/cpu0/cache/index*` and cached. Returns an
+/// empty [`CacheInfo`] on platforms without that sysfs tree.
+pub fn cache_info() -> CacheInfo {
+    static CACHE: OnceLock<CacheInfo> = OnceLock::new();
+    *CACHE.get_or_init(read_cache_sysfs)
+}
+
+fn read_cache_sysfs() -> CacheInfo {
+    let mut info = CacheInfo::default();
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let Ok(entries) = std::fs::read_dir(base) else {
+        return info;
+    };
+    for entry in entries.flatten() {
+        if !entry.file_name().to_string_lossy().starts_with("index") {
+            continue;
+        }
+        let dir = entry.path();
+        let read = |name: &str| -> Option<String> {
+            std::fs::read_to_string(dir.join(name)).ok().map(|s| s.trim().to_string())
+        };
+        let (Some(level), Some(ty), Some(size)) = (read("level"), read("type"), read("size"))
+        else {
+            continue;
+        };
+        let Some(bytes) = parse_cache_size(&size) else {
+            continue;
+        };
+        match (level.as_str(), ty.as_str()) {
+            ("1", "Data") => info.l1d_bytes = Some(bytes),
+            ("2", "Unified") | ("2", "Data") => info.l2_bytes = Some(bytes),
+            _ => {}
+        }
+    }
+    info
+}
+
+/// Parse a sysfs cache size string (`"48K"`, `"2048K"`, `"1M"`, plain
+/// bytes). Returns `None` on anything unrecognized.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let t = s.trim();
+    if t.is_empty() {
+        return None;
+    }
+    let (digits, mult) = match t.as_bytes()[t.len() - 1] {
+        b'K' | b'k' => (&t[..t.len() - 1], 1024usize),
+        b'M' | b'm' => (&t[..t.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&t[..t.len() - 1], 1024 * 1024 * 1024),
+        _ => (t, 1),
+    };
+    digits.parse::<usize>().ok().map(|n| n.saturating_mul(mult))
+}
+
+/// The panel byte budget `pick_batch_block` aims for: the detected L1d
+/// size clamped to `[16 KiB, 256 KiB]` (the panel is the hottest block of
+/// the kernel, so it should own L1d), or [`PANEL_TARGET_BYTES`] when no
+/// cache size is detected. Probed once per process.
+pub fn panel_target_bytes() -> usize {
+    match cache_info().l1d_bytes {
+        Some(l1d) => l1d.clamp(16 * 1024, 256 * 1024),
+        None => PANEL_TARGET_BYTES,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel identity (for logs / metrics)
+// ---------------------------------------------------------------------------
+
+/// What the microkernel dispatcher decided on this host: ISA tier, value
+/// format, panel budget, and the cache sizes behind it. Surfaced in the
+/// `hinm serve` startup log and as labels on `/v1/metrics`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelInfo {
+    /// Dispatched instruction-set tier ([`KernelIsa::detect`]).
+    pub isa: KernelIsa,
+    /// Packed-value format the plans were compiled with.
+    pub values: ValueFormat,
+    /// Byte budget used for `xbuf` panel sizing ([`panel_target_bytes`]).
+    pub panel_target_bytes: usize,
+    /// Detected cache sizes (may be empty off-Linux).
+    pub cache: CacheInfo,
+}
+
+impl KernelInfo {
+    /// Snapshot the dispatcher state for plans compiled with `values`.
+    pub fn current(values: ValueFormat) -> KernelInfo {
+        KernelInfo {
+            isa: KernelIsa::detect(),
+            values,
+            panel_target_bytes: panel_target_bytes(),
+            cache: cache_info(),
+        }
+    }
+
+    /// Combined variant tag, e.g. `"avx2-f32"` — the label benches and
+    /// metrics key rows by.
+    pub fn variant(&self) -> String {
+        format!("{}-{}", self.isa.as_str(), self.values.as_str())
+    }
+}
+
+impl fmt::Display for KernelInfo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use crate::util::human_bytes;
+        write!(f, "{} | panel target {}", self.variant(), human_bytes(self.panel_target_bytes))?;
+        match (self.cache.l1d_bytes, self.cache.l2_bytes) {
+            (Some(l1), Some(l2)) => {
+                write!(f, " (L1d {}, L2 {})", human_bytes(l1), human_bytes(l2))
+            }
+            (Some(l1), None) => write!(f, " (L1d {})", human_bytes(l1)),
+            (None, Some(l2)) => write!(f, " (L2 {})", human_bytes(l2)),
+            (None, None) => write!(f, " (cache sizes undetected)"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch
+// ---------------------------------------------------------------------------
+
+/// Per-lane kernel scratch: the staged input panel (f32 or bf16 flavor,
+/// whichever the plan's value format needs) and the f32 row accumulator —
+/// the "shared memory" of a software thread block. Grown on first use,
+/// reused across tiles and calls.
+#[derive(Default)]
+pub struct TileScratch {
+    pub(crate) xbuf: Vec<f32>,
+    pub(crate) xbuf16: Vec<u16>,
+    pub(crate) acc: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// Row folds — f32
+// ---------------------------------------------------------------------------
+
+/// Fold one output row's `(w, off)` stream over the staged f32 panel into
+/// `acc[..bw]`, dispatched by `isa`. The panel is `k_v` rows of `bb`
+/// lanes; `bw ≤ bb` lanes are live. Every ISA path computes the identical
+/// per-lane serial chain (module docs), so the choice of `isa` never
+/// changes output bits.
+pub(crate) fn fold_row_f32(
+    isa: KernelIsa,
+    wts: &[f32],
+    offs: &[u32],
+    xbuf: &[f32],
+    bb: usize,
+    bw: usize,
+    acc: &mut [f32],
+) {
+    debug_assert_eq!(wts.len(), offs.len());
+    debug_assert!(bw <= bb && bw <= acc.len());
+    match isa {
+        KernelIsa::Scalar => fold_f32_lanes(wts, offs, xbuf, bb, 0, bw, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the matched tier is only ever reached when
+        // `KernelIsa::available()` listed it (plan construction/downgrade
+        // enforce this), so the required CPU features are present; slice
+        // bounds are the caller contract checked above.
+        KernelIsa::Sse2 => unsafe { fold_f32_sse2(wts, offs, xbuf, bb, bw, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — Avx2 is dispatched only on hosts that report it.
+        KernelIsa::Avx2 => unsafe { fold_f32_avx2(wts, offs, xbuf, bb, bw, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Sse2 | KernelIsa::Avx2 => fold_f32_lanes(wts, offs, xbuf, bb, 0, bw, acc),
+    }
+}
+
+/// Scalar fold for batch lanes `lo..hi` (the oracle path, and the tail of
+/// every vector path). Two slots per pass to halve loop overhead; each
+/// lane still folds `((a + w₀x₀) + w₁x₁)` — the bit-level contract.
+fn fold_f32_lanes(
+    wts: &[f32],
+    offs: &[u32],
+    xbuf: &[f32],
+    bb: usize,
+    lo: usize,
+    hi: usize,
+    acc: &mut [f32],
+) {
+    let width = hi - lo;
+    let a = &mut acc[lo..hi];
+    a.fill(0.0);
+    let n = wts.len();
+    let mut s = 0;
+    while s + 2 <= n {
+        let w0 = wts[s];
+        let w1 = wts[s + 1];
+        let x0 = &xbuf[offs[s] as usize * bb + lo..][..width];
+        let x1 = &xbuf[offs[s + 1] as usize * bb + lo..][..width];
+        for ((av, &b), &c) in a.iter_mut().zip(x0).zip(x1) {
+            let partial = *av + w0 * b;
+            *av = partial + w1 * c;
+        }
+        s += 2;
+    }
+    if s < n {
+        let w0 = wts[s];
+        let x0 = &xbuf[offs[s] as usize * bb + lo..][..width];
+        for (av, &b) in a.iter_mut().zip(x0) {
+            *av += w0 * b;
+        }
+    }
+}
+
+/// AVX2 f32 fold: 16 batch lanes per register block (two `ymm`
+/// accumulators held across the whole slot stream — one store per lane
+/// per row), then an 8-lane block, then the scalar tail. Plain
+/// `mul_ps`/`add_ps`, never FMA, so lane `j` computes the exact scalar
+/// chain.
+///
+/// # Safety
+///
+/// Requires AVX2. For every slot `s`: `offs[s] as usize * bb + bw <=
+/// xbuf.len()`; also `bw <= acc.len()` and `wts.len() == offs.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fold_f32_avx2(
+    wts: &[f32],
+    offs: &[u32],
+    xbuf: &[f32],
+    bb: usize,
+    bw: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let n = wts.len();
+    let xp = xbuf.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut j = 0;
+    while j + 16 <= bw {
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm256_set1_ps(*wts.get_unchecked(s));
+            let w1 = _mm256_set1_ps(*wts.get_unchecked(s + 1));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            let r1 = xp.add(*offs.get_unchecked(s + 1) as usize * bb + j);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w0, _mm256_loadu_ps(r0)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(w0, _mm256_loadu_ps(r0.add(8))));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w1, _mm256_loadu_ps(r1)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(w1, _mm256_loadu_ps(r1.add(8))));
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm256_set1_ps(*wts.get_unchecked(s));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w0, _mm256_loadu_ps(r0)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(w0, _mm256_loadu_ps(r0.add(8))));
+        }
+        _mm256_storeu_ps(ap.add(j), a0);
+        _mm256_storeu_ps(ap.add(j + 8), a1);
+        j += 16;
+    }
+    if j + 8 <= bw {
+        let mut a0 = _mm256_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm256_set1_ps(*wts.get_unchecked(s));
+            let w1 = _mm256_set1_ps(*wts.get_unchecked(s + 1));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            let r1 = xp.add(*offs.get_unchecked(s + 1) as usize * bb + j);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w0, _mm256_loadu_ps(r0)));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w1, _mm256_loadu_ps(r1)));
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm256_set1_ps(*wts.get_unchecked(s));
+            a0 = _mm256_add_ps(
+                a0,
+                _mm256_mul_ps(w0, _mm256_loadu_ps(xp.add(*offs.get_unchecked(s) as usize * bb + j))),
+            );
+        }
+        _mm256_storeu_ps(ap.add(j), a0);
+        j += 8;
+    }
+    if j < bw {
+        fold_f32_lanes(wts, offs, xbuf, bb, j, bw, acc);
+    }
+}
+
+/// SSE2 f32 fold: 8 batch lanes per register block (two `xmm`
+/// accumulators), then a 4-lane block, then the scalar tail. Same serial
+/// chain per lane as the scalar oracle.
+///
+/// # Safety
+///
+/// Requires SSE2 (x86_64 baseline). Same slice preconditions as
+/// [`fold_f32_avx2`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn fold_f32_sse2(
+    wts: &[f32],
+    offs: &[u32],
+    xbuf: &[f32],
+    bb: usize,
+    bw: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let n = wts.len();
+    let xp = xbuf.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut j = 0;
+    while j + 8 <= bw {
+        let mut a0 = _mm_setzero_ps();
+        let mut a1 = _mm_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm_set1_ps(*wts.get_unchecked(s));
+            let w1 = _mm_set1_ps(*wts.get_unchecked(s + 1));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            let r1 = xp.add(*offs.get_unchecked(s + 1) as usize * bb + j);
+            a0 = _mm_add_ps(a0, _mm_mul_ps(w0, _mm_loadu_ps(r0)));
+            a1 = _mm_add_ps(a1, _mm_mul_ps(w0, _mm_loadu_ps(r0.add(4))));
+            a0 = _mm_add_ps(a0, _mm_mul_ps(w1, _mm_loadu_ps(r1)));
+            a1 = _mm_add_ps(a1, _mm_mul_ps(w1, _mm_loadu_ps(r1.add(4))));
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm_set1_ps(*wts.get_unchecked(s));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            a0 = _mm_add_ps(a0, _mm_mul_ps(w0, _mm_loadu_ps(r0)));
+            a1 = _mm_add_ps(a1, _mm_mul_ps(w0, _mm_loadu_ps(r0.add(4))));
+        }
+        _mm_storeu_ps(ap.add(j), a0);
+        _mm_storeu_ps(ap.add(j + 4), a1);
+        j += 8;
+    }
+    if j + 4 <= bw {
+        let mut a0 = _mm_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm_set1_ps(*wts.get_unchecked(s));
+            let w1 = _mm_set1_ps(*wts.get_unchecked(s + 1));
+            a0 = _mm_add_ps(
+                a0,
+                _mm_mul_ps(w0, _mm_loadu_ps(xp.add(*offs.get_unchecked(s) as usize * bb + j))),
+            );
+            a0 = _mm_add_ps(
+                a0,
+                _mm_mul_ps(w1, _mm_loadu_ps(xp.add(*offs.get_unchecked(s + 1) as usize * bb + j))),
+            );
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm_set1_ps(*wts.get_unchecked(s));
+            a0 = _mm_add_ps(
+                a0,
+                _mm_mul_ps(w0, _mm_loadu_ps(xp.add(*offs.get_unchecked(s) as usize * bb + j))),
+            );
+        }
+        _mm_storeu_ps(ap.add(j), a0);
+        j += 4;
+    }
+    if j < bw {
+        fold_f32_lanes(wts, offs, xbuf, bb, j, bw, acc);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row folds — bf16
+// ---------------------------------------------------------------------------
+
+/// Fold one output row's bf16 `(w, off)` stream over the staged bf16
+/// panel into the f32 accumulator `acc[..bw]`, dispatched by `isa`. Every
+/// ISA path widens operands with the identical `bf16 → f32` bit shift and
+/// folds the identical per-lane serial chain, so bf16 output bits are
+/// also ISA-independent.
+pub(crate) fn fold_row_bf16(
+    isa: KernelIsa,
+    wts: &[u16],
+    offs: &[u32],
+    xbuf: &[u16],
+    bb: usize,
+    bw: usize,
+    acc: &mut [f32],
+) {
+    debug_assert_eq!(wts.len(), offs.len());
+    debug_assert!(bw <= bb && bw <= acc.len());
+    match isa {
+        KernelIsa::Scalar => fold_bf16_lanes(wts, offs, xbuf, bb, 0, bw, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: dispatched only when the tier is available (see
+        // `fold_row_f32`); SSE2 is the x86_64 baseline.
+        KernelIsa::Sse2 => unsafe { fold_bf16_sse2(wts, offs, xbuf, bb, bw, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — Avx2 is dispatched only on hosts that report it.
+        KernelIsa::Avx2 => unsafe { fold_bf16_avx2(wts, offs, xbuf, bb, bw, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Sse2 | KernelIsa::Avx2 => fold_bf16_lanes(wts, offs, xbuf, bb, 0, bw, acc),
+    }
+}
+
+/// Scalar bf16 fold for batch lanes `lo..hi`: widen each operand with
+/// [`bf16_to_f32`], accumulate in f32 with the same two-slot serial chain
+/// as the f32 oracle.
+fn fold_bf16_lanes(
+    wts: &[u16],
+    offs: &[u32],
+    xbuf: &[u16],
+    bb: usize,
+    lo: usize,
+    hi: usize,
+    acc: &mut [f32],
+) {
+    let width = hi - lo;
+    let a = &mut acc[lo..hi];
+    a.fill(0.0);
+    let n = wts.len();
+    let mut s = 0;
+    while s + 2 <= n {
+        let w0 = bf16_to_f32(wts[s]);
+        let w1 = bf16_to_f32(wts[s + 1]);
+        let x0 = &xbuf[offs[s] as usize * bb + lo..][..width];
+        let x1 = &xbuf[offs[s + 1] as usize * bb + lo..][..width];
+        for ((av, &b), &c) in a.iter_mut().zip(x0).zip(x1) {
+            let partial = *av + w0 * bf16_to_f32(b);
+            *av = partial + w1 * bf16_to_f32(c);
+        }
+        s += 2;
+    }
+    if s < n {
+        let w0 = bf16_to_f32(wts[s]);
+        let x0 = &xbuf[offs[s] as usize * bb + lo..][..width];
+        for (av, &b) in a.iter_mut().zip(x0) {
+            *av += w0 * bf16_to_f32(b);
+        }
+    }
+}
+
+/// Widen 8 bf16 values at `p` to an f32 vector: zero-extend the u16 lanes
+/// to u32 and shift left 16 — bit-for-bit the scalar [`bf16_to_f32`].
+///
+/// # Safety
+///
+/// Requires AVX2; `p` must be readable for 16 bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn load8_bf16(p: *const u16) -> std::arch::x86_64::__m256 {
+    use std::arch::x86_64::*;
+    let half = _mm_loadu_si128(p as *const __m128i);
+    _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(half)))
+}
+
+/// Widen 4 bf16 values at `p` to an f32 vector (SSE2 only: interleave
+/// zeros below the u16 lanes, which *is* the left-shift by 16).
+///
+/// # Safety
+///
+/// Requires SSE2; `p` must be readable for 8 bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn load4_bf16(p: *const u16) -> std::arch::x86_64::__m128 {
+    use std::arch::x86_64::*;
+    let half = _mm_loadl_epi64(p as *const __m128i);
+    _mm_castsi128_ps(_mm_unpacklo_epi16(_mm_setzero_si128(), half))
+}
+
+/// AVX2 bf16 fold: the [`fold_f32_avx2`] register blocking with operands
+/// widened from bf16 on load (weights once per slot per block, panel rows
+/// via [`load8_bf16`]).
+///
+/// # Safety
+///
+/// Requires AVX2. For every slot `s`: `offs[s] as usize * bb + bw <=
+/// xbuf.len()`; also `bw <= acc.len()` and `wts.len() == offs.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fold_bf16_avx2(
+    wts: &[u16],
+    offs: &[u32],
+    xbuf: &[u16],
+    bb: usize,
+    bw: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let n = wts.len();
+    let xp = xbuf.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut j = 0;
+    while j + 16 <= bw {
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm256_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            let w1 = _mm256_set1_ps(bf16_to_f32(*wts.get_unchecked(s + 1)));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            let r1 = xp.add(*offs.get_unchecked(s + 1) as usize * bb + j);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w0, load8_bf16(r0)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(w0, load8_bf16(r0.add(8))));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w1, load8_bf16(r1)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(w1, load8_bf16(r1.add(8))));
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm256_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w0, load8_bf16(r0)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(w0, load8_bf16(r0.add(8))));
+        }
+        _mm256_storeu_ps(ap.add(j), a0);
+        _mm256_storeu_ps(ap.add(j + 8), a1);
+        j += 16;
+    }
+    if j + 8 <= bw {
+        let mut a0 = _mm256_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm256_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            let w1 = _mm256_set1_ps(bf16_to_f32(*wts.get_unchecked(s + 1)));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            let r1 = xp.add(*offs.get_unchecked(s + 1) as usize * bb + j);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w0, load8_bf16(r0)));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(w1, load8_bf16(r1)));
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm256_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            a0 = _mm256_add_ps(
+                a0,
+                _mm256_mul_ps(w0, load8_bf16(xp.add(*offs.get_unchecked(s) as usize * bb + j))),
+            );
+        }
+        _mm256_storeu_ps(ap.add(j), a0);
+        j += 8;
+    }
+    if j < bw {
+        fold_bf16_lanes(wts, offs, xbuf, bb, j, bw, acc);
+    }
+}
+
+/// SSE2 bf16 fold: the [`fold_f32_sse2`] register blocking with operands
+/// widened from bf16 on load via [`load4_bf16`].
+///
+/// # Safety
+///
+/// Requires SSE2. Same slice preconditions as [`fold_bf16_avx2`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn fold_bf16_sse2(
+    wts: &[u16],
+    offs: &[u32],
+    xbuf: &[u16],
+    bb: usize,
+    bw: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let n = wts.len();
+    let xp = xbuf.as_ptr();
+    let ap = acc.as_mut_ptr();
+    let mut j = 0;
+    while j + 8 <= bw {
+        let mut a0 = _mm_setzero_ps();
+        let mut a1 = _mm_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            let w1 = _mm_set1_ps(bf16_to_f32(*wts.get_unchecked(s + 1)));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            let r1 = xp.add(*offs.get_unchecked(s + 1) as usize * bb + j);
+            a0 = _mm_add_ps(a0, _mm_mul_ps(w0, load4_bf16(r0)));
+            a1 = _mm_add_ps(a1, _mm_mul_ps(w0, load4_bf16(r0.add(4))));
+            a0 = _mm_add_ps(a0, _mm_mul_ps(w1, load4_bf16(r1)));
+            a1 = _mm_add_ps(a1, _mm_mul_ps(w1, load4_bf16(r1.add(4))));
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            let r0 = xp.add(*offs.get_unchecked(s) as usize * bb + j);
+            a0 = _mm_add_ps(a0, _mm_mul_ps(w0, load4_bf16(r0)));
+            a1 = _mm_add_ps(a1, _mm_mul_ps(w0, load4_bf16(r0.add(4))));
+        }
+        _mm_storeu_ps(ap.add(j), a0);
+        _mm_storeu_ps(ap.add(j + 4), a1);
+        j += 8;
+    }
+    if j + 4 <= bw {
+        let mut a0 = _mm_setzero_ps();
+        let mut s = 0;
+        while s + 2 <= n {
+            let w0 = _mm_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            let w1 = _mm_set1_ps(bf16_to_f32(*wts.get_unchecked(s + 1)));
+            a0 = _mm_add_ps(
+                a0,
+                _mm_mul_ps(w0, load4_bf16(xp.add(*offs.get_unchecked(s) as usize * bb + j))),
+            );
+            a0 = _mm_add_ps(
+                a0,
+                _mm_mul_ps(w1, load4_bf16(xp.add(*offs.get_unchecked(s + 1) as usize * bb + j))),
+            );
+            s += 2;
+        }
+        if s < n {
+            let w0 = _mm_set1_ps(bf16_to_f32(*wts.get_unchecked(s)));
+            a0 = _mm_add_ps(
+                a0,
+                _mm_mul_ps(w0, load4_bf16(xp.add(*offs.get_unchecked(s) as usize * bb + j))),
+            );
+        }
+        _mm_storeu_ps(ap.add(j), a0);
+        j += 4;
+    }
+    if j < bw {
+        fold_bf16_lanes(wts, offs, xbuf, bb, j, bw, acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_round_trips_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 96.0, f32::INFINITY, f32::NEG_INFINITY] {
+            let b = f32_to_bf16(x);
+            assert_eq!(bf16_to_f32(b).to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // The bf16 step at 1.0 is 2⁻⁷, so 1.0 + 2⁻⁸ (f32 0x3F80_8000) is
+        // exactly halfway between bf16(1.0) and the next step; RNE keeps
+        // the even mantissa (1.0).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(halfway)), 1.0);
+        // Just above halfway rounds up to 1.0 + 2⁻⁷.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(bf16_to_f32(f32_to_bf16(above)), f32::from_bits(0x3F81_0000));
+        // Odd kept mantissa at halfway rounds up to the even neighbor.
+        let odd_half = f32::from_bits(0x3F81_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(odd_half)), f32::from_bits(0x3F82_0000));
+        // Just below halfway always rounds down, odd or even.
+        let below = f32::from_bits(0x3F80_7FFF);
+        assert_eq!(bf16_to_f32(f32_to_bf16(below)), 1.0);
+    }
+
+    #[test]
+    fn bf16_conversion_error_is_bounded() {
+        // Relative rounding error ≤ 2⁻⁸ for normal values (8 mantissa bits).
+        let mut x = 1.0e-3f32;
+        while x < 1.0e3 {
+            let back = bf16_to_f32(f32_to_bf16(x));
+            assert!((back - x).abs() <= x.abs() / 256.0, "{x} → {back}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn bf16_quiets_nan_and_saturates_to_inf() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // Rounding past f32::MAX carries into the infinity encoding.
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+    }
+
+    #[test]
+    fn cache_size_strings_parse() {
+        assert_eq!(parse_cache_size("48K"), Some(48 * 1024));
+        assert_eq!(parse_cache_size("2048K"), Some(2048 * 1024));
+        assert_eq!(parse_cache_size("1M"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size("32768"), Some(32768));
+        assert_eq!(parse_cache_size(" 512K\n"), Some(512 * 1024));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("lots"), None);
+    }
+
+    #[test]
+    fn dispatch_is_available_and_panel_target_sane() {
+        let avail = KernelIsa::available();
+        assert_eq!(avail.first(), Some(&KernelIsa::Scalar));
+        assert!(avail.contains(&KernelIsa::detect()));
+        // Ascending order: detect() (possibly env-capped) is still a real tier.
+        assert!(avail.windows(2).all(|w| w[0] < w[1]));
+        let target = panel_target_bytes();
+        assert!((16 * 1024..=256 * 1024).contains(&target), "{target}");
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for isa in [KernelIsa::Scalar, KernelIsa::Sse2, KernelIsa::Avx2] {
+            assert_eq!(KernelIsa::parse(isa.as_str()), Some(isa));
+        }
+        for v in [ValueFormat::F32, ValueFormat::Bf16] {
+            assert_eq!(ValueFormat::parse(v.as_str()), Some(v));
+        }
+        assert_eq!(KernelIsa::parse("avx512"), None);
+        assert_eq!(ValueFormat::parse("fp8"), None);
+        let info = KernelInfo::current(ValueFormat::Bf16);
+        assert!(info.variant().ends_with("-bf16"));
+        // Display stays single-line (it goes straight into the serve log).
+        assert!(!format!("{info}").contains('\n'));
+    }
+}

@@ -1,17 +1,23 @@
 //! Sparse matrix multiplication: the dense baseline, the CPU HiNM kernel
 //! (structured like the paper's CUDA schedule), the planned tile-parallel
 //! execution engine that serves traffic ([`SpmmPlan`] + [`SpmmEngine`],
-//! DESIGN.md §14), and the analytical GPU cost model used for the Fig. 5
-//! latency study.
+//! DESIGN.md §14), the register-blocked SIMD row microkernels underneath
+//! it ([`microkernel`], DESIGN.md §16), and the analytical GPU cost model
+//! used for the Fig. 5 latency study.
 
 pub mod dense;
 pub mod engine;
 pub mod epilogue;
 pub mod hinm_cpu;
+pub mod microkernel;
 pub mod plan;
 pub mod sim;
 
 pub use engine::{KernelPool, SpmmEngine};
 pub use epilogue::{gelu, gelu_fast, tanh_fast, ulp_diff, Activation, Epilogue};
 pub use hinm_cpu::{spmm, spmm_reference, spmm_with_scratch, SpmmScratch};
+pub use microkernel::{
+    bf16_to_f32, cache_info, f32_to_bf16, panel_target_bytes, CacheInfo, KernelInfo, KernelIsa,
+    ValueFormat,
+};
 pub use plan::SpmmPlan;

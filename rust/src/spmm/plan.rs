@@ -1,5 +1,5 @@
 //! The precompiled SpMM execution plan — per-`HinmPacked` index streams
-//! that make the hot loop pure streaming FMA.
+//! that make the hot loop pure streaming multiply-add.
 //!
 //! `spmm_with_scratch` re-derives `g·M + nm_idx[slot]` and re-widens the
 //! `u8` offsets on every call; NM-SpMM (arXiv:2503.01253) and VENOM
@@ -11,28 +11,48 @@
 //!   execution order (tile-major, row-major, slot order) as two parallel
 //!   SoA arrays; `xoff` is the **flat compact column** `g·M + nm_idx`,
 //!   pre-widened to `u32`, so the inner loop does one shift-free indexed
-//!   load per operand and zero index arithmetic.
+//!   load per operand and zero index arithmetic. With
+//!   [`SpmmPlan::with_values`] the weight stream is stored as bf16
+//!   instead, halving its bytes (DESIGN.md §16).
 //! * `gather` — `vec_idx` pre-widened, consumed by the global→"shared"
 //!   panel gather.
 //! * `batch_block` — the batch-blocking width: the staged `xbuf` panel is
-//!   `k_v × batch_block` floats, sized to stay resident in L1/L2 while
-//!   every one of the tile's `V` rows streams over it (DESIGN.md §14).
+//!   `k_v × batch_block` elements, sized against the *detected* L1d cache
+//!   ([`panel_target_bytes`]) so the panel stays resident while every one
+//!   of the tile's `V` rows streams over it (DESIGN.md §14, §16).
+//!
+//! The row fold itself lives in [`super::microkernel`]: the plan captures
+//! a [`KernelIsa`] at construction ([`KernelIsa::detect`], overridable via
+//! [`SpmmPlan::with_isa`] for tests/benches) and `run_tile` dispatches
+//! every row through that tier.
 //!
 //! Numerics: per output element the kernel folds its kept terms in slot
 //! order as a strict serial chain `((0 + w₀x₀) + w₁x₁) + …` — plain
 //! mul-then-add, never `mul_add` — which is the same f32 operation
 //! sequence the dense reference performs over the kept (nonzero) columns.
 //! For an unpermuted packing the slot order *is* ascending column order,
-//! so the planned kernel is **bit-identical to `spmm_reference`** for any
-//! batch-block width and any worker count (`tests/spmm_plan.rs`).
+//! so the planned f32 kernel is **bit-identical to `spmm_reference`** for
+//! any batch-block width, any worker count, and any dispatched ISA tier
+//! (`tests/spmm_plan.rs`, `tests/spmm_microkernel.rs`).
 
 use super::epilogue::Epilogue;
+use super::microkernel::{
+    f32_to_bf16, fold_row_bf16, fold_row_f32, panel_target_bytes, KernelIsa, TileScratch,
+    ValueFormat,
+};
 use crate::sparsity::format::HinmPacked;
 use crate::tensor::Matrix;
 
-/// Target size of the staged `xbuf` panel (`k_v × batch_block` f32s) in
-/// bytes — comfortably inside L2 with the hot half in L1.
-const PANEL_TARGET_BYTES: usize = 48 * 1024;
+/// Smallest batch-block width the sizing policy will pick. Below 8 lanes
+/// the AVX2 path would spend every row in its scalar tail, so rather than
+/// shrink the block further for very tall panels we accept a panel that
+/// overshoots the cache budget (see [`pick_batch_block`]).
+pub(crate) const MIN_BATCH_BLOCK: usize = 8;
+
+/// Largest batch-block width the sizing policy will pick: two AVX2
+/// register blocks per gather pass; wider blocks stop paying for the
+/// extra panel footprint.
+pub(crate) const MAX_BATCH_BLOCK: usize = 64;
 
 /// A compiled execution plan for one packed HiNM matrix.
 ///
@@ -69,20 +89,28 @@ pub struct SpmmPlan {
     k_v: usize,
     tiles: usize,
     vpr: usize,
-    /// `[tiles · V · vpr]` weights in execution order.
+    /// `[tiles · V · vpr]` weights in execution order (empty in bf16 mode).
     weights: Vec<f32>,
-    /// `[tiles · V · vpr]` flat compact-column offsets, parallel to
-    /// `weights` (`xoff[s] = g·M + nm_idx[s]`, in `0..k_v`).
+    /// bf16 weight stream, parallel to `xoff` (empty in f32 mode).
+    weights_bf16: Vec<u16>,
+    /// `[tiles · V · vpr]` flat compact-column offsets, parallel to the
+    /// weight stream (`xoff[s] = g·M + nm_idx[s]`, in `0..k_v`).
     xoff: Vec<u32>,
     /// `[tiles · k_v]` original input-channel ids for the panel gather.
     gather: Vec<u32>,
     /// Batch-blocking width (panel columns staged per gather pass).
     batch_block: usize,
+    /// ISA tier every row fold dispatches through.
+    isa: KernelIsa,
+    /// Packed-value format of the weight stream and staged panel.
+    values: ValueFormat,
 }
 
 impl SpmmPlan {
     /// Compile a plan from a packed matrix (one-time cost, linear in the
-    /// number of stored values).
+    /// number of stored values). The plan dispatches to the best kernel
+    /// tier the host supports ([`KernelIsa::detect`]) and stores values
+    /// as f32.
     pub fn new(p: &HinmPacked) -> SpmmPlan {
         let k_v = p.k_v;
         SpmmPlan {
@@ -93,10 +121,62 @@ impl SpmmPlan {
             tiles: p.tiles(),
             vpr: p.vals_per_row(),
             weights: p.vals.clone(),
+            weights_bf16: Vec::new(),
             xoff: p.slot_compact_cols(),
             gather: p.vec_idx.iter().map(|&c| c as u32).collect(),
-            batch_block: pick_batch_block(k_v),
+            batch_block: pick_batch_block(k_v, 4, panel_target_bytes()),
+            isa: KernelIsa::detect(),
+            values: ValueFormat::F32,
         }
+    }
+
+    /// Switch the plan's packed-value format (builder style, before first
+    /// use). `Bf16` rounds the weight stream to bf16 (round-to-nearest-
+    /// even), drops the f32 copy, and re-picks the batch block for the
+    /// halved panel element size; the staged panel is then also bf16 and
+    /// accumulation stays f32 (accuracy contract in DESIGN.md §16).
+    ///
+    /// Call this before [`SpmmPlan::with_batch_block`] — it re-derives the
+    /// block width from the new element size.
+    ///
+    /// # Panics
+    ///
+    /// Panics when asked to go `Bf16 → F32`: the f32 stream was dropped
+    /// and bf16 cannot be widened back losslessly — recompile the plan
+    /// from the `HinmPacked` instead.
+    pub fn with_values(mut self, fmt: ValueFormat) -> SpmmPlan {
+        if fmt == self.values {
+            return self;
+        }
+        match fmt {
+            ValueFormat::Bf16 => {
+                self.weights_bf16 = self.weights.iter().map(|&w| f32_to_bf16(w)).collect();
+                self.weights = Vec::new();
+            }
+            ValueFormat::F32 => {
+                panic!("bf16 → f32 is lossy; rebuild the plan with SpmmPlan::new")
+            }
+        }
+        self.values = fmt;
+        self.batch_block = pick_batch_block(self.k_v, fmt.elem_bytes(), panel_target_bytes());
+        self
+    }
+
+    /// Force a specific (lower) kernel tier — the test/bench hook behind
+    /// the bitwise ISA-equivalence sweep. Any available tier computes
+    /// identical bits.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `isa` is not in [`KernelIsa::available`] on this host
+    /// (dispatching an unsupported tier would be undefined behavior).
+    pub fn with_isa(mut self, isa: KernelIsa) -> SpmmPlan {
+        assert!(
+            KernelIsa::available().contains(&isa),
+            "kernel tier {isa} not available on this host"
+        );
+        self.isa = isa;
+        self
     }
 
     /// Override the batch-blocking width (test/bench hook; the constructor
@@ -132,93 +212,152 @@ impl SpmmPlan {
         self.batch_block
     }
 
-    /// Plan footprint in bytes (weights + offset stream + gather indices).
+    /// The kernel tier this plan dispatches to.
+    pub fn isa(&self) -> KernelIsa {
+        self.isa
+    }
+
+    /// The packed-value format of the weight stream / staged panel.
+    pub fn values(&self) -> ValueFormat {
+        self.values
+    }
+
+    /// Plan footprint in bytes (active weight stream + offset stream +
+    /// gather indices). bf16 plans report half the weight-stream bytes —
+    /// exactly the traffic reduction the kernel sees.
     pub fn storage_bytes(&self) -> usize {
-        self.weights.len() * 4 + self.xoff.len() * 4 + self.gather.len() * 4
+        self.weights.len() * 4 + self.weights_bf16.len() * 2 + self.xoff.len() * 4
+            + self.gather.len() * 4
     }
 
     /// Floating-point operations this plan performs per batch column: one
-    /// multiply and one add per stored weight. This is the cost measure
+    /// multiply and one add per stored weight (independent of the value
+    /// format — bf16 changes bytes, not flops). This is the cost measure
     /// [`crate::models::chain::HinmModel::split_stages`] balances pipeline
     /// stages by (DESIGN.md §15) — it depends only on the packing, not on
     /// the batch width or lane count.
     pub fn flops_per_col(&self) -> usize {
-        2 * self.weights.len()
+        2 * self.xoff.len()
     }
 
     /// Execute one tile into its output slice (`V` rows × `batch`,
     /// row-major). `ytile` must be exactly the tile's rows of `Y`; every
-    /// element of it is written. `xbuf`/`acc` are caller-owned scratch
-    /// (grown on first use, reused across tiles/calls).
+    /// element of it is written. `sc` is caller-owned scratch (grown on
+    /// first use, reused across tiles/calls).
     pub(crate) fn run_tile(
         &self,
         t: usize,
         x: &Matrix,
         ytile: &mut [f32],
         epi: &Epilogue<'_>,
-        xbuf: &mut Vec<f32>,
-        acc: &mut Vec<f32>,
+        sc: &mut TileScratch,
     ) {
         let batch = x.cols;
         debug_assert_eq!(ytile.len(), self.v * batch);
         let bb = self.batch_block.min(batch).max(1);
-        xbuf.resize(self.k_v * bb, 0.0);
-        acc.resize(bb, 0.0);
+        sc.acc.resize(bb.max(sc.acc.len()), 0.0);
         let gather = &self.gather[t * self.k_v..(t + 1) * self.k_v];
 
-        let mut b0 = 0;
-        while b0 < batch {
-            let bw = bb.min(batch - b0);
-            // --- global → panel: gather the kept input rows, one batch
-            // block at a time, in vec_idx order (runtime input-channel
-            // permutation for free, exactly like the unplanned kernel).
-            for (j, &c) in gather.iter().enumerate() {
-                let src = &x.row(c as usize)[b0..b0 + bw];
-                xbuf[j * bb..j * bb + bw].copy_from_slice(src);
-            }
-            // --- compute: stream the (w, off) pairs over the panel.
-            for r in 0..self.v {
-                let row = t * self.v + r;
-                let base = row * self.vpr;
-                let wts = &self.weights[base..base + self.vpr];
-                let offs = &self.xoff[base..base + self.vpr];
-                let a = &mut acc[..bw];
-                a.fill(0.0);
-                // Two slots per pass: halves the loop overhead while each
-                // batch lane still folds its terms as the strict serial
-                // chain ((a + w₀x₀) + w₁x₁) — the bit-level contract.
-                let mut s = 0;
-                while s + 2 <= self.vpr {
-                    let w0 = wts[s];
-                    let w1 = wts[s + 1];
-                    let x0 = &xbuf[offs[s] as usize * bb..][..bw];
-                    let x1 = &xbuf[offs[s + 1] as usize * bb..][..bw];
-                    for ((av, &b), &c2) in a.iter_mut().zip(x0).zip(x1) {
-                        let partial = *av + w0 * b;
-                        *av = partial + w1 * c2;
+        match self.values {
+            ValueFormat::F32 => {
+                sc.xbuf.resize((self.k_v * bb).max(sc.xbuf.len()), 0.0);
+                let mut b0 = 0;
+                while b0 < batch {
+                    let bw = bb.min(batch - b0);
+                    // --- global → panel: gather the kept input rows, one
+                    // batch block at a time, in vec_idx order (runtime
+                    // input-channel permutation for free, exactly like the
+                    // unplanned kernel).
+                    for (j, &c) in gather.iter().enumerate() {
+                        let src = &x.row(c as usize)[b0..b0 + bw];
+                        sc.xbuf[j * bb..j * bb + bw].copy_from_slice(src);
                     }
-                    s += 2;
-                }
-                if s < self.vpr {
-                    let w0 = wts[s];
-                    let x0 = &xbuf[offs[s] as usize * bb..][..bw];
-                    for (av, &b) in a.iter_mut().zip(x0) {
-                        *av += w0 * b;
+                    // --- compute: stream the (w, off) pairs over the panel,
+                    // one register-blocked row fold per output row.
+                    for r in 0..self.v {
+                        let row = t * self.v + r;
+                        let base = row * self.vpr;
+                        fold_row_f32(
+                            self.isa,
+                            &self.weights[base..base + self.vpr],
+                            &self.xoff[base..base + self.vpr],
+                            &sc.xbuf,
+                            bb,
+                            bw,
+                            &mut sc.acc,
+                        );
+                        // --- fused epilogue: bias + activation on the way
+                        // out (operates on the accumulator tail regardless
+                        // of the SIMD width used to fill it).
+                        epi.apply_slice(
+                            row,
+                            &sc.acc[..bw],
+                            &mut ytile[r * batch + b0..r * batch + b0 + bw],
+                        );
                     }
+                    b0 += bw;
                 }
-                // --- fused epilogue: bias + activation on the way out.
-                epi.apply_slice(row, a, &mut ytile[r * batch + b0..r * batch + b0 + bw]);
             }
-            b0 += bw;
+            ValueFormat::Bf16 => {
+                sc.xbuf16.resize((self.k_v * bb).max(sc.xbuf16.len()), 0);
+                let mut b0 = 0;
+                while b0 < batch {
+                    let bw = bb.min(batch - b0);
+                    // Panel gather with an on-the-fly bf16 round: the panel
+                    // is staged once per batch block and then re-read V
+                    // times, so rounding here (not in the fold) keeps the
+                    // conversion off the hot loop.
+                    for (j, &c) in gather.iter().enumerate() {
+                        let src = &x.row(c as usize)[b0..b0 + bw];
+                        let dst = &mut sc.xbuf16[j * bb..j * bb + bw];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d = f32_to_bf16(s);
+                        }
+                    }
+                    for r in 0..self.v {
+                        let row = t * self.v + r;
+                        let base = row * self.vpr;
+                        fold_row_bf16(
+                            self.isa,
+                            &self.weights_bf16[base..base + self.vpr],
+                            &self.xoff[base..base + self.vpr],
+                            &sc.xbuf16,
+                            bb,
+                            bw,
+                            &mut sc.acc,
+                        );
+                        epi.apply_slice(
+                            row,
+                            &sc.acc[..bw],
+                            &mut ytile[r * batch + b0..r * batch + b0 + bw],
+                        );
+                    }
+                    b0 += bw;
+                }
+            }
         }
     }
 }
 
-/// Batch-block width for a given panel height: the largest multiple of 8
-/// in `[8, 64]` that keeps `k_v · bb · 4` bytes near [`PANEL_TARGET_BYTES`].
-fn pick_batch_block(k_v: usize) -> usize {
-    let bb = PANEL_TARGET_BYTES / (4 * k_v.max(1));
-    (bb & !7).clamp(8, 64)
+/// Batch-block width for a panel of `k_v` rows of `elem_bytes`-wide
+/// elements against a byte budget: the largest multiple of 8 in
+/// `[MIN_BATCH_BLOCK, MAX_BATCH_BLOCK]` with `k_v · bb · elem_bytes`
+/// at or under `target_bytes`.
+///
+/// **Explicit floor:** once `k_v > target_bytes / (elem_bytes · 8)`
+/// (≈ 1536 rows for the 48 KiB f32 default, ≈ 3072 for bf16) no width in
+/// range fits the budget, and the policy *deliberately* returns
+/// [`MIN_BATCH_BLOCK`] — an oversized panel that overshoots the budget by
+/// `k_v · 8 · elem_bytes − target_bytes` bytes, growing linearly with
+/// `k_v` — rather than starve the vector lanes with a sub-8 block. Very
+/// tall panels therefore spill L1d by design; the alternative (scalar
+/// tails on every row) costs more than the extra cache misses.
+fn pick_batch_block(k_v: usize, elem_bytes: usize, target_bytes: usize) -> usize {
+    let ideal = target_bytes / (elem_bytes * k_v.max(1));
+    if ideal < MIN_BATCH_BLOCK {
+        return MIN_BATCH_BLOCK;
+    }
+    (ideal & !7).clamp(MIN_BATCH_BLOCK, MAX_BATCH_BLOCK)
 }
 
 #[cfg(test)]
@@ -276,15 +415,56 @@ mod tests {
     }
 
     #[test]
-    fn block_sizing_tracks_panel_height() {
-        assert_eq!(pick_batch_block(384), 32);
-        assert_eq!(pick_batch_block(768), 16);
-        assert_eq!(pick_batch_block(8), 64);
-        assert_eq!(pick_batch_block(100_000), 8);
-        // Always a multiple of 8 inside [8, 64].
+    fn block_sizing_tracks_panel_height_and_element_size() {
+        const T: usize = 48 * 1024;
+        assert_eq!(pick_batch_block(384, 4, T), 32);
+        assert_eq!(pick_batch_block(768, 4, T), 16);
+        assert_eq!(pick_batch_block(8, 4, T), 64);
+        assert_eq!(pick_batch_block(100_000, 4, T), 8);
+        // bf16 halves the element size → doubles the width (until the cap).
+        assert_eq!(pick_batch_block(768, 2, T), 32);
+        assert_eq!(pick_batch_block(384, 2, T), 64);
+        // Always a multiple of 8 inside [MIN, MAX].
         for k in [1usize, 7, 33, 511, 5000] {
-            let bb = pick_batch_block(k);
-            assert!(bb % 8 == 0 && (8..=64).contains(&bb), "k_v={k} → {bb}");
+            for elem in [2usize, 4] {
+                let bb = pick_batch_block(k, elem, T);
+                assert!(
+                    bb % 8 == 0 && (MIN_BATCH_BLOCK..=MAX_BATCH_BLOCK).contains(&bb),
+                    "k_v={k} elem={elem} → {bb}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_floor_boundary_is_explicit() {
+        // The documented floor boundary: k_v = target / (elem · MIN).
+        for (elem, target) in [(4usize, 48 * 1024usize), (2, 48 * 1024), (4, 32 * 1024)] {
+            let boundary = target / (elem * MIN_BATCH_BLOCK);
+            // At the boundary the minimum width exactly fits the budget…
+            assert_eq!(pick_batch_block(boundary, elem, target), MIN_BATCH_BLOCK);
+            assert!(boundary * MIN_BATCH_BLOCK * elem <= target);
+            // …one row taller and the panel overshoots, but the width
+            // still floors at MIN rather than dropping below 8.
+            let over = boundary + 1;
+            assert_eq!(pick_batch_block(over, elem, target), MIN_BATCH_BLOCK);
+            assert!(over * MIN_BATCH_BLOCK * elem > target);
+        }
+        // Degenerate budgets still return a usable width.
+        assert_eq!(pick_batch_block(1, 4, 0), MIN_BATCH_BLOCK);
+        assert_eq!(pick_batch_block(0, 4, 48 * 1024), MAX_BATCH_BLOCK);
+    }
+
+    #[test]
+    fn constructor_tracks_the_detected_panel_target() {
+        // Whatever panel_target_bytes() detected on this host, the
+        // constructor's block width must be the policy result for it.
+        for (m, n, v) in [(16usize, 32usize, 4usize), (32, 64, 8)] {
+            let p = packed(m, n, v, 0.5, 98);
+            let plan = SpmmPlan::new(&p);
+            assert_eq!(plan.batch_block(), pick_batch_block(p.k_v, 4, panel_target_bytes()));
+            let plan16 = SpmmPlan::new(&p).with_values(ValueFormat::Bf16);
+            assert_eq!(plan16.batch_block(), pick_batch_block(p.k_v, 2, panel_target_bytes()));
         }
     }
 
@@ -296,8 +476,31 @@ mod tests {
         assert_eq!(plan.cols(), 32);
         assert_eq!(plan.v(), 4);
         assert_eq!(plan.tiles(), 4);
+        assert_eq!(plan.values(), ValueFormat::F32);
         assert!(plan.storage_bytes() > 0);
         assert_eq!(plan.storage_bytes(), (p.vals.len() * 2 + p.vec_idx.len()) * 4);
         assert_eq!(plan.flops_per_col(), 2 * p.vals.len());
+        // bf16 halves the weight stream (and nothing else); flops are
+        // format-independent.
+        let plan16 = SpmmPlan::new(&p).with_values(ValueFormat::Bf16);
+        assert_eq!(plan16.values(), ValueFormat::Bf16);
+        assert_eq!(plan16.storage_bytes(), p.vals.len() * 6 + p.vec_idx.len() * 4);
+        assert_eq!(plan16.flops_per_col(), 2 * p.vals.len());
+    }
+
+    #[test]
+    fn with_isa_accepts_every_available_tier() {
+        let p = packed(8, 16, 4, 0.5, 99);
+        for &isa in KernelIsa::available() {
+            let plan = SpmmPlan::new(&p).with_isa(isa);
+            assert_eq!(plan.isa(), isa);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "lossy")]
+    fn downcast_back_to_f32_is_refused() {
+        let p = packed(8, 16, 4, 0.5, 100);
+        let _ = SpmmPlan::new(&p).with_values(ValueFormat::Bf16).with_values(ValueFormat::F32);
     }
 }

@@ -7,6 +7,7 @@ use hinm::coordinator::{BatchServer, ServeConfig};
 use hinm::models::{Activation, HinmModel};
 use hinm::net::{protocol, HttpClient, HttpFront};
 use hinm::sparsity::HinmConfig;
+use hinm::spmm::{KernelInfo, KernelIsa, ValueFormat};
 use hinm::tensor::Matrix;
 use hinm::util::json;
 use std::sync::Arc;
@@ -29,7 +30,10 @@ fn start() -> Setup {
         ServeConfig::new(4, Duration::from_millis(2)).with_replicas(2),
     )
     .expect("engine start");
-    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, 4)
+    // Pass the real detected kernel info so /v1/metrics exercises the
+    // kernel block end-to-end over a socket.
+    let kernel = KernelInfo::current(ValueFormat::F32);
+    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, Some(kernel), 4)
         .expect("http front start");
     Setup { front, server, model }
 }
@@ -97,6 +101,11 @@ fn keep_alive_connection_serves_many_requests_and_metrics_count_them() {
     assert_eq!(m.get("priorities").get("normal").as_usize(), Some(8));
     assert_eq!(m.get("expired").get("in_queue").as_usize(), Some(0));
     assert_eq!(m.get("replicas").as_arr().unwrap().len(), 2);
+    // The kernel block reports whatever ISA this host dispatched to.
+    let isa = KernelIsa::detect();
+    assert_eq!(m.get("kernel").get("isa").as_str(), Some(isa.as_str()));
+    assert_eq!(m.get("kernel").get("values").as_str(), Some("f32"));
+    assert!(m.get("kernel").get("panel_target_bytes").as_usize().unwrap() >= 16 * 1024);
     drop(c);
     s.front.stop();
     s.server.stop();
@@ -123,6 +132,13 @@ fn metrics_prometheus_format_over_http() {
     assert_eq!(line, "hinm_requests_total 1");
     // No cache is configured in this setup, so no cache families.
     assert!(!body.contains("hinm_cache_hits_total"), "{body}");
+    // The kernel info family carries the dispatched variant as labels.
+    let isa = KernelIsa::detect();
+    assert!(
+        body.contains(&format!("hinm_kernel_info{{isa=\"{}\",values=\"f32\"}} 1", isa.as_str())),
+        "{body}"
+    );
+    assert!(body.contains("# TYPE hinm_kernel_panel_target_bytes gauge"), "{body}");
 
     // Explicit json format and the bare route stay JSON.
     let (status, body) = c.get("/v1/metrics?format=json").unwrap();

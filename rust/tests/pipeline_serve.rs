@@ -131,7 +131,7 @@ fn http_round_trip_over_the_pipeline_is_bit_exact() {
         ServeConfig::new(2, Duration::from_millis(1)).with_replicas(2),
     )
     .unwrap();
-    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, 2).unwrap();
+    let front = HttpFront::start("127.0.0.1:0", server.handle.clone(), None, None, 2).unwrap();
 
     let xcol: Vec<f32> = (0..model.d_in()).map(|i| (i as f32) * 0.17 - 1.1).collect();
     let want = planned(&model, &Matrix::from_vec(model.d_in(), 1, xcol.clone()));

@@ -1,0 +1,220 @@
+//! The microkernel's two correctness contracts, end to end through the
+//! engine (DESIGN.md §16):
+//!
+//! 1. **Bitwise ISA equivalence** — for any plan, any batch shape, and any
+//!    lane count, every available kernel tier (scalar / SSE2 / AVX2)
+//!    computes the *same bits*. The SIMD paths put batch lanes in vector
+//!    lanes, so each output element's strict serial fold is unchanged; the
+//!    sweep here covers odd tile shapes, ragged batch tails, misaligned
+//!    batch blocks, fused epilogues, and both value formats.
+//! 2. **bf16 accuracy** — the bf16 path is *not* bit-equal to f32 (it
+//!    rounds both operands to bf16 before the f32 accumulate); its error
+//!    is bounded by the rounding model `|y₁₆ − y₃₂| ≤ 2⁻⁷·Σ|wᵢxᵢ|`, and on
+//!    cancellation-free inputs by a pure ulp budget against the f32
+//!    oracle.
+
+use hinm::sparsity::{prune_oneshot, HinmConfig};
+use hinm::spmm::{
+    dense, spmm_reference, ulp_diff, Activation, Epilogue, KernelIsa, SpmmEngine, SpmmPlan,
+    ValueFormat,
+};
+use hinm::tensor::Matrix;
+use hinm::util::rng::Xoshiro256;
+
+/// (rows, cols, V) tile shapes chosen so the sweep hits single-tile,
+/// many-tile, and V=8 layouts with k_v values that are *not* multiples of
+/// the SIMD widths.
+const SHAPES: &[(usize, usize, usize)] =
+    &[(16, 32, 4), (8, 48, 4), (32, 64, 8), (40, 96, 8), (24, 112, 4)];
+
+/// Batch widths exercising every tail class of the register blocking:
+/// 1 (pure scalar tail), 3/7 (sub-SSE tails), 33 (two AVX2 blocks + 1).
+const BATCHES: &[usize] = &[1, 3, 7, 33];
+
+fn packed(m: usize, n: usize, v: usize, seed: u64) -> hinm::sparsity::HinmPacked {
+    let mut rng = Xoshiro256::new(seed);
+    let w = Matrix::randn(m, n, 1.0, &mut rng);
+    let cfg = HinmConfig::with_24(v, 0.5);
+    prune_oneshot(&w, &w.abs(), &cfg).packed
+}
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn every_isa_tier_matches_the_reference_bitwise() {
+    for &(m, n, v) in SHAPES {
+        let p = packed(m, n, v, 7 + m as u64);
+        let mut rng = Xoshiro256::new(11 + n as u64);
+        for &b in BATCHES {
+            let x = Matrix::randn(n, b, 1.0, &mut rng);
+            let want = spmm_reference(&p, &x);
+            for lanes in [1usize, 8] {
+                let engine = SpmmEngine::new(lanes);
+                for &isa in KernelIsa::available() {
+                    let plan = SpmmPlan::new(&p).with_isa(isa);
+                    let got = engine.spmm_planned(&plan, &x);
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "{m}x{n} V={v} batch {b} lanes {lanes} isa {isa}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn misaligned_batch_blocks_do_not_change_bits() {
+    // A batch block of 5 forces every SIMD path through its scalar tail on
+    // every panel pass; 13 mixes one SSE block with a 5-wide tail.
+    let p = packed(24, 112, 4, 21);
+    let mut rng = Xoshiro256::new(22);
+    let x = Matrix::randn(112, 33, 1.0, &mut rng);
+    let want = spmm_reference(&p, &x);
+    let engine = SpmmEngine::single();
+    for bb in [5usize, 13] {
+        for &isa in KernelIsa::available() {
+            let plan = SpmmPlan::new(&p).with_isa(isa).with_batch_block(bb);
+            assert_eq!(bits(&engine.spmm_planned(&plan, &x)), bits(&want), "bb {bb} isa {isa}");
+        }
+    }
+}
+
+#[test]
+fn fused_epilogues_are_isa_invariant_on_ragged_tails() {
+    // Bias + ReLU fused into the epilogue, batch 7 with batch block 5, so
+    // the epilogue runs on accumulator tails narrower than any vector
+    // width. All tiers must still agree bitwise (the epilogue reads the
+    // finished accumulator; it never sees the SIMD layout).
+    let p = packed(16, 32, 4, 31);
+    let mut rng = Xoshiro256::new(32);
+    let x = Matrix::randn(32, 7, 1.0, &mut rng);
+    let bias: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+    for act in [Activation::None, Activation::Relu, Activation::Gelu] {
+        let epi = Epilogue::new(Some(&bias), act);
+        let mut base: Option<Vec<u32>> = None;
+        for &isa in KernelIsa::available() {
+            let plan = SpmmPlan::new(&p).with_isa(isa).with_batch_block(5);
+            let mut y = Matrix::zeros(16, 7);
+            SpmmEngine::single().execute(&plan, &x, &mut y, &epi);
+            let got = bits(&y);
+            match &base {
+                None => base = Some(got),
+                Some(b) => assert_eq!(&got, b, "act {act:?} isa {isa}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn bf16_is_bitwise_identical_across_isa_tiers() {
+    // bf16 differs from f32 by rounding, but across ISAs it must be exact:
+    // the widen (u16 << 16) is lossless and the accumulate chain is the
+    // same strict serial fold.
+    for &(m, n, v) in &[(16usize, 32usize, 4usize), (40, 96, 8)] {
+        let p = packed(m, n, v, 41 + m as u64);
+        let mut rng = Xoshiro256::new(42);
+        for &b in BATCHES {
+            let x = Matrix::randn(n, b, 1.0, &mut rng);
+            let mut base: Option<Vec<u32>> = None;
+            for lanes in [1usize, 8] {
+                let engine = SpmmEngine::new(lanes);
+                for &isa in KernelIsa::available() {
+                    let plan =
+                        SpmmPlan::new(&p).with_values(ValueFormat::Bf16).with_isa(isa);
+                    let got = bits(&engine.spmm_planned(&plan, &x));
+                    match &base {
+                        None => base = Some(got),
+                        Some(bse) => {
+                            assert_eq!(&got, bse, "{m}x{n} batch {b} lanes {lanes} isa {isa}")
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bf16_error_is_bounded_by_the_rounding_model_on_randn() {
+    // Per product, rounding w and x to bf16 perturbs each by ≤ 2⁻⁸
+    // relative (RNE, 8-bit significand), so
+    //   |y₁₆ − y₃₂| ≤ (2·2⁻⁸ + 2⁻¹⁶)·Σ|wᵢxᵢ| + accumulate noise
+    // — bounded here by S/128 + 1e-5 with S = |W_packed|·|X| computed
+    // densely. This holds under arbitrary cancellation because the bound
+    // scales with the magnitude *sum*, not the result.
+    for &(m, n, v) in SHAPES {
+        let p = packed(m, n, v, 51 + n as u64);
+        let dense_w = p.to_dense();
+        let mut rng = Xoshiro256::new(52);
+        let x = Matrix::randn(n, 16, 1.0, &mut rng);
+        let s = dense::matmul(&dense_w.abs(), &x.abs());
+        let engine = SpmmEngine::single();
+        let y32 = engine.spmm_planned(&SpmmPlan::new(&p), &x);
+        let y16 =
+            engine.spmm_planned(&SpmmPlan::new(&p).with_values(ValueFormat::Bf16), &x);
+        for (i, ((&a, &b), &mag)) in
+            y16.data.iter().zip(&y32.data).zip(&s.data).enumerate()
+        {
+            let bound = mag / 128.0 + 1e-5;
+            assert!(
+                (a - b).abs() <= bound,
+                "{m}x{n} elem {i}: bf16 {a} vs f32 {b} (|Σwx| = {mag}, bound {bound})"
+            );
+        }
+    }
+}
+
+#[test]
+fn bf16_stays_within_the_ulp_budget_on_cancellation_free_inputs() {
+    // All-positive weights and inputs: no cancellation, so the relative
+    // error stays ≤ ~2⁻⁷ and a pure ulp budget against the f32 oracle is
+    // meaningful: 2⁻⁷ relative ≈ 2¹⁷ f32 ulps; 2¹⁸ leaves slack for the
+    // accumulate rounding. A dense sweep over batch columns spanning three
+    // orders of magnitude checks the bound is scale-free.
+    let mut rng = Xoshiro256::new(61);
+    let (m, n, v) = (16usize, 64usize, 4usize);
+    let w = Matrix::from_vec(
+        m,
+        n,
+        (0..m * n).map(|_| rng.range_f32(0.05, 1.0)).collect(),
+    );
+    let cfg = HinmConfig::with_24(v, 0.5);
+    let p = prune_oneshot(&w, &w.abs(), &cfg).packed;
+    let batch = 48;
+    let x = Matrix::from_vec(
+        n,
+        batch,
+        (0..n * batch)
+            .map(|i| {
+                let scale = [0.01f32, 1.0, 100.0][i % 3];
+                rng.range_f32(0.1, 1.0) * scale
+            })
+            .collect(),
+    );
+    let engine = SpmmEngine::single();
+    let y32 = engine.spmm_planned(&SpmmPlan::new(&p), &x);
+    let y16 = engine.spmm_planned(&SpmmPlan::new(&p).with_values(ValueFormat::Bf16), &x);
+    for (i, (&a, &b)) in y16.data.iter().zip(&y32.data).enumerate() {
+        let d = ulp_diff(a, b);
+        assert!(d <= 1u64 << 18, "elem {i}: bf16 {a} vs f32 {b}: {d} ulp");
+    }
+}
+
+#[test]
+fn forced_scalar_plan_reports_itself() {
+    // `with_isa(Scalar)` must both dispatch scalar and *say* so — serve
+    // metrics report `plan.isa()`, so the accessor is part of the
+    // contract.
+    let p = packed(8, 16, 4, 71);
+    let plan = SpmmPlan::new(&p).with_isa(KernelIsa::Scalar);
+    assert_eq!(plan.isa(), KernelIsa::Scalar);
+    assert_eq!(plan.values(), ValueFormat::F32);
+    // The detected tier is always at least scalar and within the
+    // available set.
+    assert!(KernelIsa::available().contains(&KernelIsa::detect()));
+    assert!(KernelIsa::detect() >= KernelIsa::Scalar);
+}
