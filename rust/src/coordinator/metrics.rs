@@ -3,6 +3,7 @@
 //! per-replica + aggregate views the sharded batch server reports.
 
 use super::serve::Priority;
+use crate::util::sync::lock_unpoisoned;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -87,7 +88,7 @@ impl LatencyRecorder {
             return vec![0.0; ps.len()];
         }
         let mut s = self.samples_us.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         ps.iter()
             .map(|&p| {
                 let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
@@ -218,27 +219,27 @@ impl EngineMetrics {
 
     /// Requests answered successfully across all replicas.
     pub fn total_requests(&self) -> usize {
-        self.aggregate.lock().unwrap().count()
+        lock_unpoisoned(&self.aggregate).count()
     }
 
     /// Snapshot of the aggregate latency recorder.
     pub fn aggregate_latency(&self) -> LatencyRecorder {
-        self.aggregate.lock().unwrap().clone()
+        lock_unpoisoned(&self.aggregate).clone()
     }
 
     /// Snapshot of one replica's counters.
     pub fn replica_stats(&self, replica: usize) -> ReplicaStats {
-        self.replicas[replica].lock().unwrap().clone()
+        lock_unpoisoned(&self.replicas[replica]).clone()
     }
 
     /// Snapshot of the scheduler counters (per-priority served + expiry).
     pub fn scheduler_stats(&self) -> SchedulerStats {
-        self.scheduler.lock().unwrap().clone()
+        lock_unpoisoned(&self.scheduler).clone()
     }
 
     /// Successful requests per second since the engine started.
     pub fn requests_per_sec(&self) -> f64 {
-        self.throughput.lock().unwrap().per_sec()
+        lock_unpoisoned(&self.throughput).per_sec()
     }
 
     /// Multi-line human-readable report: aggregate latency/throughput,
@@ -259,7 +260,7 @@ impl EngineMetrics {
             sched.expired_in_queue
         ));
         for (i, m) in self.replicas.iter().enumerate() {
-            let st = m.lock().unwrap();
+            let st = lock_unpoisoned(m);
             s.push_str(&format!(
                 "\n  replica {i}: {} batches, {} reqs, {} failed batches | {}",
                 st.batches,

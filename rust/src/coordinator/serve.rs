@@ -47,6 +47,7 @@ use crate::runtime::backend::{CacheStats, CachedBackend, SpmmBackend};
 use crate::runtime::registry::ArtifactSpec;
 use crate::spmm::SpmmEngine;
 use crate::tensor::Matrix;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 use anyhow::{Context, Result};
 use std::collections::BinaryHeap;
 use std::sync::mpsc::{self, Sender};
@@ -223,7 +224,7 @@ impl<T> BoundedQueue<T> {
         item: T,
         deadline: Option<Instant>,
     ) -> Result<(), PushRejected<T>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         loop {
             if st.closed {
                 return Err(PushRejected::Closed(item));
@@ -232,13 +233,13 @@ impl<T> BoundedQueue<T> {
                 break;
             }
             match deadline {
-                None => st = self.not_full.wait(st).unwrap(),
+                None => st = wait_unpoisoned(&self.not_full, st),
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
                         return Err(PushRejected::Expired(item));
                     }
-                    let (guard, _) = self.not_full.wait_timeout(st, d - now).unwrap();
+                    let (guard, _) = wait_timeout_unpoisoned(&self.not_full, st, d - now);
                     st = guard;
                 }
             }
@@ -254,7 +255,7 @@ impl<T> BoundedQueue<T> {
     /// Pop the highest-priority item, blocking until one arrives. `None`
     /// only when the queue is closed *and* fully drained.
     fn pop_blocking(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         loop {
             if let Some(e) = st.items.pop() {
                 drop(st);
@@ -264,13 +265,13 @@ impl<T> BoundedQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = wait_unpoisoned(&self.not_empty, st);
         }
     }
 
     /// Pop with a deadline. `None` on deadline expiry or on closed+drained.
     fn pop_until(&self, deadline: Instant) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         loop {
             if let Some(e) = st.items.pop() {
                 drop(st);
@@ -284,7 +285,7 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _) = wait_timeout_unpoisoned(&self.not_empty, st, deadline - now);
             st = guard;
         }
     }
@@ -292,14 +293,14 @@ impl<T> BoundedQueue<T> {
     /// Close: new pushes fail, blocked pushers/poppers wake, remaining
     /// items stay poppable until drained.
     fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.state).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     /// Non-blocking pop (panic-path draining).
     fn try_pop(&self) -> Option<T> {
-        self.state.lock().unwrap().items.pop().map(|e| e.item)
+        lock_unpoisoned(&self.state).items.pop().map(|e| e.item)
     }
 
     #[cfg(test)]
@@ -374,7 +375,7 @@ impl ServerHandle {
         let now = Instant::now();
         let deadline = deadline.map(|d| now + d);
         if deadline.is_some_and(|d| d <= now) {
-            self.metrics.scheduler.lock().unwrap().expired_at_enqueue += 1;
+            lock_unpoisoned(&self.metrics.scheduler).expired_at_enqueue += 1;
             return Err(InferError::DeadlineExpired);
         }
         let (tx, rx) = mpsc::channel();
@@ -383,7 +384,7 @@ impl ServerHandle {
             Ok(()) => {}
             Err(PushRejected::Closed(_)) => return Err(InferError::Stopped),
             Err(PushRejected::Expired(_)) => {
-                self.metrics.scheduler.lock().unwrap().expired_at_enqueue += 1;
+                lock_unpoisoned(&self.metrics.scheduler).expired_at_enqueue += 1;
                 return Err(InferError::DeadlineExpired);
             }
         }
@@ -569,7 +570,10 @@ impl BatchServer {
                 }
             }
         }
-        let (d_in, d_out) = dims.expect("at least one replica");
+        let (d_in, d_out) = match dims {
+            Some(d) => d,
+            None => anyhow::bail!("no replicas configured"),
+        };
 
         let handle =
             ServerHandle { queue, metrics: Arc::clone(&metrics), d_in, d_out };
@@ -661,7 +665,7 @@ impl Drop for BatchServer {
 /// Answer an expired request with a timeout error (never executed) and
 /// count it.
 fn expire(req: Request, metrics: &EngineMetrics) {
-    metrics.scheduler.lock().unwrap().expired_in_queue += 1;
+    lock_unpoisoned(&metrics.scheduler).expired_in_queue += 1;
     let _ = req.resp.send(Err(InferError::DeadlineExpired));
 }
 
@@ -768,7 +772,7 @@ fn flush(
                 lats.push(r.enqueued.elapsed());
             }
             {
-                let mut rep = metrics.replicas[replica].lock().unwrap();
+                let mut rep = lock_unpoisoned(&metrics.replicas[replica]);
                 rep.batches += 1;
                 rep.requests += n;
                 for &l in &lats {
@@ -776,24 +780,24 @@ fn flush(
                 }
             }
             {
-                let mut agg = metrics.aggregate.lock().unwrap();
+                let mut agg = lock_unpoisoned(&metrics.aggregate);
                 for &l in &lats {
                     agg.record(l);
                 }
             }
             {
-                let mut sched = metrics.scheduler.lock().unwrap();
+                let mut sched = lock_unpoisoned(&metrics.scheduler);
                 for r in &reqs {
                     sched.served[r.priority.index()] += 1;
                 }
             }
-            metrics.throughput.lock().unwrap().add(n);
+            lock_unpoisoned(&metrics.throughput).add(n);
             for (r, col) in reqs.into_iter().zip(cols) {
                 let _ = r.resp.send(Ok(col));
             }
         }
         Err(e) => {
-            metrics.replicas[replica].lock().unwrap().errors += 1;
+            lock_unpoisoned(&metrics.replicas[replica]).errors += 1;
             let msg = format!("batch execution failed: {e:#}");
             for r in reqs {
                 let _ = r.resp.send(Err(InferError::Backend(msg.clone())));
@@ -889,13 +893,13 @@ impl PipeLink {
     /// A spare buffer previously returned by this link's consumer, or an
     /// empty matrix on a cold start (stages reshape it in place).
     fn take_buffer(&self) -> Matrix {
-        self.recycle.lock().unwrap().pop().unwrap_or_else(|| Matrix::zeros(0, 0))
+        lock_unpoisoned(&self.recycle).pop().unwrap_or_else(|| Matrix::zeros(0, 0))
     }
 
     /// Return a consumed hand-off buffer to this link's producer; extras
     /// beyond the cap are simply dropped.
     fn put_buffer(&self, m: Matrix) {
-        let mut pool = self.recycle.lock().unwrap();
+        let mut pool = lock_unpoisoned(&self.recycle);
         if pool.len() < PIPE_RECYCLE_CAP {
             pool.push(m);
         }

@@ -86,7 +86,7 @@ pub fn channel_spread(sal: &Matrix) -> f64 {
     let mut norms: Vec<f64> = (0..sal.rows)
         .map(|r| sal.row(r).iter().map(|&x| x.abs() as f64).sum())
         .collect();
-    norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    norms.sort_by(|a, b| a.total_cmp(b));
     let p10 = norms[sal.rows / 10];
     let p90 = norms[sal.rows * 9 / 10];
     if p10 > 0.0 {

@@ -23,6 +23,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
+use crate::util::sync::lock_unpoisoned;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -143,7 +144,10 @@ impl HttpServer {
                 .spawn(move || loop {
                     // Hold the lock only while waiting for a connection;
                     // handling runs unlocked so workers serve in parallel.
-                    let conn = { rx.lock().unwrap().recv() };
+                    // Poison-tolerant: a worker that panicked mid-recv must
+                    // not take the whole acceptor pool down with it — the
+                    // surviving workers keep draining connections (R4).
+                    let conn = { lock_unpoisoned(&rx).recv() };
                     match conn {
                         Ok(stream) => handle_connection(stream, h.as_ref(), &stop),
                         Err(_) => break, // acceptor gone and queue drained
@@ -272,7 +276,7 @@ fn invalid(msg: &str) -> std::io::Error {
 /// Read one `\n`-terminated line of at most [`MAX_LINE_BYTES`] bytes.
 /// Returns the byte count (0 = EOF); a line hitting the cap without a
 /// newline is `InvalidData`.
-fn read_line_limited(reader: &mut BufReader<TcpStream>, line: &mut String) -> std::io::Result<usize> {
+fn read_line_limited<R: BufRead>(reader: &mut R, line: &mut String) -> std::io::Result<usize> {
     let n = reader.by_ref().take(MAX_LINE_BYTES).read_line(line)?;
     if n as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
         return Err(invalid("header line too long"));
@@ -283,7 +287,11 @@ fn read_line_limited(reader: &mut BufReader<TcpStream>, line: &mut String) -> st
 /// Read one request. `Ok(None)` = clean EOF before a request started;
 /// `ErrorKind::InvalidData` = malformed request (caller answers 400); any
 /// other error = connection-level failure (caller closes quietly).
-fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<HttpRequest>> {
+///
+/// Generic over [`BufRead`] (not tied to a socket) so the fuzz harness
+/// (`rust/tests/fuzz_http.rs`) can drive it from in-memory byte slices;
+/// the server path instantiates it with `BufReader<TcpStream>`.
+pub fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<HttpRequest>> {
     let mut line = String::new();
     if read_line_limited(reader, &mut line)? == 0 {
         return Ok(None);

@@ -21,10 +21,12 @@ thread_local! {
 pub fn client() -> Result<PjRtClient> {
     CLIENT.with(|c| {
         let mut slot = c.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(PjRtClient::cpu().context("creating PJRT CPU client")?);
+        if let Some(c) = slot.as_ref() {
+            return Ok(c.clone());
         }
-        Ok(slot.as_ref().unwrap().clone())
+        let c = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        *slot = Some(c.clone());
+        Ok(c)
     })
 }
 

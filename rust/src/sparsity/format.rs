@@ -134,14 +134,19 @@ impl HinmPacked {
         }
         for tt in 0..t {
             let vidx = self.tile_vec_idx(tt);
-            let mut seen = std::collections::HashSet::new();
             for &c in vidx {
                 if c < 0 || c as usize >= self.cols {
                     bail!("tile {tt}: column id {c} out of range");
                 }
-                if !seen.insert(c) {
-                    bail!("tile {tt}: duplicate column id {c}");
-                }
+            }
+            // Duplicate detection via sort rather than a HashSet: compute
+            // paths must stay free of hash-order nondeterminism (R3), and
+            // the deterministic error (smallest duplicated id) is more
+            // useful in a property-test failure anyway.
+            let mut sorted: Vec<i32> = vidx.to_vec();
+            sorted.sort_unstable();
+            if let Some(w) = sorted.windows(2).find(|w| w[0] == w[1]) {
+                bail!("tile {tt}: duplicate column id {}", w[0]);
             }
         }
         for (i, &o) in self.nm_idx.iter().enumerate() {

@@ -348,6 +348,8 @@ struct SendPtr(*mut f32);
 // SAFETY: lanes write disjoint tile-sized chunks behind this pointer, and
 // the owning `&mut Matrix` borrow outlives the pool run.
 unsafe impl Send for SendPtr {}
+// SAFETY: shared references to SendPtr only copy the address out; every
+// write through it targets a lane-disjoint chunk (same argument as `Send`).
 unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]

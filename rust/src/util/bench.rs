@@ -122,7 +122,7 @@ impl Bencher {
     }
 
     fn stats(name: &str, samples: &mut [f64]) -> BenchStats {
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;

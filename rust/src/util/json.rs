@@ -4,6 +4,16 @@
 //! (a) the artifact manifest written by `python/compile/aot.py` and
 //! (b) machine-readable experiment reports. This is a small, strict-enough
 //! recursive-descent parser and a pretty printer over a [`Json`] enum.
+//!
+//! The parser also fronts untrusted HTTP bodies (`net::protocol`), so it is
+//! hardened against the adversarial classes the fuzz harness
+//! (`rust/tests/fuzz_json.rs`) generates: nesting is bounded by
+//! [`MAX_DEPTH`] (a 10 kB bracket run must not overflow the worker stack),
+//! numbers that overflow `f64` (`1e999`) are rejected rather than parsed to
+//! `inf` (no JSON emitter, including this one, can round-trip them), raw
+//! control bytes in strings are rejected per RFC 8259, and `\u` escapes
+//! handle UTF-16 surrogate halves: a proper high+low pair decodes to its
+//! supplementary-plane scalar, an unpaired half is an error.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -214,6 +224,12 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting depth [`parse`] accepts. Recursion depth is
+/// the one resource a tiny adversarial document can amplify (every `[`
+/// costs the attacker one byte and this parser one stack frame); 128
+/// levels is far beyond any manifest/report/wire document we produce.
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document.
 pub fn parse(input: &str) -> Result<Json, String> {
     let mut p = Parser {
@@ -221,7 +237,7 @@ pub fn parse(input: &str) -> Result<Json, String> {
         pos: 0,
     };
     p.skip_ws();
-    let v = p.value()?;
+    let v = p.value(0)?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
         return Err(format!("trailing data at byte {}", p.pos));
@@ -250,7 +266,7 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
     }
-    fn expect(&mut self, b: u8) -> Result<(), String> {
+    fn eat(&mut self, b: u8) -> Result<(), String> {
         if self.bump() == Some(b) {
             Ok(())
         } else {
@@ -266,11 +282,16 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    /// `depth` counts container levels already entered; bounding it here
+    /// bounds the recursion `value → object/array → value`.
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.pos));
+        }
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -280,8 +301,8 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.eat(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -292,8 +313,8 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
-            let v = self.value()?;
+            self.eat(b':')?;
+            let v = self.value(depth + 1)?;
             map.insert(k, v);
             self.skip_ws();
             match self.bump() {
@@ -304,8 +325,8 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.eat(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -313,7 +334,7 @@ impl<'a> Parser<'a> {
             return Ok(Json::Arr(items));
         }
         loop {
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -323,8 +344,18 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or("eof in \\u escape")? as char;
+            code = code * 16 + c.to_digit(16).ok_or("bad hex in \\u")?;
+        }
+        Ok(code)
+    }
+
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.bump() {
@@ -339,15 +370,37 @@ impl<'a> Parser<'a> {
                     Some(b'b') => s.push('\u{8}'),
                     Some(b'f') => s.push('\u{c}'),
                     Some(b'u') => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump().ok_or("eof in \\u escape")? as char;
-                            code = code * 16 + c.to_digit(16).ok_or("bad hex in \\u")?;
-                        }
-                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        let code = self.hex4()?;
+                        // UTF-16 surrogate halves are not scalar values: a
+                        // high half must be completed by an escaped low
+                        // half (decoding to one supplementary-plane char);
+                        // anything unpaired is an error, never U+FFFD —
+                        // silent replacement would let two different wire
+                        // strings decode to the same value.
+                        let scalar = if (0xD800..=0xDBFF).contains(&code) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err("unpaired high surrogate in \\u escape".into());
+                            }
+                            let low = self.hex4()?;
+                            if !(0xDC00..=0xDFFF).contains(&low) {
+                                return Err("high surrogate not followed by low surrogate".into());
+                            }
+                            0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00)
+                        } else if (0xDC00..=0xDFFF).contains(&code) {
+                            return Err("unpaired low surrogate in \\u escape".into());
+                        } else {
+                            code
+                        };
+                        s.push(char::from_u32(scalar).ok_or("invalid \\u scalar")?);
                     }
                     _ => return Err("bad escape".into()),
                 },
+                Some(c) if c < 0x20 => {
+                    return Err(format!(
+                        "raw control byte 0x{c:02x} in string at byte {} (use \\u escapes)",
+                        self.pos
+                    ));
+                }
                 Some(c) if c < 0x80 => s.push(c as char),
                 Some(c) => {
                     // Re-assemble UTF-8 multibyte sequences.
@@ -380,10 +433,16 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|e| format!("bad number {text:?}: {e}"))
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|e| format!("invalid utf-8 in number: {e}"))?;
+        let n: f64 = text.parse().map_err(|e| format!("bad number {text:?}: {e}"))?;
+        // `f64::from_str` maps overflow to ±inf instead of failing; JSON
+        // has no inf/NaN tokens, so a value we could never re-emit is a
+        // parse error, not a number.
+        if !n.is_finite() {
+            return Err(format!("number {text:?} does not fit a finite f64 at byte {start}"));
+        }
+        Ok(Json::Num(n))
     }
 }
 
@@ -461,5 +520,69 @@ mod tests {
     fn numbers() {
         assert_eq!(parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
         assert_eq!(parse("42").unwrap().as_usize(), Some(42));
+    }
+
+    // ---- regressions pinned from the first fuzz corpus ----
+    // (rust/tests/fuzz_json.rs; each case is a whole input class the
+    // structure-aware generator produced, reduced by hand.)
+
+    #[test]
+    fn nesting_is_bounded() {
+        // A bracket run used to recurse once per byte; 100k bytes of "["
+        // overflowed the HTTP worker stack. Depth 100 stays fine, MAX_DEPTH
+        // is the last accepted level, one past it is a clean Err.
+        let deep = |n: usize| "[".repeat(n) + &"]".repeat(n);
+        assert!(parse(&deep(100)).is_ok());
+        assert!(parse(&deep(MAX_DEPTH)).is_ok());
+        assert!(parse(&deep(MAX_DEPTH + 1)).is_err());
+        assert!(parse(&"[".repeat(100_000)).is_err());
+        // Mixed object/array nesting counts the same levels.
+        let mixed = "{\"a\":".repeat(80) + "[1]" + &"}".repeat(80);
+        assert!(parse(&mixed).is_ok());
+    }
+
+    #[test]
+    fn overflowing_numbers_are_rejected_not_inf() {
+        for bad in ["1e999", "-1e999", "1e309", "-2.5e308"] {
+            assert!(parse(bad).is_err(), "{bad} must not parse (to inf)");
+        }
+        // Near-max finite values still parse.
+        assert!(parse("1.7e308").unwrap().as_f64().unwrap().is_finite());
+        // Underflow to zero is fine per IEEE semantics.
+        assert_eq!(parse("1e-999").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn surrogate_escapes() {
+        // A proper UTF-16 pair decodes to one supplementary-plane scalar.
+        assert_eq!(parse(r#""\uD83D\uDE00""#).unwrap().as_str(), Some("\u{1F600}"));
+        // Unpaired halves used to become U+FFFD silently; now they error.
+        assert!(parse(r#""\uD800""#).is_err());
+        assert!(parse(r#""\uDC00""#).is_err());
+        assert!(parse(r#""\uD800x""#).is_err());
+        assert!(parse(r#""\uD800A""#).is_err());
+        // Non-surrogate escapes are unchanged.
+        assert_eq!(parse(r#""Aé""#).unwrap().as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn raw_control_bytes_in_strings_are_rejected() {
+        assert!(parse("\"a\nb\"").is_err());
+        assert!(parse("\"a\u{1}b\"").is_err());
+        // The escaped forms still work.
+        assert_eq!(parse(r#""a\nb""#).unwrap().as_str(), Some("a\nb"));
+    }
+
+    #[test]
+    fn multibyte_passthrough_at_string_edges() {
+        // The byte-level scanner reassembles raw multibyte sequences; a
+        // multibyte char hard against either quote must survive intact.
+        // (Truly invalid UTF-8 cannot reach `parse` — the `&str` input
+        // type already guarantees validity — so the reassembly error path
+        // exists only as defense in depth.)
+        for s in ["é", "日本語", "→x", "x→", "\u{1F600}"] {
+            let doc = format!("\"{s}\"");
+            assert_eq!(parse(&doc).unwrap().as_str(), Some(s), "{s}");
+        }
     }
 }

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 
 /// Format a byte count human-readably.
 pub fn human_bytes(n: usize) -> String {

@@ -1,0 +1,71 @@
+//! Poison-tolerant synchronization helpers (DESIGN.md §17, rule R4).
+//!
+//! `Mutex::lock` returns `Err` only when another thread panicked while
+//! holding the guard. In the serving layer that must not take down every
+//! other worker: the states these locks protect (bounded queues, metrics
+//! counters, buffer recycle pools) are updated with single in-place
+//! operations that stay structurally valid across an unwind, so the right
+//! degradation is to recover the guard and keep serving — the panicking
+//! thread already surfaced the bug through its own panic hook, and the
+//! serve-path panic guards (`CloseOnExit`, `PoisonPipeline`) turn it into
+//! a drained queue rather than a wedged one. These helpers are the lock
+//! idiom `hinm-lint` rule R4 expects in worker loops; a bare
+//! `.lock().unwrap()` in library code is a lint finding.
+//!
+//! The deliberate exception is [`crate::spmm::engine`]'s kernel pool,
+//! which *wants* fail-fast poisoning: a lane that panicked mid-kernel
+//! leaves partially written tiles, and no later answer from that pool can
+//! be trusted. That file is allowlisted with that reason instead of using
+//! these helpers.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard when a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`], recovering the reacquired guard on poison.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`], recovering the reacquired guard on poison.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panic() {
+        let m = Mutex::new(7u32);
+        std::thread::scope(|s| {
+            let handle = s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("poison the mutex");
+            });
+            assert!(handle.join().is_err());
+        });
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (_g, res) = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

@@ -1,0 +1,207 @@
+//! Deterministic structure-aware fuzz smoke for the `util::json` parser
+//! (DESIGN.md §17).
+//!
+//! Every case is derived from `mix_seed(BASE, case_index)`, so any failure
+//! reproduces from its printed case index alone — no corpus files, no
+//! cargo-fuzz, no nightly. Three input families per run:
+//!
+//! 1. **Valid documents**: a random [`Json`] value is generated, serialized
+//!    (pretty or compact), and must parse back equal.
+//! 2. **Mutated documents**: the serialized bytes are corrupted (flips,
+//!    truncation, splices) and parsed via `from_utf8_lossy`; the parser
+//!    may answer `Ok` or `Err` but must not panic, and any `Ok` value must
+//!    survive a serialize→parse round trip unchanged.
+//! 3. **Adversarial soup**: bracket runs past `MAX_DEPTH`, overflowing
+//!    number literals, and random bytes from a JSON-flavored alphabet.
+//!
+//! Iteration budget: `HINM_FUZZ_ITERS` (default 10 000, the tier-1 smoke;
+//! the CI `fuzz-long` job raises it and bounds wall clock with
+//! `HINM_FUZZ_SECONDS`). Failing inputs are persisted under
+//! `target/fuzz-failures/` for artifact upload before the harness panics.
+
+use hinm::util::json::{self, Json, MAX_DEPTH};
+use hinm::util::rng::{mix_seed, Xoshiro256};
+use std::time::{Duration, Instant};
+
+const BASE_SEED: u64 = 0x4A50_4E5F_F077;
+
+fn iters(default: usize) -> usize {
+    if cfg!(miri) {
+        return 64;
+    }
+    std::env::var("HINM_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn budget() -> Option<Duration> {
+    std::env::var("HINM_FUZZ_SECONDS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
+/// Write the failing input to `target/fuzz-failures/` (uploaded as a CI
+/// artifact by the `fuzz-long` job) and return its path for the panic
+/// message.
+fn persist_failure(target: &str, case: u64, bytes: &[u8]) -> String {
+    let dir = std::env::var("HINM_FUZZ_ARTIFACTS")
+        .unwrap_or_else(|_| "target/fuzz-failures".to_string());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/{target}-case{case}.bin");
+    let _ = std::fs::write(&path, bytes);
+    path
+}
+
+fn gen_string(rng: &mut Xoshiro256) -> String {
+    let len = rng.below(12);
+    (0..len)
+        .map(|_| match rng.below(6) {
+            0 => char::from(b'a' + rng.below(26) as u8),
+            1 => char::from(b'0' + rng.below(10) as u8),
+            2 => ['"', '\\', '/', '\n', '\t', '\r'][rng.below(6)],
+            3 => char::from_u32(rng.below(0x20) as u32).unwrap_or('?'),
+            4 => ['é', '→', '日', '\u{1F600}', 'π'][rng.below(5)],
+            _ => ' ',
+        })
+        .collect()
+}
+
+fn gen_value(rng: &mut Xoshiro256, depth: usize) -> Json {
+    let scalar_only = depth >= 6;
+    match rng.below(if scalar_only { 4 } else { 6 }) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => {
+            let n = match rng.below(5) {
+                0 => rng.below(1000) as f64,
+                1 => -(rng.below(1000) as f64),
+                2 => rng.next_f64() * 1e6 - 5e5,
+                3 => 1.7e308 * rng.next_f64(),
+                _ => rng.next_f64() * 1e-300,
+            };
+            Json::Num(n)
+        }
+        3 => Json::Str(gen_string(rng)),
+        4 => {
+            let n = rng.below(5);
+            Json::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.below(5);
+            Json::Obj((0..n).map(|_| (gen_string(rng), gen_value(rng, depth + 1))).collect())
+        }
+    }
+}
+
+fn mutate(rng: &mut Xoshiro256, bytes: &mut Vec<u8>) {
+    for _ in 0..1 + rng.below(4) {
+        if bytes.is_empty() {
+            return;
+        }
+        match rng.below(5) {
+            0 => {
+                let i = rng.below(bytes.len());
+                bytes[i] = rng.next_u64() as u8;
+            }
+            1 => bytes.truncate(rng.below(bytes.len())),
+            2 => {
+                let i = rng.below(bytes.len());
+                bytes.insert(i, *[b'{', b'[', b'"', b',', b'\\', 0xE2][rng.below(6)]);
+            }
+            3 => {
+                let i = rng.below(bytes.len());
+                bytes.remove(i);
+            }
+            _ => {
+                let i = rng.below(bytes.len());
+                let j = rng.below(bytes.len());
+                bytes.swap(i, j);
+            }
+        }
+    }
+}
+
+/// Parsed values must survive a serialize→parse round trip bit-for-bit:
+/// the parser only produces finite numbers and valid scalars, both of
+/// which the writer re-emits losslessly.
+fn check_roundtrip(v: &Json, case: u64, input: &[u8]) {
+    for text in [v.compact(), v.pretty()] {
+        match json::parse(&text) {
+            Ok(back) if back == *v => {}
+            other => {
+                let path = persist_failure("json", case, input);
+                panic!("case {case}: roundtrip broke ({other:?} != {v:?}); input at {path}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_json_parser_smoke() {
+    let n = iters(10_000);
+    let start = Instant::now();
+    let deadline = budget();
+    let mut done = 0usize;
+    for case in 0..n as u64 {
+        if deadline.is_some_and(|d| start.elapsed() > d) {
+            break;
+        }
+        let mut rng = Xoshiro256::new(mix_seed(BASE_SEED, case));
+        match case % 3 {
+            // Family 1: valid document → must parse back equal.
+            0 => {
+                let v = gen_value(&mut rng, 0);
+                let text = if rng.below(2) == 0 { v.pretty() } else { v.compact() };
+                match json::parse(&text) {
+                    Ok(back) if back == v => {}
+                    other => {
+                        let path = persist_failure("json", case, text.as_bytes());
+                        panic!("case {case}: valid doc mis-parsed ({other:?}); input at {path}");
+                    }
+                }
+            }
+            // Family 2: mutated document → no panic; Ok values roundtrip.
+            1 => {
+                let v = gen_value(&mut rng, 0);
+                let mut bytes = v.compact().into_bytes();
+                mutate(&mut rng, &mut bytes);
+                let text = String::from_utf8_lossy(&bytes);
+                let parsed = std::panic::catch_unwind(|| json::parse(&text));
+                match parsed {
+                    Err(_) => {
+                        let path = persist_failure("json", case, &bytes);
+                        panic!("case {case}: parser panicked; input at {path}");
+                    }
+                    Ok(Ok(got)) => check_roundtrip(&got, case, &bytes),
+                    Ok(Err(_)) => {}
+                }
+            }
+            // Family 3: adversarial soup.
+            _ => {
+                let text: String = match rng.below(3) {
+                    0 => {
+                        let d = rng.below(2 * MAX_DEPTH) + 1;
+                        let open = if rng.below(2) == 0 { "[" } else { "{\"k\":" };
+                        open.repeat(d)
+                    }
+                    1 => format!("1e{}", rng.below(2000)),
+                    _ => {
+                        const ALPHA: &[u8] = b"{}[]\",:0123456789eE+-.\\utrlnf ";
+                        (0..rng.below(200)).map(|_| ALPHA[rng.below(ALPHA.len())] as char).collect()
+                    }
+                };
+                let parsed = std::panic::catch_unwind(|| json::parse(&text));
+                match parsed {
+                    Err(_) => {
+                        let path = persist_failure("json", case, text.as_bytes());
+                        panic!("case {case}: parser panicked; input at {path}");
+                    }
+                    Ok(Ok(got)) => check_roundtrip(&got, case, text.as_bytes()),
+                    Ok(Err(_)) => {}
+                }
+            }
+        }
+        done += 1;
+    }
+    assert!(done > 0, "fuzz budget expired before the first case");
+    println!("fuzz_json: {done} cases, {:?}", start.elapsed());
+}

@@ -1,0 +1,200 @@
+//! Deterministic structure-aware fuzz smoke for `SpmmPlan` compilation
+//! over adversarial `HinmPacked` inputs (DESIGN.md §17).
+//!
+//! Two properties, checked on every case derived from
+//! `mix_seed(BASE_SEED, case_index)`:
+//!
+//! 1. **Validity is decidable**: a packing produced by `prune_oneshot`
+//!    always passes `check_invariants`; a packing with one field mutated
+//!    either fails `check_invariants` (the mutation was caught) or remains
+//!    a *different but valid* packing.
+//! 2. **Valid ⇒ runnable and bit-exact**: any packing that passes
+//!    `check_invariants` must compile to a plan (any ISA tier, any batch
+//!    block, any lane count) and execute bitwise-identical to
+//!    `spmm_reference` on the same packing — compilation must never trust
+//!    anything `check_invariants` does not guarantee.
+//!
+//! Shapes stay small (tiles ≤ 3, n ≤ 64, batch ≤ 8) so 10k iterations fit
+//! the tier-1 debug-build budget; the CI `fuzz-long` job scales the count
+//! via `HINM_FUZZ_ITERS` under an `HINM_FUZZ_SECONDS` wall-clock bound.
+//! Failing cases persist their parameters to `target/fuzz-failures/`.
+
+use hinm::sparsity::{prune_oneshot, HinmConfig, HinmPacked};
+use hinm::spmm::{spmm_reference, KernelIsa, SpmmEngine, SpmmPlan, ValueFormat};
+use hinm::tensor::Matrix;
+use hinm::util::rng::{mix_seed, Xoshiro256};
+use std::time::{Duration, Instant};
+
+const BASE_SEED: u64 = 0x504C_414E_F077;
+
+fn iters(default: usize) -> usize {
+    if cfg!(miri) {
+        return 32;
+    }
+    std::env::var("HINM_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn budget() -> Option<Duration> {
+    std::env::var("HINM_FUZZ_SECONDS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
+fn persist_failure(case: u64, detail: &str) -> String {
+    let dir = std::env::var("HINM_FUZZ_ARTIFACTS")
+        .unwrap_or_else(|_| "target/fuzz-failures".to_string());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/plan-case{case}.txt");
+    let _ = std::fs::write(&path, detail);
+    path
+}
+
+fn gen_packed(rng: &mut Xoshiro256) -> (HinmPacked, usize) {
+    let v = [4usize, 8][rng.below(2)];
+    let tiles = 1 + rng.below(3);
+    let m = v * tiles;
+    let n = 4 * (3 + rng.below(14)); // 12..=64, multiple of M=4
+    let sparsity = [0.0, 0.25, 0.5, 0.75][rng.below(4)];
+    let cfg = HinmConfig::with_24(v, sparsity);
+    let w = Matrix::randn(m, n, 1.0, rng);
+    let sal = if rng.below(2) == 0 { w.abs() } else { Matrix::randn(m, n, 1.0, rng) };
+    (prune_oneshot(&w, &sal, &cfg).packed, n)
+}
+
+/// Corrupt one structural field. Returns a human-readable tag for the
+/// failure artifact.
+fn mutate(rng: &mut Xoshiro256, p: &mut HinmPacked) -> &'static str {
+    match rng.below(6) {
+        0 => {
+            // Duplicate a column id within a tile.
+            let i = rng.below(p.vec_idx.len());
+            let t = i / p.k_v;
+            let j = t * p.k_v + rng.below(p.k_v);
+            p.vec_idx[i] = p.vec_idx[j];
+            "vec_idx duplicate"
+        }
+        1 => {
+            let i = rng.below(p.vec_idx.len());
+            p.vec_idx[i] = p.cols as i32 + rng.below(5) as i32;
+            "vec_idx out of range"
+        }
+        2 => {
+            let i = rng.below(p.nm_idx.len());
+            p.nm_idx[i] = p.cfg.m_group as u8 + rng.below(3) as u8;
+            "nm_idx out of group"
+        }
+        3 => {
+            // Break the strictly-ascending in-group order.
+            let i = rng.below(p.nm_idx.len());
+            p.nm_idx[i] = 0;
+            let j = (i / p.cfg.n_keep) * p.cfg.n_keep;
+            p.nm_idx[j] = p.cfg.m_group as u8 - 1;
+            "nm order broken"
+        }
+        4 => {
+            p.vals.pop();
+            "vals truncated"
+        }
+        _ => {
+            // Value-only perturbation: always stays a valid packing.
+            let i = rng.below(p.vals.len());
+            p.vals[i] = -p.vals[i] * 3.0 + 1.0;
+            "vals perturbed"
+        }
+    }
+}
+
+/// Property 2: any invariant-passing packing runs bit-exact vs the
+/// reference under a randomly drawn execution config. `engines` is the
+/// pre-spawned lane-count sweep (spawning a kernel pool per case would
+/// dominate the run).
+fn check_runs(
+    p: &HinmPacked,
+    n: usize,
+    rng: &mut Xoshiro256,
+    engines: &[SpmmEngine],
+    case: u64,
+    tag: &str,
+) {
+    let b = 1 + rng.below(8);
+    let x = Matrix::randn(n, b, 1.0, rng);
+    let want = spmm_reference(p, &x);
+    let isas = KernelIsa::available();
+    let isa = isas[rng.below(isas.len())];
+    let mut plan = SpmmPlan::new(p).with_isa(isa);
+    if rng.below(2) == 0 {
+        plan = plan.with_batch_block(1 + rng.below(33));
+    }
+    let engine = &engines[rng.below(engines.len())];
+    let got = engine.spmm_planned(&plan, &x);
+    let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+    if bits(&got) != bits(&want) {
+        let path = persist_failure(
+            case,
+            &format!("case {case} [{tag}]: {}x{} V={} batch {b} isa {isa}", p.rows, p.cols, p.cfg.v),
+        );
+        panic!("case {case} [{tag}]: plan output diverged from reference; params at {path}");
+    }
+    // bf16 arm: never bit-equal to f32, but must run and stay inside the
+    // §16 rounding model |y16 − y32| ≤ Σ|wᵢxᵢ|/128 + 1e-5.
+    if rng.below(4) == 0 {
+        let y16 = engine.spmm_planned(&SpmmPlan::new(p).with_values(ValueFormat::Bf16), &x);
+        let s = hinm::spmm::dense::matmul(&p.to_dense().abs(), &x.abs());
+        for ((&a, &b32), &mag) in y16.data.iter().zip(&want.data).zip(&s.data) {
+            if (a - b32).abs() > mag / 128.0 + 1e-5 {
+                let path = persist_failure(case, &format!("case {case} [{tag}]: bf16 bound"));
+                panic!("case {case}: bf16 outside rounding model; params at {path}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_plan_compilation_smoke() {
+    let n_iters = iters(10_000);
+    let start = Instant::now();
+    let deadline = budget();
+    let mut done = 0usize;
+    let mut mutants_valid = 0usize;
+    let mut mutants_caught = 0usize;
+    let engines: Vec<SpmmEngine> = (1..=4).map(SpmmEngine::new).collect();
+    for case in 0..n_iters as u64 {
+        if deadline.is_some_and(|d| start.elapsed() > d) {
+            break;
+        }
+        let mut rng = Xoshiro256::new(mix_seed(BASE_SEED, case));
+        let (packed, n) = gen_packed(&mut rng);
+        if let Err(e) = packed.check_invariants() {
+            let path = persist_failure(case, &format!("case {case}: fresh packing invalid: {e}"));
+            panic!("case {case}: prune_oneshot produced an invalid packing ({e}); {path}");
+        }
+        if case % 2 == 0 {
+            check_runs(&packed, n, &mut rng, &engines, case, "fresh");
+        } else {
+            let mut mutant = packed.clone();
+            let tag = mutate(&mut rng, &mut mutant);
+            match mutant.check_invariants() {
+                // The invariant checker caught the corruption — done.
+                Err(_) => mutants_caught += 1,
+                // The mutation landed on another *valid* packing (e.g. a
+                // value perturbation); then it must also run bit-exact.
+                Ok(()) => {
+                    mutants_valid += 1;
+                    check_runs(&mutant, n, &mut rng, &engines, case, tag);
+                }
+            }
+        }
+        done += 1;
+    }
+    assert!(done > 0, "fuzz budget expired before the first case");
+    // The generator must actually exercise both sides of property 1.
+    if done >= 1000 {
+        assert!(mutants_caught > 0, "no mutation was ever rejected");
+        assert!(mutants_valid > 0, "no mutation ever stayed valid");
+    }
+    println!(
+        "fuzz_plan: {done} cases ({mutants_caught} mutants caught, {mutants_valid} valid), {:?}",
+        start.elapsed()
+    );
+}

@@ -1,0 +1,751 @@
+//! Token-level source linter for the hinm repository.
+//!
+//! Enforces the written contracts of DESIGN.md §17 ("Enforced invariants")
+//! as CI-gating diagnostics. The scan is deliberately *not* a Rust parser:
+//! it masks comments and string/char literals with a small state machine
+//! and then looks for boundary-checked tokens in what remains. That keeps
+//! the tool std-only (no syn, no proc-macro, no regex crate), fast enough
+//! to run on every push, and simple enough that its semantics are
+//! reviewable in one sitting. The cost is that the rules are lexical:
+//! they gate on *tokens*, not on resolved paths — good enough for every
+//! contract below, all of which were written as textual conventions in the
+//! first place.
+//!
+//! The five rules (numbering shared with DESIGN.md §17):
+//!
+//! - **R1** — `unsafe` only inside allowlisted modules, and every
+//!   occurrence immediately preceded by a `// SAFETY:` comment.
+//! - **R2** — no FMA anywhere: `mul_add`, `_mm256_fmadd_*`, `_mm_fmadd_*`,
+//!   and the `-C target-feature=+fma` flag string are banned crate-wide
+//!   (the bitwise ISA-equivalence contract of §16 dies the moment any tier
+//!   contracts a multiply-add).
+//! - **R3** — no wall-clock or hash-order nondeterminism (`Instant::now`,
+//!   `SystemTime`, default-hasher `HashMap`/`HashSet`) in the numeric core
+//!   (`permute/`, `spmm/`, `sparsity/`, `tensor/`).
+//! - **R4** — no `unwrap()`/`expect(` in library code outside `#[cfg(test)]`
+//!   and `main.rs`.
+//! - **R5** — every `§N` anchor cited from doc comments, README.md, or
+//!   ARCHITECTURE.md must resolve to a `## §N` heading in DESIGN.md, plus
+//!   the fixed cross-document links the retired CI grep step used to check.
+//!
+//! Waivers are file-level only, via the checked-in allowlist
+//! (`tools/hinm-lint/lint-allow.txt`); every entry must carry a reason.
+//! There are deliberately no inline `#[allow]`-style escape hatches: a
+//! waiver is a reviewed, documented decision about a *file*, not something
+//! a patch can sprinkle next to the code it excuses.
+
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The five enforced contracts of DESIGN.md §17.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `unsafe` confinement + `// SAFETY:` comments.
+    R1,
+    /// FMA ban (bitwise ISA equivalence, §16).
+    R2,
+    /// Nondeterminism ban in the numeric core.
+    R3,
+    /// `unwrap()`/`expect(` ban in library code.
+    R4,
+    /// `§N` anchors must resolve in DESIGN.md.
+    R5,
+}
+
+impl Rule {
+    fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "R1" => Some(Rule::R1),
+            "R2" => Some(Rule::R2),
+            "R3" => Some(Rule::R3),
+            "R4" => Some(Rule::R4),
+            "R5" => Some(Rule::R5),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+        })
+    }
+}
+
+/// One diagnostic: rule, repo-relative path, 1-based line, message.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Which contract was violated.
+    pub rule: Rule,
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}:{}  {}", self.rule, self.path, self.line, self.msg)
+    }
+}
+
+/// Parsed allowlist. Semantics per rule:
+///
+/// - An **R1** entry does not waive the rule; it switches the file from
+///   "`unsafe` banned" to "`unsafe` permitted but every occurrence needs a
+///   `// SAFETY:` comment".
+/// - An entry for any other rule waives that rule for that file entirely.
+#[derive(Default)]
+pub struct Allowlist {
+    entries: BTreeSet<(Rule, String)>,
+}
+
+impl Allowlist {
+    /// Parse the `RULE path — reason` line format. Malformed or
+    /// reason-less entries are returned as findings against the allowlist
+    /// file itself: a waiver without a recorded justification is a
+    /// violation, not a waiver.
+    pub fn parse(text: &str, self_path: &str) -> (Allowlist, Vec<Finding>) {
+        let mut list = Allowlist::default();
+        let mut findings = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut bad = |msg: &str| {
+                findings.push(Finding {
+                    rule: Rule::R5,
+                    path: self_path.to_string(),
+                    line: i + 1,
+                    msg: format!("{msg}: `{line}`"),
+                });
+            };
+            let mut parts = line.splitn(3, char::is_whitespace);
+            let rule = parts.next().and_then(Rule::parse);
+            let path = parts.next().map(str::to_string);
+            let rest = parts.next().unwrap_or("").trim();
+            let reason = rest.trim_start_matches(['—', '-']).trim();
+            match (rule, path) {
+                (Some(r), Some(p)) if !reason.is_empty() => {
+                    list.entries.insert((r, p));
+                }
+                (Some(_), Some(_)) => bad("allowlist entry missing a reason"),
+                _ => bad("malformed allowlist entry (want `RULE path — reason`)"),
+            }
+        }
+        (list, findings)
+    }
+
+    /// Is `(rule, path)` present? (For R1 this means "SAFETY-required
+    /// mode", not "waived" — see the type docs.)
+    pub fn contains(&self, rule: Rule, path: &str) -> bool {
+        self.entries.contains(&(rule, path.to_string()))
+    }
+}
+
+/// A source file with comments and literals masked out.
+///
+/// `masked` blanks every comment and string/char-literal character to a
+/// space (newlines kept), so token searches can never fire inside prose or
+/// data. `comments` is the complement: original characters where comments
+/// were, spaces elsewhere — the `// SAFETY:` scan reads it. The two align
+/// line-by-line with the original (every `\n` is preserved in both).
+pub struct MaskedFile {
+    /// Source with comments and literals blanked.
+    pub masked: String,
+    /// Comment text only, spaces elsewhere.
+    pub comments: String,
+}
+
+/// Mask comments and string/char literals. The state machine understands
+/// line comments, nested block comments, plain strings with escapes, raw
+/// strings (`r"…"`, `r#"…"#`, …), and the char-literal-vs-lifetime
+/// ambiguity (`'a'` vs `'a`): a quote introduces a char literal iff it is
+/// followed by a backslash escape or a single character and a closing
+/// quote; anything else is a lifetime and is left alone.
+pub fn mask(src: &str) -> MaskedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut masked = chars.clone();
+    let mut comment: Vec<char> =
+        chars.iter().map(|&c| if c == '\n' { '\n' } else { ' ' }).collect();
+
+    fn blank(masked: &mut [char], from: usize, to: usize) {
+        let to = to.min(masked.len());
+        if from >= to {
+            return;
+        }
+        for ch in &mut masked[from..to] {
+            if *ch != '\n' {
+                *ch = ' ';
+            }
+        }
+    }
+
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+        if c == '/' && nxt == '/' {
+            let j = chars[i..].iter().position(|&c| c == '\n').map_or(n, |p| i + p);
+            for k in i..j {
+                comment[k] = chars[k];
+            }
+            blank(&mut masked, i, j);
+            i = j;
+        } else if c == '/' && nxt == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            for k in i..j.min(n) {
+                comment[k] = chars[k];
+            }
+            blank(&mut masked, i, j);
+            i = j;
+        } else if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if chars[j] == '\\' {
+                    j += 2;
+                } else if chars[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            blank(&mut masked, i + 1, j.saturating_sub(1));
+            i = j;
+        } else if c == 'r' && raw_string_hashes(&chars, i).is_some() {
+            let hashes = raw_string_hashes(&chars, i).unwrap_or(0);
+            let open_len = 2 + hashes; // r + hashes + "
+            let mut j = i + open_len;
+            // Find `"` followed by the same number of `#`.
+            let close = loop {
+                if j >= n {
+                    break n;
+                }
+                if chars[j] == '"'
+                    && chars[j + 1..].iter().take_while(|&&c| c == '#').count() >= hashes
+                {
+                    break j + 1 + hashes;
+                }
+                j += 1;
+            };
+            blank(&mut masked, i + open_len, close.saturating_sub(1 + hashes));
+            i = close;
+        } else if c == '\'' {
+            if nxt == '\\' {
+                // Escaped char literal (`'\n'`, `'\\'`, `'\''`): the
+                // closing quote is the first one whose preceding character
+                // is not itself an escaping backslash.
+                let mut j = i + 2;
+                let end = loop {
+                    match chars[j..].iter().position(|&c| c == '\'') {
+                        None => break n,
+                        Some(p) => {
+                            let q = j + p;
+                            // A quote right after a lone backslash is `\'`
+                            // (escaped) — unless that backslash is the
+                            // second half of `\\`.
+                            if chars[q - 1] == '\\' && (q < 2 || chars[q - 2] != '\\') {
+                                j = q + 1;
+                            } else {
+                                break q + 1;
+                            }
+                        }
+                    }
+                };
+                blank(&mut masked, i + 1, end.saturating_sub(1));
+                i = end;
+            } else if i + 2 < n && chars[i + 2] == '\'' {
+                blank(&mut masked, i + 1, i + 2);
+                i += 3;
+            } else {
+                // Lifetime — leave it.
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    MaskedFile { masked: masked.into_iter().collect(), comments: comment.into_iter().collect() }
+}
+
+/// If `chars[i..]` starts a raw string literal `r#*"`, return the hash
+/// count, else `None`.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<usize> {
+    debug_assert_eq!(chars.get(i), Some(&'r'));
+    let mut j = i + 1;
+    let mut hashes = 0usize;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Byte spans of `#[cfg(test)]` items in the masked text: from the
+/// attribute to the end of the brace-matched block that follows it (or a
+/// terminating `;` at depth 0 for non-block items).
+pub fn test_spans(masked: &str) -> Vec<(usize, usize)> {
+    let bytes = masked.as_bytes();
+    let mut spans = Vec::new();
+    for (start, _) in masked.match_indices("#[cfg(test)]") {
+        let mut j = start + "#[cfg(test)]".len();
+        let mut depth = 0i64;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                b';' if depth == 0 => {
+                    j += 1;
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        spans.push((start, j));
+    }
+    spans
+}
+
+fn in_spans(pos: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= pos && pos < b)
+}
+
+fn line_of(text: &str, pos: usize) -> usize {
+    text.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Byte positions of `needle` in `hay` with the requested word-boundary
+/// checks on each side.
+fn find_token(hay: &str, needle: &str, bound_start: bool, bound_end: bool) -> Vec<usize> {
+    let bytes = hay.as_bytes();
+    hay.match_indices(needle)
+        .filter(|&(pos, _)| {
+            let pre_ok = !bound_start
+                || pos == 0
+                || !is_word_byte(bytes[pos - 1]);
+            let end = pos + needle.len();
+            let post_ok = !bound_end || end >= bytes.len() || !is_word_byte(bytes[end]);
+            pre_ok && post_ok
+        })
+        .map(|(pos, _)| pos)
+        .collect()
+}
+
+/// Positions of `.name` followed (across whitespace) by the given suffix
+/// characters — matches `\.name\s*\(` (and `\s*\)` when `closed`), which
+/// is how `.unwrap()` / `.expect(` are detected without also matching
+/// `unwrap_or*` / `expect_err`.
+fn find_method_call(hay: &str, name: &str, closed: bool) -> Vec<usize> {
+    let bytes = hay.as_bytes();
+    let pat = format!(".{name}");
+    let mut out = Vec::new();
+    for (pos, _) in hay.match_indices(&pat) {
+        let mut j = pos + pat.len();
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] != b'(' {
+            continue;
+        }
+        if closed {
+            j += 1;
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j >= bytes.len() || bytes[j] != b')' {
+                continue;
+            }
+        }
+        out.push(pos);
+    }
+    out
+}
+
+/// Section numbers cited on one line: every `§N`, `§§N`, or run like
+/// `§12/13` / `§4–6` contributes each embedded number.
+pub fn cited_sections(line: &str) -> Vec<u32> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] != '§' {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if chars.get(j) == Some(&'§') {
+            j += 1;
+        }
+        if !chars.get(j).is_some_and(|c| c.is_ascii_digit()) {
+            i = j;
+            continue;
+        }
+        // Consume the token: digits plus list separators.
+        let mut num = 0u32;
+        let mut have = false;
+        while j < chars.len() {
+            let c = chars[j];
+            if c.is_ascii_digit() {
+                num = num.saturating_mul(10) + (c as u32 - '0' as u32);
+                have = true;
+            } else if matches!(c, '/' | '–' | '—' | '-') {
+                if have {
+                    out.push(num);
+                }
+                num = 0;
+                have = false;
+            } else {
+                break;
+            }
+            j += 1;
+        }
+        if have {
+            out.push(num);
+        }
+        i = j;
+    }
+    out
+}
+
+/// `## §N ` headings of DESIGN.md.
+pub fn design_headings(design: &str) -> BTreeSet<u32> {
+    let mut heads = BTreeSet::new();
+    for line in design.lines() {
+        if let Some(rest) = line.strip_prefix("## §") {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(n) = digits.parse() {
+                heads.insert(n);
+            }
+        }
+    }
+    heads
+}
+
+/// Directories of the numeric core where R3 (nondeterminism ban) applies.
+const R3_DIRS: [&str; 4] = [
+    "rust/src/permute/",
+    "rust/src/spmm/",
+    "rust/src/sparsity/",
+    "rust/src/tensor/",
+];
+
+/// Sections ARCHITECTURE.md must anchor into DESIGN.md (carried over from
+/// the retired CI grep step — presence, not just resolution).
+const ARCH_REQUIRED_SECTIONS: [u32; 6] = [4, 12, 13, 14, 15, 16];
+
+/// Files scanned for the raw `+fma` flag string in addition to `rust/src`.
+const R2_RAW_FILES: [&str; 3] = ["Cargo.toml", "rust/Cargo.toml", ".github/workflows/ci.yml"];
+
+struct Ctx<'a> {
+    allow: &'a Allowlist,
+    findings: Vec<Finding>,
+}
+
+impl Ctx<'_> {
+    fn report(&mut self, rule: Rule, path: &str, line: usize, msg: String) {
+        // R1 allowlist entries change the rule's mode instead of waiving
+        // it, so they are consulted at the check site, not here.
+        if rule != Rule::R1 && self.allow.contains(rule, path) {
+            return;
+        }
+        self.findings.push(Finding { rule, path: path.to_string(), line, msg });
+    }
+}
+
+fn scan_rs_file(ctx: &mut Ctx<'_>, rel: &str, src: &str, heads: &BTreeSet<u32>) {
+    let MaskedFile { masked, comments } = mask(src);
+    let spans = test_spans(&masked);
+    let masked_lines: Vec<&str> = masked.split('\n').collect();
+    let comment_lines: Vec<&str> = comments.split('\n').collect();
+
+    // R1: `unsafe` confinement + SAFETY comments.
+    let r1_allowed = ctx.allow.contains(Rule::R1, rel);
+    for pos in find_token(&masked, "unsafe", true, true) {
+        if in_spans(pos, &spans) {
+            continue;
+        }
+        let ln = line_of(&masked, pos);
+        if !r1_allowed {
+            ctx.report(
+                Rule::R1,
+                rel,
+                ln,
+                "`unsafe` outside the allowlisted modules (§17 R1)".to_string(),
+            );
+            continue;
+        }
+        if !has_safety_comment(&masked_lines, &comment_lines, ln) {
+            ctx.report(
+                Rule::R1,
+                rel,
+                ln,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            );
+        }
+    }
+
+    // R2: FMA tokens in code, flag string anywhere in the file.
+    for pos in find_token(&masked, "mul_add", true, true) {
+        let ln = line_of(&masked, pos);
+        ctx.report(Rule::R2, rel, ln, "FMA token `mul_add` (§17 R2)".to_string());
+    }
+    for prefix in ["_mm256_fmadd", "_mm_fmadd"] {
+        for pos in find_token(&masked, prefix, true, false) {
+            let ln = line_of(&masked, pos);
+            ctx.report(Rule::R2, rel, ln, format!("FMA intrinsic `{prefix}*` (§17 R2)"));
+        }
+    }
+    for (pos, _) in src.match_indices("target-feature=+fma") {
+        let ln = line_of(src, pos);
+        ctx.report(Rule::R2, rel, ln, "`+fma` target-feature string (§17 R2)".to_string());
+    }
+
+    // R3: nondeterminism tokens in the numeric core.
+    if R3_DIRS.iter().any(|d| rel.starts_with(d)) {
+        let toks: [(&str, bool); 4] = [
+            ("Instant::now", false),
+            ("SystemTime", true),
+            ("HashMap", true),
+            ("HashSet", true),
+        ];
+        for (needle, bounded) in toks {
+            for pos in find_token(&masked, needle, bounded, bounded) {
+                if in_spans(pos, &spans) {
+                    continue;
+                }
+                let ln = line_of(&masked, pos);
+                ctx.report(
+                    Rule::R3,
+                    rel,
+                    ln,
+                    format!("nondeterminism token `{needle}` in the numeric core (§17 R3)"),
+                );
+            }
+        }
+    }
+
+    // R4: unwrap/expect in library code.
+    if rel != "rust/src/main.rs" {
+        for (name, closed) in [("unwrap", true), ("expect", false)] {
+            for pos in find_method_call(&masked, name, closed) {
+                if in_spans(pos, &spans) {
+                    continue;
+                }
+                let ln = line_of(&masked, pos);
+                ctx.report(Rule::R4, rel, ln, format!("`.{name}(` in library code (§17 R4)"));
+            }
+        }
+    }
+
+    // R5: §N anchors in doc comments.
+    for (i, line) in src.lines().enumerate() {
+        let stripped = line.trim_start();
+        if stripped.starts_with("///") || stripped.starts_with("//!") {
+            for sec in cited_sections(stripped) {
+                if !heads.contains(&sec) {
+                    ctx.report(
+                        Rule::R5,
+                        rel,
+                        i + 1,
+                        format!("doc comment cites §{sec} but DESIGN.md has no `## §{sec}` heading"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Upward scan for a SAFETY comment: accept a comment containing `SAFETY`
+/// or `# Safety` on the same line, or on any line strictly above that is
+/// blank, an attribute (`#[…]`), or a pure comment line. The first
+/// non-blank, non-attribute *code* line without one stops the scan.
+fn has_safety_comment(masked_lines: &[&str], comment_lines: &[&str], ln: usize) -> bool {
+    fn is_safety(s: &str) -> bool {
+        s.contains("SAFETY") || s.contains("# Safety")
+    }
+    if comment_lines.get(ln - 1).copied().is_some_and(is_safety) {
+        return true;
+    }
+    let mut k = ln - 1;
+    while k >= 1 {
+        let code = masked_lines.get(k - 1).map_or("", |s| s.trim());
+        let com = comment_lines.get(k - 1).copied().unwrap_or("");
+        if is_safety(com) {
+            return true;
+        }
+        if code.is_empty() || code.starts_with("#[") || !com.trim().is_empty() {
+            k -= 1;
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel)).map_err(|e| format!("reading {rel}: {e}"))
+}
+
+/// Run the full R1–R5 scan over the repository at `root`. Returns the
+/// sorted findings (empty = clean tree). `Err` means the tree is not a
+/// hinm repo at all (missing `rust/src`), not that a rule fired.
+pub fn run(root: &Path, allow: &Allowlist) -> Result<Vec<Finding>, String> {
+    let mut ctx = Ctx { allow, findings: Vec::new() };
+
+    // DESIGN.md headings anchor every R5 check; a missing/unreadable
+    // DESIGN.md is itself a finding (every citation would dangle).
+    let design = read(root, "rust/DESIGN.md");
+    let heads = match &design {
+        Ok(text) => design_headings(text),
+        Err(e) => {
+            ctx.report(Rule::R5, "rust/DESIGN.md", 1, format!("unreadable: {e}"));
+            BTreeSet::new()
+        }
+    };
+
+    let src_root = root.join("rust/src");
+    let mut files = Vec::new();
+    walk_rs(&src_root, &mut files)?;
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {rel}: {e}"))?;
+        scan_rs_file(&mut ctx, &rel, &src, &heads);
+    }
+
+    // R2 raw-flag scan over build configuration.
+    for rel in R2_RAW_FILES {
+        if let Ok(text) = read(root, rel) {
+            for (pos, _) in text.match_indices("target-feature=+fma") {
+                let ln = line_of(&text, pos);
+                ctx.report(Rule::R2, rel, ln, "`+fma` target-feature string (§17 R2)".to_string());
+            }
+        }
+    }
+
+    // R5 over the cross-document anchors.
+    if design.is_ok() {
+        for rel in ["README.md", "rust/ARCHITECTURE.md", "rust/DESIGN.md"] {
+            match read(root, rel) {
+                Err(e) => ctx.report(Rule::R5, rel, 1, format!("unreadable: {e}")),
+                Ok(text) => {
+                    for (i, line) in text.lines().enumerate() {
+                        for sec in cited_sections(line) {
+                            if !heads.contains(&sec) {
+                                ctx.report(
+                                    Rule::R5,
+                                    rel,
+                                    i + 1,
+                                    format!("cites §{sec} but DESIGN.md has no `## §{sec}` heading"),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Fixed cross-document links carried over from the retired CI grep
+    // step: the architecture narrative must stay reachable from the README
+    // and the crate docs, and must keep anchoring into the load-bearing
+    // DESIGN.md sections.
+    if let Ok(readme) = read(root, "README.md") {
+        if !readme.contains("ARCHITECTURE.md") {
+            ctx.report(Rule::R5, "README.md", 1, "must link rust/ARCHITECTURE.md".to_string());
+        }
+    }
+    if let Ok(lib) = read(root, "rust/src/lib.rs") {
+        if !lib.contains("ARCHITECTURE.md") {
+            ctx.report(
+                Rule::R5,
+                "rust/src/lib.rs",
+                1,
+                "crate docs must link ARCHITECTURE.md".to_string(),
+            );
+        }
+    }
+    if let Ok(arch) = read(root, "rust/ARCHITECTURE.md") {
+        for sec in ARCH_REQUIRED_SECTIONS {
+            if !arch.contains(&format!("§{sec}")) {
+                ctx.report(
+                    Rule::R5,
+                    "rust/ARCHITECTURE.md",
+                    1,
+                    format!("must anchor into DESIGN.md §{sec}"),
+                );
+            }
+        }
+    }
+
+    ctx.findings.sort();
+    ctx.findings.dedup();
+    Ok(ctx.findings)
+}

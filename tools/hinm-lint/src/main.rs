@@ -1,0 +1,69 @@
+//! CLI for the hinm repository linter (DESIGN.md §17).
+//!
+//! Usage: `cargo run -p hinm-lint [-- --root PATH --allowlist PATH]`
+//!
+//! Prints one `RULE path:line  message` diagnostic per finding and exits
+//! nonzero if any survive the allowlist — CI runs this as a required gate.
+//! Exit codes: 0 clean, 1 findings, 2 usage or I/O failure.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut allowlist: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage("--root needs a value"),
+            },
+            "--allowlist" => match args.next() {
+                Some(v) => allowlist = Some(PathBuf::from(v)),
+                None => return usage("--allowlist needs a value"),
+            },
+            "--help" | "-h" => {
+                println!("hinm-lint [--root PATH] [--allowlist PATH]");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    let allow_path = allowlist.unwrap_or_else(|| root.join("tools/hinm-lint/lint-allow.txt"));
+
+    let allow_text = match std::fs::read_to_string(&allow_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("hinm-lint: reading allowlist {}: {e}", allow_path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let (allow, mut findings) =
+        hinm_lint::Allowlist::parse(&allow_text, "tools/hinm-lint/lint-allow.txt");
+
+    match hinm_lint::run(&root, &allow) {
+        Ok(more) => findings.extend(more),
+        Err(e) => {
+            eprintln!("hinm-lint: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    findings.sort();
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!("hinm-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("hinm-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("hinm-lint: {msg}\nusage: hinm-lint [--root PATH] [--allowlist PATH]");
+    ExitCode::from(2)
+}

@@ -1,0 +1,19 @@
+//! Clean fixture crate (see ARCHITECTURE.md), scoped by §1.
+
+/// Returns zero (§4).
+pub fn zero() -> u32 {
+    0
+}
+
+/// Error-propagating library code: no unwrap/expect needed.
+pub fn parse(s: &str) -> Result<u32, std::num::ParseIntError> {
+    s.trim().parse()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(super::parse(" 7 ").unwrap(), 7);
+    }
+}

@@ -1,0 +1,38 @@
+//! Fixture crate root (see ARCHITECTURE.md). Cites §1 (resolves) and §9
+//! (stale — R5 fires here).
+
+/// Doc comment citing the stale §9 again (second R5 site).
+pub fn stale_doc() {}
+
+pub fn r2_token(x: f64, y: f64, z: f64) -> f64 {
+    x.mul_add(y, z)
+}
+
+pub fn r4_sites(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b: Result<u32, ()> = Ok(a);
+    b.expect("boom")
+}
+
+pub fn not_r4(v: Option<u32>, r: Result<u32, u32>) -> u32 {
+    v.unwrap_or_default() + r.expect_err("boundary check must skip this")
+}
+
+pub unsafe fn r1_outside_allowlist(p: *const u32) -> u32 {
+    *p
+}
+
+pub fn masked_text_never_counts() -> &'static str {
+    // Comment mentioning unwrap() and mul_add and unsafe: not findings.
+    "unwrap() mul_add unsafe Instant::now HashMap"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt_from_r4() {
+        Some(1).unwrap();
+        let r: Result<u32, ()> = Ok(2);
+        r.expect("fine in tests");
+    }
+}

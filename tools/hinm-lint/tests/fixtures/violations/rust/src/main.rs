@@ -1,0 +1,5 @@
+//! Binary entry point: R4 does not apply here.
+
+fn main() {
+    Some(1).unwrap();
+}

@@ -1,0 +1,12 @@
+//! Fixture for R1's SAFETY-required mode (the file the test allowlists).
+
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn with_proof(p: *const u32) -> u32 {
+    // SAFETY: fixture — caller upholds the contract above.
+    unsafe { *p }
+}
+
+pub fn without_proof(p: *const u32) -> u32 {
+    unsafe { *p }
+}

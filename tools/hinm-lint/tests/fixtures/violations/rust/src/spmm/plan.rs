@@ -1,0 +1,10 @@
+//! Fixture for R3: nondeterminism tokens inside the numeric core.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn r3_tokens() -> usize {
+    let t = Instant::now();
+    let m: HashMap<u32, u32> = HashMap::new();
+    m.len() + t.elapsed().as_nanos() as usize
+}

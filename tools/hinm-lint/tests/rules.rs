@@ -1,0 +1,162 @@
+//! Integration tests for hinm-lint: the violations fixture must trip
+//! every rule at pinned locations, the clean fixture must produce zero
+//! findings, and — the gate that matters — the real repository tree must
+//! be clean under the checked-in allowlist.
+
+use hinm_lint::{cited_sections, mask, run, Allowlist, Finding, Rule};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn count(findings: &[Finding], rule: Rule, path: &str) -> usize {
+    findings.iter().filter(|f| f.rule == rule && f.path == path).count()
+}
+
+fn has(findings: &[Finding], rule: Rule, path: &str, line: usize) -> bool {
+    findings.iter().any(|f| f.rule == rule && f.path == path && f.line == line)
+}
+
+#[test]
+fn violations_tree_trips_every_rule() {
+    let findings = run(&fixture("violations"), &Allowlist::default()).unwrap();
+
+    // R1: banned mode — every `unsafe` token outside an allowlisted file.
+    assert!(has(&findings, Rule::R1, "rust/src/lib.rs", 21), "{findings:#?}");
+    assert_eq!(count(&findings, Rule::R1, "rust/src/spmm/microkernel.rs"), 3);
+
+    // R2: mul_add in code, +fma string in build config.
+    assert!(has(&findings, Rule::R2, "rust/src/lib.rs", 8));
+    assert!(has(&findings, Rule::R2, "rust/Cargo.toml", 2));
+
+    // R3: HashMap on two lines + Instant::now inside rust/src/spmm/ (the
+    // two same-line HashMap hits dedup to one finding).
+    assert_eq!(count(&findings, Rule::R3, "rust/src/spmm/plan.rs"), 3);
+
+    // R4: the two library sites; unwrap_or_default/expect_err and
+    // #[cfg(test)] code must not count, and main.rs is exempt.
+    assert!(has(&findings, Rule::R4, "rust/src/lib.rs", 12));
+    assert!(has(&findings, Rule::R4, "rust/src/lib.rs", 14));
+    assert_eq!(count(&findings, Rule::R4, "rust/src/lib.rs"), 2);
+    assert!(findings.iter().all(|f| f.path != "rust/src/main.rs"));
+
+    // R5: stale anchors in crate docs, README, ARCHITECTURE.
+    assert!(has(&findings, Rule::R5, "rust/src/lib.rs", 1));
+    assert!(has(&findings, Rule::R5, "rust/src/lib.rs", 4));
+    assert!(has(&findings, Rule::R5, "README.md", 6));
+    assert!(has(&findings, Rule::R5, "rust/ARCHITECTURE.md", 4));
+
+    // Strings and comments never produce findings (lib.rs:26-27 mention
+    // every banned token).
+    assert!(findings
+        .iter()
+        .all(|f| f.path != "rust/src/lib.rs" || (f.line != 26 && f.line != 27)));
+}
+
+#[test]
+fn r1_allowlist_switches_to_safety_required_mode() {
+    let (allow, errs) = Allowlist::parse(
+        "R1 rust/src/spmm/microkernel.rs — fixture: SAFETY-required mode\n",
+        "lint-allow.txt",
+    );
+    assert!(errs.is_empty(), "{errs:#?}");
+    let findings = run(&fixture("violations"), &allow).unwrap();
+    // Only the SAFETY-less block remains; the `# Safety` doc and the
+    // `// SAFETY:` comment cover the other two occurrences.
+    assert_eq!(count(&findings, Rule::R1, "rust/src/spmm/microkernel.rs"), 1);
+    assert!(has(&findings, Rule::R1, "rust/src/spmm/microkernel.rs", 11));
+    // Non-R1 rules are untouched by an R1 entry.
+    assert!(has(&findings, Rule::R1, "rust/src/lib.rs", 21));
+}
+
+#[test]
+fn non_r1_allowlist_entries_waive_the_file() {
+    let (allow, errs) = Allowlist::parse(
+        "R4 rust/src/lib.rs — fixture: waived\nR3 rust/src/spmm/plan.rs — fixture: waived\n",
+        "lint-allow.txt",
+    );
+    assert!(errs.is_empty());
+    let findings = run(&fixture("violations"), &allow).unwrap();
+    assert_eq!(count(&findings, Rule::R4, "rust/src/lib.rs"), 0);
+    assert_eq!(count(&findings, Rule::R3, "rust/src/spmm/plan.rs"), 0);
+    // Other rules in the same files still fire.
+    assert!(has(&findings, Rule::R2, "rust/src/lib.rs", 8));
+}
+
+#[test]
+fn allowlist_reasons_are_mandatory() {
+    let (_, errs) = Allowlist::parse("R4 rust/src/lib.rs —\n", "lint-allow.txt");
+    assert_eq!(errs.len(), 1, "{errs:#?}");
+    assert!(errs[0].msg.contains("missing a reason"));
+
+    let (_, errs) = Allowlist::parse("R9 rust/src/lib.rs — bogus rule\n", "lint-allow.txt");
+    assert_eq!(errs.len(), 1);
+    assert!(errs[0].msg.contains("malformed"));
+
+    let (allow, errs) =
+        Allowlist::parse("# comment\n\nR4 a.rs — ok\n", "lint-allow.txt");
+    assert!(errs.is_empty());
+    assert!(allow.contains(Rule::R4, "a.rs"));
+}
+
+#[test]
+fn clean_tree_is_clean() {
+    let findings = run(&fixture("clean"), &Allowlist::default()).unwrap();
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn masking_understands_rust_lexing() {
+    let src = r##"
+fn f<'a>(x: &'a str) -> char {
+    // unwrap in a comment
+    let s = "unwrap() \" mul_add";
+    let r = r#"unsafe "quoted" HashMap"#;
+    let c = '\'';
+    let l = 'x';
+    /* block /* nested */ mul_add */
+    let _ = (s, r, c);
+    l
+}
+"##;
+    let m = mask(src);
+    assert!(!m.masked.contains("mul_add"), "{}", m.masked);
+    assert!(!m.masked.contains("unwrap"));
+    assert!(!m.masked.contains("unsafe"));
+    assert!(!m.masked.contains("HashMap"));
+    // Lifetimes survive masking (they are code, not literals).
+    assert!(m.masked.contains("<'a>"));
+    // The comment channel captured the comment text.
+    assert!(m.comments.contains("unwrap in a comment"));
+    assert!(m.comments.contains("nested"));
+    // Line structure is preserved in both channels.
+    assert_eq!(m.masked.lines().count(), src.lines().count());
+    assert_eq!(m.comments.lines().count(), src.lines().count());
+}
+
+#[test]
+fn section_citations_are_extracted_with_ranges() {
+    assert_eq!(cited_sections("see §4 and §12/13"), vec![4, 12, 13]);
+    assert_eq!(cited_sections("§§14, then §15–16."), vec![14, 15, 16]);
+    assert_eq!(cited_sections("no anchors here, §Perf is not one"), Vec::<u32>::new());
+    assert_eq!(cited_sections("edge §7"), vec![7]);
+}
+
+/// The acceptance gate: the real repository, under the checked-in
+/// allowlist, has zero findings. Any new violation fails `cargo test`
+/// in addition to the dedicated CI lint job.
+#[test]
+fn repo_tree_is_clean_under_checked_in_allowlist() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let allow_text = std::fs::read_to_string(root.join("tools/hinm-lint/lint-allow.txt"))
+        .expect("checked-in allowlist");
+    let (allow, errs) = Allowlist::parse(&allow_text, "tools/hinm-lint/lint-allow.txt");
+    assert!(errs.is_empty(), "allowlist entries must carry reasons: {errs:#?}");
+    let findings = run(&root, &allow).expect("repo scan");
+    assert!(
+        findings.is_empty(),
+        "repo tree has lint findings:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
