@@ -1,10 +1,13 @@
 //! Request metrics for the serving engine and the fine-tune driver:
-//! bounded-memory latency percentiles, a throughput meter, and the
-//! per-replica + aggregate views the sharded batch server reports.
+//! bounded-memory latency percentiles, a throughput meter, the
+//! per-replica + aggregate views the sharded batch server reports, and
+//! the per-model routing counters the multi-model registry front adds
+//! to `/v1/metrics` (DESIGN.md §18).
 
 use super::serve::Priority;
 use crate::util::sync::lock_unpoisoned;
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Records request latencies in a fixed-capacity ring buffer.
@@ -273,9 +276,50 @@ impl EngineMetrics {
     }
 }
 
+/// Per-model request counters for multi-model serving (DESIGN.md §18):
+/// how many `/v1/infer` requests were *routed* to each model name,
+/// counted at routing time (before queueing), so operators can see
+/// traffic share per model even for requests that later expire. Shared
+/// (`Arc`) between the HTTP front and whoever renders `/v1/metrics`.
+/// `BTreeMap` keeps snapshots deterministically ordered by name.
+#[derive(Debug, Default)]
+pub struct ModelCounters {
+    routed: Mutex<BTreeMap<String, u64>>,
+}
+
+impl ModelCounters {
+    /// Fresh shared counters.
+    pub fn new_shared() -> Arc<ModelCounters> {
+        Arc::new(ModelCounters::default())
+    }
+
+    /// Count one request routed to `model`.
+    pub fn record(&self, model: &str) {
+        let mut m = lock_unpoisoned(&self.routed);
+        *m.entry(model.to_string()).or_insert(0) += 1;
+    }
+
+    /// Snapshot of `(name, routed_requests)`, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        lock_unpoisoned(&self.routed).iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn model_counters_accumulate_sorted() {
+        let c = ModelCounters::new_shared();
+        c.record("b");
+        c.record("a");
+        c.record("b");
+        assert_eq!(
+            c.snapshot(),
+            vec![("a".to_string(), 1), ("b".to_string(), 2)]
+        );
+    }
 
     #[test]
     fn percentiles_ordered() {

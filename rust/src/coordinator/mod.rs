@@ -8,7 +8,9 @@ pub mod pipeline;
 pub mod serve;
 pub mod trainer;
 
-pub use metrics::{EngineMetrics, LatencyRecorder, ReplicaStats, SchedulerStats, Throughput};
+pub use metrics::{
+    EngineMetrics, LatencyRecorder, ModelCounters, ReplicaStats, SchedulerStats, Throughput,
+};
 pub use pipeline::{compress_layer, run_pipeline, weighted_retention, LayerJob, Method, PipelineConfig};
 pub use serve::{
     cached_factory, BackendFactory, BatchServer, InferError, PipelineHandle, PipelineServer,

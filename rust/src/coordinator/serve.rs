@@ -44,7 +44,7 @@
 use super::metrics::EngineMetrics;
 use crate::models::chain::{ActivationBuffers, HinmModel};
 use crate::runtime::backend::{CacheStats, CachedBackend, SpmmBackend};
-use crate::runtime::registry::ArtifactSpec;
+use crate::runtime::registry::{ArtifactSpec, ModelSlot};
 use crate::spmm::SpmmEngine;
 use crate::tensor::Matrix;
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
@@ -626,6 +626,23 @@ impl BatchServer {
             Ok(b)
         });
         Self::start(factory, cfg)
+    }
+
+    /// Engine over a hot-swappable registry [`ModelSlot`] (DESIGN.md
+    /// §18): every replica's backend re-resolves the slot's current model
+    /// at batch granularity, so a [`crate::runtime::ModelRegistry::reload`]
+    /// takes effect under live traffic — in-flight batches finish on the
+    /// old plans, subsequent batches run the new ones, and any per-replica
+    /// batch cache (enabled when `cache_capacity > 0`) restarts empty on
+    /// swap while `stats` keeps cumulative hit/miss counts.
+    pub fn start_slot(
+        slot: &Arc<ModelSlot>,
+        cfg: ServeConfig,
+        kernel_threads: usize,
+        cache_capacity: usize,
+        stats: Option<Arc<CacheStats>>,
+    ) -> Result<BatchServer> {
+        Self::start(slot.backend_factory(kernel_threads, cache_capacity, stats), cfg)
     }
 
     /// PJRT-backend engine: each replica compiles the artifact and

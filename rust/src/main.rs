@@ -5,6 +5,7 @@
 //!   prune                                       compress a .npy weight matrix
 //!   spmm                                        run the CPU HiNM SpMM on a pruned layer
 //!   info                                        list AOT artifacts
+//!   build                                       serialize catalog models to versioned artifacts
 //!   serve                                       multi-replica batched inference engine
 //!   serve-demo                                  alias: serve --backend pjrt
 //!   train-demo                                  short LM train loop via the AOT step
@@ -29,6 +30,7 @@ fn main() {
         "prune" => cmd_prune(args),
         "spmm" => cmd_spmm(args),
         "info" => cmd_info(args),
+        "build" => cmd_build(args),
         "serve" => cmd_serve(args),
         "serve-demo" => {
             // Historical alias for the PJRT path; explicit flags still win.
@@ -63,14 +65,22 @@ fn usage() {
          \x20         ovw+gyro, id+tetris (ocp: gyro|ovw|id; icp: gyro|apex|tetris|id)\n\
          \x20 spmm    --weights w.npy [--batch 8] [--sparsity 75]\n\
          \x20 info    list AOT artifacts and data dumps\n\
+         \x20 build   [--out DIR] [--models a,b|all] [--seed S] [--version V]\n\
+         \x20         [--values f32|bf16] [--note TEXT]\n\
+         \x20         serialize catalog models to versioned artifacts (manifest\n\
+         \x20         JSON + packed binary payload; see DESIGN.md §18)\n\
          \x20 serve   [--backend native|pjrt] [--replicas R] [--batch B] [--max-wait-us U]\n\
          \x20         [--kernel-threads K] [--pipeline-stages S] [--blocks N]\n\
          \x20         [--values f32|bf16] [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
+         \x20         [--model-dir DIR] [--default-model NAME]\n\
          \x20         sharded batched inference engine; with --http it serves\n\
          \x20         POST /v1/infer, GET /v1/metrics[?format=prometheus], GET /healthz\n\
          \x20         until killed, otherwise it runs a closed-loop load demo;\n\
          \x20         --pipeline-stages S shards the layer chain across S stage\n\
-         \x20         workers (native only, bit-identical responses)\n\
+         \x20         workers (native only, bit-identical responses);\n\
+         \x20         --model-dir DIR serves every artifact in DIR behind one\n\
+         \x20         front (requests route on the body's \"model\" field; POST\n\
+         \x20         /v1/admin/reload hot-swaps new artifact versions)\n\
          \x20 serve-demo  alias for: serve --backend pjrt\n\
          \x20 train-demo  [--steps 50]      LM training via AOT train step\n"
     );
@@ -247,6 +257,67 @@ fn cmd_info(_args: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_build(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm build", "serialize catalog models to versioned artifacts")
+        .opt("out", Some("models"), "artifact directory (created if missing)")
+        .opt("models", Some("all"), "comma-separated catalog names, or all")
+        .opt("seed", Some("7"), "synthetic-weight seed recorded in provenance")
+        .opt("version", Some("1"), "artifact version to write")
+        .opt("values", Some("f32"), "packed kernel value format (f32|bf16)")
+        .opt("note", None, "free-form provenance note stored in the manifest");
+    let a = cli.parse_tail(args);
+    let out = std::path::PathBuf::from(a.get_or("out", "models"));
+    let seed = a.u64_or("seed", 7);
+    let version = a.u64_or("version", 1);
+    let values = {
+        let s = a.get_or("values", "f32");
+        hinm::spmm::ValueFormat::parse(&s)
+            .with_context(|| format!("bad --values {s:?} (expected f32|bf16)"))?
+    };
+
+    let catalog = hinm::models::serving_models(seed)?;
+    let want = a.get_or("models", "all");
+    let selected: Vec<&str> = if want == "all" {
+        catalog.iter().map(|(n, _)| *n).collect()
+    } else {
+        let names: Vec<&str> = want.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+        for n in &names {
+            if !catalog.iter().any(|(c, _)| c == n) {
+                bail!(
+                    "unknown model {n:?} (catalog: {})",
+                    catalog.iter().map(|(c, _)| *c).collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        names
+    };
+    if selected.is_empty() {
+        bail!("--models selected nothing");
+    }
+
+    let provenance = hinm::runtime::Provenance {
+        tool: "hinm build".to_string(),
+        seed: Some(seed),
+        note: a.get("note").map(str::to_string),
+    };
+    for (name, model) in catalog {
+        if !selected.contains(&name) {
+            continue;
+        }
+        let model = model.with_value_format(values);
+        let path = hinm::runtime::save_artifact(&out, name, version, &model, &provenance)?;
+        println!(
+            "wrote {name:<12} v{version} {}→{} ({} layers, {}) → {}",
+            model.d_in(),
+            model.d_out(),
+            model.n_layers(),
+            values.as_str(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("hinm serve", "multi-replica batched HiNM inference engine")
         .opt("backend", Some("native"), "native | pjrt")
@@ -273,6 +344,16 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("http", None, "serve HTTP/JSON on this address (e.g. 127.0.0.1:8080) until killed")
         .opt("http-workers", Some("8"), "HTTP connection-handler threads")
         .opt("cache-capacity", Some("0"), "per-replica LRU batch-cache entries (0 = off)")
+        .opt(
+            "model-dir",
+            None,
+            "serve every artifact in this directory (built by `hinm build`); requests route on the body's \"model\" field",
+        )
+        .opt(
+            "default-model",
+            None,
+            "model served when a request has no \"model\" field (default: first name in the directory)",
+        )
         .opt("requests", Some("256"), "closed-loop demo requests (no --http)")
         .opt("clients", Some("8"), "concurrent demo clients (no --http)")
         .opt("d", Some("256"), "native: model width")
@@ -297,6 +378,22 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     };
 
     let pipeline_stages = a.usize_or("pipeline-stages", 1).max(1);
+
+    if let Some(dir) = a.get("model-dir") {
+        if backend != "native" {
+            bail!("--model-dir serves registry artifacts on the native backend only (drop --backend {backend})");
+        }
+        if pipeline_stages > 1 {
+            bail!(
+                "--model-dir and --pipeline-stages do not compose yet: registry artifacts \
+                 hot-swap whole models per replica, while pipeline stages pin one sharded \
+                 model for the server's lifetime; drop one of the two flags"
+            );
+        }
+        let dir = dir.to_string();
+        return serve_model_dir(&a, &dir);
+    }
+
     // Keeps the stage workers alive for as long as the engine runs; the
     // engine is stopped first, the pipeline after (see the end of this
     // function).
@@ -496,6 +593,131 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         // Stage workers stop only after the engine above them: in-flight
         // batches get real answers.
         ps.stop();
+    }
+    Ok(())
+}
+
+/// `hinm serve --model-dir DIR`: scan `DIR` into a
+/// [`ModelRegistry`](hinm::runtime::ModelRegistry), start one batch engine
+/// per model, and route requests by name (DESIGN.md §18). Value formats
+/// come from each artifact's manifest, not `--values`.
+fn serve_model_dir(a: &hinm::util::cli::Args, dir: &str) -> Result<()> {
+    use std::sync::Arc;
+
+    let replicas = a.usize_or("replicas", 2).max(1);
+    let max_wait = std::time::Duration::from_micros(a.u64_or("max-wait-us", 200));
+    let queue_depth = a.usize_or("queue-depth", 0);
+    let kernel_threads = a.usize_or("kernel-threads", 1);
+    let cache_capacity = a.usize_or("cache-capacity", 0);
+
+    let registry = Arc::new(hinm::runtime::ModelRegistry::open(dir)?);
+    let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
+        .with_replicas(replicas)
+        .with_queue_depth(queue_depth);
+
+    let names = registry.names();
+    let mut services = std::collections::BTreeMap::new();
+    let mut servers = Vec::new();
+    for name in &names {
+        let slot = registry
+            .slot(name)
+            .with_context(|| format!("registry lost slot {name:?}"))?;
+        let stats =
+            if cache_capacity > 0 { Some(hinm::runtime::CacheStats::new_shared()) } else { None };
+        let server = hinm::coordinator::BatchServer::start_slot(
+            slot,
+            scfg.clone(),
+            kernel_threads,
+            cache_capacity,
+            stats.clone(),
+        )?;
+        println!(
+            "model {name:<16} v{} {}→{} | {replicas} replicas × {kernel_threads} kernel threads",
+            slot.version(),
+            slot.d_in(),
+            slot.d_out()
+        );
+        services.insert(
+            name.clone(),
+            hinm::net::ModelService { handle: server.handle.clone(), cache: stats },
+        );
+        servers.push((name.clone(), server));
+    }
+
+    let default_model = match a.get("default-model") {
+        Some(d) if services.contains_key(d) => d.to_string(),
+        Some(d) => bail!(
+            "--default-model {d:?} is not in {dir:?} (found: {})",
+            names.join(", ")
+        ),
+        None => names
+            .first()
+            .cloned()
+            .with_context(|| format!("no models in {dir:?}"))?,
+    };
+    println!("default model: {default_model} (requests without a \"model\" field)");
+
+    if let Some(addr) = a.get("http") {
+        let counters = hinm::coordinator::ModelCounters::new_shared();
+        let reload: hinm::net::ReloadFn = {
+            let reg = Arc::clone(&registry);
+            Arc::new(move || Ok(reg.reload().to_json()))
+        };
+        let router = hinm::net::MultiRouter {
+            services,
+            default_model,
+            counters,
+            // Artifacts pick their own value format, so no single kernel
+            // label describes every engine behind this front.
+            kernel: None,
+            reload,
+        };
+        let front = hinm::net::HttpFront::start_multi(addr, router, a.usize_or("http-workers", 8))?;
+        println!("HTTP front listening on http://{}", front.local_addr());
+        println!(
+            "  POST /v1/infer | GET /v1/models | GET /v1/metrics[?model=NAME] | POST /v1/admin/reload | GET /healthz  (Ctrl-C to stop)"
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    // Closed-loop demo against the default model, same shape as the
+    // single-model path above.
+    let n_requests = a.usize_or("requests", 256);
+    let n_clients = a.usize_or("clients", 8).max(1);
+    let handle = services
+        .get(&default_model)
+        .with_context(|| format!("registry lost default model {default_model:?}"))?
+        .handle
+        .clone();
+    let d_in = handle.d_in;
+    let per_client = (n_requests / n_clients).max(1);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let h = handle.clone();
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let x: Vec<f32> = (0..d_in)
+                        .map(|j| ((c * 131 + i * 17 + j) % 23) as f32 * 0.04 - 0.4)
+                        .collect();
+                    let y = h.infer(x).expect("inference failed");
+                    assert_eq!(y.len(), h.d_out);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let served = per_client * n_clients;
+    println!(
+        "served {served} requests from {n_clients} clients in {:.1} ms → {:.0} req/s",
+        wall.as_secs_f64() * 1e3,
+        served as f64 / wall.as_secs_f64()
+    );
+    for (name, server) in servers {
+        println!("[{name}] {}", server.metrics.summary());
+        server.stop();
     }
     Ok(())
 }

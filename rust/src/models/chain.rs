@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 pub use crate::spmm::epilogue::{gelu, gelu_fast, Activation};
 
 /// One layer: `act(W_hinm · x + b)`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct HinmLayer {
     /// The layer's weights in packed HiNM form.
     pub packed: HinmPacked,
@@ -119,6 +119,13 @@ impl HinmModel {
         }
         let plans = layers.iter().map(|l| SpmmPlan::new(&l.packed)).collect();
         Ok(HinmModel { layers, plans, values: ValueFormat::F32 })
+    }
+
+    /// [`HinmModel::new`] with the plans compiled directly under `fmt` —
+    /// the constructor the artifact loader uses (DESIGN.md §18).
+    /// Equivalent to `HinmModel::new(layers)?.with_value_format(fmt)`.
+    pub fn with_format(layers: Vec<HinmLayer>, fmt: ValueFormat) -> Result<HinmModel> {
+        Ok(HinmModel::new(layers)?.with_value_format(fmt))
     }
 
     /// Recompile every layer's plan with the given packed-value format

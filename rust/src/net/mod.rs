@@ -16,6 +16,17 @@
 //! | `/v1/metrics` | GET | engine + scheduler + cache counters as JSON; `?format=prometheus` renders the same counters in the Prometheus text exposition format |
 //! | `/healthz` | GET | liveness probe, `{"status": "ok"}` |
 //!
+//! When serving a model directory ([`HttpFront::start_multi`], DESIGN.md
+//! §18) the same front fans out over one engine per registry model:
+//!
+//! | Route | Method | Behaviour |
+//! |---|---|---|
+//! | `/v1/infer` | POST | body gains optional `"model"`; unknown name → 404, absent name → the default model (old clients keep working) |
+//! | `/v1/models` | GET | model names, the default, and per-model routed-request counts |
+//! | `/v1/metrics` | GET | `?model=NAME` selects the engine (default model otherwise); adds per-model routing counters |
+//! | `/v1/admin/reload` | POST | rescan the model dir and hot-swap changed versions; returns the per-model [`ReloadReport`](crate::runtime::ReloadReport) |
+//! | `/healthz` | GET | liveness probe + model count |
+//!
 //! Backpressure propagates naturally: a full engine queue blocks the HTTP
 //! worker inside `infer_opts`, which stalls that connection while the
 //! other pool workers keep serving. Engine errors map onto status codes
@@ -24,13 +35,15 @@
 pub mod http;
 pub mod protocol;
 
+use crate::coordinator::metrics::ModelCounters;
 use crate::coordinator::serve::ServerHandle;
 use crate::runtime::backend::CacheStats;
 use crate::spmm::KernelInfo;
 use crate::util::json::{self, Json};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use http::{Handler, HttpRequest, HttpResponse, HttpServer};
 use protocol::InferRequest;
+use std::collections::BTreeMap;
 use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::Duration;
@@ -198,4 +211,219 @@ fn infer_route(req: &HttpRequest, engine: &ServerHandle) -> HttpResponse {
             HttpResponse::json(status, protocol::error_body(kind, &e.to_string()).compact())
         }
     }
+}
+
+/// One registry model as the multi-model front sees it: the engine handle
+/// plus that engine's (per-model) cache counters for `/v1/metrics`.
+pub struct ModelService {
+    /// Handle into this model's [`BatchServer`](crate::coordinator::BatchServer).
+    pub handle: ServerHandle,
+    /// The model's cache counters, if its backend stack caches.
+    pub cache: Option<Arc<CacheStats>>,
+}
+
+/// Rescan-and-swap callback invoked by `POST /v1/admin/reload`; returns
+/// the rendered [`ReloadReport`](crate::runtime::ReloadReport) on success.
+pub type ReloadFn = Arc<dyn Fn() -> std::result::Result<Json, String> + Send + Sync>;
+
+/// Routing table for [`HttpFront::start_multi`]: one [`ModelService`] per
+/// registry model, a default model for bodies without a `"model"` field,
+/// the shared per-model request counters, and the reload hook (DESIGN.md
+/// §18).
+pub struct MultiRouter {
+    /// Model name → serving handles, sorted for stable `/v1/models` output.
+    pub services: BTreeMap<String, ModelService>,
+    /// Model served when the request body has no `"model"` field.
+    pub default_model: String,
+    /// Per-model routed-request counters, surfaced on `/v1/metrics`.
+    pub counters: Arc<ModelCounters>,
+    /// Microkernel label for metrics (shared by all native backends).
+    pub kernel: Option<KernelInfo>,
+    /// Invoked by `POST /v1/admin/reload`.
+    pub reload: ReloadFn,
+}
+
+impl HttpFront {
+    /// Bind `addr` and serve *several* engines behind one front: requests
+    /// route on the body's `"model"` field (absent → `default_model`,
+    /// unknown → 404), and `POST /v1/admin/reload` triggers the router's
+    /// rescan-and-swap hook. See the module docs for the route table.
+    pub fn start_multi(addr: &str, router: MultiRouter, workers: usize) -> Result<HttpFront> {
+        if !router.services.contains_key(&router.default_model) {
+            bail!(
+                "default model {:?} is not among the served models ({})",
+                router.default_model,
+                router.services.keys().cloned().collect::<Vec<_>>().join(", ")
+            );
+        }
+        let router = Arc::new(router);
+        let handler: Handler = Arc::new(move |req: &HttpRequest| route_multi(req, &router));
+        let server = HttpServer::start(addr, handler, workers)?;
+        Ok(HttpFront { server })
+    }
+}
+
+fn route_multi(req: &HttpRequest, router: &MultiRouter) -> HttpResponse {
+    let path = req.path.split('?').next().unwrap_or("");
+    match path {
+        "/healthz" => match req.method.as_str() {
+            "GET" => HttpResponse::json(
+                200,
+                Json::obj(vec![
+                    ("status", Json::str("ok")),
+                    ("models", Json::num(router.services.len() as f64)),
+                ])
+                .compact(),
+            ),
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/models" => match req.method.as_str() {
+            "GET" => models_route(router),
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/metrics" => match req.method.as_str() {
+            "GET" => metrics_multi_route(req, router),
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/infer" => match req.method.as_str() {
+            "POST" => infer_multi_route(req, router),
+            _ => method_not_allowed(req, "POST"),
+        },
+        "/v1/admin/reload" => match req.method.as_str() {
+            "POST" => match (router.reload)() {
+                Ok(report) => HttpResponse::json(
+                    200,
+                    Json::obj(vec![("status", Json::str("ok")), ("report", report)]).compact(),
+                ),
+                Err(e) => HttpResponse::json(
+                    500,
+                    protocol::error_body("reload_failed", &e).compact(),
+                ),
+            },
+            _ => method_not_allowed(req, "POST"),
+        },
+        _ => HttpResponse::json(
+            404,
+            protocol::error_body("not_found", &format!("no route for {} {}", req.method, path))
+                .compact(),
+        ),
+    }
+}
+
+/// `GET /v1/models`: the catalog the front routes over, the default, and
+/// how many requests each model has served so far.
+fn models_route(router: &MultiRouter) -> HttpResponse {
+    let routed: BTreeMap<String, u64> = router.counters.snapshot().into_iter().collect();
+    let models = Json::Arr(
+        router
+            .services
+            .keys()
+            .map(|name| {
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    (
+                        "requests",
+                        Json::num(routed.get(name).copied().unwrap_or(0) as f64),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    HttpResponse::json(
+        200,
+        Json::obj(vec![
+            ("default", Json::str(&router.default_model)),
+            ("models", models),
+        ])
+        .compact(),
+    )
+}
+
+/// `GET /v1/metrics` on the multi front: `?model=NAME` picks the engine
+/// (default model otherwise); renders with the per-model routing counters.
+fn metrics_multi_route(req: &HttpRequest, router: &MultiRouter) -> HttpResponse {
+    let query = req.path.split_once('?').map(|(_, q)| q).unwrap_or("");
+    let format = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("format="))
+        .unwrap_or("json");
+    let name = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("model="))
+        .unwrap_or(&router.default_model);
+    let Some(service) = router.services.get(name) else {
+        return unknown_model(name, router);
+    };
+    let cache = service.cache.as_deref();
+    let counters = Some(router.counters.as_ref());
+    match format {
+        "json" => HttpResponse::json(
+            200,
+            protocol::metrics_json_with_models(
+                service.handle.metrics(),
+                cache,
+                router.kernel.as_ref(),
+                counters,
+            )
+            .compact(),
+        ),
+        "prometheus" => HttpResponse {
+            status: 200,
+            content_type: PROMETHEUS_CONTENT_TYPE,
+            body: protocol::metrics_prometheus_with_models(
+                service.handle.metrics(),
+                cache,
+                router.kernel.as_ref(),
+                counters,
+            ),
+        },
+        other => HttpResponse::json(
+            400,
+            protocol::error_body(
+                "bad_request",
+                &format!("unknown metrics format {other:?} (expected json|prometheus)"),
+            )
+            .compact(),
+        ),
+    }
+}
+
+/// `POST /v1/infer` on the multi front: route on the body's `"model"`.
+fn infer_multi_route(req: &HttpRequest, router: &MultiRouter) -> HttpResponse {
+    let parsed = match json::parse(&req.body) {
+        Ok(v) => v,
+        Err(e) => return HttpResponse::json(400, protocol::error_body("bad_json", &e).compact()),
+    };
+    let ir = match InferRequest::from_json(&parsed) {
+        Ok(r) => r,
+        Err(e) => return HttpResponse::json(400, protocol::error_body("bad_request", &e).compact()),
+    };
+    let name = ir.model.as_deref().unwrap_or(&router.default_model);
+    let Some(service) = router.services.get(name) else {
+        return unknown_model(name, router);
+    };
+    router.counters.record(name);
+    let deadline = ir.deadline_ms.map(Duration::from_millis);
+    match service.handle.infer_opts(ir.x, ir.priority, deadline) {
+        Ok(y) => HttpResponse::json(200, protocol::infer_response(&y).compact()),
+        Err(e) => {
+            let (status, kind) = protocol::status_for(&e);
+            HttpResponse::json(status, protocol::error_body(kind, &e.to_string()).compact())
+        }
+    }
+}
+
+fn unknown_model(name: &str, router: &MultiRouter) -> HttpResponse {
+    HttpResponse::json(
+        404,
+        protocol::error_body(
+            "unknown_model",
+            &format!(
+                "no model {:?} (GET /v1/models lists: {})",
+                name,
+                router.services.keys().cloned().collect::<Vec<_>>().join(", ")
+            ),
+        )
+        .compact(),
+    )
 }

@@ -4,17 +4,20 @@
 //! Request body for `POST /v1/infer`:
 //!
 //! ```json
-//! {"x": [0.1, -0.2, …], "priority": "high", "deadline_ms": 50}
+//! {"x": [0.1, -0.2, …], "priority": "high", "deadline_ms": 50, "model": "deit-mini"}
 //! ```
 //!
 //! `priority` (optional, default `"normal"`) and `deadline_ms` (optional,
 //! default none) map onto [`Priority`] and the scheduler deadline measured
-//! from the moment the request is submitted. Success response is
+//! from the moment the request is submitted; `model` (optional) routes the
+//! request to a named registry model when serving `--model-dir`, and is
+//! ignored by the single-model front — old clients that never send it
+//! keep hitting the default model (DESIGN.md §18). Success response is
 //! `{"y": [...]}`; every error response is
 //! `{"error": {"kind": ..., "message": ...}}` with the status code from
 //! [`status_for`].
 
-use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::metrics::{EngineMetrics, ModelCounters};
 use crate::coordinator::serve::{InferError, Priority};
 use crate::runtime::backend::CacheStats;
 use crate::spmm::KernelInfo;
@@ -29,12 +32,20 @@ pub struct InferRequest {
     pub priority: Priority,
     /// Optional deadline in milliseconds, measured from submission.
     pub deadline_ms: Option<u64>,
+    /// Optional registry model name (default model when absent).
+    pub model: Option<String>,
 }
 
 impl InferRequest {
-    /// A normal-priority request with no deadline.
+    /// A normal-priority request with no deadline, for the default model.
     pub fn new(x: Vec<f32>) -> InferRequest {
-        InferRequest { x, priority: Priority::Normal, deadline_ms: None }
+        InferRequest { x, priority: Priority::Normal, deadline_ms: None, model: None }
+    }
+
+    /// Route to a named registry model (builder style).
+    pub fn with_model(mut self, model: &str) -> InferRequest {
+        self.model = Some(model.to_string());
+        self
     }
 
     /// Parse a request body; the error string is surfaced to the client in
@@ -76,7 +87,15 @@ impl InferRequest {
                 Some(ms as u64)
             }
         };
-        Ok(InferRequest { x, priority, deadline_ms })
+        let model = match v.get("model") {
+            Json::Null => None,
+            s => Some(
+                s.as_str()
+                    .ok_or_else(|| "\"model\" must be a string".to_string())?
+                    .to_string(),
+            ),
+        };
+        Ok(InferRequest { x, priority, deadline_ms, model })
     }
 
     /// Serialize for sending (used by the bench client and tests).
@@ -89,6 +108,9 @@ impl InferRequest {
         }
         if let Some(ms) = self.deadline_ms {
             pairs.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        if let Some(model) = &self.model {
+            pairs.push(("model", Json::str(model)));
         }
         Json::obj(pairs)
     }
@@ -135,6 +157,18 @@ pub fn metrics_json(
     m: &EngineMetrics,
     cache: Option<&CacheStats>,
     kernel: Option<&KernelInfo>,
+) -> Json {
+    metrics_json_with_models(m, cache, kernel, None)
+}
+
+/// [`metrics_json`] plus a `model_requests` block (`name → routed
+/// requests`) when the multi-model registry front is serving
+/// (DESIGN.md §18).
+pub fn metrics_json_with_models(
+    m: &EngineMetrics,
+    cache: Option<&CacheStats>,
+    kernel: Option<&KernelInfo>,
+    models: Option<&ModelCounters>,
 ) -> Json {
     let lat = m.aggregate_latency();
     let pct = lat.percentiles(&[50.0, 95.0, 99.0]);
@@ -204,6 +238,13 @@ pub fn metrics_json(
         }
         pairs.push(("kernel", Json::obj(kp)));
     }
+    if let Some(mc) = models {
+        let snap = mc.snapshot();
+        pairs.push((
+            "model_requests",
+            Json::obj(snap.iter().map(|(n, c)| (n.as_str(), Json::num(*c as f64))).collect()),
+        ));
+    }
     Json::obj(pairs)
 }
 
@@ -218,6 +259,18 @@ pub fn metrics_prometheus(
     m: &EngineMetrics,
     cache: Option<&CacheStats>,
     kernel: Option<&KernelInfo>,
+) -> String {
+    metrics_prometheus_with_models(m, cache, kernel, None)
+}
+
+/// [`metrics_prometheus`] plus a `hinm_model_requests_total{model=…}`
+/// counter family when the multi-model registry front is serving
+/// (DESIGN.md §18).
+pub fn metrics_prometheus_with_models(
+    m: &EngineMetrics,
+    cache: Option<&CacheStats>,
+    kernel: Option<&KernelInfo>,
+    models: Option<&ModelCounters>,
 ) -> String {
     // One family = HELP + TYPE + its samples, emitted as a single group
     // (the exposition format forbids interleaving a family's samples with
@@ -385,6 +438,21 @@ pub fn metrics_prometheus(
         }
     }
 
+    if let Some(mc) = models {
+        let samples: Vec<String> = mc
+            .snapshot()
+            .iter()
+            .map(|(n, c)| format!("hinm_model_requests_total{{model=\"{n}\"}} {c}"))
+            .collect();
+        family(
+            &mut out,
+            "hinm_model_requests_total",
+            "counter",
+            "Requests routed per registry model.",
+            &samples,
+        );
+    }
+
     out
 }
 
@@ -409,10 +477,15 @@ mod tests {
             x: vec![0.5; 4],
             priority: Priority::High,
             deadline_ms: Some(250),
+            model: Some("deit-mini".to_string()),
         };
-        let back =
-            InferRequest::from_json(&json::parse(&r.to_json().pretty()).unwrap()).unwrap();
+        let text = r.to_json().pretty();
+        assert!(text.contains("\"model\""), "named model is serialized: {text}");
+        let back = InferRequest::from_json(&json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, r);
+        // Builder form matches the literal.
+        let built = InferRequest::new(vec![0.5; 4]).with_model("deit-mini");
+        assert_eq!(built.model, r.model);
     }
 
     #[test]
@@ -427,6 +500,7 @@ mod tests {
             (r#"{"x": [1], "priority": 3}"#, "must be a string"),
             (r#"{"x": [1], "deadline_ms": "soon"}"#, "must be a number"),
             (r#"{"x": [1], "deadline_ms": -5}"#, "non-negative"),
+            (r#"{"x": [1], "model": 7}"#, "\"model\" must be a string"),
         ] {
             let err = InferRequest::from_json(&json::parse(body).unwrap()).unwrap_err();
             assert!(err.contains(needle), "body {body}: expected {needle:?} in {err:?}");
@@ -507,5 +581,23 @@ mod tests {
             v.get("kernel").get("panel_target_bytes").as_usize(),
             Some(ki.panel_target_bytes)
         );
+    }
+
+    #[test]
+    fn metrics_carry_per_model_counters_when_present() {
+        let m = EngineMetrics::new(1);
+        let counters = ModelCounters::new_shared();
+        counters.record("ffn-relu");
+        counters.record("ffn-relu");
+        counters.record("deit-mini");
+        let v = metrics_json_with_models(&m, None, None, Some(&counters));
+        assert_eq!(v.get("model_requests").get("ffn-relu").as_usize(), Some(2));
+        assert_eq!(v.get("model_requests").get("deit-mini").as_usize(), Some(1));
+        // The plain variant stays model-free (single-model front).
+        assert!(metrics_json(&m, None, None).get("model_requests").as_obj().is_none());
+        let text = metrics_prometheus_with_models(&m, None, None, Some(&counters));
+        assert!(text.contains("# TYPE hinm_model_requests_total counter"), "{text}");
+        assert!(text.contains("hinm_model_requests_total{model=\"ffn-relu\"} 2"), "{text}");
+        assert!(!metrics_prometheus(&m, None, None).contains("hinm_model_requests_total"));
     }
 }

@@ -1,0 +1,705 @@
+//! AOT serving artifacts: a versioned on-disk model format (DESIGN.md §18).
+//!
+//! An artifact is a **manifest + payload** pair, named
+//! `<name>-v<version>.json` / `<name>-v<version>.bin`:
+//!
+//! * the manifest is JSON written with [`crate::util::json`] — schema
+//!   version, model name, artifact version, per-layer shapes and sparsity
+//!   config `(V, N:M, sv)`, value format, payload checksum, provenance;
+//! * the payload is a little-endian binary blob holding every layer's
+//!   packed weights (`vals`), gather indices (`vec_idx`), 2-bit-packed
+//!   N:M offsets (`nm_idx`), and optional bias, in layer order.
+//!
+//! The split keeps the metadata human-inspectable (`cat`-able, diffable)
+//! while the bulk bytes stay opaque, and lets the loader validate shape
+//! and integrity *before* touching weight data. Every byte length in the
+//! payload is derivable from the manifest alone, so corruption surfaces
+//! as a typed [`ArtifactError`] — never a panic — in a fixed order:
+//! manifest parse → schema gate → shape consistency → payload length →
+//! checksum → structural invariants.
+//!
+//! Loading rebuilds the exact [`HinmPacked`] bits that were saved, so a
+//! model served from an artifact is **bit-identical** to the in-process
+//! build (pinned by `tests/artifact_registry.rs`), for f32 and bf16 value
+//! formats alike (bf16 narrowing happens at plan compile, after load).
+//!
+//! The fs-free core ([`encode_parts`] / [`load_from_parts`]) is what the
+//! deterministic fuzz harness (`tests/fuzz_artifact.rs`) drives directly.
+
+use crate::models::{Activation, HinmLayer, HinmModel};
+use crate::sparsity::config::HinmConfig;
+use crate::sparsity::format::{pack_nm_bits, unpack_nm_bits, HinmPacked};
+use crate::spmm::ValueFormat;
+use crate::util::json::{self, Json};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The one manifest schema this build reads and writes. Readers must
+/// reject anything else (DESIGN.md §18): a newer schema may relayout the
+/// payload, and guessing would deserialize garbage weights silently.
+pub const ARTIFACT_SCHEMA_VERSION: u64 = 1;
+
+/// Typed loader/saver failure. Each corruption class gets its own
+/// variant so tests (and operators reading logs) can tell a truncated
+/// download from a flipped bit from a version skew.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// Filesystem read/write failed.
+    Io {
+        /// Path involved.
+        path: String,
+        /// OS error detail.
+        detail: String,
+    },
+    /// The manifest is not valid JSON, or a required field is missing or
+    /// of the wrong type.
+    ManifestParse(String),
+    /// `schema_version` is not one this build understands.
+    UnknownSchemaVersion {
+        /// Version found in the manifest.
+        found: u64,
+        /// Version this build supports.
+        supported: u64,
+    },
+    /// The manifest's layer shapes are internally inconsistent, or they
+    /// disagree with the manifest's own `payload_bytes`.
+    ShapeMismatch(String),
+    /// The payload is shorter or longer than the manifest says.
+    TruncatedPayload {
+        /// Bytes the manifest promises.
+        expected: usize,
+        /// Bytes actually present.
+        actual: usize,
+    },
+    /// FNV-1a64 over the payload disagrees with the manifest.
+    ChecksumMismatch {
+        /// Checksum stored in the manifest (hex).
+        stored: String,
+        /// Checksum computed over the payload (hex).
+        computed: String,
+    },
+    /// Decoded data violates a structural invariant (config validation,
+    /// `HinmPacked::check_invariants`, chain dimension mismatch, bad name).
+    Validation(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io { path, detail } => write!(f, "artifact io error at {path}: {detail}"),
+            ArtifactError::ManifestParse(m) => write!(f, "artifact manifest parse error: {m}"),
+            ArtifactError::UnknownSchemaVersion { found, supported } => write!(
+                f,
+                "unknown artifact schema version {found} (this build supports {supported})"
+            ),
+            ArtifactError::ShapeMismatch(m) => write!(f, "artifact shape mismatch: {m}"),
+            ArtifactError::TruncatedPayload { expected, actual } => write!(
+                f,
+                "artifact payload truncated: manifest promises {expected} bytes, found {actual}"
+            ),
+            ArtifactError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "artifact checksum mismatch: manifest says {stored}, payload hashes to {computed}"
+            ),
+            ArtifactError::Validation(m) => write!(f, "artifact validation failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// Where an artifact came from — free-form, never load-bearing.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Provenance {
+    /// Producing tool (e.g. `"hinm build"`).
+    pub tool: String,
+    /// Weight seed, when the model is synthetic.
+    pub seed: Option<u64>,
+    /// Operator note.
+    pub note: Option<String>,
+}
+
+/// Per-layer record in the manifest: everything needed to size and
+/// decode that layer's slice of the payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerManifest {
+    /// Output rows of the packed matrix.
+    pub rows: usize,
+    /// Input columns of the packed matrix.
+    pub cols: usize,
+    /// Kept column-vectors per tile.
+    pub k_v: usize,
+    /// Vector height `V`.
+    pub v: usize,
+    /// `N` of the `N:M` pattern.
+    pub n_keep: usize,
+    /// `M` of the `N:M` pattern.
+    pub m_group: usize,
+    /// Vector-level sparsity `sv`.
+    pub vector_sparsity: f64,
+    /// Post-GEMM nonlinearity.
+    pub activation: Activation,
+    /// Whether a bias vector follows the indices in the payload.
+    pub has_bias: bool,
+}
+
+impl LayerManifest {
+    fn tiles(&self) -> Result<usize, ArtifactError> {
+        if self.v == 0 || self.rows % self.v != 0 {
+            return Err(ArtifactError::ShapeMismatch(format!(
+                "rows {} not divisible by V {}",
+                self.rows, self.v
+            )));
+        }
+        Ok(self.rows / self.v)
+    }
+
+    fn vals_per_row(&self) -> Result<usize, ArtifactError> {
+        if self.m_group == 0 || (self.k_v * self.n_keep) % self.m_group != 0 {
+            return Err(ArtifactError::ShapeMismatch(format!(
+                "k_v {} · N {} not divisible by M {}",
+                self.k_v, self.n_keep, self.m_group
+            )));
+        }
+        Ok(self.k_v * self.n_keep / self.m_group)
+    }
+
+    /// Exact payload bytes this layer occupies:
+    /// `vals` (f32) + `vec_idx` (i32) + 2-bit-packed `nm_idx` + optional bias (f32).
+    fn payload_bytes(&self) -> Result<usize, ArtifactError> {
+        let tiles = self.tiles()?;
+        let vpr = self.vals_per_row()?;
+        let n_vals = tiles
+            .checked_mul(self.v)
+            .and_then(|x| x.checked_mul(vpr))
+            .ok_or_else(|| ArtifactError::ShapeMismatch("layer value count overflows".into()))?;
+        let n_idx = tiles
+            .checked_mul(self.k_v)
+            .ok_or_else(|| ArtifactError::ShapeMismatch("layer index count overflows".into()))?;
+        let bias = if self.has_bias { self.rows * 4 } else { 0 };
+        n_vals
+            .checked_mul(4)
+            .and_then(|b| b.checked_add(n_idx * 4))
+            .and_then(|b| b.checked_add(n_vals.div_ceil(4)))
+            .and_then(|b| b.checked_add(bias))
+            .ok_or_else(|| ArtifactError::ShapeMismatch("layer byte count overflows".into()))
+    }
+}
+
+/// Parsed artifact manifest — the JSON half of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    /// Manifest schema version ([`ARTIFACT_SCHEMA_VERSION`]).
+    pub schema_version: u64,
+    /// Model name (registry routing key). `[A-Za-z0-9._-]`, no leading dot.
+    pub name: String,
+    /// Artifact version — higher wins at scan time.
+    pub version: u64,
+    /// Value format plans are compiled with after load.
+    pub value_format: ValueFormat,
+    /// Payload file name, relative to the manifest's directory.
+    pub payload: String,
+    /// Exact payload length in bytes.
+    pub payload_bytes: usize,
+    /// FNV-1a64 over the whole payload.
+    pub checksum: u64,
+    /// Per-layer shape + sparsity records, first layer first.
+    pub layers: Vec<LayerManifest>,
+    /// Free-form origin info.
+    pub provenance: Provenance,
+}
+
+/// `name` is used as a routing key and a file-name stem; confine it to a
+/// shell- and path-safe alphabet so a hostile manifest cannot traverse
+/// directories or inject header/log garbage.
+pub fn validate_name(name: &str) -> Result<(), ArtifactError> {
+    let ok = !name.is_empty()
+        && name.len() <= 64
+        && !name.starts_with('.')
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if ok {
+        Ok(())
+    } else {
+        Err(ArtifactError::Validation(format!(
+            "bad model name {name:?} (want 1-64 chars of [A-Za-z0-9._-], no leading dot)"
+        )))
+    }
+}
+
+fn get_field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json, ArtifactError> {
+    let v = obj.get(key);
+    if matches!(v, Json::Null) {
+        return Err(ArtifactError::ManifestParse(format!("missing field {key:?}")));
+    }
+    Ok(v)
+}
+
+fn get_u64(obj: &Json, key: &str) -> Result<u64, ArtifactError> {
+    let n = get_field(obj, key)?
+        .as_f64()
+        .ok_or_else(|| ArtifactError::ManifestParse(format!("field {key:?} must be a number")))?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > 9.0e15 {
+        return Err(ArtifactError::ManifestParse(format!(
+            "field {key:?} must be a non-negative integer, got {n}"
+        )));
+    }
+    Ok(n as u64)
+}
+
+fn get_usize(obj: &Json, key: &str) -> Result<usize, ArtifactError> {
+    Ok(get_u64(obj, key)? as usize)
+}
+
+fn get_str(obj: &Json, key: &str) -> Result<String, ArtifactError> {
+    Ok(get_field(obj, key)?
+        .as_str()
+        .ok_or_else(|| ArtifactError::ManifestParse(format!("field {key:?} must be a string")))?
+        .to_string())
+}
+
+fn get_bool(obj: &Json, key: &str) -> Result<bool, ArtifactError> {
+    match get_field(obj, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(ArtifactError::ManifestParse(format!("field {key:?} must be a bool"))),
+    }
+}
+
+impl ArtifactManifest {
+    /// Parse a manifest from JSON text and run the schema gate. Shape
+    /// consistency against `payload_bytes` is the *loader's* job
+    /// ([`load_from_parts`]), not the parser's.
+    pub fn from_json_text(text: &str) -> Result<ArtifactManifest, ArtifactError> {
+        let doc = json::parse(text).map_err(ArtifactError::ManifestParse)?;
+        let schema_version = get_u64(&doc, "schema_version")?;
+        if schema_version != ARTIFACT_SCHEMA_VERSION {
+            return Err(ArtifactError::UnknownSchemaVersion {
+                found: schema_version,
+                supported: ARTIFACT_SCHEMA_VERSION,
+            });
+        }
+        let name = get_str(&doc, "name")?;
+        validate_name(&name)?;
+        let version = get_u64(&doc, "version")?;
+        let fmt_s = get_str(&doc, "value_format")?;
+        let value_format = ValueFormat::parse(&fmt_s).ok_or_else(|| {
+            ArtifactError::ManifestParse(format!("unknown value_format {fmt_s:?} (f32|bf16)"))
+        })?;
+        let payload = get_str(&doc, "payload")?;
+        let payload_bytes = get_usize(&doc, "payload_bytes")?;
+        let checksum_s = get_str(&doc, "checksum_fnv1a64")?;
+        let checksum = u64::from_str_radix(&checksum_s, 16).map_err(|_| {
+            ArtifactError::ManifestParse(format!("checksum_fnv1a64 {checksum_s:?} is not hex"))
+        })?;
+        let layers_json = get_field(&doc, "layers")?
+            .as_arr()
+            .ok_or_else(|| ArtifactError::ManifestParse("field \"layers\" must be an array".into()))?;
+        if layers_json.is_empty() {
+            return Err(ArtifactError::ManifestParse("field \"layers\" must be non-empty".into()));
+        }
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for l in layers_json {
+            let act_s = get_str(l, "activation")?;
+            let activation = Activation::parse(&act_s).ok_or_else(|| {
+                ArtifactError::ManifestParse(format!(
+                    "unknown activation {act_s:?} (none|relu|gelu)"
+                ))
+            })?;
+            let sv = get_field(l, "sv")?.as_f64().ok_or_else(|| {
+                ArtifactError::ManifestParse("layer field \"sv\" must be a number".into())
+            })?;
+            layers.push(LayerManifest {
+                rows: get_usize(l, "rows")?,
+                cols: get_usize(l, "cols")?,
+                k_v: get_usize(l, "k_v")?,
+                v: get_usize(l, "v")?,
+                n_keep: get_usize(l, "n")?,
+                m_group: get_usize(l, "m")?,
+                vector_sparsity: sv,
+                activation,
+                has_bias: get_bool(l, "has_bias")?,
+            });
+        }
+        let prov = doc.get("provenance");
+        let provenance = Provenance {
+            tool: prov.get("tool").as_str().unwrap_or_default().to_string(),
+            seed: prov.get("seed").as_f64().map(|s| s as u64),
+            note: prov.get("note").as_str().map(|s| s.to_string()),
+        };
+        Ok(ArtifactManifest {
+            schema_version,
+            name,
+            version,
+            value_format,
+            payload,
+            payload_bytes,
+            checksum,
+            layers,
+            provenance,
+        })
+    }
+
+    /// Serialize to the manifest JSON document.
+    pub fn to_json(&self) -> Json {
+        let layers = Json::arr(self.layers.iter().map(|l| {
+            Json::obj(vec![
+                ("rows", Json::num(l.rows as f64)),
+                ("cols", Json::num(l.cols as f64)),
+                ("k_v", Json::num(l.k_v as f64)),
+                ("v", Json::num(l.v as f64)),
+                ("n", Json::num(l.n_keep as f64)),
+                ("m", Json::num(l.m_group as f64)),
+                ("sv", Json::num(l.vector_sparsity)),
+                ("activation", Json::str(l.activation.as_str())),
+                ("has_bias", Json::Bool(l.has_bias)),
+            ])
+        }));
+        let mut prov = vec![("tool", Json::str(&self.provenance.tool))];
+        if let Some(seed) = self.provenance.seed {
+            prov.push(("seed", Json::num(seed as f64)));
+        }
+        if let Some(note) = &self.provenance.note {
+            prov.push(("note", Json::str(note)));
+        }
+        Json::obj(vec![
+            ("schema_version", Json::num(self.schema_version as f64)),
+            ("name", Json::str(&self.name)),
+            ("version", Json::num(self.version as f64)),
+            ("value_format", Json::str(self.value_format.as_str())),
+            ("payload", Json::str(&self.payload)),
+            ("payload_bytes", Json::num(self.payload_bytes as f64)),
+            ("checksum_fnv1a64", Json::str(&format!("{:016x}", self.checksum))),
+            ("layers", layers),
+            ("provenance", Json::obj(prov)),
+        ])
+    }
+
+    /// Exact payload size the layer records promise, or the shape error
+    /// preventing its computation.
+    pub fn expected_payload_bytes(&self) -> Result<usize, ArtifactError> {
+        let mut total = 0usize;
+        for l in &self.layers {
+            total = total
+                .checked_add(l.payload_bytes()?)
+                .ok_or_else(|| ArtifactError::ShapeMismatch("total byte count overflows".into()))?;
+        }
+        Ok(total)
+    }
+}
+
+/// FNV-1a64 over a byte slice — the same hash family the batch cache
+/// uses (§13), here as the payload integrity check. Not cryptographic;
+/// it catches truncation, bit rot, and editor accidents, which is the
+/// threat model for a trusted model directory.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// A successfully loaded artifact: its manifest plus the compiled model
+/// (plans are built by `HinmModel` construction, so the load *is* the
+/// compile step).
+#[derive(Debug)]
+pub struct LoadedArtifact {
+    /// The manifest as read from disk.
+    pub manifest: ArtifactManifest,
+    /// The reconstructed model, plans compiled under the manifest's
+    /// value format.
+    pub model: HinmModel,
+}
+
+fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a model into `(manifest_text, payload_bytes)` without
+/// touching the filesystem. [`save_artifact`] writes these to disk; the
+/// fuzz harness mutates them in memory.
+pub fn encode_parts(
+    name: &str,
+    version: u64,
+    model: &HinmModel,
+    provenance: &Provenance,
+) -> Result<(String, Vec<u8>), ArtifactError> {
+    validate_name(name)?;
+    let mut payload = Vec::new();
+    let mut layers = Vec::with_capacity(model.n_layers());
+    for layer in model.layers() {
+        let p = &layer.packed;
+        push_f32s(&mut payload, &p.vals);
+        for &i in &p.vec_idx {
+            payload.extend_from_slice(&i.to_le_bytes());
+        }
+        payload.extend_from_slice(&pack_nm_bits(&p.nm_idx));
+        if let Some(b) = &layer.bias {
+            push_f32s(&mut payload, b);
+        }
+        layers.push(LayerManifest {
+            rows: p.rows,
+            cols: p.cols,
+            k_v: p.k_v,
+            v: p.cfg.v,
+            n_keep: p.cfg.n_keep,
+            m_group: p.cfg.m_group,
+            vector_sparsity: p.cfg.vector_sparsity,
+            activation: layer.act,
+            has_bias: layer.bias.is_some(),
+        });
+    }
+    let manifest = ArtifactManifest {
+        schema_version: ARTIFACT_SCHEMA_VERSION,
+        name: name.to_string(),
+        version,
+        value_format: model.value_format(),
+        payload: format!("{name}-v{version}.bin"),
+        payload_bytes: payload.len(),
+        checksum: fnv1a64(&payload),
+        layers,
+        provenance: provenance.clone(),
+    };
+    let mut text = manifest.to_json().pretty();
+    text.push('\n');
+    Ok((text, payload))
+}
+
+/// Decode `(manifest_text, payload)` back into a compiled model,
+/// running the full validation ladder. Never panics on malformed input
+/// (fuzzed in `tests/fuzz_artifact.rs`).
+pub fn load_from_parts(manifest_text: &str, payload: &[u8]) -> Result<LoadedArtifact, ArtifactError> {
+    let manifest = ArtifactManifest::from_json_text(manifest_text)?;
+    let expected = manifest.expected_payload_bytes()?;
+    if expected != manifest.payload_bytes {
+        return Err(ArtifactError::ShapeMismatch(format!(
+            "layer records sum to {expected} payload bytes but manifest says {}",
+            manifest.payload_bytes
+        )));
+    }
+    if payload.len() != manifest.payload_bytes {
+        return Err(ArtifactError::TruncatedPayload {
+            expected: manifest.payload_bytes,
+            actual: payload.len(),
+        });
+    }
+    let computed = fnv1a64(payload);
+    if computed != manifest.checksum {
+        return Err(ArtifactError::ChecksumMismatch {
+            stored: format!("{:016x}", manifest.checksum),
+            computed: format!("{computed:016x}"),
+        });
+    }
+
+    fn take<'a>(
+        payload: &'a [u8],
+        pos: &mut usize,
+        n: usize,
+    ) -> Result<&'a [u8], ArtifactError> {
+        let end = pos.checked_add(n).filter(|&e| e <= payload.len()).ok_or(
+            ArtifactError::TruncatedPayload { expected: pos.saturating_add(n), actual: payload.len() },
+        )?;
+        let s = &payload[*pos..end];
+        *pos = end;
+        Ok(s)
+    }
+
+    let mut pos = 0usize;
+    let mut layers = Vec::with_capacity(manifest.layers.len());
+    for lm in &manifest.layers {
+        let tiles = lm.tiles()?;
+        let vpr = lm.vals_per_row()?;
+        let n_vals = tiles * lm.v * vpr;
+        let vals: Vec<f32> = take(payload, &mut pos, n_vals * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let vec_idx: Vec<i32> = take(payload, &mut pos, tiles * lm.k_v * 4)?
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let nm_idx = unpack_nm_bits(take(payload, &mut pos, n_vals.div_ceil(4))?, n_vals);
+        let bias = if lm.has_bias {
+            Some(
+                take(payload, &mut pos, lm.rows * 4)?
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect::<Vec<f32>>(),
+            )
+        } else {
+            None
+        };
+        let cfg = HinmConfig {
+            v: lm.v,
+            n_keep: lm.n_keep,
+            m_group: lm.m_group,
+            vector_sparsity: lm.vector_sparsity,
+        };
+        cfg.validate(lm.rows, lm.cols).map_err(ArtifactError::Validation)?;
+        let packed = HinmPacked {
+            cfg,
+            rows: lm.rows,
+            cols: lm.cols,
+            k_v: lm.k_v,
+            vals,
+            vec_idx,
+            nm_idx,
+        };
+        packed
+            .check_invariants()
+            .map_err(|e| ArtifactError::Validation(e.to_string()))?;
+        let mut layer = HinmLayer::new(packed).with_activation(lm.activation);
+        if let Some(b) = bias {
+            layer = layer.with_bias(b);
+        }
+        layers.push(layer);
+    }
+    let model = HinmModel::with_format(layers, manifest.value_format)
+        .map_err(|e| ArtifactError::Validation(e.to_string()))?;
+    Ok(LoadedArtifact { manifest, model })
+}
+
+/// Manifest path for `(dir, name, version)` — the scan/save naming rule.
+pub fn manifest_path(dir: &Path, name: &str, version: u64) -> PathBuf {
+    dir.join(format!("{name}-v{version}.json"))
+}
+
+/// Serialize `model` under `dir` as `<name>-v<version>.{json,bin}`,
+/// creating `dir` if needed. Returns the manifest path. The payload is
+/// written before the manifest, so a torn save is an orphan `.bin` at
+/// worst — the scan keys off manifests and never sees it.
+pub fn save_artifact(
+    dir: &Path,
+    name: &str,
+    version: u64,
+    model: &HinmModel,
+    provenance: &Provenance,
+) -> Result<PathBuf, ArtifactError> {
+    let (manifest_text, payload) = encode_parts(name, version, model, provenance)?;
+    let io_err = |p: &Path, e: std::io::Error| ArtifactError::Io {
+        path: p.display().to_string(),
+        detail: e.to_string(),
+    };
+    std::fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+    let bin = dir.join(format!("{name}-v{version}.bin"));
+    std::fs::write(&bin, &payload).map_err(|e| io_err(&bin, e))?;
+    let man = manifest_path(dir, name, version);
+    std::fs::write(&man, manifest_text).map_err(|e| io_err(&man, e))?;
+    Ok(man)
+}
+
+/// Load the artifact whose manifest lives at `manifest_path`; the
+/// payload is resolved relative to the manifest's directory.
+pub fn load_artifact(manifest_path: &Path) -> Result<LoadedArtifact, ArtifactError> {
+    let io_err = |p: &Path, e: std::io::Error| ArtifactError::Io {
+        path: p.display().to_string(),
+        detail: e.to_string(),
+    };
+    let text =
+        std::fs::read_to_string(manifest_path).map_err(|e| io_err(manifest_path, e))?;
+    let manifest = ArtifactManifest::from_json_text(&text)?;
+    // The payload name is attacker-ish input (a manifest could say
+    // "../../etc/x"); confine it to a plain file name in the same dir.
+    if manifest.payload.contains('/') || manifest.payload.contains('\\') {
+        return Err(ArtifactError::Validation(format!(
+            "payload {:?} must be a bare file name",
+            manifest.payload
+        )));
+    }
+    let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+    let bin = dir.join(&manifest.payload);
+    let payload = std::fs::read(&bin).map_err(|e| io_err(&bin, e))?;
+    load_from_parts(&text, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{ActivationBuffers, HinmModel};
+    use crate::spmm::SpmmEngine;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    fn model() -> HinmModel {
+        HinmModel::synthetic_ffn(16, 32, &HinmConfig::with_24(4, 0.5), Activation::Relu, 7)
+            .unwrap()
+    }
+
+    #[test]
+    fn encode_load_roundtrip_bits() {
+        let m = model();
+        let prov = Provenance { tool: "test".into(), seed: Some(7), note: None };
+        let (text, payload) = encode_parts("rt", 1, &m, &prov).unwrap();
+        let loaded = load_from_parts(&text, &payload).unwrap();
+        assert_eq!(loaded.manifest.name, "rt");
+        assert_eq!(loaded.manifest.version, 1);
+        assert_eq!(loaded.manifest.provenance.seed, Some(7));
+        assert_eq!(loaded.model.layers(), m.layers());
+        let engine = SpmmEngine::new(1);
+        let mut b0 = ActivationBuffers::new();
+        let mut b1 = ActivationBuffers::new();
+        let mut rng = Xoshiro256::new(3);
+        let x = Matrix::randn(m.d_in(), 3, 1.0, &mut rng);
+        let y0 = m.forward_planned(&x, &engine, &mut b0);
+        let y1 = loaded.model.forward_planned(&x, &engine, &mut b1);
+        let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&y0), bits(&y1));
+    }
+
+    #[test]
+    fn corruption_gets_typed_errors() {
+        let m = model();
+        let prov = Provenance::default();
+        let (text, payload) = encode_parts("c", 2, &m, &prov).unwrap();
+
+        let short = &payload[..payload.len() - 1];
+        assert!(matches!(
+            load_from_parts(&text, short),
+            Err(ArtifactError::TruncatedPayload { .. })
+        ));
+
+        let mut flipped = payload.clone();
+        flipped[10] ^= 0x40;
+        assert!(matches!(
+            load_from_parts(&text, &flipped),
+            Err(ArtifactError::ChecksumMismatch { .. })
+        ));
+
+        let skew = text.replace("\"schema_version\": 1", "\"schema_version\": 9");
+        assert!(matches!(
+            load_from_parts(&skew, &payload),
+            Err(ArtifactError::UnknownSchemaVersion { found: 9, .. })
+        ));
+
+        assert!(matches!(
+            load_from_parts("nonsense", &payload),
+            Err(ArtifactError::ManifestParse(_))
+        ));
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        assert!(validate_name("deit-mini").is_ok());
+        assert!(validate_name("a.b_c-1").is_ok());
+        for bad in ["", "../up", "a/b", ".hidden", "x y"] {
+            assert!(validate_name(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn save_load_disk_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("hinm-artifact-unit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let m = model();
+        let path = save_artifact(&dir, "disk", 3, &m, &Provenance::default()).unwrap();
+        let loaded = load_artifact(&path).unwrap();
+        assert_eq!(loaded.manifest.version, 3);
+        assert_eq!(loaded.model.layers(), m.layers());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,16 +1,23 @@
-//! Runtime layer: the swappable SpMM serving backends and the Rust↔XLA
-//! bridge that loads the AOT artifacts emitted by `python/compile/aot.py`
-//! and executes them on the request path with Python out of the loop.
+//! Runtime layer: the swappable SpMM serving backends, the native AOT
+//! serving artifacts + hot-swap model registry (DESIGN.md §18), and the
+//! Rust↔XLA bridge that loads the AOT artifacts emitted by
+//! `python/compile/aot.py` and executes them on the request path with
+//! Python out of the loop.
 
+pub mod artifact;
 pub mod backend;
 pub mod executor;
 pub mod registry;
 
+pub use artifact::{
+    load_artifact, save_artifact, ArtifactError, ArtifactManifest, LoadedArtifact, Provenance,
+    ARTIFACT_SCHEMA_VERSION,
+};
 pub use backend::{
     CacheStats, CachedBackend, NativeCpuBackend, PipelinedBackend, PjrtBackend, SpmmBackend,
 };
 pub use executor::{client, Executor};
-pub use registry::Registry;
+pub use registry::{ModelRegistry, ModelSlot, Registry, ReloadReport};
 
 use anyhow::Result;
 use std::path::PathBuf;

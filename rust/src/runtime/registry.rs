@@ -1,10 +1,37 @@
-//! Artifact registry: parses `artifacts/manifest.json` (written by
-//! `python/compile/aot.py`) and hands out typed artifact/data descriptors.
+//! Artifact registries.
+//!
+//! Two distinct registries live here:
+//!
+//! * [`Registry`] — the PJRT/XLA registry: parses `artifacts/manifest.json`
+//!   (written by `python/compile/aot.py`) and hands out typed artifact/data
+//!   descriptors for the AOT-lowered HLO path.
+//! * [`ModelRegistry`] — the native serving registry (DESIGN.md §18): scans
+//!   a `--model-dir` of versioned [`crate::runtime::artifact`] manifests,
+//!   compiles each best-versioned model at load, and swaps new versions in
+//!   under live traffic.
+//!
+//! Hot swap uses epoch semantics: each [`ModelSlot`] holds the current
+//! `(Arc<HinmModel>, generation)` behind one mutex, and every replica's
+//! backend ([`ModelSlot::backend_factory`]) re-checks the generation at
+//! batch granularity — an in-flight batch finishes on the `Arc` it already
+//! cloned (old plans stay alive until the last batch drops them), the next
+//! batch rebuilds on the new model. The rebuild also replaces the replica's
+//! `CachedBackend` with an empty one, so a swap can never serve a stale
+//! cached activation batch; cumulative hit/miss counters survive in the
+//! shared [`CacheStats`]. [`ModelRegistry::reload`] is all-or-nothing *per
+//! model*: a corrupt or shape-changed artifact is reported and the old
+//! version keeps serving.
 
+use crate::coordinator::serve::BackendFactory;
+use crate::models::HinmModel;
+use crate::runtime::artifact::{load_artifact, ArtifactManifest};
+use crate::runtime::backend::{CacheStats, CachedBackend, NativeCpuBackend, SpmmBackend};
 use crate::util::json::{parse, Json};
+use crate::util::sync::lock_unpoisoned;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 /// Dtype of an artifact input.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -162,6 +189,321 @@ impl Registry {
     }
 }
 
+/// The hot-swappable serving state of one model name: the current compiled
+/// model, its artifact version, and a generation counter bumped on every
+/// successful swap. Fixed `d_in`/`d_out` are pinned at first load —
+/// [`ModelRegistry::reload`] rejects artifacts that would change them, so
+/// admission-time shape checks stay valid across swaps.
+pub struct ModelSlot {
+    name: String,
+    d_in: usize,
+    d_out: usize,
+    state: Mutex<SlotState>,
+}
+
+struct SlotState {
+    model: Arc<HinmModel>,
+    version: u64,
+    generation: u64,
+}
+
+impl ModelSlot {
+    fn new(name: String, model: Arc<HinmModel>, version: u64) -> ModelSlot {
+        let (d_in, d_out) = (model.d_in(), model.d_out());
+        ModelSlot { name, d_in, d_out, state: Mutex::new(SlotState { model, version, generation: 0 }) }
+    }
+
+    /// Model name (the routing key).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Input channels (fixed for the slot's lifetime).
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    /// Output channels (fixed for the slot's lifetime).
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// The current model and swap generation, read atomically (one lock).
+    pub fn current(&self) -> (Arc<HinmModel>, u64) {
+        let s = lock_unpoisoned(&self.state);
+        (Arc::clone(&s.model), s.generation)
+    }
+
+    /// The artifact version currently serving.
+    pub fn version(&self) -> u64 {
+        lock_unpoisoned(&self.state).version
+    }
+
+    fn swap(&self, model: Arc<HinmModel>, version: u64) {
+        let mut s = lock_unpoisoned(&self.state);
+        s.model = model;
+        s.version = version;
+        s.generation += 1;
+    }
+
+    /// A [`BackendFactory`] whose backends follow this slot across swaps:
+    /// each replica builds a [`NativeCpuBackend`] (optionally wrapped in a
+    /// [`CachedBackend`] when `cache_capacity > 0`) on the current model
+    /// and rebuilds it — with a **fresh, empty** cache — the first batch
+    /// after the slot's generation moves. `stats`, when given, is shared
+    /// across rebuilds and replicas so hit/miss counters are cumulative.
+    pub fn backend_factory(
+        self: &Arc<Self>,
+        kernel_threads: usize,
+        cache_capacity: usize,
+        stats: Option<Arc<CacheStats>>,
+    ) -> BackendFactory {
+        let slot = Arc::clone(self);
+        Arc::new(move |_replica| {
+            let (model, generation) = slot.current();
+            Ok(Box::new(SwapBackend {
+                slot: Arc::clone(&slot),
+                kernel_threads,
+                cache_capacity,
+                stats: stats.clone(),
+                generation,
+                inner: build_stack(model, kernel_threads, cache_capacity, stats.clone()),
+            }) as Box<dyn SpmmBackend>)
+        })
+    }
+}
+
+fn build_stack(
+    model: Arc<HinmModel>,
+    kernel_threads: usize,
+    cache_capacity: usize,
+    stats: Option<Arc<CacheStats>>,
+) -> Box<dyn SpmmBackend> {
+    let base = Box::new(NativeCpuBackend::with_threads(model, kernel_threads));
+    if cache_capacity == 0 {
+        return base;
+    }
+    match stats {
+        Some(s) => Box::new(CachedBackend::with_stats(base, cache_capacity, s)),
+        None => Box::new(CachedBackend::new(base, cache_capacity)),
+    }
+}
+
+/// Per-replica backend that re-resolves its [`ModelSlot`] at batch
+/// granularity — the epoch half of hot swap (DESIGN.md §18).
+struct SwapBackend {
+    slot: Arc<ModelSlot>,
+    kernel_threads: usize,
+    cache_capacity: usize,
+    stats: Option<Arc<CacheStats>>,
+    generation: u64,
+    inner: Box<dyn SpmmBackend>,
+}
+
+impl SpmmBackend for SwapBackend {
+    fn name(&self) -> &'static str {
+        "registry-swap"
+    }
+
+    fn d_in(&self) -> usize {
+        self.slot.d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.slot.d_out()
+    }
+
+    fn run_batch(&mut self, x: &crate::tensor::Matrix) -> Result<crate::tensor::Matrix> {
+        let (model, generation) = self.slot.current();
+        if generation != self.generation {
+            self.inner = build_stack(model, self.kernel_threads, self.cache_capacity, self.stats.clone());
+            self.generation = generation;
+        }
+        self.inner.run_batch(x)
+    }
+}
+
+/// What a [`ModelRegistry::reload`] did, per model name.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReloadReport {
+    /// Models swapped to a new version: `(name, new_version)`.
+    pub swapped: Vec<(String, u64)>,
+    /// Models whose best on-disk version is already serving.
+    pub unchanged: Vec<String>,
+    /// Per-name (or per-file) failures; the old version keeps serving.
+    pub errors: Vec<(String, String)>,
+    /// Artifact names on disk with no serving slot — new names need a
+    /// restart (slots are fixed at startup).
+    pub ignored: Vec<String>,
+}
+
+impl ReloadReport {
+    /// JSON rendering for `POST /v1/admin/reload` responses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "swapped",
+                Json::arr(self.swapped.iter().map(|(n, v)| {
+                    Json::obj(vec![("name", Json::str(n)), ("version", Json::num(*v as f64))])
+                })),
+            ),
+            ("unchanged", Json::arr(self.unchanged.iter().map(|n| Json::str(n)))),
+            (
+                "errors",
+                Json::arr(self.errors.iter().map(|(n, e)| {
+                    Json::obj(vec![("name", Json::str(n)), ("error", Json::str(e))])
+                })),
+            ),
+            ("ignored", Json::arr(self.ignored.iter().map(|n| Json::str(n)))),
+        ])
+    }
+}
+
+/// The native serving registry: one [`ModelSlot`] per artifact name found
+/// in the model directory at startup (best version wins), plus
+/// [`ModelRegistry::reload`] to pick up dropped-in versions without a
+/// restart. See the module docs for the swap semantics.
+pub struct ModelRegistry {
+    root: PathBuf,
+    slots: BTreeMap<String, Arc<ModelSlot>>,
+}
+
+/// Scan `dir` for artifact manifests and return the best (highest)
+/// version per name: `name → (version, manifest_path)`. Unparseable
+/// manifests are collected, not fatal — reload must survive a corrupt
+/// drop-in. Paths are sorted so ties resolve deterministically.
+fn scan_manifests(
+    dir: &Path,
+) -> Result<(BTreeMap<String, (u64, PathBuf)>, Vec<(String, String)>)> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning model dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    let mut best: BTreeMap<String, (u64, PathBuf)> = BTreeMap::new();
+    let mut errors = Vec::new();
+    for p in paths {
+        let file = p
+            .file_name()
+            .map(|f| f.to_string_lossy().into_owned())
+            .unwrap_or_else(|| p.display().to_string());
+        let text = match std::fs::read_to_string(&p) {
+            Ok(t) => t,
+            Err(e) => {
+                errors.push((file, format!("read failed: {e}")));
+                continue;
+            }
+        };
+        match ArtifactManifest::from_json_text(&text) {
+            Ok(m) => {
+                let entry = best.entry(m.name.clone()).or_insert((m.version, p.clone()));
+                if m.version >= entry.0 {
+                    *entry = (m.version, p);
+                }
+            }
+            Err(e) => errors.push((file, e.to_string())),
+        }
+    }
+    Ok((best, errors))
+}
+
+impl ModelRegistry {
+    /// Scan `dir`, load and compile the best version of every artifact,
+    /// and build one slot per name. Startup is strict where reload is
+    /// lenient: any unreadable manifest or failing load here is fatal,
+    /// because serving a silently reduced catalog is worse than failing
+    /// a deploy.
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<ModelRegistry> {
+        let root = dir.as_ref().to_path_buf();
+        let (best, errors) = scan_manifests(&root)?;
+        if let Some((file, err)) = errors.first() {
+            bail!("model dir {}: bad manifest {file}: {err}", root.display());
+        }
+        if best.is_empty() {
+            bail!("model dir {} contains no artifact manifests (run `hinm build`)", root.display());
+        }
+        let mut slots = BTreeMap::new();
+        for (name, (version, path)) in best {
+            let loaded = load_artifact(&path)
+                .map_err(|e| anyhow::anyhow!("loading {}: {e}", path.display()))?;
+            slots.insert(name.clone(), Arc::new(ModelSlot::new(name, Arc::new(loaded.model), version)));
+        }
+        Ok(ModelRegistry { root, slots })
+    }
+
+    /// The directory this registry scans.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Model names, sorted (the first is the default model).
+    pub fn names(&self) -> Vec<String> {
+        self.slots.keys().cloned().collect()
+    }
+
+    /// The slot serving `name`, if any.
+    pub fn slot(&self, name: &str) -> Option<&Arc<ModelSlot>> {
+        self.slots.get(name)
+    }
+
+    /// Rescan the directory and swap every slot whose best on-disk
+    /// version differs from the serving one (a *lower* best version rolls
+    /// back). Per-model failures — unreadable payload, checksum mismatch,
+    /// changed `d_in`/`d_out` — land in [`ReloadReport::errors`] and leave
+    /// the old version serving. Never fails the models that are fine.
+    pub fn reload(&self) -> ReloadReport {
+        let mut report = ReloadReport::default();
+        let (best, errors) = match scan_manifests(&self.root) {
+            Ok(r) => r,
+            Err(e) => {
+                report.errors.push(("<scan>".to_string(), e.to_string()));
+                return report;
+            }
+        };
+        report.errors = errors;
+        for name in best.keys() {
+            if !self.slots.contains_key(name) {
+                report.ignored.push(name.clone());
+            }
+        }
+        for (name, slot) in &self.slots {
+            let Some((version, path)) = best.get(name) else {
+                report.unchanged.push(name.clone());
+                continue;
+            };
+            if *version == slot.version() {
+                report.unchanged.push(name.clone());
+                continue;
+            }
+            let loaded = match load_artifact(path) {
+                Ok(l) => l,
+                Err(e) => {
+                    report.errors.push((name.clone(), e.to_string()));
+                    continue;
+                }
+            };
+            if loaded.model.d_in() != slot.d_in() || loaded.model.d_out() != slot.d_out() {
+                report.errors.push((
+                    name.clone(),
+                    format!(
+                        "version {version} changes shape to {}→{} (serving {}→{}); \
+                         restart to change a model's dimensions",
+                        loaded.model.d_in(),
+                        loaded.model.d_out(),
+                        slot.d_in(),
+                        slot.d_out()
+                    ),
+                ));
+                continue;
+            }
+            slot.swap(Arc::new(loaded.model), *version);
+            report.swapped.push((name.clone(), *version));
+        }
+        report
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +557,106 @@ mod tests {
             assert!(r.artifacts.contains_key("lm_train_step"));
             assert!(!r.lm_param_names.is_empty());
         }
+    }
+
+    // ── ModelRegistry (native serving artifacts, DESIGN.md §18) ──────
+
+    use crate::models::Activation;
+    use crate::runtime::artifact::{save_artifact, Provenance};
+    use crate::sparsity::HinmConfig;
+    use crate::tensor::Matrix;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hinm-modelreg-{tag}-{}", std::process::id()))
+    }
+
+    fn ffn(seed: u64) -> HinmModel {
+        HinmModel::synthetic_ffn(16, 32, &HinmConfig::with_24(4, 0.5), Activation::Relu, seed)
+            .unwrap()
+    }
+
+    fn probe() -> Matrix {
+        Matrix::from_vec(16, 2, (0..32).map(|i| (i as f32) * 0.1 - 1.6).collect())
+    }
+
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn model_registry_scans_loads_and_swaps() {
+        let dir = tmp("swap");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (m1, m2) = (ffn(1), ffn(2));
+        save_artifact(&dir, "a", 1, &m1, &Provenance::default()).unwrap();
+        let reg = ModelRegistry::open(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["a".to_string()]);
+        let slot = Arc::clone(reg.slot("a").unwrap());
+        assert_eq!((slot.version(), slot.d_in(), slot.d_out()), (1, 16, 16));
+
+        let factory = slot.backend_factory(1, 4, None);
+        let mut be = factory(0).unwrap();
+        let x = probe();
+        assert_eq!(bits(&be.run_batch(&x).unwrap()), bits(&m1.forward(&x)));
+
+        save_artifact(&dir, "a", 2, &m2, &Provenance::default()).unwrap();
+        let rep = reg.reload();
+        assert_eq!(rep.swapped, vec![("a".to_string(), 2)]);
+        assert_eq!(slot.version(), 2);
+        // The already-built backend follows the swap at its next batch —
+        // and with a fresh cache (the pre-swap result for `x` is cached).
+        assert_eq!(bits(&be.run_batch(&x).unwrap()), bits(&m2.forward(&x)));
+
+        let rep = reg.reload();
+        assert!(rep.swapped.is_empty());
+        assert_eq!(rep.unchanged, vec!["a".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn model_registry_reload_keeps_old_on_bad_artifact() {
+        let dir = tmp("corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let m1 = ffn(3);
+        save_artifact(&dir, "a", 1, &m1, &Provenance::default()).unwrap();
+        let reg = ModelRegistry::open(&dir).unwrap();
+        let slot = Arc::clone(reg.slot("a").unwrap());
+
+        // v2 with a flipped payload byte: reported, not served.
+        save_artifact(&dir, "a", 2, &ffn(4), &Provenance::default()).unwrap();
+        let bin = dir.join("a-v2.bin");
+        let mut bytes = std::fs::read(&bin).unwrap();
+        bytes[7] ^= 0x20;
+        std::fs::write(&bin, &bytes).unwrap();
+        let rep = reg.reload();
+        assert!(rep.swapped.is_empty());
+        assert_eq!(rep.errors.len(), 1, "report: {rep:?}");
+        assert_eq!(slot.version(), 1);
+
+        // v3 changing d_in/d_out: rejected, old keeps serving.
+        let wide =
+            HinmModel::synthetic_ffn(32, 64, &HinmConfig::with_24(4, 0.5), Activation::Relu, 5)
+                .unwrap();
+        save_artifact(&dir, "a", 3, &wide, &Provenance::default()).unwrap();
+        let rep = reg.reload();
+        assert!(rep.swapped.is_empty());
+        assert!(rep.errors.iter().any(|(n, e)| n == "a" && e.contains("changes shape")));
+        assert_eq!(slot.version(), 1);
+
+        let factory = slot.backend_factory(1, 0, None);
+        let mut be = factory(0).unwrap();
+        let x = probe();
+        assert_eq!(bits(&be.run_batch(&x).unwrap()), bits(&m1.forward(&x)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn model_registry_open_requires_artifacts() {
+        let dir = tmp("empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ModelRegistry::open(&dir).is_err(), "missing dir must fail");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ModelRegistry::open(&dir).is_err(), "empty dir must fail");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -126,6 +126,25 @@ pub enum Activation {
 }
 
 impl Activation {
+    /// Canonical lowercase wire/manifest name (`none` | `relu` | `gelu`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "relu",
+            Activation::Gelu => "gelu",
+        }
+    }
+
+    /// Inverse of [`Activation::as_str`], case-insensitive.
+    pub fn parse(s: &str) -> Option<Activation> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(Activation::None),
+            "relu" => Some(Activation::Relu),
+            "gelu" => Some(Activation::Gelu),
+            _ => None,
+        }
+    }
+
     /// Apply the nonlinearity elementwise, in place. This is the unfused
     /// **oracle** path (`Gelu` goes through `f64::tanh`); the planned
     /// kernel fuses the activation into its epilogue instead, where `Gelu`

@@ -1,0 +1,185 @@
+//! Artifact round-trip suite (DESIGN.md §18): build → save → load must be
+//! **bit-identical** for every catalog model under both value formats, and
+//! every corruption class must surface as its own typed `ArtifactError` —
+//! never a panic. Also pins the CLI composition rule: `--model-dir`
+//! rejects `--pipeline-stages`/`--backend pjrt` with a clear startup
+//! error, and `hinm build` → `hinm serve --model-dir` works end to end.
+
+use hinm::models::{serving_models, ActivationBuffers};
+use hinm::runtime::artifact::{encode_parts, load_from_parts};
+use hinm::runtime::{save_artifact, load_artifact, ArtifactError, Provenance};
+use hinm::spmm::{SpmmEngine, ValueFormat};
+use hinm::tensor::Matrix;
+use hinm::util::json::{self, Json};
+use hinm::util::rng::Xoshiro256;
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hinm-artreg-{tag}-{}", std::process::id()))
+}
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Tentpole acceptance: every `serving_models` catalog entry survives a
+/// disk round-trip bit-exactly, for f32 and bf16 plans alike.
+#[test]
+fn catalog_round_trips_bit_identical_for_f32_and_bf16() {
+    let dir = tmp("catalog");
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = SpmmEngine::new(2);
+    for fmt in [ValueFormat::F32, ValueFormat::Bf16] {
+        let sub = dir.join(fmt.as_str());
+        for (name, model) in serving_models(7).expect("catalog") {
+            let model = model.with_value_format(fmt);
+            let prov = Provenance { tool: "test".into(), seed: Some(7), note: None };
+            let path = save_artifact(&sub, name, 1, &model, &prov)
+                .unwrap_or_else(|e| panic!("save {name}/{}: {e}", fmt.as_str()));
+            let loaded = load_artifact(&path)
+                .unwrap_or_else(|e| panic!("load {name}/{}: {e}", fmt.as_str()));
+
+            assert_eq!(loaded.manifest.name, name);
+            assert_eq!(loaded.manifest.value_format, fmt);
+            assert_eq!(loaded.model.value_format(), fmt);
+            assert_eq!(loaded.model.layers(), model.layers(), "{name}: packed bits differ");
+
+            // Planned forward through the loaded model must match the
+            // in-process build bit-for-bit on a multi-column batch.
+            let mut rng = Xoshiro256::new(0x5EED);
+            let x = Matrix::randn(model.d_in(), 3, 1.0, &mut rng);
+            let mut b0 = ActivationBuffers::new();
+            let mut b1 = ActivationBuffers::new();
+            let y0 = model.forward_planned(&x, &engine, &mut b0);
+            let y1 = loaded.model.forward_planned(&x, &engine, &mut b1);
+            assert_eq!(bits(&y0), bits(&y1), "{name} [{}]: outputs diverged", fmt.as_str());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Every corruption class yields its own typed error, and none panics:
+/// truncation, bit rot, schema skew, manifest/payload shape disagreement,
+/// and outright garbage.
+#[test]
+fn corruption_matrix_yields_distinct_typed_errors() {
+    let (name, model) = serving_models(7).expect("catalog").remove(0);
+    let (text, payload) =
+        encode_parts(name, 1, &model, &Provenance::default()).expect("encode");
+
+    // Truncated payload → TruncatedPayload (length gate fires before the
+    // checksum is even computed).
+    let got = load_from_parts(&text, &payload[..payload.len() - 3]);
+    assert!(
+        matches!(got, Err(ArtifactError::TruncatedPayload { .. })),
+        "truncation: {got:?}"
+    );
+
+    // One flipped payload byte → ChecksumMismatch.
+    let mut flipped = payload.clone();
+    flipped[payload.len() / 2] ^= 0x01;
+    let got = load_from_parts(&text, &flipped);
+    assert!(
+        matches!(got, Err(ArtifactError::ChecksumMismatch { .. })),
+        "bit rot: {got:?}"
+    );
+
+    // Future schema version → UnknownSchemaVersion, weights never touched.
+    let skew = text.replace("\"schema_version\": 1", "\"schema_version\": 2");
+    assert_ne!(skew, text, "replacement must hit");
+    let got = load_from_parts(&skew, &payload);
+    assert!(
+        matches!(got, Err(ArtifactError::UnknownSchemaVersion { found: 2, .. })),
+        "schema skew: {got:?}"
+    );
+
+    // Manifest whose layer shapes disagree with its own payload_bytes →
+    // ShapeMismatch (mutated structurally via the JSON tree, not text).
+    let mut doc = json::parse(&text).expect("manifest parses");
+    if let Json::Obj(o) = &mut doc {
+        if let Some(Json::Arr(layers)) = o.get_mut("layers") {
+            if let Some(Json::Obj(l0)) = layers.get_mut(0) {
+                let rows = l0.get("rows").and_then(|r| r.as_usize()).expect("rows");
+                let v = l0.get("v").and_then(|r| r.as_usize()).expect("v");
+                l0.insert("rows".to_string(), Json::num((rows + v) as f64));
+            }
+        }
+    }
+    let got = load_from_parts(&doc.pretty(), &payload);
+    assert!(
+        matches!(got, Err(ArtifactError::ShapeMismatch(_))),
+        "shape skew: {got:?}"
+    );
+
+    // Garbage → ManifestParse.
+    let got = load_from_parts("]not json[", &payload);
+    assert!(matches!(got, Err(ArtifactError::ManifestParse(_))), "garbage: {got:?}");
+}
+
+/// `--model-dir` and `--pipeline-stages`/`--backend pjrt` must reject at
+/// startup with an error naming the offending flag — not serve something
+/// half-configured.
+#[test]
+fn serve_model_dir_rejects_incompatible_flags() {
+    let dir = tmp("flags");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (name, model) = serving_models(3).expect("catalog").remove(0);
+    save_artifact(&dir, name, 1, &model, &Provenance::default()).expect("save");
+    let dir_s = dir.to_str().expect("utf8 temp dir");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_hinm"))
+        .args(["serve", "--model-dir", dir_s, "--pipeline-stages", "2", "--requests", "1"])
+        .output()
+        .expect("spawn hinm");
+    assert!(!out.status.success(), "pipeline-stages composition must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--pipeline-stages"), "stderr: {err}");
+    assert!(err.contains("--model-dir"), "stderr: {err}");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_hinm"))
+        .args(["serve", "--model-dir", dir_s, "--backend", "pjrt", "--requests", "1"])
+        .output()
+        .expect("spawn hinm");
+    assert!(!out.status.success(), "pjrt composition must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--model-dir"), "stderr: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CLI end-to-end: `hinm build` writes artifacts, `hinm serve --model-dir`
+/// scans them and completes a closed-loop demo against the default model.
+#[test]
+fn build_then_serve_demo_round_trips() {
+    let dir = tmp("e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().expect("utf8 temp dir");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_hinm"))
+        .args(["build", "--out", dir_s, "--models", "ffn-relu", "--seed", "9"])
+        .output()
+        .expect("spawn hinm build");
+    assert!(
+        out.status.success(),
+        "build failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(dir.join("ffn-relu-v1.json").exists());
+    assert!(dir.join("ffn-relu-v1.bin").exists());
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_hinm"))
+        .args([
+            "serve", "--model-dir", dir_s, "--requests", "8", "--clients", "2", "--batch", "2",
+            "--replicas", "1",
+        ])
+        .output()
+        .expect("spawn hinm serve");
+    assert!(
+        out.status.success(),
+        "serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("default model: ffn-relu"), "stdout: {stdout}");
+    assert!(stdout.contains("served 8 requests"), "stdout: {stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,163 @@
+//! Deterministic structure-aware fuzz smoke for the artifact loader
+//! (DESIGN.md §18), mirroring `fuzz_plan.rs`.
+//!
+//! Starting from one *valid* `(manifest_text, payload)` pair produced by
+//! `encode_parts`, every case derived from `mix_seed(BASE_SEED, case)`
+//! applies one mutation — byte flips, truncation, extension, splices, or
+//! a benign provenance tweak — and pushes the result through
+//! `load_from_parts`. The properties:
+//!
+//! 1. **Never panic**: any outcome other than a typed `ArtifactError` or
+//!    a structurally valid model fails the harness (a panic aborts it).
+//! 2. **Valid ⇒ runnable**: when a mutant still loads, the decoded model
+//!    must survive a forward pass — the loader may only accept inputs it
+//!    fully validated.
+//!
+//! 10k iterations fit the tier-1 debug-build budget; the CI `fuzz-long`
+//! job scales the count via `HINM_FUZZ_ITERS` under an
+//! `HINM_FUZZ_SECONDS` wall-clock bound. Failing cases persist their
+//! parameters to `target/fuzz-failures/`.
+
+use hinm::models::{Activation, HinmModel};
+use hinm::runtime::artifact::{encode_parts, load_from_parts};
+use hinm::runtime::Provenance;
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::Matrix;
+use hinm::util::rng::{mix_seed, Xoshiro256};
+use std::time::{Duration, Instant};
+
+const BASE_SEED: u64 = 0xA27F_1FAC_7001;
+
+fn iters(default: usize) -> usize {
+    if cfg!(miri) {
+        return 32;
+    }
+    std::env::var("HINM_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn budget() -> Option<Duration> {
+    std::env::var("HINM_FUZZ_SECONDS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
+fn persist_failure(case: u64, detail: &str) -> String {
+    let dir = std::env::var("HINM_FUZZ_ARTIFACTS")
+        .unwrap_or_else(|_| "target/fuzz-failures".to_string());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/artifact-case{case}.txt");
+    let _ = std::fs::write(&path, detail);
+    path
+}
+
+/// One byte-level mutation over `bytes`. Returns a tag for the failure
+/// artifact.
+fn mutate_bytes(rng: &mut Xoshiro256, bytes: &mut Vec<u8>) -> &'static str {
+    match rng.below(4) {
+        0 => {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+            "byte flip"
+        }
+        1 => {
+            let keep = rng.below(bytes.len());
+            bytes.truncate(keep);
+            "truncate"
+        }
+        2 => {
+            let extra = 1 + rng.below(16);
+            for _ in 0..extra {
+                bytes.push(rng.below(256) as u8);
+            }
+            "extend"
+        }
+        _ => {
+            // Overwrite a short random region (a burst error).
+            let i = rng.below(bytes.len());
+            let n = (1 + rng.below(8)).min(bytes.len() - i);
+            for b in &mut bytes[i..i + n] {
+                *b = rng.below(256) as u8;
+            }
+            "splice"
+        }
+    }
+}
+
+#[test]
+fn fuzz_artifact_loader_smoke() {
+    let cfg = HinmConfig::with_24(4, 0.5);
+    let model = HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Relu, 7).expect("base model");
+    let prov = Provenance { tool: "fuzz".to_string(), seed: Some(7), note: None };
+    let (text, payload) = encode_parts("fz", 1, &model, &prov).expect("encode");
+
+    // The unmutated pair must load — otherwise every case is vacuous.
+    let base = load_from_parts(&text, &payload).expect("pristine artifact loads");
+    assert_eq!(base.model.d_in(), model.d_in());
+
+    let n_iters = iters(10_000);
+    let start = Instant::now();
+    let deadline = budget();
+    let mut done = 0usize;
+    let mut mutants_valid = 0usize;
+    let mut mutants_caught = 0usize;
+    for case in 0..n_iters as u64 {
+        if deadline.is_some_and(|d| start.elapsed() > d) {
+            break;
+        }
+        let mut rng = Xoshiro256::new(mix_seed(BASE_SEED, case));
+        let (man, pay, tag) = match rng.below(5) {
+            // Benign provenance tweak: stays a valid manifest, so the
+            // valid side of property 2 is exercised every run.
+            0 => (text.replace("\"tool\": \"fuzz\"", "\"tool\": \"zzuf\""), payload.clone(), "benign tool rename"),
+            1 | 2 => {
+                let mut m = text.clone().into_bytes();
+                let tag = mutate_bytes(&mut rng, &mut m);
+                match String::from_utf8(m) {
+                    Ok(s) => (s, payload.clone(), tag),
+                    Err(_) => {
+                        // Invalid UTF-8 can never reach the &str loader;
+                        // the type system caught it for us.
+                        mutants_caught += 1;
+                        done += 1;
+                        continue;
+                    }
+                }
+            }
+            _ => {
+                let mut p = payload.clone();
+                let tag = mutate_bytes(&mut rng, &mut p);
+                (text.clone(), p, tag)
+            }
+        };
+        match load_from_parts(&man, &pay) {
+            Err(_) => mutants_caught += 1,
+            Ok(loaded) => {
+                mutants_valid += 1;
+                // An accepted mutant must be fully usable: forward on a
+                // conforming batch must not panic.
+                let b = 1 + rng.below(3);
+                let x = Matrix::randn(loaded.model.d_in(), b, 1.0, &mut rng);
+                let y = loaded.model.forward(&x);
+                if y.rows != loaded.model.d_out() || y.cols != b {
+                    let path = persist_failure(
+                        case,
+                        &format!("case {case} [{tag}]: accepted mutant produced {}x{}", y.rows, y.cols),
+                    );
+                    panic!("case {case} [{tag}]: bad forward shape; params at {path}");
+                }
+            }
+        }
+        done += 1;
+    }
+    assert!(done > 0, "fuzz budget expired before the first case");
+    // Both sides of the accept/reject boundary must be exercised.
+    if done >= 1000 {
+        assert!(mutants_caught > 0, "no mutation was ever rejected");
+        assert!(mutants_valid > 0, "no mutation ever stayed valid");
+    }
+    println!(
+        "fuzz_artifact: {done} cases ({mutants_caught} mutants caught, {mutants_valid} valid), {:?}",
+        start.elapsed()
+    );
+}

@@ -1,0 +1,280 @@
+//! Hot-swap-under-traffic suite (DESIGN.md §18): concurrent HTTP clients
+//! hammer `/v1/infer` while a new artifact version swaps in through
+//! `POST /v1/admin/reload`. Every response must be bit-identical to
+//! exactly the old model or exactly the new one — never a torn mix —
+//! with zero failed requests across the swap window; post-ack requests
+//! must all see the new version; swapped replicas must not serve stale
+//! batch-cache entries; and a corrupt drop-in must keep the old version
+//! serving.
+
+use hinm::coordinator::{BatchServer, ModelCounters, ServeConfig};
+use hinm::models::{Activation, HinmModel};
+use hinm::net::{protocol, HttpClient, HttpFront, ModelService, MultiRouter, ReloadFn};
+use hinm::runtime::{save_artifact, CacheStats, ModelRegistry, Provenance};
+use hinm::sparsity::HinmConfig;
+use hinm::tensor::Matrix;
+use hinm::util::json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+const D: usize = 32;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hinm-hotswap-{tag}-{}", std::process::id()))
+}
+
+fn model(seed: u64) -> HinmModel {
+    HinmModel::synthetic_ffn(D, 64, &HinmConfig::with_24(8, 0.5), Activation::Relu, seed)
+        .expect("synthetic model")
+}
+
+fn probe(i: usize) -> Vec<f32> {
+    (0..D).map(|j| ((i * 31 + j * 7) % 17) as f32 * 0.1 - 0.8).collect()
+}
+
+/// In-process forward of a single activation column, as bit patterns.
+fn expected_bits(m: &HinmModel, x: &[f32]) -> Vec<u32> {
+    let y = m.forward(&Matrix::from_vec(D, 1, x.to_vec()));
+    y.data.iter().map(|v| v.to_bits()).collect()
+}
+
+struct Setup {
+    front: HttpFront,
+    server: BatchServer,
+    registry: Arc<ModelRegistry>,
+}
+
+/// One registry model behind a multi-model front on an ephemeral port,
+/// with a live admin-reload hook and a per-replica batch cache.
+fn start(dir: &Path, name: &str) -> Setup {
+    let registry = Arc::new(ModelRegistry::open(dir).expect("registry open"));
+    let slot = registry.slot(name).expect("slot");
+    let stats = CacheStats::new_shared();
+    let server = BatchServer::start_slot(
+        slot,
+        ServeConfig::new(4, Duration::from_millis(1)).with_replicas(2),
+        1,
+        8,
+        Some(Arc::clone(&stats)),
+    )
+    .expect("engine start");
+    let mut services = BTreeMap::new();
+    services.insert(
+        name.to_string(),
+        ModelService { handle: server.handle.clone(), cache: Some(Arc::clone(&stats)) },
+    );
+    let reload: ReloadFn = {
+        let reg = Arc::clone(&registry);
+        Arc::new(move || Ok(reg.reload().to_json()))
+    };
+    let router = MultiRouter {
+        services,
+        default_model: name.to_string(),
+        counters: ModelCounters::new_shared(),
+        kernel: None,
+        reload,
+    };
+    let front = HttpFront::start_multi("127.0.0.1:0", router, 8).expect("front start");
+    Setup { front, server, registry }
+}
+
+/// POST one inference, assert 200, return the answer's bit patterns.
+fn infer(c: &mut HttpClient, x: &[f32], model_field: Option<&str>) -> Vec<u32> {
+    let mut req = protocol::InferRequest::new(x.to_vec());
+    if let Some(m) = model_field {
+        req = req.with_model(m);
+    }
+    let (status, body) = c.post_json("/v1/infer", &req.to_json().pretty()).expect("post");
+    assert_eq!(status, 200, "body: {body}");
+    protocol::parse_infer_response(&json::parse(&body).expect("json"))
+        .expect("infer response")
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// The headline acceptance test: 8 clients × 16 requests = 128 responses
+/// spanning a live swap — zero failures, zero torn reads, and every
+/// request issued after the reload ack sees the new version.
+#[test]
+fn hot_swap_under_concurrent_traffic_has_no_torn_reads() {
+    let dir = tmp("swap");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (m_old, m_new) = (model(11), model(22));
+    save_artifact(&dir, "swap", 1, &m_old, &Provenance::default()).expect("save v1");
+    let f = start(&dir, "swap");
+    let addr = f.front.local_addr();
+
+    const CLIENTS: usize = 8;
+    const PRE: usize = 4;
+    const RACE: usize = 8;
+    const POST: usize = 4;
+    let traffic_up = Barrier::new(CLIENTS + 1);
+    let swap_acked = Barrier::new(CLIENTS + 1);
+
+    std::thread::scope(|s| {
+        for t in 0..CLIENTS {
+            let (traffic_up, swap_acked) = (&traffic_up, &swap_acked);
+            let (m_old, m_new) = (&m_old, &m_new);
+            s.spawn(move || {
+                let mut c = HttpClient::connect(addr).expect("connect");
+                // Before the swap every answer is the old model's, whether
+                // the body names the model or relies on the default.
+                for i in 0..PRE {
+                    let x = probe(t * 1000 + i);
+                    let field = if i % 2 == 0 { Some("swap") } else { None };
+                    assert_eq!(
+                        infer(&mut c, &x, field),
+                        expected_bits(m_old, &x),
+                        "pre-swap: client {t} request {i}"
+                    );
+                }
+                traffic_up.wait();
+                // Racing the reload: each answer must be *exactly* old or
+                // *exactly* new — a batch runs wholly on one model.
+                for i in 0..RACE {
+                    let x = probe(t * 1000 + 100 + i);
+                    let y = infer(&mut c, &x, None);
+                    let old = expected_bits(m_old, &x);
+                    let new = expected_bits(m_new, &x);
+                    assert!(
+                        y == old || y == new,
+                        "torn response: client {t} request {i} matches neither version"
+                    );
+                }
+                swap_acked.wait();
+                // The reload response happened-before this point, so every
+                // batch from here on resolves the new generation.
+                for i in 0..POST {
+                    let x = probe(t * 1000 + 200 + i);
+                    assert_eq!(
+                        infer(&mut c, &x, None),
+                        expected_bits(m_new, &x),
+                        "post-swap: client {t} request {i}"
+                    );
+                }
+            });
+        }
+
+        // Main thread: wait until traffic is flowing, then drop in v2 and
+        // reload under it.
+        traffic_up.wait();
+        save_artifact(&dir, "swap", 2, &m_new, &Provenance::default()).expect("save v2");
+        let mut admin = HttpClient::connect(addr).expect("admin connect");
+        let (status, body) = admin.post_json("/v1/admin/reload", "{}").expect("reload");
+        assert_eq!(status, 200, "body: {body}");
+        let doc = json::parse(&body).expect("reload json");
+        assert_eq!(doc.get("status").as_str(), Some("ok"));
+        let swapped = doc.get("report").get("swapped").as_arr().expect("swapped");
+        assert_eq!(swapped.len(), 1, "body: {body}");
+        assert_eq!(swapped[0].get("name").as_str(), Some("swap"));
+        assert_eq!(swapped[0].get("version").as_usize(), Some(2));
+        swap_acked.wait();
+    });
+
+    // Every routed request was counted, and the slot reports v2.
+    let mut c = HttpClient::connect(addr).expect("connect");
+    let (status, body) = c.get("/v1/models").expect("models");
+    assert_eq!(status, 200);
+    let doc = json::parse(&body).expect("models json");
+    assert_eq!(doc.get("default").as_str(), Some("swap"));
+    let models = doc.get("models").as_arr().expect("models arr");
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("requests").as_usize(), Some(CLIENTS * (PRE + RACE + POST)));
+    assert_eq!(f.registry.slot("swap").expect("slot").version(), 2);
+    drop(c);
+    f.front.stop();
+    f.server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A repeated batch is a cache hit before the swap and must be recomputed
+/// on the new model after it — never replayed from the old cache.
+#[test]
+fn swap_invalidates_the_batch_cache() {
+    let dir = tmp("cache");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (m1, m2) = (model(5), model(6));
+    save_artifact(&dir, "c", 1, &m1, &Provenance::default()).expect("save v1");
+    let registry = ModelRegistry::open(&dir).expect("open");
+    let slot = registry.slot("c").expect("slot");
+    let stats = CacheStats::new_shared();
+    // batch=1, one replica: each request is its own (cacheable) batch.
+    let server = BatchServer::start_slot(
+        slot,
+        ServeConfig::new(1, Duration::from_micros(50)).with_replicas(1),
+        1,
+        8,
+        Some(Arc::clone(&stats)),
+    )
+    .expect("engine start");
+
+    let x = probe(0);
+    let bits = |y: Vec<f32>| y.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+    let want1 = expected_bits(&m1, &x);
+    assert_eq!(bits(server.handle.infer(x.clone()).expect("infer")), want1);
+    assert_eq!(bits(server.handle.infer(x.clone()).expect("infer")), want1);
+    assert!(stats.hits() >= 1, "identical batch must hit the cache pre-swap");
+
+    save_artifact(&dir, "c", 2, &m2, &Provenance::default()).expect("save v2");
+    let rep = registry.reload();
+    assert_eq!(rep.swapped.len(), 1, "report: {rep:?}");
+
+    // Same batch again: the swap rebuilt the cache empty, so this must be
+    // the *new* model's answer, not a stale replay of the old one.
+    assert_eq!(
+        bits(server.handle.infer(x.clone()).expect("infer")),
+        expected_bits(&m2, &x),
+        "stale cache entry served across a swap"
+    );
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A corrupt drop-in reloads with an error report and the old version
+/// keeps serving; unknown model names 404 without touching any engine.
+#[test]
+fn corrupt_reload_keeps_serving_and_unknown_models_404() {
+    let dir = tmp("corrupt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let m1 = model(7);
+    save_artifact(&dir, "keep", 1, &m1, &Provenance::default()).expect("save v1");
+    let f = start(&dir, "keep");
+    let addr = f.front.local_addr();
+    let mut c = HttpClient::connect(addr).expect("connect");
+
+    let x = probe(42);
+    assert_eq!(infer(&mut c, &x, Some("keep")), expected_bits(&m1, &x));
+
+    // v2 lands with one flipped payload byte.
+    save_artifact(&dir, "keep", 2, &model(8), &Provenance::default()).expect("save v2");
+    let bin = dir.join("keep-v2.bin");
+    let mut bytes = std::fs::read(&bin).expect("read payload");
+    bytes[13] ^= 0x08;
+    std::fs::write(&bin, &bytes).expect("rewrite payload");
+
+    let (status, body) = c.post_json("/v1/admin/reload", "{}").expect("reload");
+    assert_eq!(status, 200, "body: {body}");
+    let doc = json::parse(&body).expect("json");
+    let report = doc.get("report");
+    assert_eq!(report.get("swapped").as_arr().map(|a| a.len()), Some(0), "body: {body}");
+    assert_eq!(report.get("errors").as_arr().map(|a| a.len()), Some(1), "body: {body}");
+
+    // Old version still serving, bit-for-bit.
+    assert_eq!(infer(&mut c, &x, None), expected_bits(&m1, &x));
+    assert_eq!(f.registry.slot("keep").expect("slot").version(), 1);
+
+    // Unknown model → 404 with the uniform error body.
+    let req = protocol::InferRequest::new(x.clone()).with_model("nope");
+    let (status, body) = c.post_json("/v1/infer", &req.to_json().pretty()).expect("post");
+    assert_eq!(status, 404, "body: {body}");
+    let err = json::parse(&body).expect("json");
+    assert_eq!(err.get("error").get("kind").as_str(), Some("unknown_model"));
+
+    drop(c);
+    f.front.stop();
+    f.server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
