@@ -21,13 +21,19 @@
 //! unsharded baseline — the replicas-vs-stages crossover for
 //! EXPERIMENTS.md §Perf. Responses stay bit-identical across K.
 //!
+//! `--router` adds a fourth arm: the same closed loop through an `hinm
+//! route` tier — two single-replica backend fronts behind a `Router` +
+//! `RouterFront` on ephemeral ports. The req/s gap versus `--http` is the
+//! router hop (dispatch, health bookkeeping, one extra proxy leg); the row
+//! lands in the JSON as `backend: "router"`.
+//!
 //! `--json PATH` writes `{bench, provenance, rows: [...]}`
 //! (`BENCH_serve.json` in CI; uploaded as a workflow artifact) for the
 //! machine-readable perf trajectory next to `BENCH_spmm.json`.
 
-use hinm::coordinator::{BatchServer, PipelineServer, ServeConfig};
+use hinm::coordinator::{BatchServer, PipelineServer, Router, RouterConfig, ServeConfig};
 use hinm::models::{Activation, HinmModel};
-use hinm::net::{protocol, HttpClient, HttpFront};
+use hinm::net::{protocol, HttpClient, HttpFront, RouterFront};
 use hinm::sparsity::HinmConfig;
 use hinm::util::bench::Table;
 use hinm::util::cli::Cli;
@@ -53,6 +59,7 @@ fn main() {
         )
         .opt("json", None, "write machine-readable results to this path")
         .flag("http", "also run the closed loop through the real HTTP/TCP socket path")
+        .flag("router", "also run the closed loop through an `hinm route` tier over two backends")
         .flag("smoke", "tiny CI configuration (small model, few requests)")
         .flag("bench", "(ignored; injected by `cargo bench`)");
     let a = cli.parse_env();
@@ -231,6 +238,20 @@ fn main() {
         json_rows.push(row);
     }
 
+    if a.flag("router") {
+        let batch = *batch_sizes.last().unwrap_or(&4);
+        let row = serve_router_mode(RouterMode {
+            model: &model,
+            d,
+            batch,
+            max_wait,
+            kernel_threads,
+            n_requests,
+            n_clients,
+        });
+        json_rows.push(row);
+    }
+
     if let Some(path) = a.get("json") {
         let doc = Json::obj(vec![
             ("bench", Json::str("serve_throughput")),
@@ -338,5 +359,94 @@ fn serve_http_mode(cfg: HttpMode<'_>) -> Json {
         ("req_per_sec", Json::num(rps)),
         ("p50_us", Json::num(pct[0])),
         ("p99_us", Json::num(pct[1])),
+    ])
+}
+
+/// Configuration of the router-tier closed loop.
+struct RouterMode<'a> {
+    model: &'a Arc<HinmModel>,
+    d: usize,
+    batch: usize,
+    max_wait: Duration,
+    kernel_threads: usize,
+    n_requests: usize,
+    n_clients: usize,
+}
+
+/// Closed-loop req/s through a full `hinm route` tier: two single-replica
+/// backend fronts on ephemeral ports behind a `Router` + `RouterFront`.
+/// The req/s gap versus [`serve_http_mode`] is the router hop. Every
+/// response must be a 200 — the two backends stay healthy, so any retry
+/// or failure here is a router bug, not chaos. Returns the JSON row.
+fn serve_router_mode(cfg: RouterMode<'_>) -> Json {
+    let RouterMode { model, d, batch, max_wait, kernel_threads, n_requests, n_clients } = cfg;
+    let mut backends = Vec::new();
+    for i in 0..2 {
+        let server = BatchServer::start_native_threads(
+            Arc::clone(model),
+            ServeConfig::new(batch, max_wait).with_replicas(1),
+            kernel_threads,
+        )
+        .expect("backend server start");
+        let front =
+            HttpFront::start("127.0.0.1:0", server.handle.clone(), None, None, n_clients.min(16))
+                .expect("backend front start");
+        let name = format!("b{i}");
+        backends.push((name, front, server));
+    }
+    let targets: Vec<(String, std::net::SocketAddr)> =
+        backends.iter().map(|(name, front, _)| (name.clone(), front.local_addr())).collect();
+    let rcfg = RouterConfig { probe_interval_ms: 250, ..RouterConfig::default() };
+    let router = Router::start(targets, rcfg).expect("router start");
+    let rfront = RouterFront::start("127.0.0.1:0", router, n_clients.min(16))
+        .expect("router front start");
+    let addr = rfront.local_addr();
+    let per_client = (n_requests / n_clients).max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            s.spawn(move || {
+                let mut client = HttpClient::connect(addr).expect("connect");
+                for i in 0..per_client {
+                    let x: Vec<f32> = (0..d)
+                        .map(|j| ((c * 31 + i * 7 + j) % 17) as f32 * 0.05 - 0.4)
+                        .collect();
+                    let body = protocol::InferRequest::new(x).to_json().compact();
+                    let (status, resp) =
+                        client.post_json("/v1/infer", &body).expect("routed request");
+                    assert_eq!(status, 200, "unexpected routed response: {resp}");
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let served = per_client * n_clients;
+    let rps = served as f64 / wall;
+    let snap = rfront.router().snapshot();
+    println!(
+        "\nserve_router (2 backends, batch {batch}, {kernel_threads} kernel threads): \
+         {served} req over {n_clients} TCP clients in {:.1} ms → {rps:.0} req/s | \
+         hedges {} retries {} trips {}",
+        wall * 1e3,
+        snap.hedges,
+        snap.retries,
+        snap.breaker_trips,
+    );
+    rfront.stop();
+    for (_, front, server) in backends {
+        front.stop();
+        server.stop();
+    }
+    Json::obj(vec![
+        ("backend", Json::str("router")),
+        ("replicas", Json::num(2.0)),
+        ("batch", Json::num(batch as f64)),
+        ("threads", Json::num(kernel_threads as f64)),
+        ("req_per_sec", Json::num(rps)),
+        // Router-observed per-attempt latency (worst backend), not the
+        // engine-side p50/p99 the other arms report.
+        ("p95_us", Json::num(snap.backends.iter().map(|b| b.p95_us).fold(0.0, f64::max))),
+        ("hedges", Json::num(snap.hedges as f64)),
+        ("retries", Json::num(snap.retries as f64)),
     ])
 }

@@ -1,10 +1,12 @@
 //! L3 coordinator: the compression pipeline (prune → permute → pack), the
 //! sharded multi-backend inference engine with priority/deadline
-//! scheduling, the Rust-driven fine-tune trainer, and request metrics.
+//! scheduling, the fault-tolerant replica router, the Rust-driven
+//! fine-tune trainer, and request metrics.
 
 pub mod gradual;
 pub mod metrics;
 pub mod pipeline;
+pub mod router;
 pub mod serve;
 pub mod trainer;
 
@@ -12,6 +14,9 @@ pub use metrics::{
     EngineMetrics, LatencyRecorder, ModelCounters, ReplicaStats, SchedulerStats, Throughput,
 };
 pub use pipeline::{compress_layer, run_pipeline, weighted_retention, LayerJob, Method, PipelineConfig};
+pub use router::{
+    BackendHealth, BackendSnapshot, ProxyRequest, RouteReply, Router, RouterConfig, RouterSnapshot,
+};
 pub use serve::{
     cached_factory, BackendFactory, BatchServer, InferError, PipelineHandle, PipelineServer,
     PipelineStage, Priority, ServeConfig, ServerHandle,

@@ -1,0 +1,1140 @@
+//! Fault-tolerant routing over replica `hinm serve` hosts (DESIGN.md §19).
+//!
+//! This module is the *coordinator* half of the `hinm route` tier: it owns
+//! every wall-clock decision — health probing, per-try timeouts, hedge
+//! timers, retry backoff — while the wire half
+//! ([`crate::net::route`]) stays clock-free and hinm-lint-R3-pinned. The
+//! split mirrors the engine layering (timing lives in `coordinator/`,
+//! never in the numeric or wire layers).
+//!
+//! Per backend, a breaker state machine:
+//!
+//! ```text
+//!        success                    failure
+//!   Up ───────────▶ Up        Up ──────────▶ Degraded
+//!   Degraded ─────▶ Up        Degraded ────▶ Down       (≥ fail_threshold
+//!   HalfOpen ─────▶ Up                                    consecutive, trips
+//!   Down ──cooldown elapsed──▶ HalfOpen                   the breaker)
+//!   HalfOpen ──failed trial──▶ Down (backoff doubles, no new trip)
+//! ```
+//!
+//! Dispatch picks the least-loaded eligible backend (in-flight counter,
+//! [`consistent_rank`] tiebreak keyed on the request's model), hedges a
+//! second attempt when the first exceeds the backend's measured p95, and
+//! retries failures within the request's `deadline_ms` budget with
+//! [`mix_seed`]-jittered backoff — every random-looking delay is a pure
+//! function of the router seed and a per-request sequence number, so a
+//! seeded fault schedule replays to exact metric counts (pinned by
+//! `rust/tests/router_chaos.rs`).
+
+use crate::coordinator::metrics::LatencyRecorder;
+use crate::coordinator::serve::InferError;
+use crate::net::http::HttpClient;
+use crate::net::route::UpstreamClass;
+use crate::util::json;
+use crate::util::rng::mix_seed;
+use crate::util::sync::lock_unpoisoned;
+use anyhow::{Context, Result};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Most idle downstream connections kept pooled per backend.
+const IDLE_POOL_CAP: usize = 8;
+
+/// Granularity of stop-aware sleeps (probers notice shutdown this fast).
+const SLEEP_CHUNK: Duration = Duration::from_millis(25);
+
+/// Tuning knobs for [`Router`]. All fields are public so `hinm route`
+/// flags and tests can set them directly; [`RouterConfig::default`] is a
+/// sane serving profile.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Milliseconds between active `GET /healthz` probes per backend.
+    pub probe_interval_ms: u64,
+    /// Connect + read timeout for one probe, in milliseconds.
+    pub probe_timeout_ms: u64,
+    /// Consecutive failures that trip a backend `Up/Degraded → Down`.
+    pub fail_threshold: u32,
+    /// Base reprobe cooldown after a trip, in milliseconds (doubles per
+    /// consecutive `Down` epoch, jittered, capped by `backoff_max_ms`).
+    pub backoff_base_ms: u64,
+    /// Upper bound on the reprobe cooldown, in milliseconds.
+    pub backoff_max_ms: u64,
+    /// Base retry backoff between attempts, in milliseconds (doubles per
+    /// retry, plus seeded jitter below one base unit).
+    pub retry_backoff_ms: u64,
+    /// Lower clamp on the hedge delay, in milliseconds.
+    pub hedge_floor_ms: u64,
+    /// Upper clamp on the hedge delay (also used before any latency has
+    /// been measured), in milliseconds.
+    pub hedge_ceil_ms: u64,
+    /// TCP connect timeout per downstream attempt, in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Read timeout per downstream attempt, in milliseconds (further
+    /// clamped by the request's remaining deadline).
+    pub per_try_timeout_ms: u64,
+    /// Most downstream attempts (first try + hedges + retries) spent on
+    /// one request.
+    pub max_attempts: u32,
+    /// Requests admitted concurrently; beyond this the router answers 503
+    /// with `Retry-After` instead of queueing unboundedly.
+    pub max_inflight: usize,
+    /// How long `stop()` waits for in-flight requests to drain, in
+    /// milliseconds.
+    pub drain_ms: u64,
+    /// Seed for every jittered delay and the consistent-hash tiebreak.
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            probe_interval_ms: 1000,
+            probe_timeout_ms: 500,
+            fail_threshold: 3,
+            backoff_base_ms: 500,
+            backoff_max_ms: 10_000,
+            retry_backoff_ms: 10,
+            hedge_floor_ms: 5,
+            hedge_ceil_ms: 500,
+            connect_timeout_ms: 500,
+            per_try_timeout_ms: 2000,
+            max_attempts: 3,
+            max_inflight: 256,
+            drain_ms: 2000,
+            seed: 0x48_69_4E_4D,
+        }
+    }
+}
+
+/// Breaker state of one backend (see the module-level state machine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendHealth {
+    /// Healthy: last contact succeeded.
+    Up,
+    /// Failing below the trip threshold; still dispatched to.
+    Degraded,
+    /// Breaker open: not dispatched to until the cooldown elapses.
+    Down,
+    /// Cooldown elapsed: exactly one trial request/probe may pass.
+    HalfOpen,
+}
+
+impl BackendHealth {
+    /// Stable lowercase name (metrics label / JSON value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendHealth::Up => "up",
+            BackendHealth::Degraded => "degraded",
+            BackendHealth::Down => "down",
+            BackendHealth::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Mutable per-backend state, all behind one mutex.
+struct BackendState {
+    health: BackendHealth,
+    consec_failures: u32,
+    /// Consecutive `Down` entries without an intervening success; drives
+    /// the exponential reprobe backoff.
+    down_epochs: u32,
+    cooldown_until: Option<Instant>,
+    /// A half-open trial is currently in flight (only one may be).
+    trial_pending: bool,
+    inflight: usize,
+    requests: u64,
+    failures: u64,
+    /// Models this backend advertised on `/v1/models` (empty = unknown —
+    /// the backend accepts anything, e.g. a single-model front).
+    models: Vec<String>,
+    latency_us: LatencyRecorder,
+    idle: Vec<HttpClient>,
+}
+
+/// One downstream `hinm serve` host.
+struct Backend {
+    name: String,
+    addr: SocketAddr,
+    state: Mutex<BackendState>,
+}
+
+/// Monotonic router counters (all relaxed-free `SeqCst` atomics; exact
+/// counts are part of the chaos-test contract).
+#[derive(Default)]
+pub struct RouterMetrics {
+    requests: AtomicU64,
+    hedges: AtomicU64,
+    retries: AtomicU64,
+    breaker_trips: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// Read-only copy of one backend's state for metrics rendering.
+#[derive(Clone, Debug)]
+pub struct BackendSnapshot {
+    /// Backend name as given on the command line (`host:port`).
+    pub name: String,
+    /// Current breaker state.
+    pub health: BackendHealth,
+    /// Attempts currently in flight to this backend.
+    pub inflight: usize,
+    /// Consecutive failures since the last success.
+    pub consec_failures: u32,
+    /// Successful responses served by this backend.
+    pub requests: u64,
+    /// Failed attempts/probes against this backend.
+    pub failures: u64,
+    /// Measured p95 response latency in microseconds (0 before any
+    /// sample) — the value that arms the hedge timer.
+    pub p95_us: f64,
+    /// Models the backend advertises (empty = unknown/any).
+    pub models: Vec<String>,
+}
+
+/// Read-only copy of the router counters + per-backend state, rendered by
+/// [`crate::net::protocol::router_metrics_json`] /
+/// [`crate::net::protocol::router_metrics_prometheus`].
+#[derive(Clone, Debug)]
+pub struct RouterSnapshot {
+    /// Requests admitted (answered downstream or failed after attempts).
+    pub requests: u64,
+    /// Hedged second attempts launched.
+    pub hedges: u64,
+    /// Retry attempts launched after a failure.
+    pub retries: u64,
+    /// Breaker trips (`Up/Degraded → Down` transitions).
+    pub breaker_trips: u64,
+    /// Requests rejected with 503 (backpressure or shutdown drain).
+    pub rejected: u64,
+    /// Per-backend state.
+    pub backends: Vec<BackendSnapshot>,
+}
+
+/// One proxied request as the wire layer hands it to [`Router::dispatch`].
+#[derive(Clone, Debug)]
+pub struct ProxyRequest<'a> {
+    /// HTTP method to send downstream.
+    pub method: &'a str,
+    /// Path (plus query) to send downstream.
+    pub path: &'a str,
+    /// Raw body bytes, forwarded verbatim (never re-serialized — the
+    /// bit-identity contract).
+    pub body: &'a str,
+    /// Parsed `"model"` field, read-only, for per-model dispatch.
+    pub model: Option<&'a str>,
+    /// Parsed `"deadline_ms"` field: the retry/hedge budget.
+    pub deadline_ms: Option<u64>,
+    /// Whether a retry may re-send this request after bytes were written
+    /// to a downstream (`POST /v1/infer` is a pure function of its body,
+    /// so the router treats it as idempotent; unknown POSTs are not).
+    pub idempotent: bool,
+}
+
+/// What the router tells the wire layer to answer.
+#[derive(Debug)]
+pub enum RouteReply {
+    /// A downstream answered (any status < 500, or a final 5xx passed
+    /// through after the attempt budget): relay status + body verbatim.
+    Replied {
+        /// Downstream status code.
+        status: u16,
+        /// Downstream body, byte-identical to what the backend sent.
+        body: String,
+        /// Attempts spent (first try + hedges + retries) — surfaced as
+        /// `X-Hinm-Attempt`.
+        attempts: u32,
+        /// Name of the backend that won.
+        backend: String,
+    },
+    /// No downstream could answer within the budget.
+    Failed {
+        /// Why — maps onto 502/504 via `protocol::status_for`.
+        error: InferError,
+        /// Attempts spent before giving up.
+        attempts: u32,
+    },
+    /// Admission rejected: over `max_inflight`, or draining for shutdown.
+    Busy {
+        /// Suggested client backoff, surfaced as `Retry-After` seconds.
+        retry_after_s: u64,
+    },
+}
+
+/// Consistent-hash tiebreak: the rank of `backend` for a request keyed by
+/// `model_key`. Pure in `(seed, model_key, backend)`, so tests can replay
+/// the dispatch order for a seed, and requests for the same model prefer
+/// the same backend when in-flight counts tie (cache affinity).
+pub fn consistent_rank(seed: u64, model_key: u64, backend: usize) -> u64 {
+    mix_seed(seed ^ model_key, backend as u64)
+}
+
+/// The dispatch key for an optional model name (FNV-1a64; empty string
+/// for the default model).
+pub fn model_key(model: Option<&str>) -> u64 {
+    crate::runtime::artifact::fnv1a64(model.unwrap_or("").as_bytes())
+}
+
+/// May a failed attempt be retried elsewhere? Idempotent requests always
+/// may; non-idempotent ones only while no request bytes reached a
+/// downstream (a refused connect), because a written request may have
+/// executed even if the response never came back.
+pub fn retry_allowed(idempotent: bool, bytes_written: bool) -> bool {
+    idempotent || !bytes_written
+}
+
+/// Jittered backoff before the `retry`-th retry (1-based) of request
+/// `seq`: `base · 2^(retry−1)` plus a seeded jitter below one base unit.
+/// Pure in `(cfg.seed, retry, seq)` — no wall-clock randomness.
+pub fn retry_backoff_ms(cfg: &RouterConfig, retry: u32, seq: u64) -> u64 {
+    let base = cfg.retry_backoff_ms.max(1);
+    let exp = base.saturating_mul(1u64 << retry.saturating_sub(1).min(10));
+    exp + mix_seed(cfg.seed, seq.wrapping_mul(8).wrapping_add(retry as u64)) % base
+}
+
+/// Jittered reprobe cooldown for a backend entering its `epoch`-th
+/// consecutive `Down` (0-based): `base · 2^epoch` capped at
+/// `backoff_max_ms`, plus up to 25% seeded jitter. Pure in
+/// `(cfg.seed, epoch, stream)`.
+pub fn reprobe_backoff_ms(cfg: &RouterConfig, epoch: u32, stream: u64) -> u64 {
+    let cap = cfg.backoff_max_ms.max(cfg.backoff_base_ms.max(1));
+    let exp = cfg.backoff_base_ms.max(1).saturating_mul(1u64 << epoch.min(10)).min(cap);
+    exp + mix_seed(cfg.seed, stream) % (exp / 4 + 1)
+}
+
+/// Book one failure on a backend's state machine (passive mark from an
+/// attempt, or a failed active probe). Trips the breaker — counted once
+/// per `Up/Degraded → Down` transition — when `consec_failures` reaches
+/// the threshold; a failed half-open trial re-opens the breaker with a
+/// doubled cooldown but does not count a new trip.
+fn note_failure(cfg: &RouterConfig, metrics: &RouterMetrics, st: &mut BackendState, now: Instant) {
+    st.failures += 1;
+    st.consec_failures += 1;
+    match st.health {
+        BackendHealth::Up | BackendHealth::Degraded => {
+            if st.consec_failures >= cfg.fail_threshold {
+                st.health = BackendHealth::Down;
+                metrics.breaker_trips.fetch_add(1, Ordering::SeqCst);
+                let ms = reprobe_backoff_ms(cfg, st.down_epochs, st.failures);
+                st.down_epochs += 1;
+                st.cooldown_until = Some(now + Duration::from_millis(ms));
+            } else {
+                st.health = BackendHealth::Degraded;
+            }
+        }
+        BackendHealth::HalfOpen => {
+            st.health = BackendHealth::Down;
+            let ms = reprobe_backoff_ms(cfg, st.down_epochs, st.failures);
+            st.down_epochs += 1;
+            st.cooldown_until = Some(now + Duration::from_millis(ms));
+            st.trial_pending = false;
+        }
+        BackendHealth::Down => {
+            st.trial_pending = false;
+        }
+    }
+}
+
+/// Book one success: any state returns to `Up` and the failure streak,
+/// down-epoch counter, and pending trial all clear.
+fn note_success(st: &mut BackendState) {
+    st.requests += 1;
+    st.consec_failures = 0;
+    st.down_epochs = 0;
+    st.cooldown_until = None;
+    st.trial_pending = false;
+    st.health = BackendHealth::Up;
+}
+
+/// Outcome of one downstream attempt, sent back to the dispatcher. The
+/// attempt thread books its own success/failure on the backend state
+/// *before* sending, so counters stay exact even when the dispatcher has
+/// already answered the client (an abandoned hedge loser still books).
+struct AttemptOutcome {
+    backend: usize,
+    /// Request bytes reached the downstream (gates non-idempotent retry).
+    bytes_written: bool,
+    /// `Ok((status, body))` — any well-formed response, including 5xx;
+    /// `Err((class, message))` — transport failure.
+    result: std::result::Result<(u16, String), (UpstreamClass, String)>,
+}
+
+/// The router: shared state + prober threads. Create with
+/// [`Router::start`]; drive with [`Router::dispatch`] (one call per
+/// client request, typically from an HTTP worker thread of
+/// [`crate::net::route::RouterFront`]); shut down with [`Router::stop`].
+pub struct Router {
+    cfg: RouterConfig,
+    backends: Arc<Vec<Backend>>,
+    metrics: Arc<RouterMetrics>,
+    stopping: Arc<AtomicBool>,
+    inflight: Arc<AtomicUsize>,
+    seq: AtomicU64,
+    probers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Router {
+    /// Build the routing table over `(name, addr)` backends and spawn one
+    /// health-prober thread per backend. Backends may be down at start —
+    /// the probers and passive marking converge on reality.
+    pub fn start(backends: Vec<(String, SocketAddr)>, cfg: RouterConfig) -> Result<Arc<Router>> {
+        anyhow::ensure!(!backends.is_empty(), "router needs at least one backend");
+        let backends: Arc<Vec<Backend>> = Arc::new(
+            backends
+                .into_iter()
+                .map(|(name, addr)| Backend {
+                    name,
+                    addr,
+                    state: Mutex::new(BackendState {
+                        health: BackendHealth::Up,
+                        consec_failures: 0,
+                        down_epochs: 0,
+                        cooldown_until: None,
+                        trial_pending: false,
+                        inflight: 0,
+                        requests: 0,
+                        failures: 0,
+                        models: Vec::new(),
+                        latency_us: LatencyRecorder::with_capacity(4096),
+                        idle: Vec::new(),
+                    }),
+                })
+                .collect(),
+        );
+        let router = Arc::new(Router {
+            cfg: cfg.clone(),
+            backends: Arc::clone(&backends),
+            metrics: Arc::new(RouterMetrics::default()),
+            stopping: Arc::new(AtomicBool::new(false)),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            seq: AtomicU64::new(0),
+            probers: Mutex::new(Vec::new()),
+        });
+        let mut probers = Vec::with_capacity(router.backends.len());
+        for i in 0..router.backends.len() {
+            let backends = Arc::clone(&router.backends);
+            let metrics = Arc::clone(&router.metrics);
+            let stopping = Arc::clone(&router.stopping);
+            let cfg = cfg.clone();
+            let t = std::thread::Builder::new()
+                .name(format!("hinm-route-probe{i}"))
+                .spawn(move || prober_loop(&backends[i], &cfg, &metrics, &stopping))
+                .context("spawning router prober")?;
+            probers.push(t);
+        }
+        *lock_unpoisoned(&router.probers) = probers;
+        Ok(router)
+    }
+
+    /// The router's monotonic counters + per-backend breaker state.
+    pub fn snapshot(&self) -> RouterSnapshot {
+        RouterSnapshot {
+            requests: self.metrics.requests.load(Ordering::SeqCst),
+            hedges: self.metrics.hedges.load(Ordering::SeqCst),
+            retries: self.metrics.retries.load(Ordering::SeqCst),
+            breaker_trips: self.metrics.breaker_trips.load(Ordering::SeqCst),
+            rejected: self.metrics.rejected.load(Ordering::SeqCst),
+            backends: self
+                .backends
+                .iter()
+                .map(|b| {
+                    let st = lock_unpoisoned(&b.state);
+                    BackendSnapshot {
+                        name: b.name.clone(),
+                        health: st.health,
+                        inflight: st.inflight,
+                        consec_failures: st.consec_failures,
+                        requests: st.requests,
+                        failures: st.failures,
+                        p95_us: st.latency_us.percentile(95.0),
+                        models: st.models.clone(),
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// `(live, total)` backend counts for the router's `/healthz` (live =
+    /// any state the dispatcher may send to).
+    pub fn live_backends(&self) -> (usize, usize) {
+        let live = self
+            .backends
+            .iter()
+            .filter(|b| {
+                !matches!(lock_unpoisoned(&b.state).health, BackendHealth::Down)
+            })
+            .count();
+        (live, self.backends.len())
+    }
+
+    /// Sorted union of the models the backends advertise (router
+    /// `/v1/models`).
+    pub fn models_union(&self) -> Vec<String> {
+        let mut all: Vec<String> = self
+            .backends
+            .iter()
+            .flat_map(|b| lock_unpoisoned(&b.state).models.clone())
+            .collect();
+        all.sort();
+        all.dedup();
+        all
+    }
+
+    /// True once [`Router::stop`] has begun (new requests answer 503).
+    pub fn is_stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
+    }
+
+    /// Graceful drain: refuse new requests, wait up to `drain_ms` for
+    /// in-flight ones, then join the probers.
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.drain_ms);
+        while self.inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for t in lock_unpoisoned(&self.probers).drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Route one request: admission check, then up to `max_attempts`
+    /// downstream attempts with hedging and deadline-aware retries. Blocks
+    /// the calling (HTTP worker) thread until an answer or the budget runs
+    /// out.
+    pub fn dispatch(&self, req: &ProxyRequest<'_>) -> RouteReply {
+        if self.stopping.load(Ordering::SeqCst) {
+            self.metrics.rejected.fetch_add(1, Ordering::SeqCst);
+            return RouteReply::Busy { retry_after_s: 1 };
+        }
+        // Optimistic admission: claim a slot, back out if over the cap.
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.cfg.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.rejected.fetch_add(1, Ordering::SeqCst);
+            return RouteReply::Busy { retry_after_s: 1 };
+        }
+        self.metrics.requests.fetch_add(1, Ordering::SeqCst);
+        let reply = self.dispatch_inner(req);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        reply
+    }
+
+    fn dispatch_inner(&self, req: &ProxyRequest<'_>) -> RouteReply {
+        let started = Instant::now();
+        let hard_deadline = req.deadline_ms.map(|ms| started + Duration::from_millis(ms));
+        let key = model_key(req.model);
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel::<AttemptOutcome>();
+
+        let mut tried: Vec<usize> = Vec::new();
+        let mut attempts: u32 = 0;
+        let mut pending: usize = 0;
+        let mut retries_done: u32 = 0;
+        let mut hedged = false;
+        let mut hedge_at: Option<Instant> = None;
+        let mut last_fail: Option<InferError> = None;
+        let mut last_5xx: Option<(u16, String, String)> = None;
+
+        // First attempt.
+        match self.launch(key, req, &mut tried, hard_deadline, &tx) {
+            Some(idx) => {
+                attempts += 1;
+                pending += 1;
+                hedge_at = Some(Instant::now() + self.hedge_delay(idx));
+            }
+            None => {
+                return RouteReply::Failed {
+                    error: InferError::Upstream("no live backend to dispatch to".to_string()),
+                    attempts: 0,
+                };
+            }
+        }
+
+        // Worst-case duration of one attempt, as a watchdog bound.
+        let attempt_cap = Duration::from_millis(
+            self.cfg.connect_timeout_ms + self.cfg.per_try_timeout_ms + 1000,
+        );
+        let mut last_progress = Instant::now();
+
+        loop {
+            let now = Instant::now();
+            if let Some(d) = hard_deadline {
+                if now >= d {
+                    return RouteReply::Failed { error: InferError::DeadlineExpired, attempts };
+                }
+            }
+            if now.duration_since(last_progress) > attempt_cap {
+                // Safety net: every attempt is socket-timeout-bounded, so
+                // this only fires if something downstream wedged past its
+                // timeouts.
+                return RouteReply::Failed {
+                    error: InferError::UpstreamTimeout(
+                        "pending attempts exceeded the per-try budget".to_string(),
+                    ),
+                    attempts,
+                };
+            }
+            let mut wait = attempt_cap;
+            if let (false, Some(h), true) = (hedged, hedge_at, pending > 0) {
+                wait = wait.min(h.saturating_duration_since(now).max(Duration::from_millis(1)));
+            }
+            if let Some(d) = hard_deadline {
+                wait = wait.min(d.saturating_duration_since(now).max(Duration::from_millis(1)));
+            }
+
+            match rx.recv_timeout(wait) {
+                Ok(out) => {
+                    pending -= 1;
+                    last_progress = Instant::now();
+                    let name = self.backends[out.backend].name.clone();
+                    match out.result {
+                        Ok((status, body)) if status < 500 => {
+                            return RouteReply::Replied { status, body, attempts, backend: name };
+                        }
+                        Ok((status, body)) => {
+                            last_5xx = Some((status, body, name.clone()));
+                            last_fail = Some(InferError::Upstream(format!(
+                                "backend {name} answered {status}"
+                            )));
+                        }
+                        Err((class, msg)) => {
+                            last_fail = Some(match class {
+                                UpstreamClass::TimedOut => InferError::UpstreamTimeout(format!(
+                                    "backend {name}: {msg}"
+                                )),
+                                UpstreamClass::Unreachable | UpstreamClass::Protocol => {
+                                    InferError::Upstream(format!("backend {name}: {msg}"))
+                                }
+                            });
+                        }
+                    }
+                    // Retry if the budget allows.
+                    if attempts < self.cfg.max_attempts
+                        && retry_allowed(req.idempotent, out.bytes_written)
+                    {
+                        retries_done += 1;
+                        let backoff =
+                            Duration::from_millis(retry_backoff_ms(&self.cfg, retries_done, seq));
+                        let budget_ok = match hard_deadline {
+                            Some(d) => Instant::now() + backoff < d,
+                            None => true,
+                        };
+                        if budget_ok {
+                            std::thread::sleep(backoff);
+                            if let Some(_idx) = self.launch(key, req, &mut tried, hard_deadline, &tx)
+                            {
+                                self.metrics.retries.fetch_add(1, Ordering::SeqCst);
+                                attempts += 1;
+                                pending += 1;
+                                last_progress = Instant::now();
+                                continue;
+                            }
+                        }
+                    }
+                    if pending == 0 {
+                        return match last_5xx {
+                            // Out of attempts: pass the downstream's own
+                            // 5xx through verbatim rather than inventing a
+                            // body (keeps router and direct responses
+                            // bit-identical even on errors).
+                            Some((status, body, backend)) => {
+                                RouteReply::Replied { status, body, attempts, backend }
+                            }
+                            None => RouteReply::Failed {
+                                error: last_fail.unwrap_or_else(|| {
+                                    InferError::Upstream("all attempts failed".to_string())
+                                }),
+                                attempts,
+                            },
+                        };
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let now = Instant::now();
+                    let hedge_due = match (hedged, hedge_at) {
+                        (false, Some(h)) => now >= h,
+                        _ => false,
+                    };
+                    if hedge_due && pending > 0 && attempts < self.cfg.max_attempts {
+                        hedged = true;
+                        if self.launch(key, req, &mut tried, hard_deadline, &tx).is_some() {
+                            self.metrics.hedges.fetch_add(1, Ordering::SeqCst);
+                            attempts += 1;
+                            pending += 1;
+                            last_progress = now;
+                        }
+                    } else if hedge_due {
+                        // Nothing pending to hedge against; disarm.
+                        hedged = true;
+                    }
+                    // Deadline/watchdog checks run at the top of the loop.
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // All attempt threads gone without a usable outcome.
+                    return RouteReply::Failed {
+                        error: last_fail.unwrap_or_else(|| {
+                            InferError::Upstream("all attempts failed".to_string())
+                        }),
+                        attempts,
+                    };
+                }
+            }
+        }
+    }
+
+    /// Pick, claim, and spawn one downstream attempt. On success the
+    /// chosen index is appended to `tried` and returned. The spawned
+    /// thread books its own outcome on the backend state, then reports
+    /// through `tx`.
+    fn launch(
+        &self,
+        key: u64,
+        req: &ProxyRequest<'_>,
+        tried: &mut Vec<usize>,
+        hard_deadline: Option<Instant>,
+        tx: &mpsc::Sender<AttemptOutcome>,
+    ) -> Option<usize> {
+        let now = Instant::now();
+        // Per-try read timeout: the configured cap, shrunk to the
+        // request's remaining deadline.
+        let mut per_try = Duration::from_millis(self.cfg.per_try_timeout_ms.max(1));
+        if let Some(d) = hard_deadline {
+            let remaining = d.saturating_duration_since(now);
+            if remaining < Duration::from_millis(1) {
+                return None;
+            }
+            per_try = per_try.min(remaining);
+        }
+        let idx = self.pick_and_claim(key, req.model, tried, now)?;
+        tried.push(idx);
+
+        let backends = Arc::clone(&self.backends);
+        let metrics = Arc::clone(&self.metrics);
+        let cfg = self.cfg.clone();
+        let tx = tx.clone();
+        let method = req.method.to_string();
+        let path = req.path.to_string();
+        let body = req.body.to_string();
+        let spawned = std::thread::Builder::new()
+            .name(format!("hinm-route-try{idx}"))
+            .spawn(move || {
+                run_attempt(&backends[idx], idx, &cfg, &metrics, &method, &path, &body, per_try, &tx)
+            });
+        match spawned {
+            Ok(_) => Some(idx),
+            Err(_) => {
+                // Could not even spawn: un-claim and report synchronously.
+                let b = &self.backends[idx];
+                let mut st = lock_unpoisoned(&b.state);
+                st.inflight = st.inflight.saturating_sub(1);
+                note_failure(&self.cfg, &self.metrics, &mut st, Instant::now());
+                drop(st);
+                let _ = tx.send(AttemptOutcome {
+                    backend: idx,
+                    bytes_written: false,
+                    result: Err((
+                        UpstreamClass::Unreachable,
+                        "spawning attempt thread failed".to_string(),
+                    )),
+                });
+                Some(idx)
+            }
+        }
+    }
+
+    /// Least-loaded eligible backend not in `exclude`, ties broken by
+    /// [`consistent_rank`]; claims it (in-flight + half-open trial slot).
+    fn pick_and_claim(
+        &self,
+        key: u64,
+        model: Option<&str>,
+        exclude: &[usize],
+        now: Instant,
+    ) -> Option<usize> {
+        // Bounded re-scan: a concurrent dispatcher can steal a half-open
+        // trial slot between scan and claim.
+        for _ in 0..4 {
+            let mut best: Option<(usize, u64, usize)> = None;
+            for (i, b) in self.backends.iter().enumerate() {
+                if exclude.contains(&i) {
+                    continue;
+                }
+                let mut st = lock_unpoisoned(&b.state);
+                if st.health == BackendHealth::Down {
+                    let due = match st.cooldown_until {
+                        Some(t) => now >= t,
+                        None => true,
+                    };
+                    if due {
+                        st.health = BackendHealth::HalfOpen;
+                        st.trial_pending = false;
+                    }
+                }
+                let eligible = match st.health {
+                    BackendHealth::Up | BackendHealth::Degraded => true,
+                    BackendHealth::HalfOpen => !st.trial_pending,
+                    BackendHealth::Down => false,
+                };
+                if !eligible {
+                    continue;
+                }
+                if let Some(m) = model {
+                    if !st.models.is_empty() && !st.models.iter().any(|x| x == m) {
+                        continue;
+                    }
+                }
+                let cand = (st.inflight, consistent_rank(self.cfg.seed, key, i), i);
+                let better = match best {
+                    None => true,
+                    Some(b0) => cand < b0,
+                };
+                if better {
+                    best = Some(cand);
+                }
+            }
+            let (_, _, idx) = best?;
+            let mut st = lock_unpoisoned(&self.backends[idx].state);
+            let claimed = match st.health {
+                BackendHealth::Up | BackendHealth::Degraded => true,
+                BackendHealth::HalfOpen => {
+                    if st.trial_pending {
+                        false
+                    } else {
+                        st.trial_pending = true;
+                        true
+                    }
+                }
+                BackendHealth::Down => false,
+            };
+            if claimed {
+                st.inflight += 1;
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    /// Hedge timer for an attempt on `idx`: the backend's measured p95,
+    /// clamped to `[hedge_floor_ms, hedge_ceil_ms]`; the ceiling before
+    /// any sample exists.
+    fn hedge_delay(&self, idx: usize) -> Duration {
+        let floor = self.cfg.hedge_floor_ms;
+        let ceil = self.cfg.hedge_ceil_ms.max(floor);
+        let st = lock_unpoisoned(&self.backends[idx].state);
+        let ms = if st.latency_us.retained() == 0 {
+            ceil
+        } else {
+            ((st.latency_us.percentile(95.0) / 1000.0).ceil() as u64).clamp(floor, ceil)
+        };
+        Duration::from_millis(ms.max(1))
+    }
+}
+
+/// Body of one attempt thread: connect (or reuse a pooled connection),
+/// send, read, book the outcome on the backend state, report to the
+/// dispatcher. Booking happens here — exactly once per attempt — so a
+/// hedge loser abandoned by the dispatcher still decrements in-flight and
+/// feeds the breaker.
+#[allow(clippy::too_many_arguments)]
+fn run_attempt(
+    b: &Backend,
+    idx: usize,
+    cfg: &RouterConfig,
+    metrics: &RouterMetrics,
+    method: &str,
+    path: &str,
+    body: &str,
+    per_try: Duration,
+    tx: &mpsc::Sender<AttemptOutcome>,
+) {
+    let started = Instant::now();
+    let pooled = { lock_unpoisoned(&b.state).idle.pop() };
+    let mut client = match pooled {
+        Some(c) => c,
+        None => {
+            match HttpClient::connect_timeout(
+                b.addr,
+                Duration::from_millis(cfg.connect_timeout_ms.max(1)),
+            ) {
+                Ok(c) => c,
+                Err(e) => {
+                    let class = crate::net::route::classify_anyhow(&e);
+                    let mut st = lock_unpoisoned(&b.state);
+                    st.inflight = st.inflight.saturating_sub(1);
+                    note_failure(cfg, metrics, &mut st, Instant::now());
+                    drop(st);
+                    let _ = tx.send(AttemptOutcome {
+                        backend: idx,
+                        bytes_written: false,
+                        result: Err((class, format!("{e:#}"))),
+                    });
+                    return;
+                }
+            }
+        }
+    };
+    if client.set_read_timeout(Some(per_try.max(Duration::from_millis(1)))).is_err() {
+        // A socket we cannot configure is not trustworthy for a bounded
+        // attempt; treat as unreachable.
+        let mut st = lock_unpoisoned(&b.state);
+        st.inflight = st.inflight.saturating_sub(1);
+        note_failure(cfg, metrics, &mut st, Instant::now());
+        drop(st);
+        let _ = tx.send(AttemptOutcome {
+            backend: idx,
+            bytes_written: false,
+            result: Err((UpstreamClass::Unreachable, "setting read timeout failed".to_string())),
+        });
+        return;
+    }
+    let attempt_body = if body.is_empty() { None } else { Some(body) };
+    match client.request_with_headers(method, path, attempt_body) {
+        Ok((status, _headers, resp_body)) => {
+            let failure = status >= 500;
+            let mut st = lock_unpoisoned(&b.state);
+            st.inflight = st.inflight.saturating_sub(1);
+            if failure {
+                note_failure(cfg, metrics, &mut st, Instant::now());
+            } else {
+                note_success(&mut st);
+                st.latency_us.record(started.elapsed());
+                if st.idle.len() < IDLE_POOL_CAP {
+                    st.idle.push(client);
+                }
+            }
+            drop(st);
+            let _ = tx.send(AttemptOutcome {
+                backend: idx,
+                bytes_written: true,
+                result: Ok((status, resp_body)),
+            });
+        }
+        Err(e) => {
+            let class = crate::net::route::classify_anyhow(&e);
+            let mut st = lock_unpoisoned(&b.state);
+            st.inflight = st.inflight.saturating_sub(1);
+            note_failure(cfg, metrics, &mut st, Instant::now());
+            drop(st);
+            let _ = tx.send(AttemptOutcome {
+                backend: idx,
+                bytes_written: true,
+                result: Err((class, format!("{e:#}"))),
+            });
+        }
+    }
+}
+
+/// One prober thread: sleep the probe interval (stop-aware), honor `Down`
+/// cooldowns, claim half-open trial slots, then `GET /healthz` (+
+/// `/v1/models` discovery) and book the result on the same state machine
+/// the passive path uses.
+fn prober_loop(b: &Backend, cfg: &RouterConfig, metrics: &RouterMetrics, stopping: &AtomicBool) {
+    loop {
+        if stop_aware_sleep(stopping, Duration::from_millis(cfg.probe_interval_ms.max(1))) {
+            return;
+        }
+        let now = Instant::now();
+        {
+            let mut st = lock_unpoisoned(&b.state);
+            match st.health {
+                BackendHealth::Down => {
+                    let due = match st.cooldown_until {
+                        Some(t) => now >= t,
+                        None => true,
+                    };
+                    if !due {
+                        continue;
+                    }
+                    st.health = BackendHealth::HalfOpen;
+                    st.trial_pending = true;
+                }
+                BackendHealth::HalfOpen => {
+                    if st.trial_pending {
+                        continue; // a dispatch trial is already in flight
+                    }
+                    st.trial_pending = true;
+                }
+                BackendHealth::Up | BackendHealth::Degraded => {}
+            }
+        }
+        match probe(b.addr, cfg) {
+            Ok(models) => {
+                let mut st = lock_unpoisoned(&b.state);
+                note_success(&mut st);
+                if !models.is_empty() {
+                    st.models = models;
+                }
+            }
+            Err(_) => {
+                let mut st = lock_unpoisoned(&b.state);
+                note_failure(cfg, metrics, &mut st, Instant::now());
+            }
+        }
+    }
+}
+
+/// One active probe: `GET /healthz` must answer 200; `GET /v1/models` is
+/// optional capability discovery (single-model fronts 404 it — fine).
+fn probe(addr: SocketAddr, cfg: &RouterConfig) -> Result<Vec<String>> {
+    let t = Duration::from_millis(cfg.probe_timeout_ms.max(1));
+    let mut c = HttpClient::connect_timeout(addr, t)?;
+    c.set_read_timeout(Some(t))?;
+    let (status, _body) = c.get("/healthz")?;
+    anyhow::ensure!(status == 200, "healthz answered {status}");
+    let mut models = Vec::new();
+    if let Ok((200, body)) = c.get("/v1/models") {
+        if let Ok(doc) = json::parse(&body) {
+            if let Some(arr) = doc.get("models").as_arr() {
+                for m in arr {
+                    if let Some(name) = m.get("name").as_str() {
+                        models.push(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    Ok(models)
+}
+
+/// Sleep `total` in small chunks, returning `true` as soon as `stopping`
+/// is observed (so probers join promptly on shutdown).
+fn stop_aware_sleep(stopping: &AtomicBool, total: Duration) -> bool {
+    let mut left = total;
+    while left > Duration::ZERO {
+        if stopping.load(Ordering::SeqCst) {
+            return true;
+        }
+        let chunk = left.min(SLEEP_CHUNK);
+        std::thread::sleep(chunk);
+        left = left.saturating_sub(chunk);
+    }
+    stopping.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> BackendState {
+        BackendState {
+            health: BackendHealth::Up,
+            consec_failures: 0,
+            down_epochs: 0,
+            cooldown_until: None,
+            trial_pending: false,
+            inflight: 0,
+            requests: 0,
+            failures: 0,
+            models: Vec::new(),
+            latency_us: LatencyRecorder::with_capacity(64),
+            idle: Vec::new(),
+        }
+    }
+
+    fn cfg() -> RouterConfig {
+        RouterConfig { fail_threshold: 2, ..RouterConfig::default() }
+    }
+
+    #[test]
+    fn breaker_walks_up_degraded_down_halfopen_up() {
+        let cfg = cfg();
+        let m = RouterMetrics::default();
+        let mut st = state();
+        let now = Instant::now();
+
+        note_failure(&cfg, &m, &mut st, now);
+        assert_eq!(st.health, BackendHealth::Degraded);
+        assert_eq!(m.breaker_trips.load(Ordering::SeqCst), 0);
+
+        note_failure(&cfg, &m, &mut st, now);
+        assert_eq!(st.health, BackendHealth::Down);
+        assert_eq!(m.breaker_trips.load(Ordering::SeqCst), 1, "threshold trips once");
+        assert!(st.cooldown_until.is_some());
+
+        // Cooldown elapsed → half-open trial; a failed trial re-opens with
+        // a longer cooldown but no new trip.
+        st.health = BackendHealth::HalfOpen;
+        st.trial_pending = true;
+        let epoch_before = st.down_epochs;
+        note_failure(&cfg, &m, &mut st, now);
+        assert_eq!(st.health, BackendHealth::Down);
+        assert_eq!(m.breaker_trips.load(Ordering::SeqCst), 1, "reprobe failure is not a new trip");
+        assert_eq!(st.down_epochs, epoch_before + 1);
+
+        // A success from anywhere resets everything.
+        st.health = BackendHealth::HalfOpen;
+        note_success(&mut st);
+        assert_eq!(st.health, BackendHealth::Up);
+        assert_eq!(st.consec_failures, 0);
+        assert_eq!(st.down_epochs, 0);
+        assert!(st.cooldown_until.is_none());
+    }
+
+    #[test]
+    fn success_interrupts_the_failure_streak() {
+        let cfg = cfg();
+        let m = RouterMetrics::default();
+        let mut st = state();
+        let now = Instant::now();
+        note_failure(&cfg, &m, &mut st, now);
+        note_success(&mut st);
+        note_failure(&cfg, &m, &mut st, now);
+        assert_eq!(st.health, BackendHealth::Degraded, "streak restarted after success");
+        assert_eq!(m.breaker_trips.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn backoffs_are_deterministic_exponential_and_capped() {
+        let cfg = RouterConfig {
+            backoff_base_ms: 100,
+            backoff_max_ms: 1000,
+            retry_backoff_ms: 10,
+            seed: 7,
+            ..RouterConfig::default()
+        };
+        // Same inputs → same jitter (no wall-clock randomness).
+        assert_eq!(reprobe_backoff_ms(&cfg, 0, 5), reprobe_backoff_ms(&cfg, 0, 5));
+        assert_eq!(retry_backoff_ms(&cfg, 1, 42), retry_backoff_ms(&cfg, 1, 42));
+        // Exponential growth up to the cap (+ ≤25% jitter).
+        let e0 = reprobe_backoff_ms(&cfg, 0, 1);
+        let e3 = reprobe_backoff_ms(&cfg, 3, 1);
+        assert!((100..=125).contains(&e0), "{e0}");
+        assert!((800..=1000 + 250).contains(&e3), "{e3}");
+        assert!(reprobe_backoff_ms(&cfg, 30, 1) <= 1000 + 250);
+        // Retry backoff doubles per retry.
+        let r1 = retry_backoff_ms(&cfg, 1, 9);
+        let r3 = retry_backoff_ms(&cfg, 3, 9);
+        assert!((10..20).contains(&r1), "{r1}");
+        assert!((40..50).contains(&r3), "{r3}");
+    }
+
+    #[test]
+    fn consistent_rank_is_pure_and_model_sensitive() {
+        let k1 = model_key(Some("deit-mini"));
+        let k2 = model_key(Some("ffn-relu"));
+        assert_ne!(k1, k2);
+        assert_eq!(model_key(None), model_key(Some("")));
+        assert_eq!(consistent_rank(1, k1, 0), consistent_rank(1, k1, 0));
+        // Different backends get different ranks for the same key.
+        assert_ne!(consistent_rank(1, k1, 0), consistent_rank(1, k1, 1));
+        // Different models reshuffle the preference order eventually.
+        let order = |k: u64| {
+            let mut v: Vec<usize> = (0..8).collect();
+            v.sort_by_key(|&i| consistent_rank(1, k, i));
+            v
+        };
+        assert_ne!(order(k1), order(k2), "8 backends, 2 keys: same order is ~1/40320");
+    }
+
+    #[test]
+    fn retry_gate_honors_idempotency() {
+        assert!(retry_allowed(true, true), "idempotent retries always");
+        assert!(retry_allowed(true, false));
+        assert!(retry_allowed(false, false), "nothing written yet: safe");
+        assert!(!retry_allowed(false, true), "non-idempotent after write: never");
+    }
+}

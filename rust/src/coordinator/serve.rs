@@ -112,7 +112,9 @@ impl Priority {
 
 /// Why an inference request failed. The HTTP front maps these onto status
 /// codes (`DeadlineExpired` → 504, `Stopped` → 503, `BadRequest` → 400,
-/// `Backend` → 500).
+/// `Backend` → 500, `Upstream` → 502, `UpstreamTimeout` → 504) — one
+/// taxonomy shared by the single-host front and the `hinm route` router
+/// tier, so a client sees the same statuses whichever tier it talks to.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum InferError {
     /// The deadline passed before the request was executed; the backend
@@ -126,6 +128,15 @@ pub enum InferError {
     /// The request was malformed (e.g. wrong activation length) and was
     /// rejected before queuing.
     BadRequest(String),
+    /// A downstream replica host was unreachable (connection refused,
+    /// reset, or closed mid-response) and no retry could answer — the
+    /// request may never have reached an engine. Distinct from
+    /// [`InferError::UpstreamTimeout`] so operators can tell dead hosts
+    /// (502) from slow ones (504).
+    Upstream(String),
+    /// A downstream replica host accepted the request but did not answer
+    /// within the attempt budget.
+    UpstreamTimeout(String),
 }
 
 impl std::fmt::Display for InferError {
@@ -135,6 +146,8 @@ impl std::fmt::Display for InferError {
             InferError::Backend(m) => write!(f, "{m}"),
             InferError::Stopped => write!(f, "server stopped"),
             InferError::BadRequest(m) => write!(f, "bad request: {m}"),
+            InferError::Upstream(m) => write!(f, "upstream unreachable: {m}"),
+            InferError::UpstreamTimeout(m) => write!(f, "upstream timed out: {m}"),
         }
     }
 }

@@ -7,6 +7,7 @@
 //!   info                                        list AOT artifacts
 //!   build                                       serialize catalog models to versioned artifacts
 //!   serve                                       multi-replica batched inference engine
+//!   route                                       fault-tolerant router over serve hosts
 //!   serve-demo                                  alias: serve --backend pjrt
 //!   train-demo                                  short LM train loop via the AOT step
 
@@ -32,6 +33,7 @@ fn main() {
         "info" => cmd_info(args),
         "build" => cmd_build(args),
         "serve" => cmd_serve(args),
+        "route" => cmd_route(args),
         "serve-demo" => {
             // Historical alias for the PJRT path; explicit flags still win.
             let mut full = vec!["--backend".to_string(), "pjrt".to_string()];
@@ -81,6 +83,14 @@ fn usage() {
          \x20         --model-dir DIR serves every artifact in DIR behind one\n\
          \x20         front (requests route on the body's \"model\" field; POST\n\
          \x20         /v1/admin/reload hot-swaps new artifact versions)\n\
+         \x20 route   --backends HOST:PORT,HOST:PORT[,…] [--http ADDR] [--http-workers W]\n\
+         \x20         [--probe-interval-ms MS] [--probe-timeout-ms MS] [--fail-threshold N]\n\
+         \x20         [--per-try-timeout-ms MS] [--connect-timeout-ms MS] [--max-attempts N]\n\
+         \x20         [--hedge-floor-ms MS] [--hedge-ceil-ms MS] [--retry-backoff-ms MS]\n\
+         \x20         [--backoff-base-ms MS] [--backoff-max-ms MS] [--max-inflight N] [--seed S]\n\
+         \x20         fault-tolerant router over `hinm serve --http` hosts: health\n\
+         \x20         probing + circuit breaking, deadline-aware retries, hedged\n\
+         \x20         requests, least-loaded dispatch, 503 backpressure (DESIGN.md §19)\n\
          \x20 serve-demo  alias for: serve --backend pjrt\n\
          \x20 train-demo  [--steps 50]      LM training via AOT train step\n"
     );
@@ -595,6 +605,90 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         ps.stop();
     }
     Ok(())
+}
+
+fn cmd_route(args: Vec<String>) -> Result<()> {
+    use std::net::ToSocketAddrs;
+
+    let cli = Cli::new("hinm route", "fault-tolerant router over `hinm serve --http` hosts")
+        .opt("backends", None, "comma-separated downstream HOST:PORT list (required)")
+        .opt("http", Some("127.0.0.1:8080"), "router listen address")
+        .opt("http-workers", Some("8"), "HTTP connection-handler threads")
+        .opt("probe-interval-ms", Some("1000"), "health-probe period per backend, ms")
+        .opt("probe-timeout-ms", Some("500"), "health-probe connect/read timeout, ms")
+        .opt("fail-threshold", Some("3"), "consecutive failures that trip a backend Down")
+        .opt("per-try-timeout-ms", Some("2000"), "read timeout per downstream attempt, ms")
+        .opt("connect-timeout-ms", Some("500"), "connect timeout per downstream attempt, ms")
+        .opt("max-attempts", Some("3"), "attempt budget per request (first try + hedges + retries)")
+        .opt("hedge-floor-ms", Some("5"), "lower clamp on the p95 hedge delay, ms")
+        .opt("hedge-ceil-ms", Some("500"), "upper clamp on the p95 hedge delay, ms")
+        .opt("retry-backoff-ms", Some("10"), "base retry backoff, ms (doubles per retry, seeded jitter)")
+        .opt("backoff-base-ms", Some("500"), "base reprobe cooldown after a breaker trip, ms")
+        .opt("backoff-max-ms", Some("10000"), "reprobe cooldown cap, ms")
+        .opt("max-inflight", Some("256"), "admission cap before answering 503 + Retry-After")
+        .opt("seed", Some("7"), "seed for backoff jitter + consistent-hash tiebreaks");
+    let a = cli.parse_tail(args);
+
+    let spec = a
+        .get("backends")
+        .context("--backends is required (comma-separated HOST:PORT list)")?;
+    let mut backends = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let addr = name
+            .to_socket_addrs()
+            .with_context(|| format!("resolving backend {name:?}"))?
+            .next()
+            .with_context(|| format!("backend {name:?} resolved to no address"))?;
+        backends.push((name.to_string(), addr));
+    }
+    if backends.is_empty() {
+        bail!("--backends selected nothing");
+    }
+
+    let dflt = hinm::coordinator::RouterConfig::default();
+    let cfg = hinm::coordinator::RouterConfig {
+        probe_interval_ms: a.u64_or("probe-interval-ms", dflt.probe_interval_ms),
+        probe_timeout_ms: a.u64_or("probe-timeout-ms", dflt.probe_timeout_ms),
+        fail_threshold: a.u64_or("fail-threshold", dflt.fail_threshold as u64) as u32,
+        per_try_timeout_ms: a.u64_or("per-try-timeout-ms", dflt.per_try_timeout_ms),
+        connect_timeout_ms: a.u64_or("connect-timeout-ms", dflt.connect_timeout_ms),
+        max_attempts: a.u64_or("max-attempts", dflt.max_attempts as u64) as u32,
+        hedge_floor_ms: a.u64_or("hedge-floor-ms", dflt.hedge_floor_ms),
+        hedge_ceil_ms: a.u64_or("hedge-ceil-ms", dflt.hedge_ceil_ms),
+        retry_backoff_ms: a.u64_or("retry-backoff-ms", dflt.retry_backoff_ms),
+        backoff_base_ms: a.u64_or("backoff-base-ms", dflt.backoff_base_ms),
+        backoff_max_ms: a.u64_or("backoff-max-ms", dflt.backoff_max_ms),
+        max_inflight: a.usize_or("max-inflight", dflt.max_inflight),
+        drain_ms: dflt.drain_ms,
+        seed: a.u64_or("seed", 7),
+    };
+
+    println!(
+        "router over {} backend(s): {}",
+        backends.len(),
+        backends.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+    );
+    println!(
+        "policy: fail-threshold {} | per-try {} ms | {} attempts | hedge p95 clamp [{}, {}] ms | max-inflight {}",
+        cfg.fail_threshold,
+        cfg.per_try_timeout_ms,
+        cfg.max_attempts,
+        cfg.hedge_floor_ms,
+        cfg.hedge_ceil_ms,
+        cfg.max_inflight
+    );
+
+    let router = hinm::coordinator::Router::start(backends, cfg)?;
+    let front = hinm::net::RouterFront::start(
+        &a.get_or("http", "127.0.0.1:8080"),
+        router,
+        a.usize_or("http-workers", 8),
+    )?;
+    println!("router listening on http://{}", front.local_addr());
+    println!("  POST /v1/infer | GET /v1/models | GET /v1/metrics | GET /healthz  (Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// `hinm serve --model-dir DIR`: scan `DIR` into a

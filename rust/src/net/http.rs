@@ -67,18 +67,28 @@ impl HttpRequest {
 /// One HTTP response: status + JSON (or plain-text) body.
 #[derive(Clone, Debug)]
 pub struct HttpResponse {
-    /// Status code (200, 400, 404, 405, 500, 503, 504, …).
+    /// Status code (200, 400, 404, 405, 500, 502, 503, 504, …).
     pub status: u16,
     /// `Content-Type` header value.
     pub content_type: &'static str,
     /// Response body.
     pub body: String,
+    /// Extra response headers `(name, value)`, written verbatim after the
+    /// framing headers. Empty for most responses; the router front uses it
+    /// for `X-Hinm-Attempt` and `Retry-After`.
+    pub headers: Vec<(String, String)>,
 }
 
 impl HttpResponse {
     /// A JSON response with the given status.
     pub fn json(status: u16, body: String) -> HttpResponse {
-        HttpResponse { status, content_type: "application/json", body }
+        HttpResponse { status, content_type: "application/json", body, headers: Vec::new() }
+    }
+
+    /// Attach an extra response header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> HttpResponse {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
     }
 }
 
@@ -89,6 +99,7 @@ fn status_reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         500 => "Internal Server Error",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Unknown",
@@ -351,37 +362,178 @@ fn write_response(
     resp: &HttpResponse,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status,
         status_reason(resp.status),
         resp.content_type,
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(resp.body.as_bytes())?;
     stream.flush()
+}
+
+/// Read one HTTP/1.1 response: `(status, headers, body)` with lowercased
+/// header names, mirroring [`read_request`]. `Ok(None)` = clean EOF before
+/// any status byte arrived (the keep-alive peer closed an idle connection
+/// — [`HttpClient`] retries exactly that case once on a reused
+/// connection). `ErrorKind::InvalidData` = malformed response.
+///
+/// The body allocation is bounded by [`MAX_BODY_BYTES`], so an untrusted
+/// (or byte-flipped — see `rust/tests/fuzz_http.rs`) downstream cannot
+/// make the client allocate unboundedly by promising a huge
+/// `Content-Length`. Generic over [`BufRead`] so the fuzz harness can
+/// drive it from in-memory byte slices.
+pub fn read_response<R: BufRead>(
+    reader: &mut R,
+) -> std::io::Result<Option<(u16, Vec<(String, String)>, String)>> {
+    let mut line = String::new();
+    if read_line_limited(reader, &mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    if !parts.next().is_some_and(|v| v.starts_with("HTTP/")) {
+        return Err(invalid("status line has no HTTP version"));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| invalid("status line has no numeric status"))?;
+
+    let mut headers = Vec::new();
+    let mut content_len: Option<usize> = None;
+    loop {
+        if headers.len() > MAX_HEADERS {
+            return Err(invalid("too many response headers"));
+        }
+        let mut h = String::new();
+        if read_line_limited(reader, &mut h)? == 0 {
+            return Err(invalid("eof inside response headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').ok_or_else(|| invalid("response header without ':'"))?;
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim().to_string();
+        if k == "transfer-encoding" {
+            return Err(invalid("Transfer-Encoding is not supported"));
+        }
+        if k == "content-length" {
+            let n: usize = v.parse().map_err(|_| invalid("unparseable Content-Length"))?;
+            if content_len.is_some_and(|prev| prev != n) {
+                return Err(invalid("conflicting Content-Length headers"));
+            }
+            if n > MAX_BODY_BYTES {
+                return Err(invalid("response body too large"));
+            }
+            content_len = Some(n);
+        }
+        headers.push((k, v));
+    }
+    let content_len = content_len.unwrap_or(0);
+
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| invalid("response body is not UTF-8"))?;
+    Ok(Some((status, headers, body)))
 }
 
 /// Minimal blocking HTTP/1.1 client over one keep-alive connection.
 ///
 /// Sends `Content-Length`-framed requests and reads framed responses;
 /// exactly the dialect [`HttpServer`] speaks. Used by the integration
-/// tests and the socket-mode load bench.
+/// tests, the socket-mode load bench, and the `hinm route` router's
+/// downstream attempts.
+///
+/// A *reused* keep-alive connection can go stale: the server closed it
+/// while idle (e.g. [`IDLE_TIMEOUT`] fired, or the process restarted), so
+/// the next request sees a write failure or a clean EOF before any
+/// response byte. Both are retried **once** over a fresh connection —
+/// transparently, because no response bytes were received, so the server
+/// cannot have acted on the request over the dead connection. A failure
+/// on a *fresh* connection, or any failure after response bytes arrived,
+/// is surfaced to the caller unretried.
 pub struct HttpClient {
+    addr: SocketAddr,
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+    connect_timeout: Option<Duration>,
+    read_timeout: Option<Duration>,
+    /// Responses completed on the current connection; `> 0` marks the
+    /// connection as reused (stale-retry eligible).
+    served: u64,
+}
+
+/// Why one send attempt failed, split so the caller can retry exactly the
+/// stale-keep-alive cases (no response bytes ⇒ the request was provably
+/// not answered over this connection).
+enum SendError {
+    /// The reused connection was already dead: write failed, or the
+    /// server closed before sending any response byte.
+    Stale(&'static str),
+    /// A real failure (timeout, malformed response, mid-response EOF).
+    Io(std::io::Error),
 }
 
 impl HttpClient {
     /// Connect to a server (e.g. the address from
     /// [`HttpServer::local_addr`]).
     pub fn connect(addr: SocketAddr) -> Result<HttpClient> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        Self::open(addr, None)
+    }
+
+    /// [`HttpClient::connect`] with a bound on how long the TCP connect
+    /// may block (`TcpStream::connect_timeout`); remembered and re-applied
+    /// on stale-keep-alive reconnects. The timeout must be non-zero.
+    pub fn connect_timeout(addr: SocketAddr, timeout: Duration) -> Result<HttpClient> {
+        Self::open(addr, Some(timeout))
+    }
+
+    fn open(addr: SocketAddr, connect_timeout: Option<Duration>) -> Result<HttpClient> {
+        let stream = match connect_timeout {
+            Some(t) => TcpStream::connect_timeout(&addr, t)
+                .with_context(|| format!("connecting to {addr} (timeout {t:?})"))?,
+            None => {
+                TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?
+            }
+        };
         let _ = stream.set_nodelay(true);
         let reader = BufReader::new(stream.try_clone().context("cloning client stream")?);
-        Ok(HttpClient { stream, reader })
+        Ok(HttpClient {
+            addr,
+            stream,
+            reader,
+            connect_timeout,
+            read_timeout: None,
+            served: 0,
+        })
+    }
+
+    /// Bound how long a response read may block (`None` = block forever).
+    /// Remembered and re-applied on stale-keep-alive reconnects. A read
+    /// timeout surfaces as an I/O error from the request, never as a
+    /// stale-retry (the server may still be processing the request).
+    /// The duration must be non-zero.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout).context("setting read timeout")?;
+        self.read_timeout = timeout;
+        Ok(())
+    }
+
+    /// The server address this client (re)connects to.
+    pub fn peer_addr(&self) -> SocketAddr {
+        self.addr
     }
 
     /// `GET path` → `(status, body)`.
@@ -396,47 +548,242 @@ impl HttpClient {
 
     /// Send one request and block for its response.
     pub fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+        let (status, _headers, body) = self.request_with_headers(method, path, body)?;
+        Ok((status, body))
+    }
+
+    /// [`HttpClient::request`], also returning the response headers
+    /// (lowercased names, arrival order) — the router front reads
+    /// `retry-after` and surfaces `x-hinm-attempt` through this.
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, Vec<(String, String)>, String)> {
+        match self.send_once(method, path, body) {
+            Ok(r) => {
+                self.served += 1;
+                Ok(r)
+            }
+            Err(SendError::Stale(why)) if self.served > 0 => {
+                // Reused connection went stale while idle; one transparent
+                // retry over a fresh connection.
+                self.reconnect()
+                    .with_context(|| format!("reconnecting after stale keep-alive ({why})"))?;
+                match self.send_once(method, path, body) {
+                    Ok(r) => {
+                        self.served += 1;
+                        Ok(r)
+                    }
+                    Err(e) => Err(send_err(e).context("after one stale-keep-alive retry")),
+                }
+            }
+            Err(e) => Err(send_err(e)),
+        }
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        let fresh = Self::open(self.addr, self.connect_timeout)?;
+        self.stream = fresh.stream;
+        self.reader = fresh.reader;
+        self.served = 0;
+        if self.read_timeout.is_some() {
+            self.stream
+                .set_read_timeout(self.read_timeout)
+                .context("re-applying read timeout")?;
+        }
+        Ok(())
+    }
+
+    fn send_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::result::Result<(u16, Vec<(String, String)>, String), SendError> {
         let b = body.unwrap_or("");
         let req = format!(
             "{method} {path} HTTP/1.1\r\nHost: hinm\r\nContent-Type: application/json\r\n\
              Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{b}",
             b.len()
         );
-        self.stream.write_all(req.as_bytes()).context("writing request")?;
-        self.stream.flush().context("flushing request")?;
+        if let Err(e) = self.stream.write_all(req.as_bytes()).and_then(|()| self.stream.flush()) {
+            return Err(match e.kind() {
+                std::io::ErrorKind::BrokenPipe
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::NotConnected => {
+                    SendError::Stale("connection closed during write")
+                }
+                _ => SendError::Io(e),
+            });
+        }
+        match read_response(&mut self.reader) {
+            Ok(Some(r)) => Ok(r),
+            Ok(None) => Err(SendError::Stale("server closed before responding")),
+            Err(e) => Err(SendError::Io(e)),
+        }
+    }
+}
 
-        let mut line = String::new();
-        anyhow::ensure!(
-            self.reader.read_line(&mut line).context("reading status line")? > 0,
-            "server closed the connection before responding"
+/// Lift a [`SendError`] into `anyhow` *preserving the `io::Error` source*
+/// so callers (the router's upstream classifier) can recover the
+/// `ErrorKind` from the chain. A stale close is reported as
+/// `UnexpectedEof`.
+fn send_err(e: SendError) -> anyhow::Error {
+    match e {
+        SendError::Stale(why) => anyhow::Error::new(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            why,
+        ))
+        .context("server closed the connection before responding"),
+        SendError::Io(e) => anyhow::Error::new(e).context("request failed"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn resp_bytes(s: &str) -> Cursor<Vec<u8>> {
+        Cursor::new(s.as_bytes().to_vec())
+    }
+
+    #[test]
+    fn read_response_parses_a_framed_response() {
+        let mut r = resp_bytes(
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: 2\r\n\r\nok",
         );
-        let status: u16 = line
-            .split_whitespace()
-            .nth(1)
-            .with_context(|| format!("malformed status line {line:?}"))?
-            .parse()
-            .with_context(|| format!("malformed status in {line:?}"))?;
+        let (status, headers, body) = read_response(&mut r).unwrap().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok");
+        assert!(headers.iter().any(|(k, v)| k == "content-type" && v == "application/json"));
+    }
 
-        let mut content_len = 0usize;
-        loop {
-            let mut h = String::new();
-            anyhow::ensure!(
-                self.reader.read_line(&mut h).context("reading header")? > 0,
-                "eof in response headers"
-            );
-            let h = h.trim_end();
-            if h.is_empty() {
-                break;
-            }
-            if let Some((k, v)) = h.split_once(':') {
-                if k.trim().eq_ignore_ascii_case("content-length") {
-                    content_len =
-                        v.trim().parse().with_context(|| format!("bad Content-Length {v:?}"))?;
+    #[test]
+    fn read_response_clean_eof_is_none() {
+        assert!(read_response(&mut resp_bytes("")).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_response_rejects_malformed_frames() {
+        for bad in [
+            "nonsense\r\n\r\n",                                    // no HTTP version
+            "HTTP/1.1 banana\r\n\r\n",                             // no numeric status
+            "HTTP/1.1 200 OK\r\nContent-Length: 5\r\nContent-Length: 7\r\n\r\n", // conflict
+            "HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n", // unsupported framing
+            &format!("HTTP/1.1 200 OK\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1),
+        ] {
+            let err = read_response(&mut resp_bytes(bad)).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn read_response_truncated_body_is_an_io_error_not_a_panic() {
+        let mut r = resp_bytes("HTTP/1.1 200 OK\r\nContent-Length: 10\r\n\r\nshort");
+        let err = read_response(&mut r).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    /// A server that answers exactly one request per accepted connection,
+    /// then closes it *without* `Connection: close` — the shape of a
+    /// keep-alive peer idling out between a client's requests.
+    fn one_shot_server(conns: usize) -> (SocketAddr, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            for _ in 0..conns {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                if read_request(&mut reader).unwrap().is_some() {
+                    let mut w = stream;
+                    w.write_all(
+                        b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                          Content-Length: 2\r\nConnection: keep-alive\r\n\r\nok",
+                    )
+                    .unwrap();
+                    w.flush().unwrap();
+                    // Dropping the stream closes the "keep-alive"
+                    // connection from the server side.
                 }
             }
-        }
-        let mut body = vec![0u8; content_len];
-        self.reader.read_exact(&mut body).context("reading response body")?;
-        Ok((status, String::from_utf8(body).context("response body is not UTF-8")?))
+        });
+        (addr, t)
+    }
+
+    #[test]
+    fn stale_keep_alive_reconnects_transparently_once() {
+        let (addr, server) = one_shot_server(2);
+        let mut c = HttpClient::connect(addr).unwrap();
+        let (status, body) = c.get("/a").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok"));
+        // The server closed the first connection after responding; this
+        // reused-connection request must transparently reconnect.
+        let (status, body) = c.get("/b").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok"), "stale keep-alive must retry once");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn fresh_connection_failures_are_not_retried() {
+        // A listener that accepts and instantly closes: the client's very
+        // first request gets EOF before a response. served == 0, so no
+        // stale-retry fires and the error surfaces.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            drop(stream);
+        });
+        let mut c = HttpClient::connect(addr).unwrap();
+        let err = c.get("/x").unwrap_err();
+        assert!(
+            err.to_string().contains("closed the connection"),
+            "unexpected error: {err:#}"
+        );
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_timeout_applies_and_refused_ports_error() {
+        // Bind-then-drop guarantees a port with no listener.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let err = HttpClient::connect_timeout(addr, Duration::from_millis(300)).unwrap_err();
+        assert!(err.to_string().contains("connecting to"), "{err:#}");
+    }
+
+    #[test]
+    fn read_timeout_surfaces_as_an_error_not_a_hang() {
+        // A listener that accepts but never responds.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+            drop(stream);
+        });
+        let mut c = HttpClient::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let err = c.get("/slow").unwrap_err();
+        // Timeouts must NOT look like stale keep-alive closes: the chain
+        // carries the timeout/would-block io kind, not UnexpectedEof.
+        let kind = err
+            .chain()
+            .find_map(|c| c.downcast_ref::<std::io::Error>())
+            .map(|e| e.kind());
+        assert!(
+            matches!(
+                kind,
+                Some(std::io::ErrorKind::WouldBlock) | Some(std::io::ErrorKind::TimedOut)
+            ),
+            "expected a timeout kind, got {kind:?} in {err:#}"
+        );
+        t.join().unwrap();
     }
 }

@@ -27,13 +27,28 @@
 //! | `/v1/admin/reload` | POST | rescan the model dir and hot-swap changed versions; returns the per-model [`ReloadReport`](crate::runtime::ReloadReport) |
 //! | `/healthz` | GET | liveness probe + model count |
 //!
+//! Above the single-host fronts sits the `hinm route` router tier
+//! ([`route`], DESIGN.md §19): a separate process fanning `POST /v1/infer`
+//! out over many `hinm serve` hosts with health probing, deadline-aware
+//! retries, hedging, and circuit breaking:
+//!
+//! | Route | Method | Behaviour |
+//! |---|---|---|
+//! | `/v1/infer` | POST | proxied to the least-loaded live backend; body and response bytes pass through verbatim; `X-Hinm-Attempt` reports attempts spent |
+//! | `/v1/metrics` | GET | router counters (hedges/retries/breaker trips) + per-backend breaker state, JSON or `?format=prometheus` |
+//! | `/v1/models` | GET | union of the models the live backends advertise |
+//! | `/healthz` | GET | liveness + live/total backend counts |
+//!
 //! Backpressure propagates naturally: a full engine queue blocks the HTTP
 //! worker inside `infer_opts`, which stalls that connection while the
 //! other pool workers keep serving. Engine errors map onto status codes
-//! via [`protocol::status_for`] (timeout → 504, stopped → 503, …).
+//! via [`protocol::status_for`] (timeout → 504, stopped → 503, upstream
+//! refused/reset → 502, upstream timeout → 504, …) through the shared
+//! [`protocol::error_response`] renderer.
 
 pub mod http;
 pub mod protocol;
+pub mod route;
 
 use crate::coordinator::metrics::ModelCounters;
 use crate::coordinator::serve::ServerHandle;
@@ -49,6 +64,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 pub use http::HttpClient;
+pub use route::{FaultyBackend, RouterFront};
 
 /// The HTTP front door: owns the listener/worker threads and the routes.
 ///
@@ -171,6 +187,7 @@ fn metrics_route(
             status: 200,
             content_type: PROMETHEUS_CONTENT_TYPE,
             body: protocol::metrics_prometheus(engine.metrics(), cache, kernel.as_ref()),
+            headers: Vec::new(),
         },
         other => HttpResponse::json(
             400,
@@ -206,10 +223,11 @@ fn infer_route(req: &HttpRequest, engine: &ServerHandle) -> HttpResponse {
     let deadline = ir.deadline_ms.map(Duration::from_millis);
     match engine.infer_opts(ir.x, ir.priority, deadline) {
         Ok(y) => HttpResponse::json(200, protocol::infer_response(&y).compact()),
-        Err(e) => {
-            let (status, kind) = protocol::status_for(&e);
-            HttpResponse::json(status, protocol::error_body(kind, &e.to_string()).compact())
-        }
+        // One shared mapper (protocol::error_response) instead of an
+        // open-coded status match: upstream I/O failures keep their 502/504
+        // taxonomy here exactly as on the router tier, rather than
+        // collapsing into a blanket 500.
+        Err(e) => protocol::error_response(&e),
     }
 }
 
@@ -376,6 +394,7 @@ fn metrics_multi_route(req: &HttpRequest, router: &MultiRouter) -> HttpResponse 
                 router.kernel.as_ref(),
                 counters,
             ),
+            headers: Vec::new(),
         },
         other => HttpResponse::json(
             400,
@@ -406,10 +425,7 @@ fn infer_multi_route(req: &HttpRequest, router: &MultiRouter) -> HttpResponse {
     let deadline = ir.deadline_ms.map(Duration::from_millis);
     match service.handle.infer_opts(ir.x, ir.priority, deadline) {
         Ok(y) => HttpResponse::json(200, protocol::infer_response(&y).compact()),
-        Err(e) => {
-            let (status, kind) = protocol::status_for(&e);
-            HttpResponse::json(status, protocol::error_body(kind, &e.to_string()).compact())
-        }
+        Err(e) => protocol::error_response(&e),
     }
 }
 

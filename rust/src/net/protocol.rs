@@ -18,6 +18,7 @@
 //! [`status_for`].
 
 use crate::coordinator::metrics::{EngineMetrics, ModelCounters};
+use crate::coordinator::router::RouterSnapshot;
 use crate::coordinator::serve::{InferError, Priority};
 use crate::runtime::backend::CacheStats;
 use crate::spmm::KernelInfo;
@@ -138,14 +139,37 @@ pub fn error_body(kind: &str, message: &str) -> Json {
 }
 
 /// Map an engine error onto `(HTTP status, machine-readable kind)`.
+///
+/// The upstream variants keep the router tier and the single-host front on
+/// one taxonomy: an unreachable replica host (refused/reset — the request
+/// may never have reached an engine) is a 502, a replica that accepted but
+/// ran out the attempt budget is a 504, and neither collapses into the
+/// blanket 500 that `Backend` reserves for *execution* failures.
 pub fn status_for(e: &InferError) -> (u16, &'static str) {
     match e {
         InferError::DeadlineExpired => (504, "deadline_expired"),
         InferError::Backend(_) => (500, "backend_error"),
         InferError::Stopped => (503, "server_stopped"),
         InferError::BadRequest(_) => (400, "bad_request"),
+        InferError::Upstream(_) => (502, "bad_gateway"),
+        InferError::UpstreamTimeout(_) => (504, "upstream_timeout"),
     }
 }
+
+/// Render an [`InferError`] as the uniform error body with its mapped
+/// status: the one place engine/upstream errors become HTTP responses, so
+/// the single-host front, the multi-model front, and the router tier
+/// cannot drift apart.
+pub fn error_response(e: &InferError) -> crate::net::http::HttpResponse {
+    let (status, kind) = status_for(e);
+    crate::net::http::HttpResponse::json(status, error_body(kind, &e.to_string()).compact())
+}
+
+/// Response header carrying how many downstream attempts (first try +
+/// retries + hedges) the router spent answering a request. Lowercase form
+/// `x-hinm-attempt` is what [`crate::net::http::HttpRequest::header`] and
+/// the client-side header list use.
+pub const X_HINM_ATTEMPT: &str = "X-Hinm-Attempt";
 
 /// `GET /v1/metrics` body: aggregate latency/throughput, per-priority and
 /// expiry counters, per-replica counters, cache hit/miss stats when a
@@ -272,17 +296,6 @@ pub fn metrics_prometheus_with_models(
     kernel: Option<&KernelInfo>,
     models: Option<&ModelCounters>,
 ) -> String {
-    // One family = HELP + TYPE + its samples, emitted as a single group
-    // (the exposition format forbids interleaving a family's samples with
-    // other families).
-    fn family(out: &mut String, name: &str, kind: &str, help: &str, samples: &[String]) {
-        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
-        for s in samples {
-            out.push_str(s);
-            out.push('\n');
-        }
-    }
-
     let lat = m.aggregate_latency();
     let pct = lat.percentiles(&[50.0, 95.0, 99.0]);
     let sched = m.scheduler_stats();
@@ -456,6 +469,151 @@ pub fn metrics_prometheus_with_models(
     out
 }
 
+/// One family = HELP + TYPE + its samples, emitted as a single group (the
+/// exposition format forbids interleaving a family's samples with other
+/// families — pinned by `metrics_prometheus_groups_families…`).
+fn family(out: &mut String, name: &str, kind: &str, help: &str, samples: &[String]) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    for s in samples {
+        out.push_str(s);
+        out.push('\n');
+    }
+}
+
+/// `GET /v1/metrics` body on the `hinm route` router tier: the routing
+/// counters (requests/hedges/retries/breaker trips/rejections) plus one
+/// block per backend with its breaker state, in-flight count, and measured
+/// p95 (DESIGN.md §19). Same dual-format contract as the engine metrics.
+pub fn router_metrics_json(s: &RouterSnapshot) -> Json {
+    let backends: Vec<Json> = s
+        .backends
+        .iter()
+        .map(|b| {
+            Json::obj(vec![
+                ("name", Json::str(&b.name)),
+                ("state", Json::str(b.health.as_str())),
+                ("inflight", Json::num(b.inflight as f64)),
+                ("consecutive_failures", Json::num(b.consec_failures as f64)),
+                ("requests", Json::num(b.requests as f64)),
+                ("failures", Json::num(b.failures as f64)),
+                ("p95_us", Json::num(b.p95_us)),
+                ("models", Json::arr(b.models.iter().map(|m| Json::str(m)))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("requests", Json::num(s.requests as f64)),
+        ("hedges", Json::num(s.hedges as f64)),
+        ("retries", Json::num(s.retries as f64)),
+        ("breaker_trips", Json::num(s.breaker_trips as f64)),
+        ("rejected", Json::num(s.rejected as f64)),
+        ("backends", Json::Arr(backends)),
+    ])
+}
+
+/// [`router_metrics_json`] in the Prometheus text exposition format.
+pub fn router_metrics_prometheus(s: &RouterSnapshot) -> String {
+    let mut out = String::new();
+    family(
+        &mut out,
+        "hinm_router_requests_total",
+        "counter",
+        "Requests admitted by the router (answered or failed downstream).",
+        &[format!("hinm_router_requests_total {}", s.requests)],
+    );
+    family(
+        &mut out,
+        "hinm_router_hedges_total",
+        "counter",
+        "Hedged second attempts launched after a first attempt exceeded its per-backend p95.",
+        &[format!("hinm_router_hedges_total {}", s.hedges)],
+    );
+    family(
+        &mut out,
+        "hinm_router_retries_total",
+        "counter",
+        "Retry attempts launched after a failed downstream attempt.",
+        &[format!("hinm_router_retries_total {}", s.retries)],
+    );
+    family(
+        &mut out,
+        "hinm_router_breaker_trips_total",
+        "counter",
+        "Circuit-breaker trips (a backend crossing its failure threshold into Down).",
+        &[format!("hinm_router_breaker_trips_total {}", s.breaker_trips)],
+    );
+    family(
+        &mut out,
+        "hinm_router_rejected_total",
+        "counter",
+        "Requests rejected with 503 by admission backpressure or shutdown drain.",
+        &[format!("hinm_router_rejected_total {}", s.rejected)],
+    );
+    family(
+        &mut out,
+        "hinm_router_backend_state",
+        "gauge",
+        "Breaker state per backend (labels carry the state; value is always 1).",
+        &s.backends
+            .iter()
+            .map(|b| {
+                format!(
+                    "hinm_router_backend_state{{backend=\"{}\",state=\"{}\"}} 1",
+                    b.name,
+                    b.health.as_str()
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "hinm_router_backend_inflight",
+        "gauge",
+        "Attempts currently in flight per backend.",
+        &s.backends
+            .iter()
+            .map(|b| format!("hinm_router_backend_inflight{{backend=\"{}\"}} {}", b.name, b.inflight))
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "hinm_router_backend_requests_total",
+        "counter",
+        "Successful downstream responses per backend.",
+        &s.backends
+            .iter()
+            .map(|b| {
+                format!("hinm_router_backend_requests_total{{backend=\"{}\"}} {}", b.name, b.requests)
+            })
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "hinm_router_backend_failures_total",
+        "counter",
+        "Failed downstream attempts per backend (passive marks + failed probes).",
+        &s.backends
+            .iter()
+            .map(|b| {
+                format!("hinm_router_backend_failures_total{{backend=\"{}\"}} {}", b.name, b.failures)
+            })
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "hinm_router_backend_p95_microseconds",
+        "gauge",
+        "Measured p95 response latency per backend (drives hedging).",
+        &s.backends
+            .iter()
+            .map(|b| {
+                format!("hinm_router_backend_p95_microseconds{{backend=\"{}\"}} {}", b.name, b.p95_us)
+            })
+            .collect::<Vec<_>>(),
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -521,6 +679,15 @@ mod tests {
         assert_eq!(status_for(&InferError::Stopped).0, 503);
         assert_eq!(status_for(&InferError::Backend("x".into())).0, 500);
         assert_eq!(status_for(&InferError::BadRequest("x".into())).0, 400);
+        assert_eq!(status_for(&InferError::Upstream("x".into())), (502, "bad_gateway"));
+        assert_eq!(
+            status_for(&InferError::UpstreamTimeout("x".into())),
+            (504, "upstream_timeout")
+        );
+        // The shared renderer carries the mapped status and kind.
+        let resp = error_response(&InferError::Upstream("refused".into()));
+        assert_eq!(resp.status, 502);
+        assert!(resp.body.contains("bad_gateway"), "{}", resp.body);
     }
 
     #[test]

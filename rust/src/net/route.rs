@@ -1,0 +1,530 @@
+//! Wire layer of the `hinm route` router tier (DESIGN.md §19).
+//!
+//! Everything here is clock-free: this file holds the HTTP surface
+//! ([`RouterFront`]), the pure upstream-failure taxonomy
+//! ([`classify_upstream`]), and the deterministic fault-injection server
+//! ([`FaultyBackend`]) used by the chaos tests. All wall-clock reads,
+//! timers, and backoff decisions live in [`crate::coordinator::router`] —
+//! the same layering rule (hinm-lint R3) that keeps timing out of the
+//! numeric kernels keeps it out of the wire layer, so this module's
+//! behaviour is a pure function of bytes in and injected fault schedules.
+//!
+//! The proxy preserves **bit-identity**: request bodies are parsed only to
+//! *read* the `"model"` and `"deadline_ms"` fields and are forwarded
+//! verbatim, and downstream response bodies are relayed untouched — a
+//! client talking through the router sees byte-identical payloads to one
+//! talking to the backend directly (pinned by `rust/tests/router_chaos.rs`),
+//! plus one extra `X-Hinm-Attempt` header.
+
+use crate::coordinator::router::{ProxyRequest, RouteReply, Router};
+use crate::net::http::{read_request, Handler, HttpRequest, HttpResponse, HttpServer};
+use crate::net::protocol;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How a downstream attempt failed, as classified from its I/O error.
+/// Drives both the retry decision and the client-visible status code
+/// (`Unreachable` → 502, `TimedOut` → 504 via
+/// [`crate::coordinator::serve::InferError`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpstreamClass {
+    /// Connection refused/reset/aborted, or the peer closed mid-exchange:
+    /// the backend is not answering at all.
+    Unreachable,
+    /// The socket timed out: the backend is up but too slow.
+    TimedOut,
+    /// The backend answered bytes we could not parse as HTTP.
+    Protocol,
+}
+
+/// Pure taxonomy from [`std::io::ErrorKind`] to [`UpstreamClass`]:
+/// timeouts (`TimedOut`/`WouldBlock` — platform-dependent for socket read
+/// timeouts) map to [`UpstreamClass::TimedOut`]; refused, reset, aborted,
+/// broken-pipe, not-connected, and unexpected-EOF all mean the peer is
+/// gone ([`UpstreamClass::Unreachable`]); anything else is a framing
+/// problem ([`UpstreamClass::Protocol`]).
+pub fn classify_upstream(kind: std::io::ErrorKind) -> UpstreamClass {
+    use std::io::ErrorKind as K;
+    match kind {
+        K::TimedOut | K::WouldBlock => UpstreamClass::TimedOut,
+        K::ConnectionRefused
+        | K::ConnectionReset
+        | K::ConnectionAborted
+        | K::BrokenPipe
+        | K::NotConnected
+        | K::UnexpectedEof => UpstreamClass::Unreachable,
+        _ => UpstreamClass::Protocol,
+    }
+}
+
+/// Classify an [`anyhow::Error`] from [`crate::net::http::HttpClient`] by
+/// the first [`std::io::Error`] in its chain; errors with no I/O cause
+/// (e.g. malformed response framing) are [`UpstreamClass::Protocol`].
+pub fn classify_anyhow(e: &anyhow::Error) -> UpstreamClass {
+    e.chain()
+        .find_map(|c| c.downcast_ref::<std::io::Error>())
+        .map(|io| classify_upstream(io.kind()))
+        .unwrap_or(UpstreamClass::Protocol)
+}
+
+/// HTTP front of the router tier: binds an address and serves the
+/// DESIGN.md §19 route table (`POST /v1/infer` proxied through
+/// [`Router::dispatch`], plus `/healthz`, `/v1/metrics`, `/v1/models`).
+pub struct RouterFront {
+    server: HttpServer,
+    router: Arc<Router>,
+}
+
+impl RouterFront {
+    /// Bind `addr` (port 0 for ephemeral) with `workers` connection
+    /// threads, proxying onto `router`.
+    pub fn start(addr: &str, router: Arc<Router>, workers: usize) -> Result<RouterFront> {
+        let r = Arc::clone(&router);
+        let handler: Handler = Arc::new(move |req: &HttpRequest| route_front(req, &r));
+        let server = HttpServer::start(addr, handler, workers)?;
+        Ok(RouterFront { server, router })
+    }
+
+    /// The bound address (resolves an ephemeral-port bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// The router behind this front (metrics, probing state).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Graceful shutdown: stop accepting first, then drain the router so
+    /// in-flight proxied requests still complete.
+    pub fn stop(self) {
+        self.server.stop();
+        self.router.stop();
+    }
+}
+
+fn route_front(req: &HttpRequest, router: &Router) -> HttpResponse {
+    let path = req.path.split('?').next().unwrap_or("");
+    match path {
+        "/healthz" => match req.method.as_str() {
+            "GET" => {
+                let (live, total) = router.live_backends();
+                HttpResponse::json(
+                    200,
+                    Json::obj(vec![
+                        ("status", Json::str(if live > 0 { "ok" } else { "degraded" })),
+                        ("backends_live", Json::num(live as f64)),
+                        ("backends_total", Json::num(total as f64)),
+                    ])
+                    .compact(),
+                )
+            }
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/metrics" => match req.method.as_str() {
+            "GET" => metrics_route(req, router),
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/models" => match req.method.as_str() {
+            "GET" => HttpResponse::json(
+                200,
+                Json::obj(vec![(
+                    "models",
+                    Json::arr(
+                        router
+                            .models_union()
+                            .iter()
+                            .map(|m| Json::obj(vec![("name", Json::str(m))])),
+                    ),
+                )])
+                .compact(),
+            ),
+            _ => method_not_allowed(req, "GET"),
+        },
+        "/v1/infer" => match req.method.as_str() {
+            "POST" => proxy_infer(req, router),
+            _ => method_not_allowed(req, "POST"),
+        },
+        _ => HttpResponse::json(
+            404,
+            protocol::error_body("not_found", &format!("no route for {} {}", req.method, path))
+                .compact(),
+        ),
+    }
+}
+
+/// `GET /v1/metrics` on the router: JSON by default, Prometheus text with
+/// `?format=prometheus` — the same negotiation as the single-host front.
+fn metrics_route(req: &HttpRequest, router: &Router) -> HttpResponse {
+    let query = req.path.split_once('?').map(|(_, q)| q).unwrap_or("");
+    let format = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("format="))
+        .unwrap_or("json");
+    let snap = router.snapshot();
+    match format {
+        "json" => HttpResponse::json(200, protocol::router_metrics_json(&snap).compact()),
+        "prometheus" => HttpResponse {
+            status: 200,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: protocol::router_metrics_prometheus(&snap),
+            headers: Vec::new(),
+        },
+        other => HttpResponse::json(
+            400,
+            protocol::error_body(
+                "bad_request",
+                &format!("unknown metrics format {other:?} (use json or prometheus)"),
+            )
+            .compact(),
+        ),
+    }
+}
+
+/// Read-only routing fields of an infer body: `(model, deadline_ms)`.
+/// The body itself is forwarded verbatim — never re-serialized.
+fn infer_target(body: &str) -> std::result::Result<(Option<String>, Option<u64>), String> {
+    let doc = json::parse(body).map_err(|e| format!("body is not valid JSON: {e}"))?;
+    let model = match doc.get("model") {
+        Json::Null => None,
+        m => Some(
+            m.as_str()
+                .ok_or_else(|| "\"model\" must be a string".to_string())?
+                .to_string(),
+        ),
+    };
+    let deadline_ms = match doc.get("deadline_ms") {
+        Json::Null => None,
+        d => {
+            let ms = d.as_f64().ok_or_else(|| "\"deadline_ms\" must be a number".to_string())?;
+            if ms < 0.0 {
+                return Err("\"deadline_ms\" must be non-negative".to_string());
+            }
+            Some(ms as u64)
+        }
+    };
+    Ok((model, deadline_ms))
+}
+
+fn proxy_infer(req: &HttpRequest, router: &Router) -> HttpResponse {
+    let (model, deadline_ms) = match infer_target(&req.body) {
+        Ok(t) => t,
+        Err(msg) => {
+            return HttpResponse::json(400, protocol::error_body("bad_request", &msg).compact());
+        }
+    };
+    // `POST /v1/infer` is a pure function of its body, so replaying it on
+    // another replica is safe: idempotent.
+    let proxy = ProxyRequest {
+        method: "POST",
+        path: "/v1/infer",
+        body: &req.body,
+        model: model.as_deref(),
+        deadline_ms,
+        idempotent: true,
+    };
+    match router.dispatch(&proxy) {
+        RouteReply::Replied { status, body, attempts, .. } => HttpResponse::json(status, body)
+            .with_header(protocol::X_HINM_ATTEMPT, &attempts.to_string()),
+        RouteReply::Failed { error, attempts } => protocol::error_response(&error)
+            .with_header(protocol::X_HINM_ATTEMPT, &attempts.to_string()),
+        RouteReply::Busy { retry_after_s } => HttpResponse::json(
+            503,
+            protocol::error_body("busy", "router at capacity; retry later").compact(),
+        )
+        .with_header("Retry-After", &retry_after_s.to_string()),
+    }
+}
+
+fn method_not_allowed(req: &HttpRequest, allowed: &str) -> HttpResponse {
+    HttpResponse::json(
+        405,
+        protocol::error_body(
+            "method_not_allowed",
+            &format!("{} {} (use {allowed})", req.method, req.path),
+        )
+        .compact(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault injection
+// ---------------------------------------------------------------------------
+
+/// One scripted behaviour of a [`FaultyBackend`] request slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Answer 200 with a small fixed JSON body.
+    Ok,
+    /// Sleep this many milliseconds, then answer 200 (the client's read
+    /// timeout usually fires first).
+    Stall(u64),
+    /// Answer a well-formed 500.
+    Http500,
+    /// Drop the connection without answering (the client sees EOF/reset).
+    Reset,
+    /// Answer 200 one byte at a time with this many milliseconds between
+    /// bytes (the client times out mid-body).
+    SlowDrip(u64),
+}
+
+/// A scripted stand-in for a downstream `hinm serve` host, for chaos and
+/// fuzz tests. Faults are drawn from a fixed schedule indexed by request
+/// arrival order (`/v1/infer` and `/healthz` requests consume slots; the
+/// last entry repeats forever), so a given schedule replays to the exact
+/// same router behaviour — no randomness, no clock reads.
+pub struct FaultyBackend {
+    addr: SocketAddr,
+    stopping: Arc<AtomicBool>,
+    arrivals: Arc<AtomicUsize>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl FaultyBackend {
+    /// Bind an ephemeral loopback port and serve `schedule` (must be
+    /// non-empty; the final entry repeats for every later request).
+    pub fn start(schedule: Vec<Fault>) -> Result<FaultyBackend> {
+        anyhow::ensure!(!schedule.is_empty(), "FaultyBackend needs a non-empty schedule");
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding FaultyBackend listener")?;
+        let addr = listener.local_addr().context("resolving FaultyBackend addr")?;
+        let stopping = Arc::new(AtomicBool::new(false));
+        let arrivals = Arc::new(AtomicUsize::new(0));
+        let schedule = Arc::new(schedule);
+        let acceptor = {
+            let stopping = Arc::clone(&stopping);
+            let arrivals = Arc::clone(&arrivals);
+            std::thread::Builder::new()
+                .name("hinm-faulty-accept".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stopping.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        let stopping = Arc::clone(&stopping);
+                        let arrivals = Arc::clone(&arrivals);
+                        let schedule = Arc::clone(&schedule);
+                        // Connection threads are detached; they exit when
+                        // the peer closes or the fault script drops them.
+                        let _ = std::thread::Builder::new()
+                            .name("hinm-faulty-conn".to_string())
+                            .spawn(move || {
+                                faulty_connection(stream, &schedule, &arrivals, &stopping)
+                            });
+                    }
+                })
+                .context("spawning FaultyBackend acceptor")?
+        };
+        Ok(FaultyBackend { addr, stopping, arrivals, acceptor: Some(acceptor) })
+    }
+
+    /// The bound loopback address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Fault-consuming requests seen so far (arrival-order schedule index).
+    pub fn arrivals(&self) -> usize {
+        self.arrivals.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting and join the acceptor thread.
+    pub fn stop(mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with one throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.acceptor.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for FaultyBackend {
+    fn drop(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.acceptor.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve one connection's keep-alive loop, applying the scheduled fault
+/// to each `/v1/infer` / `/healthz` request. Other paths answer without
+/// consuming a schedule slot (`/v1/models` is always 404) so capability
+/// probes don't perturb fault accounting.
+fn faulty_connection(
+    stream: TcpStream,
+    schedule: &[Fault],
+    arrivals: &AtomicUsize,
+    stopping: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut write_half = write_half;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) | Err(_) => return,
+        };
+        let path = req.path.split('?').next().unwrap_or("");
+        if path != "/v1/infer" && path != "/healthz" {
+            let _ = write_raw(&mut write_half, 404, "{\"error\":\"not_found\"}");
+            continue;
+        }
+        let i = arrivals.fetch_add(1, Ordering::SeqCst);
+        let fault = schedule[i.min(schedule.len() - 1)];
+        let ok_body = if path == "/healthz" {
+            "{\"status\":\"ok\"}"
+        } else {
+            "{\"y\":[0.25,-0.5,1.0]}"
+        };
+        match fault {
+            Fault::Ok => {
+                if write_raw(&mut write_half, 200, ok_body).is_err() {
+                    return;
+                }
+            }
+            Fault::Stall(ms) => {
+                if chunked_sleep(ms, stopping) {
+                    return;
+                }
+                if write_raw(&mut write_half, 200, ok_body).is_err() {
+                    return;
+                }
+            }
+            Fault::Http500 => {
+                if write_raw(&mut write_half, 500, "{\"error\":\"injected\"}").is_err() {
+                    return;
+                }
+            }
+            Fault::Reset => return, // drop without answering
+            Fault::SlowDrip(ms) => {
+                let frame = frame(200, ok_body);
+                for b in frame.as_bytes() {
+                    if stopping.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if write_half.write_all(std::slice::from_ref(b)).is_err() {
+                        return;
+                    }
+                    let _ = write_half.flush();
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+        }
+    }
+}
+
+fn frame(status: u16, body: &str) -> String {
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn write_raw(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    stream.write_all(frame(status, body).as_bytes())?;
+    stream.flush()
+}
+
+/// Sleep `ms` in small chunks, returning `true` if `stopping` was set
+/// (so stalled connections release promptly at shutdown).
+fn chunked_sleep(ms: u64, stopping: &AtomicBool) -> bool {
+    let mut left = ms;
+    while left > 0 {
+        if stopping.load(Ordering::SeqCst) {
+            return true;
+        }
+        let chunk = left.min(25);
+        std::thread::sleep(Duration::from_millis(chunk));
+        left -= chunk;
+    }
+    stopping.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::http::HttpClient;
+    use std::io::ErrorKind as K;
+
+    #[test]
+    fn upstream_taxonomy_is_stable() {
+        assert_eq!(classify_upstream(K::TimedOut), UpstreamClass::TimedOut);
+        assert_eq!(classify_upstream(K::WouldBlock), UpstreamClass::TimedOut);
+        for k in [
+            K::ConnectionRefused,
+            K::ConnectionReset,
+            K::ConnectionAborted,
+            K::BrokenPipe,
+            K::NotConnected,
+            K::UnexpectedEof,
+        ] {
+            assert_eq!(classify_upstream(k), UpstreamClass::Unreachable, "{k:?}");
+        }
+        assert_eq!(classify_upstream(K::InvalidData), UpstreamClass::Protocol);
+        assert_eq!(
+            classify_anyhow(&anyhow::Error::new(std::io::Error::new(K::TimedOut, "t"))),
+            UpstreamClass::TimedOut
+        );
+        assert_eq!(classify_anyhow(&anyhow::anyhow!("no io cause")), UpstreamClass::Protocol);
+    }
+
+    #[test]
+    fn infer_target_reads_routing_fields_only() {
+        let (m, d) = infer_target("{\"x\":[1.0],\"model\":\"a\",\"deadline_ms\":50}")
+            .expect("valid body");
+        assert_eq!(m.as_deref(), Some("a"));
+        assert_eq!(d, Some(50));
+        let (m, d) = infer_target("{\"x\":[1.0]}").expect("fields optional");
+        assert_eq!(m, None);
+        assert_eq!(d, None);
+        assert!(infer_target("not json").is_err());
+        assert!(infer_target("{\"deadline_ms\":-1}").is_err());
+        assert!(infer_target("{\"model\":7}").is_err());
+    }
+
+    #[test]
+    fn faulty_backend_follows_its_schedule_and_clamps_the_tail() {
+        let b = FaultyBackend::start(vec![Fault::Http500, Fault::Ok]).expect("start");
+        let mut c = HttpClient::connect(b.addr()).expect("connect");
+        let (status, body) = c.post_json("/v1/infer", "{\"x\":[0.0]}").expect("req 1");
+        assert_eq!(status, 500);
+        assert!(body.contains("injected"));
+        // Slot 2 and every later request repeat the final Ok entry.
+        for _ in 0..3 {
+            let (status, body) = c.post_json("/v1/infer", "{\"x\":[0.0]}").expect("req");
+            assert_eq!(status, 200);
+            assert_eq!(body, "{\"y\":[0.25,-0.5,1.0]}");
+        }
+        // /v1/models never consumes a schedule slot.
+        let before = b.arrivals();
+        let (status, _) = c.get("/v1/models").expect("models");
+        assert_eq!(status, 404);
+        assert_eq!(b.arrivals(), before);
+        b.stop();
+    }
+
+    #[test]
+    fn faulty_backend_reset_drops_the_connection() {
+        let b = FaultyBackend::start(vec![Fault::Reset]).expect("start");
+        let mut c = HttpClient::connect(b.addr()).expect("connect");
+        let err = c.post_json("/v1/infer", "{}").expect_err("reset must error");
+        assert_eq!(classify_anyhow(&err), UpstreamClass::Unreachable);
+        b.stop();
+    }
+}

@@ -1,23 +1,32 @@
 //! Deterministic structure-aware fuzz smoke for the `net::http` request
-//! parser (DESIGN.md §17).
+//! and response parsers (DESIGN.md §17, §19).
 //!
-//! `read_request` is generic over `BufRead` precisely so this harness can
-//! drive it from in-memory byte slices — no sockets, no timeouts, fully
-//! deterministic from `mix_seed(BASE_SEED, case_index)`. Three families:
+//! `read_request`/`read_response` are generic over `BufRead` precisely so
+//! this harness can drive them from in-memory byte slices — no sockets,
+//! no timeouts, fully deterministic from `mix_seed(BASE_SEED,
+//! case_index)`. Three families each:
 //!
-//! 1. **Well-formed requests** built within every documented bound
+//! 1. **Well-formed frames** built within every documented bound
 //!    (header count, line length, matching Content-Length): must parse to
-//!    exactly the generated method/path/headers/body.
+//!    exactly the generated fields.
 //! 2. **Boundary violations**: oversized lines, too many headers,
 //!    conflicting or huge Content-Length, Transfer-Encoding smuggling
 //!    probes — must error (never panic, never mis-frame).
 //! 3. **Byte soup**: mutations of family-1 bytes plus raw garbage.
 //!
+//! The response families double as the router-in-the-middle target: the
+//! router parses every downstream answer through `read_response`, so
+//! "mutated downstream bytes never panic the router or allocate an
+//! unbounded body" is pinned here in memory, and
+//! `fuzz_router_survives_mutated_downstream_responses` replays a seeded
+//! slice of the same mutations through a real `Router::dispatch` over
+//! sockets.
+//!
 //! Iteration budget: `HINM_FUZZ_ITERS` (default 10 000; CI `fuzz-long`
 //! raises it under an `HINM_FUZZ_SECONDS` wall-clock bound). Failing
 //! inputs land in `target/fuzz-failures/` for artifact upload.
 
-use hinm::net::http::{read_request, MAX_BODY_BYTES, MAX_HEADERS};
+use hinm::net::http::{read_request, read_response, MAX_BODY_BYTES, MAX_HEADERS};
 use hinm::util::rng::{mix_seed, Xoshiro256};
 use std::time::{Duration, Instant};
 
@@ -218,6 +227,309 @@ fn fuzz_http_parser_smoke() {
     }
     assert!(done > 0, "fuzz budget expired before the first case");
     println!("fuzz_http: {done} cases, {:?}", start.elapsed());
+}
+
+struct GenResponse {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+/// A response inside every documented bound; must parse back exactly.
+fn gen_valid_response(rng: &mut Xoshiro256) -> (GenResponse, Vec<u8>) {
+    let status = [200u16, 400, 404, 500, 502, 503, 504][rng.below(7)];
+    let reason = token(rng, 16);
+    let body: String =
+        (0..rng.below(200)).map(|_| char::from(b' ' + rng.below(94) as u8)).collect();
+    let mut headers = Vec::new();
+    for _ in 0..rng.below(8) {
+        headers.push((format!("x-{}", token(rng, 12)).to_lowercase(), token(rng, 20)));
+    }
+    headers.push(("content-length".to_string(), body.len().to_string()));
+    let mut wire = format!("HTTP/1.1 {status} {reason}\r\n");
+    for (k, v) in &headers {
+        wire.push_str(&format!("{k}: {v}\r\n"));
+    }
+    wire.push_str("\r\n");
+    wire.push_str(&body);
+    (GenResponse { status, headers, body }, wire.into_bytes())
+}
+
+/// A response violating exactly one documented bound; must be rejected.
+fn gen_response_violation(rng: &mut Xoshiro256) -> Vec<u8> {
+    match rng.below(8) {
+        // Status line past MAX_LINE_BYTES.
+        0 => format!("HTTP/1.1 200 {}\r\n\r\n", "a".repeat(9000)).into_bytes(),
+        // More than MAX_HEADERS headers.
+        1 => {
+            let mut w = String::from("HTTP/1.1 200 OK\r\n");
+            for i in 0..MAX_HEADERS + 2 {
+                w.push_str(&format!("x-h{i}: v\r\n"));
+            }
+            w.push_str("\r\n");
+            w.into_bytes()
+        }
+        // Transfer-Encoding smuggling probe.
+        2 => b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec(),
+        // Conflicting Content-Length pair.
+        3 => b"HTTP/1.1 200 OK\r\nContent-Length: 4\r\nContent-Length: 5\r\n\r\nAAAA".to_vec(),
+        // Content-Length past MAX_BODY_BYTES: must reject up front, never
+        // allocate (the no-hung-client guarantee the router relies on).
+        4 => format!("HTTP/1.1 200 OK\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1)
+            .into_bytes(),
+        // Truncated body.
+        5 => b"HTTP/1.1 200 OK\r\nContent-Length: 100\r\n\r\nshort".to_vec(),
+        // Not an HTTP status line at all.
+        6 => b"ICY 200 OK\r\n\r\n".to_vec(),
+        // Non-numeric status.
+        _ => b"HTTP/1.1 abc OK\r\n\r\n".to_vec(),
+    }
+}
+
+/// Invariants for ANY `Ok(Some(..))` response parse, whatever the input —
+/// what the router relies on when a downstream (or a middlebox) answers
+/// garbage.
+fn check_parsed_response(
+    status: u16,
+    headers: &[(String, String)],
+    body: &str,
+    case: u64,
+    input: &[u8],
+) {
+    let fail = |msg: &str| {
+        let path = persist_failure(case, input);
+        panic!("case {case}: {msg}; input at {path}");
+    };
+    if body.len() > MAX_BODY_BYTES {
+        fail("response body exceeds MAX_BODY_BYTES");
+    }
+    if headers.len() > MAX_HEADERS + 1 {
+        fail("response header count exceeds MAX_HEADERS");
+    }
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        fail("Transfer-Encoding passed through the smuggling guard");
+    }
+    if let Some((_, cl)) = headers.iter().find(|(k, _)| k == "content-length") {
+        if cl.parse::<usize>().ok() != Some(body.len()) {
+            fail("response body length disagrees with Content-Length");
+        }
+    } else if !body.is_empty() {
+        fail("non-empty response body without Content-Length");
+    }
+    if !(100..=999).contains(&status) {
+        fail("status outside the three-digit range");
+    }
+}
+
+#[test]
+fn fuzz_response_parser_smoke() {
+    let n = iters(10_000);
+    let start = Instant::now();
+    let deadline = budget();
+    let mut done = 0usize;
+    for case in 0..n as u64 {
+        if deadline.is_some_and(|d| start.elapsed() > d) {
+            break;
+        }
+        let mut rng = Xoshiro256::new(mix_seed(BASE_SEED ^ 0x5250, case));
+        let (expect, bytes) = match case % 3 {
+            0 => {
+                let (resp, bytes) = gen_valid_response(&mut rng);
+                (Some(resp), bytes)
+            }
+            1 => (None, gen_response_violation(&mut rng)),
+            _ => {
+                let (_, mut bytes) = gen_valid_response(&mut rng);
+                mutate(&mut rng, &mut bytes);
+                (None, bytes)
+            }
+        };
+        let parsed = std::panic::catch_unwind(|| {
+            let mut reader: &[u8] = &bytes;
+            read_response(&mut reader)
+        });
+        match parsed {
+            Err(_) => {
+                let path = persist_failure(case, &bytes);
+                panic!("case {case}: response parser panicked; input at {path}");
+            }
+            Ok(Ok(Some((status, headers, body)))) => {
+                check_parsed_response(status, &headers, &body, case, &bytes);
+                if let Some(want) = &expect {
+                    let got_ok =
+                        status == want.status && body == want.body && headers == want.headers;
+                    if !got_ok {
+                        let path = persist_failure(case, &bytes);
+                        panic!("case {case}: well-formed response mis-parsed; input at {path}");
+                    }
+                }
+            }
+            Ok(Ok(None)) => {
+                if expect.is_some() {
+                    let path = persist_failure(case, &bytes);
+                    panic!("case {case}: well-formed response answered EOF; input at {path}");
+                }
+            }
+            Ok(Err(_)) => {
+                if case % 3 == 0 {
+                    let path = persist_failure(case, &bytes);
+                    panic!("case {case}: well-formed response rejected; input at {path}");
+                }
+            }
+        }
+        done += 1;
+    }
+    assert!(done > 0, "fuzz budget expired before the first case");
+    println!("fuzz_http (responses): {done} cases, {:?}", start.elapsed());
+}
+
+#[test]
+fn response_violation_family_is_always_rejected() {
+    for k in 0..8u64 {
+        let mut rng = Xoshiro256::new(mix_seed(BASE_SEED ^ 0xBAD2, k));
+        // Reuse the generator but force each arm deterministically by
+        // regenerating until the wanted shape appears — below(8) is
+        // uniform, so pin the arms directly instead.
+        let bytes = match k {
+            0 => format!("HTTP/1.1 200 {}\r\n\r\n", "a".repeat(9000)).into_bytes(),
+            1 => {
+                let mut w = String::from("HTTP/1.1 200 OK\r\n");
+                for i in 0..MAX_HEADERS + 2 {
+                    w.push_str(&format!("x-h{i}: v\r\n"));
+                }
+                w.push_str("\r\n");
+                w.into_bytes()
+            }
+            2 => b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec(),
+            3 => b"HTTP/1.1 200 OK\r\nContent-Length: 4\r\nContent-Length: 5\r\n\r\nAAAA"
+                .to_vec(),
+            4 => format!("HTTP/1.1 200 OK\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1)
+                .into_bytes(),
+            5 => b"HTTP/1.1 200 OK\r\nContent-Length: 100\r\n\r\nshort".to_vec(),
+            6 => b"ICY 200 OK\r\n\r\n".to_vec(),
+            _ => gen_response_violation(&mut rng),
+        };
+        let mut reader: &[u8] = &bytes;
+        assert!(read_response(&mut reader).is_err(), "response violation {k} accepted");
+    }
+}
+
+/// Router-in-the-middle: a raw TCP "downstream" answers every request
+/// with a seeded mutation of a valid response frame, and a real
+/// [`hinm::coordinator::Router`] dispatches against it. The router must
+/// return a reply for every request — no panic, no hang past its per-try
+/// watchdog, no unbounded body — whatever bytes come back. Case count is
+/// self-capped (sockets are slower than the in-memory families), so the
+/// fuzz-long iteration env cannot stretch this target past its budget.
+#[test]
+fn fuzz_router_survives_mutated_downstream_responses() {
+    use hinm::coordinator::{ProxyRequest, RouteReply, Router, RouterConfig};
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    if cfg!(miri) {
+        return; // sockets — covered by the in-memory families under Miri
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind mutant downstream");
+    let addr = listener.local_addr().expect("mutant addr");
+    let stopping = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let acceptor = {
+        let stopping = Arc::clone(&stopping);
+        let served = Arc::clone(&served);
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stopping.load(Ordering::SeqCst) {
+                    return;
+                }
+                let Ok(mut stream) = conn else { continue };
+                // Drain the request head, then answer with the next
+                // seeded mutant frame and close.
+                let mut buf = [0u8; 4096];
+                let _ = stream.read(&mut buf);
+                let case = served.fetch_add(1, Ordering::SeqCst);
+                let mut rng = Xoshiro256::new(mix_seed(BASE_SEED ^ 0x4D49_4D, case));
+                let bytes = match case % 4 {
+                    0 => gen_valid_response(&mut rng).1,
+                    1 => gen_response_violation(&mut rng),
+                    _ => {
+                        let (_, mut b) = gen_valid_response(&mut rng);
+                        mutate(&mut rng, &mut b);
+                        b
+                    }
+                };
+                let _ = stream.write_all(&bytes);
+                let _ = stream.flush();
+                // Drop closes the connection: nothing is ever pooled
+                // against a response the router accepted by accident.
+            }
+        })
+    };
+
+    let cfg = RouterConfig {
+        probe_interval_ms: 600_000,
+        probe_timeout_ms: 50,
+        // Keep the lone backend eligible forever: this target exercises
+        // the parser path, not the breaker.
+        fail_threshold: 1_000_000,
+        backoff_base_ms: 1,
+        backoff_max_ms: 1,
+        retry_backoff_ms: 1,
+        hedge_floor_ms: 50,
+        hedge_ceil_ms: 50,
+        connect_timeout_ms: 200,
+        per_try_timeout_ms: 100,
+        max_attempts: 2,
+        max_inflight: 8,
+        drain_ms: 500,
+        seed: 13,
+    };
+    let router =
+        Router::start(vec![("mutant".to_string(), addr)], cfg).expect("router start");
+
+    let n = iters(256).min(2048);
+    let start = Instant::now();
+    let deadline = budget();
+    let mut done = 0usize;
+    let mut replied = 0usize;
+    for case in 0..n {
+        if deadline.is_some_and(|d| start.elapsed() > d) {
+            break;
+        }
+        let req = ProxyRequest {
+            method: "POST",
+            path: "/v1/infer",
+            body: "{\"x\":[0.0]}",
+            model: None,
+            deadline_ms: Some(2_000),
+            idempotent: true,
+        };
+        match router.dispatch(&req) {
+            RouteReply::Replied { body, .. } => {
+                assert!(
+                    body.len() <= MAX_BODY_BYTES,
+                    "case {case}: router relayed an oversized body"
+                );
+                replied += 1;
+            }
+            RouteReply::Failed { .. } => {}
+            RouteReply::Busy { .. } => panic!("case {case}: sequential driver can't be shed"),
+        }
+        done += 1;
+    }
+    assert!(done > 0, "fuzz budget expired before the first case");
+    assert!(replied > 0, "the valid-frame family must produce some relayed replies");
+    router.stop();
+    stopping.store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr);
+    let _ = acceptor.join();
+    println!(
+        "fuzz_http (router-in-the-middle): {done} dispatches, {replied} relayed, {:?}",
+        start.elapsed()
+    );
 }
 
 #[test]

@@ -1,0 +1,396 @@
+//! Chaos tests for the `hinm route` tier (DESIGN.md §19): a real
+//! `Router` + `RouterFront` over scripted `FaultyBackend` downstreams,
+//! driven over real sockets.
+//!
+//! The headline test replays a seeded fault schedule — one always-stalling
+//! backend, one always-500ing backend, one healthy — and asserts the
+//! router's hedge/retry/breaker counters to *exact* values in both metric
+//! formats: every delay in the router is either a socket timeout or a
+//! seeded jitter, so a fixed schedule yields fixed counts. Roles are
+//! assigned to backends by the router's own exported consistent-hash
+//! preference order, which makes the expected counts independent of which
+//! ephemeral port each backend happens to bind.
+
+use hinm::coordinator::router::{consistent_rank, model_key};
+use hinm::coordinator::{BatchServer, Router, RouterConfig, ServeConfig};
+use hinm::models::{Activation, HinmModel};
+use hinm::net::route::Fault;
+use hinm::net::{protocol, FaultyBackend, HttpClient, HttpFront, RouterFront};
+use hinm::sparsity::HinmConfig;
+use hinm::util::json;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Router tuned so the test controls every timer: probers effectively
+/// off, hedge delay pinned (floor == ceil), short per-try timeout, trip
+/// after 2 consecutive failures, tripped backends stay down for the whole
+/// test.
+fn chaos_cfg() -> RouterConfig {
+    RouterConfig {
+        probe_interval_ms: 60_000,
+        probe_timeout_ms: 100,
+        fail_threshold: 2,
+        backoff_base_ms: 60_000,
+        backoff_max_ms: 60_000,
+        retry_backoff_ms: 1,
+        hedge_floor_ms: 40,
+        hedge_ceil_ms: 40,
+        connect_timeout_ms: 200,
+        per_try_timeout_ms: 150,
+        max_attempts: 3,
+        max_inflight: 64,
+        drain_ms: 1000,
+        seed: 11,
+    }
+}
+
+fn attempt_header(headers: &[(String, String)]) -> Option<&str> {
+    headers.iter().find(|(k, _)| k == "x-hinm-attempt").map(|(_, v)| v.as_str())
+}
+
+#[test]
+fn seeded_fault_schedule_replays_to_exact_metric_counts() {
+    let cfg = chaos_cfg();
+    // The router tries backends in consistent-rank order when in-flight
+    // counts tie; compute that order and assign roles by it, so the
+    // request flow is: first try → staller, hedge → failer, retry →
+    // healthy, regardless of port assignment.
+    let key = model_key(None);
+    let mut order: Vec<usize> = vec![0, 1, 2];
+    order.sort_by_key(|&i| consistent_rank(cfg.seed, key, i));
+
+    let staller = FaultyBackend::start(vec![Fault::Stall(10_000)]).expect("staller");
+    let failer = FaultyBackend::start(vec![Fault::Http500]).expect("failer");
+    let healthy = FaultyBackend::start(vec![Fault::Ok]).expect("healthy");
+
+    let mut slots: Vec<Option<(String, SocketAddr)>> = vec![None, None, None];
+    slots[order[0]] = Some(("staller".to_string(), staller.addr()));
+    slots[order[1]] = Some(("failer".to_string(), failer.addr()));
+    slots[order[2]] = Some(("healthy".to_string(), healthy.addr()));
+    let backends: Vec<(String, SocketAddr)> =
+        slots.into_iter().map(|s| s.expect("all slots assigned")).collect();
+
+    let router = Router::start(backends, cfg).expect("router start");
+    let front =
+        RouterFront::start("127.0.0.1:0", Arc::clone(&router), 4).expect("router front");
+    let mut client = HttpClient::connect(front.local_addr()).expect("connect");
+
+    // 6 sequential requests. Requests 1–2: first try stalls (books a
+    // timeout at 150 ms), the 40 ms hedge hits the failer (books a 500),
+    // the retry lands on the healthy backend → 3 attempts, 200. The
+    // second round trips both bad backends (fail_threshold = 2).
+    // Requests 3–6: straight to the healthy backend, 1 attempt each.
+    const N: usize = 6;
+    for i in 0..N {
+        let (status, headers, body) = client
+            .request_with_headers("POST", "/v1/infer", Some("{\"x\":[0.0]}"))
+            .expect("routed request");
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert_eq!(body, "{\"y\":[0.25,-0.5,1.0]}", "request {i}: downstream body verbatim");
+        let expect_attempts = if i < 2 { "3" } else { "1" };
+        assert_eq!(
+            attempt_header(&headers),
+            Some(expect_attempts),
+            "request {i}: X-Hinm-Attempt"
+        );
+        // Let the abandoned stalled attempt book its timeout before the
+        // next request dispatches (150 ms per-try < 300 ms settle).
+        std::thread::sleep(Duration::from_millis(300));
+    }
+
+    // Exact counters, JSON format.
+    let (status, body) = client.get("/v1/metrics").expect("metrics json");
+    assert_eq!(status, 200);
+    let doc = json::parse(&body).expect("metrics parse");
+    assert_eq!(doc.get("requests").as_f64(), Some(6.0), "admitted requests: {body}");
+    assert_eq!(doc.get("hedges").as_f64(), Some(2.0), "hedges: {body}");
+    assert_eq!(doc.get("retries").as_f64(), Some(2.0), "retries: {body}");
+    assert_eq!(doc.get("breaker_trips").as_f64(), Some(2.0), "trips: {body}");
+    assert_eq!(doc.get("rejected").as_f64(), Some(0.0), "rejected: {body}");
+    let backends_json = doc.get("backends").as_arr().expect("backends array");
+    assert_eq!(backends_json.len(), 3);
+    for b in backends_json {
+        let name = b.get("name").as_str().expect("backend name");
+        let state = b.get("state").as_str().expect("backend state");
+        match name {
+            "staller" | "failer" => {
+                assert_eq!(state, "down", "{name} tripped: {body}");
+                assert_eq!(b.get("failures").as_f64(), Some(2.0), "{name} failures: {body}");
+                assert_eq!(b.get("requests").as_f64(), Some(0.0), "{name} successes: {body}");
+            }
+            "healthy" => {
+                assert_eq!(state, "up", "healthy stays up: {body}");
+                assert_eq!(b.get("failures").as_f64(), Some(0.0));
+                assert_eq!(b.get("requests").as_f64(), Some(6.0), "healthy served all: {body}");
+            }
+            other => panic!("unexpected backend {other:?}"),
+        }
+    }
+
+    // Same counters, Prometheus text exposition.
+    let (status, text) = client.get("/v1/metrics?format=prometheus").expect("metrics prom");
+    assert_eq!(status, 200);
+    for needle in [
+        "hinm_router_requests_total 6",
+        "hinm_router_hedges_total 2",
+        "hinm_router_retries_total 2",
+        "hinm_router_breaker_trips_total 2",
+        "hinm_router_rejected_total 0",
+        "hinm_router_backend_state{backend=\"staller\",state=\"down\"} 1",
+        "hinm_router_backend_state{backend=\"failer\",state=\"down\"} 1",
+        "hinm_router_backend_state{backend=\"healthy\",state=\"up\"} 1",
+        "hinm_router_backend_requests_total{backend=\"healthy\"} 6",
+        "hinm_router_backend_failures_total{backend=\"staller\"} 2",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+
+    drop(client);
+    front.stop();
+    staller.stop();
+    failer.stop();
+    healthy.stop();
+}
+
+#[test]
+fn concurrent_deadlined_clients_see_only_success_or_deadline() {
+    // One stalling backend, one flapping (alternating reset/ok), one
+    // healthy. Concurrent clients with explicit deadlines must never see
+    // a failure that isn't the deadline itself: hedges and retries absorb
+    // the stalls, resets, and breaker churn.
+    let cfg = RouterConfig {
+        probe_interval_ms: 100,
+        probe_timeout_ms: 100,
+        fail_threshold: 2,
+        backoff_base_ms: 100,
+        backoff_max_ms: 200,
+        retry_backoff_ms: 1,
+        hedge_floor_ms: 30,
+        hedge_ceil_ms: 30,
+        connect_timeout_ms: 200,
+        per_try_timeout_ms: 100,
+        max_attempts: 3,
+        max_inflight: 64,
+        drain_ms: 1000,
+        seed: 5,
+    };
+    let staller = FaultyBackend::start(vec![Fault::Stall(10_000)]).expect("staller");
+    let flapper = FaultyBackend::start(
+        (0..40).map(|i| if i % 2 == 0 { Fault::Reset } else { Fault::Ok }).collect(),
+    )
+    .expect("flapper");
+    let healthy = FaultyBackend::start(vec![Fault::Ok]).expect("healthy");
+    let router = Router::start(
+        vec![
+            ("staller".to_string(), staller.addr()),
+            ("flapper".to_string(), flapper.addr()),
+            ("healthy".to_string(), healthy.addr()),
+        ],
+        cfg,
+    )
+    .expect("router start");
+    let front =
+        RouterFront::start("127.0.0.1:0", Arc::clone(&router), 8).expect("router front");
+    let addr = front.local_addr();
+
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 4;
+    let statuses: Vec<u16> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut c = HttpClient::connect(addr).expect("connect");
+                    let mut out = Vec::with_capacity(PER_CLIENT);
+                    for _ in 0..PER_CLIENT {
+                        let (status, body) = c
+                            .post_json("/v1/infer", "{\"x\":[0.0],\"deadline_ms\":800}")
+                            .expect("routed request");
+                        assert!(
+                            status == 200 || status == 504,
+                            "only success or deadline allowed, got {status}: {body}"
+                        );
+                        out.push(status);
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    assert_eq!(statuses.len(), CLIENTS * PER_CLIENT);
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    assert!(ok > 0, "the healthy backend must serve some requests: {statuses:?}");
+
+    front.stop();
+    staller.stop();
+    flapper.stop();
+    healthy.stop();
+}
+
+#[test]
+fn prober_trips_and_recovers_a_flapping_backend() {
+    // Active probing alone (no client traffic) must walk the breaker
+    // Up → Degraded → Down → HalfOpen → Up on a backend that answers two
+    // 500s and then recovers.
+    let cfg = RouterConfig {
+        probe_interval_ms: 50,
+        probe_timeout_ms: 300,
+        fail_threshold: 2,
+        backoff_base_ms: 50,
+        backoff_max_ms: 100,
+        retry_backoff_ms: 1,
+        hedge_floor_ms: 10,
+        hedge_ceil_ms: 10,
+        connect_timeout_ms: 200,
+        per_try_timeout_ms: 200,
+        max_attempts: 2,
+        max_inflight: 8,
+        drain_ms: 500,
+        seed: 3,
+    };
+    let b = FaultyBackend::start(vec![Fault::Http500, Fault::Http500, Fault::Ok])
+        .expect("backend");
+    let router =
+        Router::start(vec![("flapper".to_string(), b.addr())], cfg).expect("router start");
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    // Trips are monotonic, so poll for the trip rather than the transient
+    // Down state.
+    while router.snapshot().breaker_trips < 1 {
+        assert!(std::time::Instant::now() < deadline, "breaker never tripped");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // After the cooldown a half-open probe hits the recovered backend.
+    loop {
+        let snap = router.snapshot();
+        if snap.backends[0].health == hinm::coordinator::BackendHealth::Up {
+            assert_eq!(snap.breaker_trips, 1, "exactly one trip for the 500/500/ok script");
+            assert_eq!(snap.backends[0].failures, 2);
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "backend never recovered: {snap:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    router.stop();
+    b.stop();
+}
+
+#[test]
+fn over_capacity_requests_get_503_with_retry_after() {
+    let cfg = RouterConfig {
+        probe_interval_ms: 60_000,
+        probe_timeout_ms: 100,
+        fail_threshold: 3,
+        backoff_base_ms: 1000,
+        backoff_max_ms: 1000,
+        retry_backoff_ms: 1,
+        hedge_floor_ms: 2000,
+        hedge_ceil_ms: 2000,
+        connect_timeout_ms: 200,
+        per_try_timeout_ms: 3000,
+        max_attempts: 1,
+        max_inflight: 1,
+        drain_ms: 2000,
+        seed: 2,
+    };
+    let slow = FaultyBackend::start(vec![Fault::Stall(800)]).expect("slow backend");
+    let router =
+        Router::start(vec![("slow".to_string(), slow.addr())], cfg).expect("router start");
+    let front =
+        RouterFront::start("127.0.0.1:0", Arc::clone(&router), 4).expect("router front");
+    let addr = front.local_addr();
+
+    std::thread::scope(|s| {
+        let occupant = s.spawn(move || {
+            let mut c = HttpClient::connect(addr).expect("connect occupant");
+            c.request_with_headers("POST", "/v1/infer", Some("{\"x\":[0.0]}"))
+                .expect("occupant request")
+        });
+        // Let the occupant claim the single admission slot, then overflow.
+        std::thread::sleep(Duration::from_millis(150));
+        let mut c = HttpClient::connect(addr).expect("connect overflow");
+        let (status, headers, body) = c
+            .request_with_headers("POST", "/v1/infer", Some("{\"x\":[0.0]}"))
+            .expect("overflow request");
+        assert_eq!(status, 503, "over capacity: {body}");
+        assert!(body.contains("busy"), "body names the condition: {body}");
+        let retry_after =
+            headers.iter().find(|(k, _)| k == "retry-after").map(|(_, v)| v.as_str());
+        assert_eq!(retry_after, Some("1"), "Retry-After advertised");
+
+        let (status, h, body) = occupant.join().expect("occupant thread");
+        assert_eq!(status, 200, "occupant completes after the stall: {body}");
+        assert_eq!(attempt_header(&h), Some("1"));
+    });
+
+    let snap = router.snapshot();
+    assert_eq!(snap.requests, 1, "one admitted");
+    assert_eq!(snap.rejected, 1, "one shed");
+
+    front.stop();
+    slow.stop();
+}
+
+#[test]
+fn routed_responses_are_bit_identical_to_direct_ones() {
+    // A real engine + HTTP front as the downstream: the response body a
+    // client sees through the router must be byte-identical to the one it
+    // gets talking to the backend directly; the router adds only the
+    // X-Hinm-Attempt header.
+    const D: usize = 32;
+    let hcfg = HinmConfig::with_24(8, 0.5);
+    let model =
+        Arc::new(HinmModel::synthetic_ffn(D, 64, &hcfg, Activation::Relu, 17).expect("model"));
+    let server = BatchServer::start_native(
+        Arc::clone(&model),
+        ServeConfig::new(4, Duration::from_millis(2)).with_replicas(2),
+    )
+    .expect("engine start");
+    let backend_front =
+        HttpFront::start("127.0.0.1:0", server.handle.clone(), None, None, 4).expect("front");
+
+    let cfg = RouterConfig { probe_interval_ms: 60_000, ..RouterConfig::default() };
+    let router = Router::start(
+        vec![("real".to_string(), backend_front.local_addr())],
+        cfg,
+    )
+    .expect("router start");
+    let rfront =
+        RouterFront::start("127.0.0.1:0", Arc::clone(&router), 4).expect("router front");
+
+    let x: Vec<f32> = (0..D).map(|i| ((i * 7 + 3) % 13) as f32 * 0.1 - 0.6).collect();
+    let body = protocol::InferRequest::new(x).to_json().pretty();
+
+    let mut direct = HttpClient::connect(backend_front.local_addr()).expect("direct connect");
+    let (direct_status, direct_body) =
+        direct.post_json("/v1/infer", &body).expect("direct request");
+    assert_eq!(direct_status, 200, "direct: {direct_body}");
+
+    let mut routed = HttpClient::connect(rfront.local_addr()).expect("routed connect");
+    let (routed_status, headers, routed_body) = routed
+        .request_with_headers("POST", "/v1/infer", Some(&body))
+        .expect("routed request");
+    assert_eq!(routed_status, 200, "routed: {routed_body}");
+    assert_eq!(
+        routed_body.as_bytes(),
+        direct_body.as_bytes(),
+        "router must relay downstream bytes verbatim"
+    );
+    assert_eq!(attempt_header(&headers), Some("1"));
+
+    // The router's own discovery endpoints answer alongside the proxy.
+    let (status, health) = routed.get("/healthz").expect("router healthz");
+    assert_eq!(status, 200);
+    let doc = json::parse(&health).expect("healthz parse");
+    assert_eq!(doc.get("backends_total").as_f64(), Some(1.0), "{health}");
+    let (status, models) = routed.get("/v1/models").expect("router models");
+    assert_eq!(status, 200);
+    assert!(json::parse(&models).expect("models parse").get("models").as_arr().is_some());
+
+    drop(direct);
+    drop(routed);
+    rfront.stop();
+    backend_front.stop();
+    server.stop();
+}

@@ -21,7 +21,10 @@
 //!   contracts a multiply-add).
 //! - **R3** — no wall-clock or hash-order nondeterminism (`Instant::now`,
 //!   `SystemTime`, default-hasher `HashMap`/`HashSet`) in the numeric core
-//!   (`permute/`, `spmm/`, `sparsity/`, `tensor/`).
+//!   (`permute/`, `spmm/`, `sparsity/`, `tensor/`) or the router's wire
+//!   layer (`net/route.rs`, which must stay clock-free per §19); the
+//!   router's policy layer (`coordinator/router.rs`) owns the clock but
+//!   still bans the default-hasher containers.
 //! - **R4** — no `unwrap()`/`expect(` in library code outside `#[cfg(test)]`
 //!   and `main.rs`.
 //! - **R5** — every `§N` anchor cited from doc comments, README.md, or
@@ -463,17 +466,25 @@ pub fn design_headings(design: &str) -> BTreeSet<u32> {
     heads
 }
 
-/// Directories of the numeric core where R3 (nondeterminism ban) applies.
-const R3_DIRS: [&str; 4] = [
+/// Paths (directories or single files) where the full R3 nondeterminism
+/// ban applies: the numeric core plus the router's wire layer, which §19
+/// keeps clock-free so every timing decision lives in the coordinator.
+const R3_DIRS: [&str; 5] = [
     "rust/src/permute/",
     "rust/src/spmm/",
     "rust/src/sparsity/",
     "rust/src/tensor/",
+    "rust/src/net/route.rs",
 ];
+
+/// Files under the hash-order half of R3 only: the router's policy layer
+/// legitimately reads the clock (probe timers, hedging deadlines) but its
+/// dispatch order must not depend on default-hasher iteration.
+const R3_HASH_FILES: [&str; 1] = ["rust/src/coordinator/router.rs"];
 
 /// Sections ARCHITECTURE.md must anchor into DESIGN.md (carried over from
 /// the retired CI grep step — presence, not just resolution).
-const ARCH_REQUIRED_SECTIONS: [u32; 6] = [4, 12, 13, 14, 15, 16];
+const ARCH_REQUIRED_SECTIONS: [u32; 7] = [4, 12, 13, 14, 15, 16, 19];
 
 /// Files scanned for the raw `+fma` flag string in addition to `rust/src`.
 const R2_RAW_FILES: [&str; 3] = ["Cargo.toml", "rust/Cargo.toml", ".github/workflows/ci.yml"];
@@ -542,8 +553,11 @@ fn scan_rs_file(ctx: &mut Ctx<'_>, rel: &str, src: &str, heads: &BTreeSet<u32>) 
         ctx.report(Rule::R2, rel, ln, "`+fma` target-feature string (§17 R2)".to_string());
     }
 
-    // R3: nondeterminism tokens in the numeric core.
-    if R3_DIRS.iter().any(|d| rel.starts_with(d)) {
+    // R3: nondeterminism tokens. Full ban in the clock-free tiers;
+    // hash-order-only ban in the router's policy layer.
+    let r3_full = R3_DIRS.iter().any(|d| rel.starts_with(d));
+    let r3_hash = R3_HASH_FILES.contains(&rel);
+    if r3_full || r3_hash {
         let toks: [(&str, bool); 4] = [
             ("Instant::now", false),
             ("SystemTime", true),
@@ -551,6 +565,9 @@ fn scan_rs_file(ctx: &mut Ctx<'_>, rel: &str, src: &str, heads: &BTreeSet<u32>) 
             ("HashSet", true),
         ];
         for (needle, bounded) in toks {
+            if !r3_full && !matches!(needle, "HashMap" | "HashSet") {
+                continue;
+            }
             for pos in find_token(&masked, needle, bounded, bounded) {
                 if in_spans(pos, &spans) {
                     continue;
@@ -560,7 +577,7 @@ fn scan_rs_file(ctx: &mut Ctx<'_>, rel: &str, src: &str, heads: &BTreeSet<u32>) 
                     Rule::R3,
                     rel,
                     ln,
-                    format!("nondeterminism token `{needle}` in the numeric core (§17 R3)"),
+                    format!("nondeterminism token `{needle}` in an R3-scoped file (§17 R3)"),
                 );
             }
         }

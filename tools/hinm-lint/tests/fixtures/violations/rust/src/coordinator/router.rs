@@ -1,0 +1,10 @@
+//! R3 fixture: the router policy layer owns the clock, so only the
+//! default-hasher containers may fire here.
+
+use std::collections::HashMap;
+
+pub fn f() {
+    let _clock_is_fine_here = std::time::Instant::now();
+    let m: HashMap<u32, u32> = HashMap::new();
+    let _ = m;
+}

@@ -1,0 +1,5 @@
+//! R3 fixture: the router wire layer is fully clock-free.
+
+pub fn now_us() -> u128 {
+    std::time::Instant::now().elapsed().as_micros()
+}

@@ -34,6 +34,15 @@ fn violations_tree_trips_every_rule() {
     // two same-line HashMap hits dedup to one finding).
     assert_eq!(count(&findings, Rule::R3, "rust/src/spmm/plan.rs"), 3);
 
+    // R3 split scope (§19): the router wire layer is fully clock-free,
+    // while the policy layer trips only on default-hasher containers —
+    // its Instant::now must NOT fire.
+    assert!(has(&findings, Rule::R3, "rust/src/net/route.rs", 4));
+    assert_eq!(count(&findings, Rule::R3, "rust/src/coordinator/router.rs"), 2);
+    assert!(findings
+        .iter()
+        .all(|f| f.path != "rust/src/coordinator/router.rs" || !f.msg.contains("Instant::now")));
+
     // R4: the two library sites; unwrap_or_default/expect_err and
     // #[cfg(test)] code must not count, and main.rs is exempt.
     assert!(has(&findings, Rule::R4, "rust/src/lib.rs", 12));
