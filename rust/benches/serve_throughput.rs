@@ -27,11 +27,23 @@
 //! router hop (dispatch, health bookkeeping, one extra proxy leg); the row
 //! lands in the JSON as `backend: "router"`.
 //!
+//! `--stage-hosts` adds a fifth arm: the same deep model split across two
+//! in-process [`StageHost`]s on ephemeral TCP ports with a
+//! `RemotePipelinedBackend` head (`hinm serve --stage-hosts`, DESIGN.md
+//! §20) under the same closed loop. The req/s gap versus the
+//! `--pipeline-stages` arm is the cross-host hop (framing, checksums, two
+//! loopback round-trips per batch); the row lands in the JSON as
+//! `backend: "stage-hosts"`. Responses stay bit-identical.
+//!
 //! `--json PATH` writes `{bench, provenance, rows: [...]}`
 //! (`BENCH_serve.json` in CI; uploaded as a workflow artifact) for the
 //! machine-readable perf trajectory next to `BENCH_spmm.json`.
 
-use hinm::coordinator::{BatchServer, PipelineServer, Router, RouterConfig, ServeConfig};
+use hinm::coordinator::{
+    BackendFactory, BatchServer, PipelineServer, Router, RouterConfig, ServeConfig, StageHost,
+    StageLinkMetrics,
+};
+use hinm::runtime::{RemotePipelinedBackend, SpmmBackend, StageLinkConfig};
 use hinm::models::{Activation, HinmModel};
 use hinm::net::{protocol, HttpClient, HttpFront, RouterFront};
 use hinm::sparsity::HinmConfig;
@@ -60,6 +72,10 @@ fn main() {
         .opt("json", None, "write machine-readable results to this path")
         .flag("http", "also run the closed loop through the real HTTP/TCP socket path")
         .flag("router", "also run the closed loop through an `hinm route` tier over two backends")
+        .flag(
+            "stage-hosts",
+            "also run the closed loop across two TCP stage hosts (`hinm serve --stage-hosts` path)",
+        )
         .flag("smoke", "tiny CI configuration (small model, few requests)")
         .flag("bench", "(ignored; injected by `cargo bench`)");
     let a = cli.parse_env();
@@ -252,6 +268,21 @@ fn main() {
         json_rows.push(row);
     }
 
+    if a.flag("stage-hosts") {
+        let batch = *batch_sizes.last().unwrap_or(&4);
+        let row = serve_stage_mode(StageMode {
+            d,
+            d_ff,
+            hinm: &cfg,
+            batch,
+            max_wait,
+            kernel_threads,
+            n_requests,
+            n_clients,
+        });
+        json_rows.push(row);
+    }
+
     if let Some(path) = a.get("json") {
         let doc = Json::obj(vec![
             ("bench", Json::str("serve_throughput")),
@@ -359,6 +390,79 @@ fn serve_http_mode(cfg: HttpMode<'_>) -> Json {
         ("req_per_sec", Json::num(rps)),
         ("p50_us", Json::num(pct[0])),
         ("p99_us", Json::num(pct[1])),
+    ])
+}
+
+/// Configuration of the cross-host stage closed loop.
+struct StageMode<'a> {
+    d: usize,
+    d_ff: usize,
+    hinm: &'a HinmConfig,
+    batch: usize,
+    max_wait: Duration,
+    kernel_threads: usize,
+    n_requests: usize,
+    n_clients: usize,
+}
+
+/// Closed-loop req/s through the cross-host stage path (DESIGN.md §20):
+/// the deep model split two ways across in-process [`StageHost`]s on
+/// ephemeral TCP ports, driven by a `RemotePipelinedBackend` head — the
+/// library shape of `hinm serve --stage-hosts`. The req/s gap versus the
+/// in-process pipeline arm is the cross-host hop. Returns the JSON row.
+fn serve_stage_mode(cfg: StageMode<'_>) -> Json {
+    let StageMode { d, d_ff, hinm, batch, max_wait, kernel_threads, n_requests, n_clients } = cfg;
+    let stages = 2usize;
+    let deep = HinmModel::synthetic_deep(d, d_ff, 2, hinm, Activation::Relu, 7).expect("deep model");
+    let (d_in, d_out) = (deep.d_in(), deep.d_out());
+    let stage_hosts: Vec<StageHost> = deep
+        .split_stages(stages)
+        .expect("split")
+        .into_iter()
+        .map(|m| StageHost::start("127.0.0.1:0", m, kernel_threads).expect("stage host start"))
+        .collect();
+    let hosts: Vec<String> = stage_hosts.iter().map(|h| h.local_addr().to_string()).collect();
+    let links = StageLinkMetrics::new(&hosts);
+    let factory_links = Arc::clone(&links);
+    let factory: BackendFactory = Arc::new(move |_replica| {
+        let b: Box<dyn SpmmBackend> = Box::new(RemotePipelinedBackend::connect(
+            &hosts,
+            d_in,
+            d_out,
+            StageLinkConfig::default(),
+            Arc::clone(&factory_links),
+        )?);
+        Ok(b)
+    });
+    let server = BatchServer::start(factory, ServeConfig::new(batch, max_wait).with_replicas(1))
+        .expect("server start");
+    let (rps, p50, p99) = closed_loop(&server, d, n_requests, n_clients);
+    server.stop();
+    let snap = links.snapshot();
+    let batches: u64 = snap.links.iter().map(|l| l.batches).sum();
+    let failures: u64 = snap
+        .links
+        .iter()
+        .map(|l| l.failures_unreachable + l.failures_timeout + l.failures_protocol)
+        .sum();
+    assert_eq!(failures, 0, "healthy loopback stage hosts must not fail a batch");
+    println!(
+        "\nserve_stage_hosts ({stages} TCP stage hosts, batch {batch}, {kernel_threads} kernel \
+         threads): {n_requests} req → {rps:.0} req/s | engine p50 {p50:.0} µs p99 {p99:.0} µs | \
+         {batches} link round-trips, 0 failures"
+    );
+    for h in stage_hosts {
+        h.stop();
+    }
+    Json::obj(vec![
+        ("backend", Json::str("stage-hosts")),
+        ("stages", Json::num(stages as f64)),
+        ("replicas", Json::num(1.0)),
+        ("batch", Json::num(batch as f64)),
+        ("threads", Json::num(kernel_threads as f64)),
+        ("req_per_sec", Json::num(rps)),
+        ("p50_us", Json::num(p50)),
+        ("p99_us", Json::num(p99)),
     ])
 }
 

@@ -1,13 +1,14 @@
 //! L3 coordinator: the compression pipeline (prune → permute → pack), the
 //! sharded multi-backend inference engine with priority/deadline
-//! scheduling, the fault-tolerant replica router, the Rust-driven
-//! fine-tune trainer, and request metrics.
+//! scheduling, the fault-tolerant replica router, the cross-host stage
+//! host, the Rust-driven fine-tune trainer, and request metrics.
 
 pub mod gradual;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;
 pub mod serve;
+pub mod stage_host;
 pub mod trainer;
 
 pub use metrics::{
@@ -21,4 +22,5 @@ pub use serve::{
     cached_factory, BackendFactory, BatchServer, InferError, PipelineHandle, PipelineServer,
     PipelineStage, Priority, ServeConfig, ServerHandle,
 };
+pub use stage_host::{StageHost, StageLinkMetrics, StageLinkRow, StageLinkSnapshot};
 pub use trainer::{Corpus, LmTrainer};

@@ -305,6 +305,19 @@ impl<T> BoundedQueue<T> {
 
     /// Close: new pushes fail, blocked pushers/poppers wake, remaining
     /// items stay poppable until drained.
+    ///
+    /// **Drain-race invariant** (pinned by
+    /// `pipeline_shutdown_race_never_loses_a_response` in
+    /// `tests/pipeline_serve.rs`): `push` re-checks `closed` under this
+    /// same mutex on every wakeup, so a push racing `close` either lands
+    /// *before* the flag flips — and is then drained and answered, because
+    /// `pop_blocking` returns `None` only once closed **and** empty — or
+    /// observes the flag and returns [`PushRejected::Closed`] (a typed
+    /// stop error to the submitter). There is no interleaving in which an
+    /// item enters the queue and is silently discarded by a normal
+    /// shutdown; only a *panic* path (`CloseOnExit` / `PoisonPipeline`)
+    /// drops queued items, and dropping them drops their response senders,
+    /// which errors the waiting submitters rather than hanging them.
     fn close(&self) {
         lock_unpoisoned(&self.state).closed = true;
         self.not_empty.notify_all();
@@ -828,9 +841,20 @@ fn flush(
         }
         Err(e) => {
             lock_unpoisoned(&metrics.replicas[replica]).errors += 1;
-            let msg = format!("batch execution failed: {e:#}");
+            // A typed [`InferError`] anywhere in the chain — e.g. a
+            // [`crate::runtime::RemotePipelinedBackend`] link failure —
+            // keeps its taxonomy (502 upstream / 504 upstream-timeout at
+            // the HTTP front) instead of collapsing into a blanket
+            // Backend 500.
+            let err = e
+                .chain()
+                .find_map(|c| c.downcast_ref::<InferError>())
+                .cloned()
+                .unwrap_or_else(|| {
+                    InferError::Backend(format!("batch execution failed: {e:#}"))
+                });
             for r in reqs {
-                let _ = r.resp.send(Err(InferError::Backend(msg.clone())));
+                let _ = r.resp.send(Err(err.clone()));
             }
         }
     }
@@ -1106,6 +1130,15 @@ impl PipelineServer {
 
     /// Stop the pipeline: close the entry link, let every stage drain and
     /// answer what is queued (the cascade), join all workers.
+    ///
+    /// A batch submitted concurrently with this call either completes
+    /// with its real output or fails with the typed
+    /// [`InferError::Stopped`] — never a lost response: the entry link's
+    /// close and every push race through one mutex (see
+    /// `BoundedQueue::close`), the stage-0 worker drains whatever made it
+    /// into the entry queue before cascading the close downstream, and a
+    /// submitter whose job is dropped on the panic path is woken by its
+    /// response sender dropping.
     pub fn stop(self) {
         // Drop runs the shutdown sequence.
     }

@@ -1,0 +1,409 @@
+//! Stage-host run loop and per-link metrics for cross-host pipeline
+//! serving (DESIGN.md §20).
+//!
+//! A [`StageHost`] is the server side of `hinm stage`: it owns one
+//! contiguous sub-chain of a [`HinmModel`] (selected with
+//! [`HinmModel::stage_slice`]) and answers activation frames over
+//! persistent TCP connections using the clock-free
+//! [`crate::net::stage_wire`] codec. Each accepted connection gets its own
+//! worker thread with a private [`SpmmEngine`], [`ActivationBuffers`], and
+//! recycled input/output matrices, so concurrent links (one per serve-head
+//! replica) execute batches concurrently — that is what keeps the §15
+//! pipeline property (several batches in flight, each on a different
+//! stage) across machines.
+//!
+//! Failure behaviour mirrors the frame taxonomy: a batch whose dimensions
+//! don't fit the stage is answered with a typed error *frame* (the link
+//! survives; only that batch fails), while any framing violation —
+//! truncation, bad checksum, unknown version — drops the connection (the
+//! stream can no longer be trusted) and the head re-establishes it with
+//! seeded backoff.
+//!
+//! The head-side bookkeeping lives here too: [`StageLinkMetrics`] counts
+//! per-link batches, reconnects, and classified failures
+//! ([`crate::net::route::UpstreamClass`]) and records per-link round-trip
+//! latency; `hinm serve --stage-hosts` surfaces a snapshot on
+//! `/v1/metrics` in both JSON and Prometheus formats.
+
+use super::metrics::LatencyRecorder;
+use crate::models::chain::{ActivationBuffers, HinmModel};
+use crate::net::route::UpstreamClass;
+use crate::net::stage_wire::{Frame, FrameCodec};
+use crate::spmm::SpmmEngine;
+use crate::tensor::Matrix;
+use crate::util::sync::lock_unpoisoned;
+use anyhow::{Context, Result};
+use std::io::BufWriter;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// The stage-host server
+// ---------------------------------------------------------------------------
+
+/// Cumulative stage-host counters (SeqCst; readable while serving).
+#[derive(Default)]
+struct StageHostCounters {
+    /// Activation frames executed and answered.
+    frames: AtomicU64,
+    /// Batches refused with a typed error frame (dim mismatch).
+    rejected: AtomicU64,
+    /// Connections dropped on a framing violation.
+    protocol_drops: AtomicU64,
+}
+
+/// The `hinm stage` server: binds a listener and answers activation
+/// frames with the outputs of its sub-chain, one worker thread per
+/// connection.
+pub struct StageHost {
+    addr: SocketAddr,
+    stopping: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    counters: Arc<StageHostCounters>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl StageHost {
+    /// Bind `addr` (port 0 for ephemeral) and serve `model` — already the
+    /// stage's sub-chain, not the full model — with `kernel_threads`
+    /// kernel lanes per connection engine (0 = available parallelism).
+    pub fn start(addr: &str, model: HinmModel, kernel_threads: usize) -> Result<StageHost> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding stage host listener on {addr}"))?;
+        let addr = listener.local_addr().context("resolving stage host addr")?;
+        let stopping = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let counters = Arc::new(StageHostCounters::default());
+        let model = Arc::new(model);
+        let acceptor = {
+            let stopping = Arc::clone(&stopping);
+            let conns = Arc::clone(&conns);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("hinm-stage-accept".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stopping.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        let _ = stream.set_nodelay(true);
+                        if let Ok(tracked) = stream.try_clone() {
+                            lock_unpoisoned(&conns).push(tracked);
+                        }
+                        let model = Arc::clone(&model);
+                        let counters = Arc::clone(&counters);
+                        // Connection threads are detached; they exit when
+                        // the peer closes, a framing violation forces a
+                        // drop, or `stop()` shuts their socket down.
+                        let _ = std::thread::Builder::new()
+                            .name("hinm-stage-conn".to_string())
+                            .spawn(move || {
+                                stage_connection(stream, &model, kernel_threads, &counters)
+                            });
+                    }
+                })
+                .context("spawning stage host acceptor")?
+        };
+        Ok(StageHost { addr, stopping, conns, counters, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (resolves an ephemeral-port bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Activation frames executed so far.
+    pub fn frames(&self) -> u64 {
+        self.counters.frames.load(Ordering::SeqCst)
+    }
+
+    /// Batches refused with a typed error frame.
+    pub fn rejected(&self) -> u64 {
+        self.counters.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Connections dropped on a framing violation.
+    pub fn protocol_drops(&self) -> u64 {
+        self.counters.protocol_drops.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, shut every live connection down, join the acceptor.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        for s in lock_unpoisoned(&self.conns).drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // Wake the blocking accept with one throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.acceptor.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for StageHost {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve one persistent link: read an activation frame, execute the
+/// sub-chain, answer with the output frame. All buffers (frame scratch,
+/// input/output matrices, activation ping-pong) are recycled across
+/// batches, so the steady state allocates nothing.
+fn stage_connection(
+    stream: TcpStream,
+    model: &HinmModel,
+    kernel_threads: usize,
+    counters: &StageHostCounters,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut read_half = read_half;
+    let mut write_half = BufWriter::new(stream);
+    let engine = SpmmEngine::new(kernel_threads);
+    let mut bufs = ActivationBuffers::new();
+    let mut codec = FrameCodec::new();
+    let mut x = Matrix::zeros(0, 0);
+    let mut y = Matrix::zeros(0, 0);
+    loop {
+        let frame = match codec.read_into(&mut read_half, &mut x) {
+            Ok(f) => f,
+            Err(e) => {
+                // EOF between frames is a clean link close; anything
+                // InvalidData means the stream is desynchronized — drop it
+                // (the head reconnects) rather than guessing at a resync.
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    counters.protocol_drops.fetch_add(1, Ordering::SeqCst);
+                }
+                return;
+            }
+        };
+        match frame {
+            Frame::Activations { seq } => {
+                if x.rows != model.d_in() {
+                    counters.rejected.fetch_add(1, Ordering::SeqCst);
+                    let msg = format!(
+                        "batch has {} input channels, stage wants {}",
+                        x.rows,
+                        model.d_in()
+                    );
+                    if codec.write_error(&mut write_half, seq, &msg).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                model.forward_planned_into(&x, &engine, &mut bufs, &mut y);
+                counters.frames.fetch_add(1, Ordering::SeqCst);
+                if codec.write_activations(&mut write_half, seq, &y).is_err() {
+                    return;
+                }
+            }
+            // Heads never send error frames; tolerate and ignore them so
+            // a future schema revision can repurpose the direction.
+            Frame::Error { .. } => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Head-side per-link metrics
+// ---------------------------------------------------------------------------
+
+/// Per-link counters and latency on the serve head, one slot per stage
+/// host in chain order. Counters are SeqCst atomics — the exact values
+/// are part of the chaos-test contract (`rust/tests/stage_chaos.rs`).
+pub struct StageLinkMetrics {
+    links: Vec<StageLinkStats>,
+}
+
+struct StageLinkStats {
+    host: String,
+    batches: AtomicU64,
+    reconnects: AtomicU64,
+    failures_unreachable: AtomicU64,
+    failures_timeout: AtomicU64,
+    failures_protocol: AtomicU64,
+    latency: Mutex<LatencyRecorder>,
+}
+
+/// Snapshot of [`StageLinkMetrics`] for rendering (JSON / Prometheus).
+pub struct StageLinkSnapshot {
+    /// One row per stage link, in chain order.
+    pub links: Vec<StageLinkRow>,
+}
+
+/// One link's counters at snapshot time.
+pub struct StageLinkRow {
+    /// The stage host address, as configured.
+    pub host: String,
+    /// Batches round-tripped successfully on this link.
+    pub batches: u64,
+    /// Successful re-establishments after a link failure.
+    pub reconnects: u64,
+    /// Failures classified [`UpstreamClass::Unreachable`].
+    pub failures_unreachable: u64,
+    /// Failures classified [`UpstreamClass::TimedOut`].
+    pub failures_timeout: u64,
+    /// Failures classified [`UpstreamClass::Protocol`].
+    pub failures_protocol: u64,
+    /// p95 of the link round-trip, microseconds (0 with no samples).
+    pub p95_us: f64,
+}
+
+impl StageLinkMetrics {
+    /// One zeroed slot per stage host, in chain order.
+    pub fn new(hosts: &[String]) -> Arc<StageLinkMetrics> {
+        Arc::new(StageLinkMetrics {
+            links: hosts
+                .iter()
+                .map(|h| StageLinkStats {
+                    host: h.clone(),
+                    batches: AtomicU64::new(0),
+                    reconnects: AtomicU64::new(0),
+                    failures_unreachable: AtomicU64::new(0),
+                    failures_timeout: AtomicU64::new(0),
+                    failures_protocol: AtomicU64::new(0),
+                    latency: Mutex::new(LatencyRecorder::with_capacity(4096)),
+                })
+                .collect(),
+        })
+    }
+
+    /// Count one successful round-trip on `link` and record its latency.
+    pub fn record_batch(&self, link: usize, rtt: Duration) {
+        let st = &self.links[link];
+        st.batches.fetch_add(1, Ordering::SeqCst);
+        lock_unpoisoned(&st.latency).record(rtt);
+    }
+
+    /// Count one failed round-trip on `link`, by taxonomy class.
+    pub fn record_failure(&self, link: usize, class: UpstreamClass) {
+        let st = &self.links[link];
+        let counter = match class {
+            UpstreamClass::Unreachable => &st.failures_unreachable,
+            UpstreamClass::TimedOut => &st.failures_timeout,
+            UpstreamClass::Protocol => &st.failures_protocol,
+        };
+        counter.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Count one successful link re-establishment on `link`.
+    pub fn record_reconnect(&self, link: usize) {
+        self.links[link].reconnects.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Reconnects summed across links (chaos-test convenience).
+    pub fn total_reconnects(&self) -> u64 {
+        self.links.iter().map(|l| l.reconnects.load(Ordering::SeqCst)).sum()
+    }
+
+    /// Point-in-time copy of every link's counters.
+    pub fn snapshot(&self) -> StageLinkSnapshot {
+        StageLinkSnapshot {
+            links: self
+                .links
+                .iter()
+                .map(|st| StageLinkRow {
+                    host: st.host.clone(),
+                    batches: st.batches.load(Ordering::SeqCst),
+                    reconnects: st.reconnects.load(Ordering::SeqCst),
+                    failures_unreachable: st.failures_unreachable.load(Ordering::SeqCst),
+                    failures_timeout: st.failures_timeout.load(Ordering::SeqCst),
+                    failures_protocol: st.failures_protocol.load(Ordering::SeqCst),
+                    p95_us: lock_unpoisoned(&st.latency).percentile(95.0),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Activation;
+    use crate::sparsity::HinmConfig;
+
+    fn tiny_model() -> HinmModel {
+        let cfg = HinmConfig::with_24(4, 0.5);
+        HinmModel::synthetic_ffn(16, 32, &cfg, Activation::Relu, 11).expect("model")
+    }
+
+    #[test]
+    fn stage_host_answers_frames_bit_exactly() {
+        let model = tiny_model();
+        let x = Matrix::from_vec(16, 3, (0..48).map(|i| (i as f32) * 0.125 - 2.0).collect());
+        let want = model.forward_planned(
+            &x,
+            &SpmmEngine::single(),
+            &mut ActivationBuffers::new(),
+        );
+        let host = StageHost::start("127.0.0.1:0", model, 1).expect("start");
+        let mut conn = TcpStream::connect(host.local_addr()).expect("connect");
+        let mut codec = FrameCodec::new();
+        let mut out = Matrix::zeros(0, 0);
+        for seq in [5u64, 6] {
+            codec.write_activations(&mut conn, seq, &x).expect("send");
+            let frame = codec.read_into(&mut conn, &mut out).expect("recv");
+            assert_eq!(frame, Frame::Activations { seq });
+            let wb: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = out.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "remote stage output must be bit-identical");
+        }
+        assert_eq!(host.frames(), 2);
+        host.stop();
+    }
+
+    #[test]
+    fn dim_mismatch_gets_a_typed_error_frame_and_the_link_survives() {
+        let host = StageHost::start("127.0.0.1:0", tiny_model(), 1).expect("start");
+        let mut conn = TcpStream::connect(host.local_addr()).expect("connect");
+        let mut codec = FrameCodec::new();
+        let mut out = Matrix::zeros(0, 0);
+        let bad = Matrix::zeros(5, 2);
+        codec.write_activations(&mut conn, 1, &bad).expect("send");
+        match codec.read_into(&mut conn, &mut out).expect("recv") {
+            Frame::Error { seq, message } => {
+                assert_eq!(seq, 1);
+                assert!(message.contains("input channels"), "{message}");
+            }
+            other => panic!("expected an error frame, got {other:?}"),
+        }
+        // The same connection still executes well-formed batches.
+        let good = Matrix::from_vec(16, 1, vec![0.5; 16]);
+        codec.write_activations(&mut conn, 2, &good).expect("send");
+        assert_eq!(
+            codec.read_into(&mut conn, &mut out).expect("recv"),
+            Frame::Activations { seq: 2 }
+        );
+        assert_eq!(host.rejected(), 1);
+        host.stop();
+    }
+
+    #[test]
+    fn link_metrics_count_by_class_and_snapshot() {
+        let m = StageLinkMetrics::new(&["a:1".to_string(), "b:2".to_string()]);
+        m.record_batch(0, Duration::from_micros(100));
+        m.record_batch(0, Duration::from_micros(300));
+        m.record_failure(0, UpstreamClass::TimedOut);
+        m.record_failure(1, UpstreamClass::Unreachable);
+        m.record_failure(1, UpstreamClass::Protocol);
+        m.record_reconnect(1);
+        let s = m.snapshot();
+        assert_eq!(s.links[0].host, "a:1");
+        assert_eq!(s.links[0].batches, 2);
+        assert_eq!(s.links[0].failures_timeout, 1);
+        assert_eq!(s.links[1].failures_unreachable, 1);
+        assert_eq!(s.links[1].failures_protocol, 1);
+        assert_eq!(s.links[1].reconnects, 1);
+        assert_eq!(m.total_reconnects(), 1);
+        assert!(s.links[0].p95_us > 0.0);
+    }
+}

@@ -7,6 +7,7 @@
 //!   info                                        list AOT artifacts
 //!   build                                       serialize catalog models to versioned artifacts
 //!   serve                                       multi-replica batched inference engine
+//!   stage                                       one cross-host pipeline stage over TCP
 //!   route                                       fault-tolerant router over serve hosts
 //!   serve-demo                                  alias: serve --backend pjrt
 //!   train-demo                                  short LM train loop via the AOT step
@@ -33,6 +34,7 @@ fn main() {
         "info" => cmd_info(args),
         "build" => cmd_build(args),
         "serve" => cmd_serve(args),
+        "stage" => cmd_stage(args),
         "route" => cmd_route(args),
         "serve-demo" => {
             // Historical alias for the PJRT path; explicit flags still win.
@@ -75,14 +77,27 @@ fn usage() {
          \x20         [--kernel-threads K] [--pipeline-stages S] [--blocks N]\n\
          \x20         [--values f32|bf16] [--http ADDR] [--http-workers W] [--cache-capacity N]\n\
          \x20         [--model-dir DIR] [--default-model NAME]\n\
+         \x20         [--stage-hosts HOST:PORT,HOST:PORT[,…]] [--model NAME]\n\
+         \x20         [--link-connect-timeout-ms MS] [--link-io-timeout-ms MS]\n\
+         \x20         [--link-attempts N] [--link-backoff-ms MS] [--link-backoff-max-ms MS]\n\
          \x20         sharded batched inference engine; with --http it serves\n\
          \x20         POST /v1/infer, GET /v1/metrics[?format=prometheus], GET /healthz\n\
          \x20         until killed, otherwise it runs a closed-loop load demo;\n\
          \x20         --pipeline-stages S shards the layer chain across S stage\n\
          \x20         workers (native only, bit-identical responses);\n\
+         \x20         --stage-hosts runs the same split across `hinm stage`\n\
+         \x20         processes over TCP, one host per stage in chain order\n\
+         \x20         (native only, still bit-identical; DESIGN.md §20);\n\
          \x20         --model-dir DIR serves every artifact in DIR behind one\n\
          \x20         front (requests route on the body's \"model\" field; POST\n\
          \x20         /v1/admin/reload hot-swaps new artifact versions)\n\
+         \x20 stage   --stage K/S [--listen ADDR] [--kernel-threads K] [--model NAME]\n\
+         \x20         [--d N] [--d-ff N] [--blocks N] [--sparsity P] [--v V]\n\
+         \x20         [--seed S] [--values f32|bf16]\n\
+         \x20         serve stage K of an S-way chain split over TCP activation\n\
+         \x20         frames for a `hinm serve --stage-hosts` head; both sides\n\
+         \x20         must build the same model (same flags/seed), so no\n\
+         \x20         weights cross the wire (DESIGN.md §20)\n\
          \x20 route   --backends HOST:PORT,HOST:PORT[,…] [--http ADDR] [--http-workers W]\n\
          \x20         [--probe-interval-ms MS] [--probe-timeout-ms MS] [--fail-threshold N]\n\
          \x20         [--per-try-timeout-ms MS] [--connect-timeout-ms MS] [--max-attempts N]\n\
@@ -364,6 +379,21 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             None,
             "model served when a request has no \"model\" field (default: first name in the directory)",
         )
+        .opt(
+            "stage-hosts",
+            None,
+            "native: comma-separated `hinm stage` HOST:PORT list, one per pipeline stage in chain order (DESIGN.md §20)",
+        )
+        .opt(
+            "model",
+            None,
+            "native: serving-catalog model name (same catalog as `hinm build`; overrides the synthetic --d/--d-ff/--blocks flags)",
+        )
+        .opt("link-connect-timeout-ms", Some("500"), "stage link connect timeout per attempt, ms")
+        .opt("link-io-timeout-ms", Some("5000"), "stage link read/write deadline per batch, ms")
+        .opt("link-attempts", Some("3"), "stage link connect attempts per (re)establishment")
+        .opt("link-backoff-ms", Some("50"), "stage link reconnect backoff base, ms (seeded jitter)")
+        .opt("link-backoff-max-ms", Some("2000"), "stage link reconnect backoff cap, ms")
         .opt("requests", Some("256"), "closed-loop demo requests (no --http)")
         .opt("clients", Some("8"), "concurrent demo clients (no --http)")
         .opt("d", Some("256"), "native: model width")
@@ -393,6 +423,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         if backend != "native" {
             bail!("--model-dir serves registry artifacts on the native backend only (drop --backend {backend})");
         }
+        if a.get("stage-hosts").is_some() {
+            bail!(
+                "--model-dir and --stage-hosts do not compose yet: stage hosts pin one \
+                 sharded model for the server's lifetime, while registry artifacts \
+                 hot-swap whole models per replica; drop one of the two flags"
+            );
+        }
         if pipeline_stages > 1 {
             bail!(
                 "--model-dir and --pipeline-stages do not compose yet: registry artifacts \
@@ -409,45 +446,24 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     // function).
     let mut pipeline: Option<hinm::coordinator::PipelineServer> = None;
 
+    // Per-link counters when driving remote stage hosts; handed to the
+    // HTTP front so /v1/metrics exposes them (DESIGN.md §20).
+    let mut stage_links: Option<std::sync::Arc<hinm::coordinator::StageLinkMetrics>> = None;
+
     // Each branch yields the engine config plus a factory building one
     // backend per replica; the cache decorator then wraps whichever
     // backend was picked.
     let (scfg, base_factory): (hinm::coordinator::ServeConfig, hinm::coordinator::BackendFactory) =
         match backend.as_str() {
             "native" => {
-                let d = a.usize_or("d", 256);
-                let d_ff = a.usize_or("d-ff", 512);
-                let blocks = a.usize_or("blocks", 1).max(1);
                 let kernel_threads = a.usize_or("kernel-threads", 1);
-                let cfg = HinmConfig::for_total_sparsity(
-                    a.usize_or("v", 32),
-                    a.usize_or("sparsity", 75) as f64 / 100.0,
-                );
-                let seed = a.u64_or("seed", 7);
-                let model = if blocks == 1 {
-                    hinm::models::HinmModel::synthetic_ffn(
-                        d,
-                        d_ff,
-                        &cfg,
-                        hinm::models::Activation::Relu,
-                        seed,
-                    )?
-                } else {
-                    hinm::models::HinmModel::synthetic_deep(
-                        d,
-                        d_ff,
-                        blocks,
-                        &cfg,
-                        hinm::models::Activation::Relu,
-                        seed,
-                    )?
-                };
+                let model = native_model(&a)?;
                 let model = std::sync::Arc::new(model.with_value_format(values));
                 println!(
-                    "native backend: {d}→{d_ff}→{d} FFN × {blocks} block(s) ({} layers) | V={} total sparsity {:.1}% | {replicas} replicas × {kernel_threads} kernel threads",
-                    model.n_layers(),
-                    cfg.v,
-                    cfg.total_sparsity() * 100.0
+                    "native backend: {}→{} ({} layers) | {replicas} replicas × {kernel_threads} kernel threads",
+                    model.d_in(),
+                    model.d_out(),
+                    model.n_layers()
                 );
                 // Which microkernel this process actually dispatches to —
                 // ISA tier, value format, and the cache sizes that set the
@@ -456,7 +472,62 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 let scfg = hinm::coordinator::ServeConfig::new(a.usize_or("batch", 8), max_wait)
                     .with_replicas(replicas)
                     .with_queue_depth(queue_depth);
-                let factory: hinm::coordinator::BackendFactory = if pipeline_stages > 1 {
+                let factory: hinm::coordinator::BackendFactory = if let Some(spec) =
+                    a.get("stage-hosts")
+                {
+                    if pipeline_stages > 1 {
+                        bail!(
+                            "--stage-hosts and --pipeline-stages do not compose: the remote \
+                             hosts ARE the pipeline stages (one host per stage, in chain order)"
+                        );
+                    }
+                    let hosts: Vec<String> = spec
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .map(str::to_string)
+                        .collect();
+                    if hosts.is_empty() {
+                        bail!("--stage-hosts selected nothing");
+                    }
+                    // Validate the chain actually splits this many ways and
+                    // show the operator the per-stage shapes each host must
+                    // be serving (`hinm stage --stage K/S`, same flags).
+                    let split = model.split_stages(hosts.len())?;
+                    println!("remote pipeline: {} stage host(s)", hosts.len());
+                    for (i, (h, m)) in hosts.iter().zip(&split).enumerate() {
+                        println!(
+                            "  stage {}/{} {h}: {}→{} ({} layers)",
+                            i + 1,
+                            hosts.len(),
+                            m.d_in(),
+                            m.d_out(),
+                            m.n_layers()
+                        );
+                    }
+                    let lcfg = hinm::runtime::StageLinkConfig {
+                        connect_timeout_ms: a.u64_or("link-connect-timeout-ms", 500),
+                        io_timeout_ms: a.u64_or("link-io-timeout-ms", 5_000),
+                        connect_attempts: a.u64_or("link-attempts", 3) as u32,
+                        backoff_base_ms: a.u64_or("link-backoff-ms", 50),
+                        backoff_max_ms: a.u64_or("link-backoff-max-ms", 2_000),
+                        seed: a.u64_or("seed", 7),
+                    };
+                    let links = hinm::coordinator::StageLinkMetrics::new(&hosts);
+                    stage_links = Some(std::sync::Arc::clone(&links));
+                    let (d_in, d_out) = (model.d_in(), model.d_out());
+                    std::sync::Arc::new(move |_replica| {
+                        let b: Box<dyn hinm::runtime::SpmmBackend> =
+                            Box::new(hinm::runtime::RemotePipelinedBackend::connect(
+                                &hosts,
+                                d_in,
+                                d_out,
+                                lcfg.clone(),
+                                std::sync::Arc::clone(&links),
+                            )?);
+                        Ok(b)
+                    })
+                } else if pipeline_stages > 1 {
                     // Pipeline-parallel mode: the chain is sharded across
                     // stage workers; each replica's backend submits whole
                     // batches into stage 0, so replicas keep several
@@ -494,6 +565,9 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "pjrt" => {
                 if pipeline_stages > 1 {
                     bail!("--pipeline-stages is native-only (the PJRT artifact is a single compiled graph)");
+                }
+                if a.get("stage-hosts").is_some() {
+                    bail!("--stage-hosts is native-only (the PJRT artifact is a single compiled graph)");
                 }
                 if values != hinm::spmm::ValueFormat::F32 {
                     bail!("--values bf16 is native-only (the PJRT artifact fixes its own value types)");
@@ -550,11 +624,12 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         // /v1/metrics; the PJRT path runs whatever the artifact compiled.
         let kernel_info = (backend == "native")
             .then(|| hinm::spmm::KernelInfo::current(values));
-        let front = hinm::net::HttpFront::start(
+        let front = hinm::net::HttpFront::start_with_links(
             addr,
             server.handle.clone(),
             cache_stats.clone(),
             kernel_info,
+            stage_links.clone(),
             a.usize_or("http-workers", 8),
         )?;
         println!("HTTP front listening on http://{}", front.local_addr());
@@ -605,6 +680,94 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         ps.stop();
     }
     Ok(())
+}
+
+/// Build the native model that `serve` and `stage` must agree on: a
+/// serving-catalog entry when `--model NAME` is given, otherwise the
+/// synthetic FFN/deep chain from the `--d/--d-ff/--blocks/...` flags.
+/// Cross-host bit-identity rests on both processes calling this with the
+/// same flags and seed, so no weights ever cross the wire (DESIGN.md §20).
+fn native_model(a: &hinm::util::cli::Args) -> Result<hinm::models::HinmModel> {
+    let seed = a.u64_or("seed", 7);
+    if let Some(name) = a.get("model") {
+        let catalog = hinm::models::serving_models(seed)?;
+        for (n, m) in catalog.into_iter() {
+            if n == name {
+                return Ok(m);
+            }
+        }
+        let names: Vec<&str> = hinm::models::serving_models(seed)?.iter().map(|(n, _)| *n).collect();
+        bail!("unknown --model {name:?} (catalog: {})", names.join(", "));
+    }
+    let d = a.usize_or("d", 256);
+    let d_ff = a.usize_or("d-ff", 512);
+    let blocks = a.usize_or("blocks", 1).max(1);
+    let cfg = HinmConfig::for_total_sparsity(
+        a.usize_or("v", 32),
+        a.usize_or("sparsity", 75) as f64 / 100.0,
+    );
+    if blocks == 1 {
+        hinm::models::HinmModel::synthetic_ffn(d, d_ff, &cfg, hinm::models::Activation::Relu, seed)
+    } else {
+        hinm::models::HinmModel::synthetic_deep(
+            d,
+            d_ff,
+            blocks,
+            &cfg,
+            hinm::models::Activation::Relu,
+            seed,
+        )
+    }
+}
+
+fn cmd_stage(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("hinm stage", "serve one pipeline stage of a HiNM chain over TCP")
+        .opt("stage", None, "K/S — serve stage K of an S-way split, 1-based (required)")
+        .opt("listen", Some("127.0.0.1:0"), "TCP listen address for activation frames")
+        .opt(
+            "kernel-threads",
+            Some("1"),
+            "kernel worker lanes (0 = all cores); bit-identical output",
+        )
+        .opt("model", None, "serving-catalog model name (must match the serve head)")
+        .opt("d", Some("256"), "synthetic model: width")
+        .opt("d-ff", Some("512"), "synthetic model: hidden width")
+        .opt("blocks", Some("1"), "synthetic model: FFN blocks (2·blocks layers)")
+        .opt("sparsity", Some("75"), "synthetic model: total sparsity %")
+        .opt("v", Some("32"), "synthetic model: vector size V")
+        .opt("seed", Some("7"), "synthetic-weight seed (must match the serve head)")
+        .opt("values", Some("f32"), "packed kernel value format (f32|bf16; must match the head)");
+    let a = cli.parse_tail(args);
+
+    let spec = a.get("stage").context("--stage K/S is required (e.g. --stage 2/3)")?;
+    let (k, s) = spec
+        .split_once('/')
+        .with_context(|| format!("--stage wants K/S (e.g. 2/3), got {spec:?}"))?;
+    let stage: usize = k.trim().parse().with_context(|| format!("bad stage index {k:?}"))?;
+    let stages: usize = s.trim().parse().with_context(|| format!("bad stage count {s:?}"))?;
+    let values = {
+        let s = a.get_or("values", "f32");
+        hinm::spmm::ValueFormat::parse(&s)
+            .with_context(|| format!("bad --values {s:?} (expected f32|bf16)"))?
+    };
+    let kernel_threads = a.usize_or("kernel-threads", 1);
+
+    // Same construction path as the serve head; `stage_slice` then picks
+    // this host's contiguous sub-chain out of the deterministic split.
+    let model = native_model(&a)?.with_value_format(values);
+    let sub = model.stage_slice(stage, stages)?;
+    let (d_in, d_out, layers) = (sub.d_in(), sub.d_out(), sub.n_layers());
+    let host = hinm::coordinator::StageHost::start(&a.get_or("listen", "127.0.0.1:0"), sub, kernel_threads)?;
+    println!("kernel: {}", hinm::spmm::KernelInfo::current(values));
+    // Tests and operators parse this line for the bound (possibly
+    // ephemeral) port; keep its shape stable.
+    println!(
+        "stage {stage}/{stages} listening on {} | {d_in}→{d_out} ({layers} layers) (Ctrl-C to stop)",
+        host.local_addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn cmd_route(args: Vec<String>) -> Result<()> {

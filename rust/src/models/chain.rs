@@ -266,6 +266,21 @@ impl HinmModel {
             .collect())
     }
 
+    /// The single sub-chain a distributed stage host runs: stage `stage`
+    /// (1-based, matching the CLI's `--stage K/S`) of the `stages`-way
+    /// split. Because [`HinmModel::split_stages`] is deterministic in the
+    /// model, every host that builds the same model (same flags/seed)
+    /// computes the same partition — the serve head and its `hinm stage`
+    /// peers agree on stage boundaries without ever shipping weights
+    /// (DESIGN.md §20). Errors if `stage` is 0 or exceeds `stages`.
+    pub fn stage_slice(&self, stage: usize, stages: usize) -> Result<HinmModel> {
+        if stage == 0 || stage > stages {
+            bail!("stage {stage} is outside 1..={stages}");
+        }
+        let mut split = self.split_stages(stages)?;
+        Ok(split.swap_remove(stage - 1))
+    }
+
     /// Forward pass over the **unplanned** scratch kernel
     /// ([`crate::spmm::spmm_with_scratch`] + separate bias/activation
     /// sweeps, one fresh matrix per layer). Kept as the pre-engine

@@ -39,6 +39,17 @@
 //! | `/v1/models` | GET | union of the models the live backends advertise |
 //! | `/healthz` | GET | liveness + live/total backend counts |
 //!
+//! *Below* the single-host front sits the cross-host stage tier
+//! ([`stage_wire`], DESIGN.md §20): `hinm serve --stage-hosts` drives a
+//! chain of `hinm stage` processes over persistent TCP links speaking a
+//! length-prefixed binary activation-frame protocol (schema version,
+//! batch dims, seq id, f32 LE payload, FNV-1a64 checksum). The frame
+//! codec here is clock-free; link timing, reconnect backoff, and per-link
+//! metrics live in [`crate::runtime::RemotePipelinedBackend`] and
+//! [`crate::coordinator::StageLinkMetrics`], and the serve head's
+//! `/v1/metrics` gains per-link counters in both formats
+//! ([`HttpFront::start_with_links`]).
+//!
 //! Backpressure propagates naturally: a full engine queue blocks the HTTP
 //! worker inside `infer_opts`, which stalls that connection while the
 //! other pool workers keep serving. Engine errors map onto status codes
@@ -49,9 +60,11 @@
 pub mod http;
 pub mod protocol;
 pub mod route;
+pub mod stage_wire;
 
 use crate::coordinator::metrics::ModelCounters;
 use crate::coordinator::serve::ServerHandle;
+use crate::coordinator::stage_host::StageLinkMetrics;
 use crate::runtime::backend::CacheStats;
 use crate::spmm::KernelInfo;
 use crate::util::json::{self, Json};
@@ -113,8 +126,24 @@ impl HttpFront {
         kernel: Option<KernelInfo>,
         workers: usize,
     ) -> Result<HttpFront> {
-        let handler: Handler =
-            Arc::new(move |req: &HttpRequest| route(req, &handle, cache.as_deref(), kernel));
+        Self::start_with_links(addr, handle, cache, kernel, None, workers)
+    }
+
+    /// [`HttpFront::start`] for a head driving cross-host pipeline stages
+    /// (`hinm serve --stage-hosts`, DESIGN.md §20): additionally exposes
+    /// the per-link batch/reconnect/failure counters and round-trip p95
+    /// from `links` on `/v1/metrics`, in both formats.
+    pub fn start_with_links(
+        addr: &str,
+        handle: ServerHandle,
+        cache: Option<Arc<CacheStats>>,
+        kernel: Option<KernelInfo>,
+        links: Option<Arc<StageLinkMetrics>>,
+        workers: usize,
+    ) -> Result<HttpFront> {
+        let handler: Handler = Arc::new(move |req: &HttpRequest| {
+            route(req, &handle, cache.as_deref(), kernel, links.as_deref())
+        });
         let server = HttpServer::start(addr, handler, workers)?;
         Ok(HttpFront { server })
     }
@@ -136,6 +165,7 @@ fn route(
     engine: &ServerHandle,
     cache: Option<&CacheStats>,
     kernel: Option<KernelInfo>,
+    links: Option<&StageLinkMetrics>,
 ) -> HttpResponse {
     let path = req.path.split('?').next().unwrap_or("");
     match path {
@@ -147,7 +177,7 @@ fn route(
             _ => method_not_allowed(req, "GET"),
         },
         "/v1/metrics" => match req.method.as_str() {
-            "GET" => metrics_route(req, engine, cache, kernel),
+            "GET" => metrics_route(req, engine, cache, kernel, links),
             _ => method_not_allowed(req, "GET"),
         },
         "/v1/infer" => match req.method.as_str() {
@@ -172,23 +202,34 @@ fn metrics_route(
     engine: &ServerHandle,
     cache: Option<&CacheStats>,
     kernel: Option<KernelInfo>,
+    links: Option<&StageLinkMetrics>,
 ) -> HttpResponse {
     let query = req.path.split_once('?').map(|(_, q)| q).unwrap_or("");
     let format = query
         .split('&')
         .find_map(|kv| kv.strip_prefix("format="))
         .unwrap_or("json");
+    let link_snap = links.map(|l| l.snapshot());
     match format {
-        "json" => HttpResponse::json(
-            200,
-            protocol::metrics_json(engine.metrics(), cache, kernel.as_ref()).compact(),
-        ),
-        "prometheus" => HttpResponse {
-            status: 200,
-            content_type: PROMETHEUS_CONTENT_TYPE,
-            body: protocol::metrics_prometheus(engine.metrics(), cache, kernel.as_ref()),
-            headers: Vec::new(),
-        },
+        "json" => {
+            let mut body = protocol::metrics_json(engine.metrics(), cache, kernel.as_ref());
+            if let (Some(snap), Json::Obj(map)) = (&link_snap, &mut body) {
+                map.insert("stage_links".to_string(), protocol::stage_links_json(snap));
+            }
+            HttpResponse::json(200, body.compact())
+        }
+        "prometheus" => {
+            let mut body = protocol::metrics_prometheus(engine.metrics(), cache, kernel.as_ref());
+            if let Some(snap) = &link_snap {
+                body.push_str(&protocol::stage_links_prometheus(snap));
+            }
+            HttpResponse {
+                status: 200,
+                content_type: PROMETHEUS_CONTENT_TYPE,
+                body,
+                headers: Vec::new(),
+            }
+        }
         other => HttpResponse::json(
             400,
             protocol::error_body(

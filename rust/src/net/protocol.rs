@@ -20,6 +20,7 @@
 use crate::coordinator::metrics::{EngineMetrics, ModelCounters};
 use crate::coordinator::router::RouterSnapshot;
 use crate::coordinator::serve::{InferError, Priority};
+use crate::coordinator::stage_host::StageLinkSnapshot;
 use crate::runtime::backend::CacheStats;
 use crate::spmm::KernelInfo;
 use crate::util::json::Json;
@@ -609,6 +610,90 @@ pub fn router_metrics_prometheus(s: &RouterSnapshot) -> String {
             .map(|b| {
                 format!("hinm_router_backend_p95_microseconds{{backend=\"{}\"}} {}", b.name, b.p95_us)
             })
+            .collect::<Vec<_>>(),
+    );
+    out
+}
+
+/// The `stage_links` block a `--stage-hosts` head adds to `/v1/metrics`:
+/// one row per TCP link to a stage host (chain order) with its batch,
+/// reconnect, and taxonomy-classified failure counters plus round-trip
+/// p95 (DESIGN.md §20). Same dual-format contract as every other counter
+/// surface; exact values are pinned by `rust/tests/stage_chaos.rs`.
+pub fn stage_links_json(s: &StageLinkSnapshot) -> Json {
+    Json::Arr(
+        s.links
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("host", Json::str(&l.host)),
+                    ("batches", Json::num(l.batches as f64)),
+                    ("reconnects", Json::num(l.reconnects as f64)),
+                    ("failures_unreachable", Json::num(l.failures_unreachable as f64)),
+                    ("failures_timeout", Json::num(l.failures_timeout as f64)),
+                    ("failures_protocol", Json::num(l.failures_protocol as f64)),
+                    ("p95_us", Json::num(l.p95_us)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// [`stage_links_json`] in the Prometheus text exposition format.
+pub fn stage_links_prometheus(s: &StageLinkSnapshot) -> String {
+    let mut out = String::new();
+    family(
+        &mut out,
+        "hinm_stage_link_batches_total",
+        "counter",
+        "Batches round-tripped successfully per stage link.",
+        &s.links
+            .iter()
+            .map(|l| format!("hinm_stage_link_batches_total{{host=\"{}\"}} {}", l.host, l.batches))
+            .collect::<Vec<_>>(),
+    );
+    family(
+        &mut out,
+        "hinm_stage_link_reconnects_total",
+        "counter",
+        "Successful link re-establishments after a stage link failure.",
+        &s.links
+            .iter()
+            .map(|l| {
+                format!("hinm_stage_link_reconnects_total{{host=\"{}\"}} {}", l.host, l.reconnects)
+            })
+            .collect::<Vec<_>>(),
+    );
+    let mut failures = Vec::new();
+    for l in &s.links {
+        failures.push(format!(
+            "hinm_stage_link_failures_total{{host=\"{}\",class=\"unreachable\"}} {}",
+            l.host, l.failures_unreachable
+        ));
+        failures.push(format!(
+            "hinm_stage_link_failures_total{{host=\"{}\",class=\"timeout\"}} {}",
+            l.host, l.failures_timeout
+        ));
+        failures.push(format!(
+            "hinm_stage_link_failures_total{{host=\"{}\",class=\"protocol\"}} {}",
+            l.host, l.failures_protocol
+        ));
+    }
+    family(
+        &mut out,
+        "hinm_stage_link_failures_total",
+        "counter",
+        "Failed stage-link round-trips, by DESIGN.md §19 taxonomy class.",
+        &failures,
+    );
+    family(
+        &mut out,
+        "hinm_stage_link_p95_microseconds",
+        "gauge",
+        "Measured p95 round-trip latency per stage link.",
+        &s.links
+            .iter()
+            .map(|l| format!("hinm_stage_link_p95_microseconds{{host=\"{}\"}} {}", l.host, l.p95_us))
             .collect::<Vec<_>>(),
     );
     out

@@ -1,0 +1,365 @@
+//! Wire layer of cross-host pipeline stages (DESIGN.md §20).
+//!
+//! Everything here is clock-free: this file holds only the length-prefixed
+//! binary activation-frame codec spoken between the serve head
+//! ([`crate::runtime::RemotePipelinedBackend`]) and `hinm stage` hosts
+//! ([`crate::coordinator::StageHost`]). All wall-clock reads, socket
+//! timeouts, reconnect backoff, and latency accounting live in the
+//! coordinator/runtime layers — the same layering rule (hinm-lint R3) that
+//! keeps timing out of the numeric kernels and out of `net/route.rs` keeps
+//! it out of this module, so frame encoding/decoding is a pure function of
+//! bytes.
+//!
+//! ## Frame format (all integers little-endian)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0  | 4 | `body_len` — bytes that follow this prefix |
+//! | 4  | 2 | `version` — [`STAGE_WIRE_VERSION`] |
+//! | 6  | 1 | `kind` — 0 activations, 1 typed stage error |
+//! | 7  | 1 | reserved, must be 0 |
+//! | 8  | 8 | `seq` — batch sequence id, echoed by the peer |
+//! | 16 | 4 | `rows` — activation channels (0 for error frames) |
+//! | 20 | 4 | `cols` — batch columns (0 for error frames) |
+//! | 24 | … | payload — `rows*cols` f32 LE (kind 0) or UTF-8 message (kind 1) |
+//! | …  | 8 | `checksum` — FNV-1a64 over bytes 4‥body_len−8 |
+//!
+//! **Bit-identity.** Activation payloads move as raw IEEE-754 bit patterns
+//! (`f32::to_le_bytes` / `from_le_bytes`), so a batch survives any number
+//! of link hops bit-exactly — including NaNs, signed zeros, and denormals.
+//! The checksum detects corruption; it never "repairs" anything.
+//!
+//! **Failure taxonomy.** Decode failures are [`std::io::Error`]s whose
+//! kinds feed the §19 classifier unchanged: truncation mid-frame is
+//! `UnexpectedEof` (the peer died — `Unreachable`), while a bad checksum,
+//! wrong version, unknown kind, or a length prefix that disagrees with the
+//! batch dims is `InvalidData` (the stream is desynchronized — `Protocol`;
+//! the connection must be dropped, not resynchronized).
+//!
+//! **Recycling.** [`FrameCodec`] owns the scratch body buffer and
+//! [`FrameCodec::read_into`] deposits activations into a caller-provided
+//! [`Matrix`], so steady-state frame I/O allocates nothing on either end —
+//! the cross-host analogue of the §15 recycled hand-off buffers.
+
+use crate::runtime::artifact::fnv1a64;
+use crate::tensor::Matrix;
+use std::io::{self, Read, Write};
+
+/// Current frame schema version. A reader rejects any other value with
+/// `InvalidData`: versioning is a hard ladder (decode what you know,
+/// refuse what you don't) — never a silent best-effort parse.
+pub const STAGE_WIRE_VERSION: u16 = 1;
+
+/// Upper bound on `body_len` (matches the HTTP front's 64 MB body cap) so
+/// a lying length prefix cannot make a reader allocate unboundedly.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// Frame kind 0: an activation batch.
+pub const KIND_ACTIVATIONS: u8 = 0;
+/// Frame kind 1: a typed per-batch stage error (UTF-8 message payload).
+pub const KIND_ERROR: u8 = 1;
+
+/// Fixed header bytes inside the body (version..cols).
+const HEADER_BYTES: usize = 20;
+/// Trailing checksum bytes.
+const TRAILER_BYTES: usize = 8;
+/// Smallest legal `body_len` (empty payload).
+const MIN_BODY_BYTES: usize = HEADER_BYTES + TRAILER_BYTES;
+
+/// A decoded frame. Activation payloads are deposited into the `out`
+/// matrix passed to [`FrameCodec::read_into`] (reshaped in place), so the
+/// variant carries only the metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// An activation batch for/from stage execution; the matrix landed in
+    /// the caller's recycled buffer.
+    Activations {
+        /// Batch sequence id, echoed verbatim by the peer's response.
+        seq: u64,
+    },
+    /// The peer executed nothing for this batch: a typed per-batch stage
+    /// failure (the connection stays up — only this batch failed).
+    Error {
+        /// Sequence id of the batch that failed.
+        seq: u64,
+        /// Human-readable stage error.
+        message: String,
+    },
+}
+
+/// Reusable encoder/decoder: owns the scratch body buffer recycled across
+/// frames. One codec per connection end; it is not shared across threads.
+#[derive(Default)]
+pub struct FrameCodec {
+    body: Vec<u8>,
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+impl FrameCodec {
+    /// A codec with an empty (lazily grown) scratch buffer.
+    pub fn new() -> FrameCodec {
+        FrameCodec { body: Vec::new() }
+    }
+
+    /// Stage the fixed header into the scratch buffer.
+    fn begin(&mut self, kind: u8, seq: u64, rows: u32, cols: u32) {
+        self.body.clear();
+        self.body.extend_from_slice(&STAGE_WIRE_VERSION.to_le_bytes());
+        self.body.push(kind);
+        self.body.push(0); // reserved
+        self.body.extend_from_slice(&seq.to_le_bytes());
+        self.body.extend_from_slice(&rows.to_le_bytes());
+        self.body.extend_from_slice(&cols.to_le_bytes());
+    }
+
+    /// Checksum the staged body and write `len ‖ body ‖ checksum`.
+    fn finish(&mut self, w: &mut impl Write) -> io::Result<()> {
+        let ck = fnv1a64(&self.body);
+        let total = self.body.len() + TRAILER_BYTES;
+        debug_assert!(total <= MAX_FRAME_BYTES);
+        w.write_all(&(total as u32).to_le_bytes())?;
+        w.write_all(&self.body)?;
+        w.write_all(&ck.to_le_bytes())?;
+        w.flush()
+    }
+
+    /// Encode and write one activation frame carrying `m` (row-major f32
+    /// bits, verbatim). Errors only on I/O failure or an impossibly large
+    /// batch.
+    pub fn write_activations(
+        &mut self,
+        w: &mut impl Write,
+        seq: u64,
+        m: &Matrix,
+    ) -> io::Result<()> {
+        let payload = m
+            .data
+            .len()
+            .checked_mul(4)
+            .filter(|p| p + MIN_BODY_BYTES <= MAX_FRAME_BYTES)
+            .ok_or_else(|| bad(format!("batch {}x{} exceeds the frame cap", m.rows, m.cols)))?;
+        if m.rows > u32::MAX as usize || m.cols > u32::MAX as usize {
+            return Err(bad(format!("batch dims {}x{} overflow u32", m.rows, m.cols)));
+        }
+        self.begin(KIND_ACTIVATIONS, seq, m.rows as u32, m.cols as u32);
+        self.body.reserve(payload);
+        for &v in &m.data {
+            self.body.extend_from_slice(&v.to_le_bytes());
+        }
+        self.finish(w)
+    }
+
+    /// Encode and write one typed per-batch error frame.
+    pub fn write_error(&mut self, w: &mut impl Write, seq: u64, message: &str) -> io::Result<()> {
+        let msg = message.as_bytes();
+        let msg = &msg[..msg.len().min(MAX_FRAME_BYTES - MIN_BODY_BYTES)];
+        self.begin(KIND_ERROR, seq, 0, 0);
+        self.body.extend_from_slice(msg);
+        self.finish(w)
+    }
+
+    /// Read and decode one frame. Activation payloads are deposited into
+    /// `out` (reshaped in place, reusing its capacity). Truncation
+    /// surfaces as `UnexpectedEof`; any framing violation (bad checksum,
+    /// unknown version/kind, length prefix disagreeing with the batch
+    /// dims) is `InvalidData` — after which the stream can no longer be
+    /// trusted and the connection must be dropped.
+    pub fn read_into(&mut self, r: &mut impl Read, out: &mut Matrix) -> io::Result<Frame> {
+        let mut prefix = [0u8; 4];
+        r.read_exact(&mut prefix)?;
+        let body_len = u32::from_le_bytes(prefix) as usize;
+        if body_len < MIN_BODY_BYTES {
+            return Err(bad(format!("frame body of {body_len} B is shorter than the header")));
+        }
+        if body_len > MAX_FRAME_BYTES {
+            return Err(bad(format!("frame body of {body_len} B exceeds the {MAX_FRAME_BYTES} B cap")));
+        }
+        self.body.resize(body_len, 0);
+        r.read_exact(&mut self.body)?;
+
+        let (checked, trailer) = self.body.split_at(body_len - TRAILER_BYTES);
+        let claimed = u64::from_le_bytes([
+            trailer[0], trailer[1], trailer[2], trailer[3], trailer[4], trailer[5], trailer[6],
+            trailer[7],
+        ]);
+        let actual = fnv1a64(checked);
+        if claimed != actual {
+            return Err(bad(format!("frame checksum mismatch: {claimed:#018x} != {actual:#018x}")));
+        }
+
+        let version = u16::from_le_bytes([checked[0], checked[1]]);
+        if version != STAGE_WIRE_VERSION {
+            return Err(bad(format!("frame version {version} (speaking {STAGE_WIRE_VERSION})")));
+        }
+        let kind = checked[2];
+        if checked[3] != 0 {
+            return Err(bad(format!("reserved frame byte is {}", checked[3])));
+        }
+        let seq = u64::from_le_bytes([
+            checked[4], checked[5], checked[6], checked[7], checked[8], checked[9], checked[10],
+            checked[11],
+        ]);
+        let rows = u32::from_le_bytes([checked[12], checked[13], checked[14], checked[15]]) as usize;
+        let cols = u32::from_le_bytes([checked[16], checked[17], checked[18], checked[19]]) as usize;
+        let payload = &checked[HEADER_BYTES..];
+
+        match kind {
+            KIND_ACTIVATIONS => {
+                let expected = rows.checked_mul(cols).and_then(|n| n.checked_mul(4));
+                if expected != Some(payload.len()) {
+                    return Err(bad(format!(
+                        "frame payload is {} B but batch dims {rows}x{cols} need {:?} B",
+                        payload.len(),
+                        expected
+                    )));
+                }
+                out.rows = rows;
+                out.cols = cols;
+                out.data.clear();
+                out.data.extend(
+                    payload
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+                );
+                Ok(Frame::Activations { seq })
+            }
+            KIND_ERROR => {
+                if rows != 0 || cols != 0 {
+                    return Err(bad(format!("error frame carries batch dims {rows}x{cols}")));
+                }
+                let message = std::str::from_utf8(payload)
+                    .map_err(|_| bad("error frame message is not UTF-8".to_string()))?
+                    .to_string();
+                Ok(Frame::Error { seq, message })
+            }
+            other => Err(bad(format!("unknown frame kind {other}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::route::{classify_upstream, UpstreamClass};
+
+    fn encode_activations(seq: u64, m: &Matrix) -> Vec<u8> {
+        let mut codec = FrameCodec::new();
+        let mut bytes = Vec::new();
+        codec.write_activations(&mut bytes, seq, m).expect("encode");
+        bytes
+    }
+
+    fn decode(bytes: &[u8]) -> io::Result<(Frame, Matrix)> {
+        let mut codec = FrameCodec::new();
+        let mut out = Matrix::zeros(0, 0);
+        let mut cursor = bytes;
+        codec.read_into(&mut cursor, &mut out).map(|f| (f, out))
+    }
+
+    #[test]
+    fn activations_roundtrip_bit_exact_including_nonfinite() {
+        let m = Matrix::from_vec(
+            2,
+            3,
+            vec![1.5, -0.0, f32::NAN, f32::MIN_POSITIVE / 2.0, f32::INFINITY, -7.25e-30],
+        );
+        let bytes = encode_activations(42, &m);
+        let (frame, got) = decode(&bytes).expect("valid frame must decode");
+        assert_eq!(frame, Frame::Activations { seq: 42 });
+        assert_eq!((got.rows, got.cols), (2, 3));
+        let want: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+        let have: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, have, "payload bits must survive the wire untouched");
+    }
+
+    #[test]
+    fn error_frame_roundtrips() {
+        let mut codec = FrameCodec::new();
+        let mut bytes = Vec::new();
+        codec.write_error(&mut bytes, 9, "stage 2 exploded").expect("encode");
+        let (frame, _) = decode(&bytes).expect("decode");
+        assert_eq!(frame, Frame::Error { seq: 9, message: "stage 2 exploded".to_string() });
+    }
+
+    #[test]
+    fn codec_reuses_buffers_across_frames() {
+        let mut codec = FrameCodec::new();
+        let mut out = Matrix::zeros(0, 0);
+        for seq in 0..4u64 {
+            let m = Matrix::from_vec(4, 2, (0..8).map(|i| (seq as f32) + i as f32).collect());
+            let mut bytes = Vec::new();
+            codec.write_activations(&mut bytes, seq, &m).expect("encode");
+            let mut cursor = &bytes[..];
+            let frame = codec.read_into(&mut cursor, &mut out).expect("decode");
+            assert_eq!(frame, Frame::Activations { seq });
+            assert_eq!(out.data, m.data);
+        }
+    }
+
+    #[test]
+    fn truncation_is_unexpected_eof_hence_unreachable() {
+        let bytes = encode_activations(1, &Matrix::from_vec(1, 2, vec![1.0, 2.0]));
+        for cut in [0, 2, 5, bytes.len() - 1] {
+            let err = decode(&bytes[..cut]).expect_err("truncated frame must fail");
+            assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "cut at {cut}");
+            assert_eq!(classify_upstream(err.kind()), UpstreamClass::Unreachable);
+        }
+    }
+
+    #[test]
+    fn corruption_is_invalid_data_hence_protocol() {
+        let bytes = encode_activations(1, &Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        // Flip one payload byte: the checksum catches it.
+        let mut corrupt = bytes.clone();
+        corrupt[26] ^= 0x40;
+        let err = decode(&corrupt).expect_err("corrupt payload must fail");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum"), "{err}");
+        assert_eq!(classify_upstream(err.kind()), UpstreamClass::Protocol);
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let m = Matrix::from_vec(1, 1, vec![0.5]);
+        let mut codec = FrameCodec::new();
+        let mut bytes = Vec::new();
+        codec.write_activations(&mut bytes, 3, &m).expect("encode");
+        // Bump the version field and re-seal the checksum so *only* the
+        // version is wrong.
+        bytes[4] = bytes[4].wrapping_add(1);
+        let body_end = bytes.len() - TRAILER_BYTES;
+        let ck = fnv1a64(&bytes[4..body_end]);
+        bytes[body_end..].copy_from_slice(&ck.to_le_bytes());
+        let err = decode(&bytes).expect_err("future version must be refused");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn lying_length_prefix_is_rejected() {
+        // Dims say 3x3 but the payload carries a single f32.
+        let mut codec = FrameCodec::new();
+        codec.begin(KIND_ACTIVATIONS, 7, 3, 3);
+        codec.body.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut bytes = Vec::new();
+        codec.finish(&mut bytes).expect("encode");
+        let err = decode(&bytes).expect_err("dims/length disagreement must fail");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // A body_len past the cap is refused before any allocation.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        let err = decode(&huge).expect_err("oversized frame must fail");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // A body_len too small for even the header is refused too.
+        let mut tiny = Vec::new();
+        tiny.extend_from_slice(&4u32.to_le_bytes());
+        tiny.extend_from_slice(&[0, 0, 0, 0]);
+        let err = decode(&tiny).expect_err("undersized frame must fail");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

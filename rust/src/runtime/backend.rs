@@ -292,6 +292,321 @@ impl SpmmBackend for PipelinedBackend {
 }
 
 // ---------------------------------------------------------------------------
+// Cross-host pipeline backend (DESIGN.md §20)
+// ---------------------------------------------------------------------------
+
+/// Link policy for [`RemotePipelinedBackend`]: socket deadlines and the
+/// seeded reconnect backoff. All timing lives here (runtime layer), never
+/// in the clock-free [`crate::net::stage_wire`] codec.
+#[derive(Clone, Debug)]
+pub struct StageLinkConfig {
+    /// TCP connect timeout per attempt, milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Per-try socket read/write deadline, milliseconds: a stage host
+    /// that stalls past this fails the batch with
+    /// [`InferError::UpstreamTimeout`](crate::coordinator::InferError)
+    /// (504) instead of hanging the replica.
+    pub io_timeout_ms: u64,
+    /// Connect attempts per (re)establishment before giving up on the
+    /// batch with a typed 502.
+    pub connect_attempts: u32,
+    /// Base reconnect backoff, milliseconds (doubles per attempt).
+    pub backoff_base_ms: u64,
+    /// Reconnect backoff cap, milliseconds.
+    pub backoff_max_ms: u64,
+    /// Seed for the deterministic backoff jitter ([`stage_backoff_ms`]).
+    pub seed: u64,
+}
+
+impl Default for StageLinkConfig {
+    fn default() -> StageLinkConfig {
+        StageLinkConfig {
+            connect_timeout_ms: 500,
+            io_timeout_ms: 5_000,
+            connect_attempts: 3,
+            backoff_base_ms: 50,
+            backoff_max_ms: 2_000,
+            seed: 0x48_69_4E_4D, // "HiNM"
+        }
+    }
+}
+
+/// Backoff before reconnect attempt `attempt` (1-based) on link `link`:
+/// exponential in the attempt, capped, plus deterministic jitter of at
+/// most `backoff_base_ms` — a pure function of `(seed, link, epoch,
+/// attempt)` so chaos tests replay the exact schedule (same discipline as
+/// the router's `retry_backoff_ms`).
+pub fn stage_backoff_ms(cfg: &StageLinkConfig, link: usize, epoch: u64, attempt: u32) -> u64 {
+    let base = cfg.backoff_base_ms.max(1);
+    let exp = base.saturating_mul(1u64 << (attempt.saturating_sub(1)).min(16));
+    let stream = (link as u64) << 40 | epoch << 8 | attempt as u64;
+    exp.min(cfg.backoff_max_ms) + crate::util::rng::mix_seed(cfg.seed, stream) % base
+}
+
+/// One persistent TCP link to an `hinm stage` host.
+struct StageLink {
+    host: String,
+    conn: Option<std::net::TcpStream>,
+    /// Successful establishments so far (0 = never connected); feeds the
+    /// backoff jitter stream and distinguishes first connects from
+    /// reconnects in the metrics.
+    epoch: u64,
+}
+
+/// Execution backend that drives a chain of `hinm stage` hosts over
+/// persistent TCP links (DESIGN.md §20): `run_batch` sends the activation
+/// batch to host 1, feeds each host's output frame to the next, and
+/// returns the final stage's output — bit-identical to
+/// [`NativeCpuBackend`] on the unsplit model, because activations travel
+/// as raw f32 bit patterns and each host runs the same planned kernels.
+///
+/// Like [`PipelinedBackend`], one instance keeps only one batch in
+/// flight; give each engine replica its own instance (they share the
+/// [`StageLinkMetrics`](crate::coordinator::StageLinkMetrics)) and the
+/// replicas overlap batches across hosts, which restores the §15
+/// `1/max(stage_time)` steady state across machines.
+///
+/// Failure semantics per link, using the §19 taxonomy on the I/O error:
+/// a timeout fails the batch typed 504; a dead peer fails it typed 502
+/// and the *next* batch re-establishes the link with seeded backoff; a
+/// framing violation (bad checksum) fails typed 502, drops the link as
+/// unrecoverable, and likewise re-establishes on the next batch. A typed
+/// error *frame* from the host fails only that batch (500) and keeps the
+/// link. Errors carry the [`InferError`](crate::coordinator::InferError)
+/// in their chain so the batch server's flush maps them to the right
+/// status codes; a mid-batch link death therefore fails exactly that
+/// batch — never a hang, never a lost response.
+pub struct RemotePipelinedBackend {
+    links: Vec<StageLink>,
+    d_in: usize,
+    d_out: usize,
+    cfg: StageLinkConfig,
+    metrics: Arc<crate::coordinator::stage_host::StageLinkMetrics>,
+    codec: crate::net::stage_wire::FrameCodec,
+    seq: u64,
+    /// Recycled hop buffers (the §15 hand-off pool, per replica): inputs
+    /// consumed by a hop return here; the final output leaves with the
+    /// caller, exactly like the in-process pipeline's last stage.
+    spares: Vec<Matrix>,
+}
+
+/// How many spare hop buffers each replica's backend retains.
+const REMOTE_RECYCLE_CAP: usize = 4;
+
+impl RemotePipelinedBackend {
+    /// Connect one persistent link per stage host (in chain order,
+    /// failing fast if any host is unreachable at startup) for a model
+    /// with the given end-to-end dims. `metrics` must have one slot per
+    /// host ([`StageLinkMetrics::new`](crate::coordinator::StageLinkMetrics::new)).
+    pub fn connect(
+        hosts: &[String],
+        d_in: usize,
+        d_out: usize,
+        cfg: StageLinkConfig,
+        metrics: Arc<crate::coordinator::stage_host::StageLinkMetrics>,
+    ) -> Result<RemotePipelinedBackend> {
+        ensure!(!hosts.is_empty(), "need at least one stage host");
+        let mut b = RemotePipelinedBackend {
+            links: hosts
+                .iter()
+                .map(|h| StageLink { host: h.clone(), conn: None, epoch: 0 })
+                .collect(),
+            d_in,
+            d_out,
+            cfg,
+            metrics,
+            codec: crate::net::stage_wire::FrameCodec::new(),
+            seq: 0,
+            spares: Vec::new(),
+        };
+        for i in 0..b.links.len() {
+            b.ensure_connected(i)
+                .map_err(|e| anyhow::anyhow!("connecting stage host {}: {e}", hosts[i]))?;
+        }
+        Ok(b)
+    }
+
+    fn take_spare(&mut self) -> Matrix {
+        self.spares.pop().unwrap_or_else(|| Matrix::zeros(0, 0))
+    }
+
+    fn put_spare(&mut self, m: Matrix) {
+        if self.spares.len() < REMOTE_RECYCLE_CAP {
+            self.spares.push(m);
+        }
+    }
+
+    /// (Re-)establish link `i` if it is down, with seeded backoff between
+    /// attempts. On failure the batch-level caller reports a typed 502.
+    fn ensure_connected(
+        &mut self,
+        i: usize,
+    ) -> std::result::Result<(), crate::coordinator::InferError> {
+        use crate::coordinator::InferError;
+        if self.links[i].conn.is_some() {
+            return Ok(());
+        }
+        let attempts = self.cfg.connect_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 1..=attempts {
+            if attempt > 1 {
+                let ms = stage_backoff_ms(&self.cfg, i, self.links[i].epoch, attempt - 1);
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            match self.try_connect(i) {
+                Ok(stream) => {
+                    let link = &mut self.links[i];
+                    link.conn = Some(stream);
+                    if link.epoch > 0 {
+                        self.metrics.record_reconnect(i);
+                    }
+                    link.epoch += 1;
+                    return Ok(());
+                }
+                Err(e) => last = e.to_string(),
+            }
+        }
+        self.metrics.record_failure(i, crate::net::route::UpstreamClass::Unreachable);
+        Err(InferError::Upstream(format!(
+            "stage host {} unreachable after {attempts} attempts: {last}",
+            self.links[i].host
+        )))
+    }
+
+    fn try_connect(&self, i: usize) -> std::io::Result<std::net::TcpStream> {
+        use std::net::ToSocketAddrs;
+        let host = &self.links[i].host;
+        let addr = host
+            .to_socket_addrs()
+            .map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidInput, format!("{host}: {e}"))
+            })?
+            .next()
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    format!("{host}: no address"),
+                )
+            })?;
+        let stream = std::net::TcpStream::connect_timeout(
+            &addr,
+            std::time::Duration::from_millis(self.cfg.connect_timeout_ms.max(1)),
+        )?;
+        stream.set_nodelay(true)?;
+        let io = Some(std::time::Duration::from_millis(self.cfg.io_timeout_ms.max(1)));
+        stream.set_read_timeout(io)?;
+        stream.set_write_timeout(io)?;
+        Ok(stream)
+    }
+
+    /// One send+receive on link `i`. On any I/O error the connection is
+    /// dropped (desynchronized or dead) and the error is typed by the §19
+    /// class; an error *frame* keeps the connection and fails the batch.
+    fn roundtrip(
+        &mut self,
+        i: usize,
+        seq: u64,
+        x: &Matrix,
+        out: &mut Matrix,
+    ) -> std::result::Result<(), crate::coordinator::InferError> {
+        use crate::coordinator::InferError;
+        use crate::net::route::{classify_upstream, UpstreamClass};
+        use crate::net::stage_wire::Frame;
+        self.ensure_connected(i)?;
+        let t0 = std::time::Instant::now();
+        let host = self.links[i].host.clone();
+        let Some(conn) = self.links[i].conn.as_mut() else {
+            return Err(InferError::Upstream(format!("stage host {host} link vanished")));
+        };
+        let io = self
+            .codec
+            .write_activations(conn, seq, x)
+            .and_then(|()| self.codec.read_into(conn, out));
+        match io {
+            Ok(Frame::Activations { seq: got }) if got == seq => {
+                self.metrics.record_batch(i, t0.elapsed());
+                Ok(())
+            }
+            Ok(Frame::Activations { seq: got }) => {
+                // A reply for some other batch means the stream framing
+                // drifted: unrecoverable on this connection.
+                self.links[i].conn = None;
+                self.metrics.record_failure(i, UpstreamClass::Protocol);
+                Err(InferError::Upstream(format!(
+                    "stage host {host} answered seq {got} for seq {seq} (protocol desync)"
+                )))
+            }
+            Ok(Frame::Error { message, .. }) => {
+                Err(InferError::Backend(format!("stage host {host}: {message}")))
+            }
+            Err(e) => {
+                self.links[i].conn = None;
+                let class = classify_upstream(e.kind());
+                self.metrics.record_failure(i, class);
+                Err(match class {
+                    UpstreamClass::TimedOut => InferError::UpstreamTimeout(format!(
+                        "stage host {host} exceeded the {} ms per-try deadline: {e}",
+                        self.cfg.io_timeout_ms
+                    )),
+                    UpstreamClass::Unreachable => {
+                        InferError::Upstream(format!("stage host {host} died mid-batch: {e}"))
+                    }
+                    UpstreamClass::Protocol => {
+                        InferError::Upstream(format!("stage host {host} protocol error: {e}"))
+                    }
+                })
+            }
+        }
+    }
+}
+
+impl SpmmBackend for RemotePipelinedBackend {
+    fn name(&self) -> &'static str {
+        "remote-pipeline"
+    }
+
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn run_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        let seq = self.seq;
+        self.seq += 1;
+        // Activations flow head → host1 → head → host2 → … ; each hop's
+        // consumed input buffer is recycled for a later hop's output.
+        let mut cur: Option<Matrix> = None;
+        for i in 0..self.links.len() {
+            let mut out = self.take_spare();
+            let staged = cur.take();
+            let r = self.roundtrip(i, seq, staged.as_ref().unwrap_or(x), &mut out);
+            match r {
+                Ok(()) => {
+                    if let Some(prev) = staged {
+                        self.put_spare(prev);
+                    }
+                    cur = Some(out);
+                }
+                Err(e) => {
+                    self.put_spare(out);
+                    if let Some(prev) = staged {
+                        self.put_spare(prev);
+                    }
+                    // Keep the typed error in the chain so the engine's
+                    // flush maps it to 502/504 instead of a blanket 500.
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("remote pipeline batch {seq} failed")));
+                }
+            }
+        }
+        cur.ok_or_else(|| anyhow::anyhow!("remote pipeline has no links"))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Cached decorator
 // ---------------------------------------------------------------------------
 

@@ -14,7 +14,8 @@ pub use artifact::{
     ARTIFACT_SCHEMA_VERSION,
 };
 pub use backend::{
-    CacheStats, CachedBackend, NativeCpuBackend, PipelinedBackend, PjrtBackend, SpmmBackend,
+    stage_backoff_ms, CacheStats, CachedBackend, NativeCpuBackend, PipelinedBackend, PjrtBackend,
+    RemotePipelinedBackend, SpmmBackend, StageLinkConfig,
 };
 pub use executor::{client, Executor};
 pub use registry::{ModelRegistry, ModelSlot, Registry, ReloadReport};

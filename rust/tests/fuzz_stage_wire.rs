@@ -1,0 +1,358 @@
+//! Deterministic structure-aware fuzz smoke for the stage-link frame
+//! codec (`net::stage_wire`, DESIGN.md §20) — the fifth harness in the
+//! family (`fuzz_json`, `fuzz_plan`, `fuzz_artifact`, `fuzz_http`).
+//!
+//! Three families, fully deterministic from `mix_seed(BASE_SEED,
+//! case_index)`:
+//!
+//! 1. **Well-formed frames** encoded by [`FrameCodec`] itself, carrying
+//!    arbitrary f32 *bit patterns* (NaNs, signed zeros, denormals): must
+//!    decode to exactly the generated metadata with a bit-identical
+//!    payload, consuming exactly the frame's bytes.
+//! 2. **Schema violations** hand-built with a correct checksum around the
+//!    lie (wrong version, unknown kind, nonzero reserved byte, dims that
+//!    disagree with the payload, out-of-range length prefixes, flipped
+//!    checksum trailers, non-UTF-8 error payloads): must fail with
+//!    `InvalidData`/`UnexpectedEof` — kinds the §19 classifier maps to
+//!    `Protocol`/`Unreachable`, never `TimedOut` (a parse error must not
+//!    masquerade as a slow host).
+//! 3. **Mutations** of family-1 bytes (truncation, bit flips, rewritten
+//!    length prefixes, appended garbage): must never panic; anything that
+//!    still decodes must satisfy the dims×payload invariant.
+//!
+//! Families 2–3 additionally replay over a **real TCP socket pair**
+//! (`fuzz_stage_wire_over_socket_pair`), write half shut down after the
+//! bytes: exactly the "peer died mid-frame" shape the head sees, pinning
+//! that truncation surfaces as `UnexpectedEof` through real socket reads
+//! too — skipped under Miri, which has no sockets; family 1 streams many
+//! frames through one persistent connection like a live link.
+//!
+//! Iteration budget: `HINM_FUZZ_ITERS` (default 10 000 in-memory, 2 000
+//! over sockets; CI `fuzz-long` raises it under an `HINM_FUZZ_SECONDS`
+//! wall-clock bound). Failing inputs land in `target/fuzz-failures/`.
+
+use hinm::net::route::{classify_upstream, UpstreamClass};
+use hinm::net::stage_wire::{
+    Frame, FrameCodec, KIND_ACTIVATIONS, KIND_ERROR, MAX_FRAME_BYTES, STAGE_WIRE_VERSION,
+};
+use hinm::runtime::artifact::fnv1a64;
+use hinm::tensor::Matrix;
+use hinm::util::rng::{mix_seed, Xoshiro256};
+use std::io::{self, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+const BASE_SEED: u64 = 0x5354_4147_4557; // "STAGEW"
+
+fn iters(default: usize) -> usize {
+    if cfg!(miri) {
+        return 64;
+    }
+    std::env::var("HINM_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn budget() -> Option<Duration> {
+    std::env::var("HINM_FUZZ_SECONDS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_secs)
+}
+
+fn persist_failure(case: u64, bytes: &[u8]) -> String {
+    let dir = std::env::var("HINM_FUZZ_ARTIFACTS")
+        .unwrap_or_else(|_| "target/fuzz-failures".to_string());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/stage-wire-case{case}.bin");
+    let _ = std::fs::write(&path, bytes);
+    path
+}
+
+/// Decode one frame from an in-memory reader with a fresh codec,
+/// returning the result plus the matrix and the number of bytes left
+/// unconsumed.
+fn decode(bytes: &[u8]) -> (io::Result<Frame>, Matrix, usize) {
+    let mut codec = FrameCodec::new();
+    let mut out = Matrix::zeros(0, 0);
+    let mut r = bytes;
+    let res = codec.read_into(&mut r, &mut out);
+    let left = r.len();
+    (res, out, left)
+}
+
+/// What a family-1 frame must decode back to.
+enum Expect {
+    Act { seq: u64, rows: usize, cols: usize, bits: Vec<u32> },
+    Err { seq: u64, message: String },
+}
+
+/// A frame encoded by the production codec itself, with payload bits
+/// drawn from the whole f32 space (the wire moves bit patterns, not
+/// values — NaN payloads and -0.0 must survive).
+fn gen_valid(rng: &mut Xoshiro256) -> (Vec<u8>, Expect) {
+    let seq = rng.next_u64();
+    let mut codec = FrameCodec::new();
+    let mut buf = Vec::new();
+    if rng.below(4) == 0 {
+        let message: String =
+            (0..rng.below(40)).map(|_| char::from(b' ' + rng.below(94) as u8)).collect();
+        codec.write_error(&mut buf, seq, &message).expect("encode error frame");
+        (buf, Expect::Err { seq, message })
+    } else {
+        let (rows, cols) = (1 + rng.below(8), 1 + rng.below(8));
+        let bits: Vec<u32> = (0..rows * cols).map(|_| rng.next_u64() as u32).collect();
+        let m = Matrix::from_vec(rows, cols, bits.iter().map(|&b| f32::from_bits(b)).collect());
+        codec.write_activations(&mut buf, seq, &m).expect("encode activation frame");
+        (buf, Expect::Act { seq, rows, cols, bits })
+    }
+}
+
+/// `len ‖ header ‖ payload ‖ checksum` with the checksum computed over
+/// whatever lie the header tells — isolating each validation rung from
+/// the checksum rung below it.
+fn raw_frame(version: u16, kind: u8, reserved: u8, seq: u64, rows: u32, cols: u32, payload: &[u8]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(20 + payload.len());
+    body.extend_from_slice(&version.to_le_bytes());
+    body.push(kind);
+    body.push(reserved);
+    body.extend_from_slice(&seq.to_le_bytes());
+    body.extend_from_slice(&rows.to_le_bytes());
+    body.extend_from_slice(&cols.to_le_bytes());
+    body.extend_from_slice(payload);
+    let ck = fnv1a64(&body);
+    let mut frame = Vec::with_capacity(4 + body.len() + 8);
+    frame.extend_from_slice(&((body.len() + 8) as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    frame.extend_from_slice(&ck.to_le_bytes());
+    frame
+}
+
+/// One schema violation; every rung of the decoder's validation ladder
+/// has at least one generator here.
+fn gen_violation(rng: &mut Xoshiro256) -> Vec<u8> {
+    let seq = rng.next_u64();
+    let payload = [0u8; 8]; // two f32s
+    match rng.below(9) {
+        // Wrong version, everything else pristine.
+        0 => raw_frame(STAGE_WIRE_VERSION + 1 + rng.below(9) as u16, KIND_ACTIVATIONS, 0, seq, 1, 2, &payload),
+        // Unknown kind.
+        1 => raw_frame(STAGE_WIRE_VERSION, 2 + rng.below(200) as u8, 0, seq, 1, 2, &payload),
+        // Reserved byte set.
+        2 => raw_frame(STAGE_WIRE_VERSION, KIND_ACTIVATIONS, 1 + rng.below(255) as u8, seq, 1, 2, &payload),
+        // Dims disagree with the payload (including overflowing products).
+        3 => {
+            if rng.below(2) == 0 {
+                raw_frame(STAGE_WIRE_VERSION, KIND_ACTIVATIONS, 0, seq, 3, 3, &payload)
+            } else {
+                raw_frame(STAGE_WIRE_VERSION, KIND_ACTIVATIONS, 0, seq, u32::MAX, u32::MAX, &payload)
+            }
+        }
+        // Error frames must carry zero dims.
+        4 => raw_frame(STAGE_WIRE_VERSION, KIND_ERROR, 0, seq, 1, 0, b"oops"),
+        // Flip one checksum trailer byte on an otherwise valid frame.
+        5 => {
+            let mut f = raw_frame(STAGE_WIRE_VERSION, KIND_ACTIVATIONS, 0, seq, 1, 2, &payload);
+            let n = f.len();
+            f[n - 1 - rng.below(8)] ^= 1 << rng.below(8);
+            f
+        }
+        // Length prefix below the minimum body size.
+        6 => {
+            let mut f = (rng.below(28) as u32).to_le_bytes().to_vec();
+            f.extend_from_slice(&[0u8; 32]);
+            f
+        }
+        // Length prefix above the 64 MB cap.
+        7 => ((MAX_FRAME_BYTES + 1 + rng.below(1 << 20)) as u32).to_le_bytes().to_vec(),
+        // Error frame whose message is not UTF-8.
+        _ => raw_frame(STAGE_WIRE_VERSION, KIND_ERROR, 0, seq, 0, 0, &[0xFF, 0xFE, 0x80, 0x80]),
+    }
+}
+
+/// Mutate valid bytes: truncate, flip a bit, rewrite the length prefix,
+/// or append garbage.
+fn mutate(rng: &mut Xoshiro256, mut bytes: Vec<u8>) -> Vec<u8> {
+    match rng.below(4) {
+        0 => {
+            let keep = rng.below(bytes.len());
+            bytes.truncate(keep);
+        }
+        1 => {
+            let pos = rng.below(bytes.len());
+            bytes[pos] ^= 1 << rng.below(8);
+        }
+        2 => {
+            let lie = (rng.next_u64() as u32).to_le_bytes();
+            bytes[..4].copy_from_slice(&lie);
+        }
+        _ => {
+            for _ in 0..1 + rng.below(16) {
+                bytes.push(rng.next_u64() as u8);
+            }
+        }
+    }
+    bytes
+}
+
+/// A decode error must carry a kind the §19 classifier reads as a dead
+/// peer or a desynced stream — never as a slow one.
+fn assert_error_kind(case: u64, bytes: &[u8], err: &io::Error) {
+    let class = classify_upstream(err.kind());
+    if class == UpstreamClass::TimedOut {
+        let path = persist_failure(case, bytes);
+        panic!("case {case}: decode error {err:?} classified TimedOut (input: {path})");
+    }
+}
+
+/// In-memory sweep over all three families; under Miri this is the whole
+/// harness (64 cases).
+#[test]
+fn fuzz_stage_wire_decoder_never_panics_and_round_trips() {
+    let n = iters(10_000);
+    let deadline = budget().map(|b| Instant::now() + b);
+    let mut done = 0u64;
+    for case in 0..n as u64 {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                break;
+            }
+        }
+        let mut rng = Xoshiro256::new(mix_seed(BASE_SEED, case));
+        match case % 3 {
+            0 => {
+                let (bytes, expect) = gen_valid(&mut rng);
+                let (res, m, left) = decode(&bytes);
+                let frame = match res {
+                    Ok(f) => f,
+                    Err(e) => {
+                        let path = persist_failure(case, &bytes);
+                        panic!("case {case}: valid frame rejected: {e} (input: {path})");
+                    }
+                };
+                assert_eq!(left, 0, "case {case}: valid frame not fully consumed");
+                match expect {
+                    Expect::Act { seq, rows, cols, bits } => {
+                        assert_eq!(frame, Frame::Activations { seq }, "case {case}");
+                        assert_eq!(m.shape(), (rows, cols), "case {case}");
+                        let got: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(got, bits, "case {case}: payload bits changed");
+                    }
+                    Expect::Err { seq, message } => {
+                        assert_eq!(frame, Frame::Error { seq, message }, "case {case}");
+                    }
+                }
+            }
+            1 => {
+                let bytes = gen_violation(&mut rng);
+                let (res, _, _) = decode(&bytes);
+                match res {
+                    Ok(f) => {
+                        let path = persist_failure(case, &bytes);
+                        panic!("case {case}: violation decoded as {f:?} (input: {path})");
+                    }
+                    Err(e) => assert_error_kind(case, &bytes, &e),
+                }
+            }
+            _ => {
+                let (valid, _) = gen_valid(&mut rng);
+                let bytes = mutate(&mut rng, valid);
+                let outcome = catch_unwind(AssertUnwindSafe(|| decode(&bytes)));
+                match outcome {
+                    Ok((Ok(_), m, _)) => {
+                        let (r, c) = m.shape();
+                        assert_eq!(r * c, m.data.len(), "case {case}: dims×payload invariant");
+                    }
+                    Ok((Err(e), _, _)) => assert_error_kind(case, &bytes, &e),
+                    Err(_) => {
+                        let path = persist_failure(case, &bytes);
+                        panic!("case {case}: decoder panicked (input: {path})");
+                    }
+                }
+            }
+        }
+        done += 1;
+    }
+    assert!(done > 0, "fuzz budget expired before the first case");
+    println!("fuzz_stage_wire in-memory: {done} cases");
+}
+
+/// The same families over real sockets: family 1 streams frame after
+/// frame through one persistent connection (a live link's shape); each
+/// family-2/3 case gets its own connection with the write half shut down
+/// after the bytes, so truncation arrives exactly as a dead peer does.
+#[test]
+#[cfg_attr(miri, ignore)] // Miri has no sockets; family coverage lives in the in-memory sweep
+fn fuzz_stage_wire_over_socket_pair() {
+    use std::net::{Shutdown, TcpListener, TcpStream};
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind fuzz listener");
+    let addr = listener.local_addr().expect("listener addr");
+    let pair = || {
+        let tx = TcpStream::connect(addr).expect("connect");
+        let (rx, _) = listener.accept().expect("accept");
+        // Belt over suspenders: every failure mode here ends in EOF or a
+        // parse error, but a decoder bug must fail the case, not hang it.
+        rx.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+        (tx, rx)
+    };
+
+    // The persistent family-1 link and both its codec ends.
+    let (mut link_tx, mut link_rx) = pair();
+    let mut enc = FrameCodec::new();
+    let mut dec = FrameCodec::new();
+    let mut out = Matrix::zeros(0, 0);
+
+    let n = iters(2_000);
+    let deadline = budget().map(|b| Instant::now() + b);
+    let mut done = 0u64;
+    for case in 0..n as u64 {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                break;
+            }
+        }
+        let mut rng = Xoshiro256::new(mix_seed(BASE_SEED ^ 0x50_41_49_52, case));
+        match case % 3 {
+            0 => {
+                let seq = rng.next_u64();
+                let (rows, cols) = (1 + rng.below(8), 1 + rng.below(8));
+                let bits: Vec<u32> = (0..rows * cols).map(|_| rng.next_u64() as u32).collect();
+                let m =
+                    Matrix::from_vec(rows, cols, bits.iter().map(|&b| f32::from_bits(b)).collect());
+                enc.write_activations(&mut link_tx, seq, &m).expect("send over link");
+                let frame = dec.read_into(&mut link_rx, &mut out).expect("decode over link");
+                assert_eq!(frame, Frame::Activations { seq }, "case {case}");
+                assert_eq!(out.shape(), (rows, cols), "case {case}");
+                let got: Vec<u32> = out.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, bits, "case {case}: bits changed crossing the socket");
+            }
+            family => {
+                let bytes = if family == 1 {
+                    gen_violation(&mut rng)
+                } else {
+                    let (valid, _) = gen_valid(&mut rng);
+                    mutate(&mut rng, valid)
+                };
+                let (mut tx, mut rx) = pair();
+                tx.write_all(&bytes).expect("send case bytes");
+                tx.shutdown(Shutdown::Write).expect("half-close");
+                let mut codec = FrameCodec::new();
+                let mut m = Matrix::zeros(0, 0);
+                let res = codec.read_into(&mut rx, &mut m);
+                match res {
+                    Ok(f) => {
+                        if family == 1 {
+                            let path = persist_failure(case, &bytes);
+                            panic!("case {case}: violation decoded as {f:?} over socket (input: {path})");
+                        }
+                        let (r, c) = m.shape();
+                        assert_eq!(r * c, m.data.len(), "case {case}: dims×payload invariant");
+                    }
+                    Err(e) => assert_error_kind(case, &bytes, &e),
+                }
+            }
+        }
+        done += 1;
+    }
+    assert!(done > 0, "fuzz budget expired before the first case");
+    println!("fuzz_stage_wire socket pair: {done} cases");
+}

@@ -239,6 +239,60 @@ fn shutdown_drains_queued_batches_and_then_fails_new_submissions() {
 }
 
 #[test]
+fn pipeline_shutdown_race_never_loses_a_response() {
+    // Pinning test for the entry-link drain race documented on
+    // `BoundedQueue::close` and `PipelineServer::stop` (DESIGN.md §20): a
+    // batch submitted concurrently with shutdown must either complete
+    // with the right answer or fail with the typed close error — never
+    // hang, never a silently dropped response. Each round shifts the
+    // stop() point relative to the submitters, covering
+    // before/during/after interleavings.
+    for round in 0..8u64 {
+        let stages = vec![
+            MockStage::ok(Duration::from_micros(200)),
+            MockStage::ok(Duration::from_micros(200)),
+        ];
+        let ps = PipelineServer::start_stages(stages, 4).unwrap();
+        let h = ps.handle();
+        let submitters: Vec<_> = (0..8usize)
+            .map(|c| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let (mut ok, mut stopped) = (0usize, 0usize);
+                    for i in 0..16usize {
+                        let v = (c * 16 + i) as f32;
+                        match h.infer_batch(&Matrix::from_vec(D, 1, vec![v; D])) {
+                            Ok(y) => {
+                                assert_eq!(y.data[0], v + 2.0, "two +1 stages");
+                                ok += 1;
+                            }
+                            Err(InferError::Stopped) => stopped += 1,
+                            Err(other) => panic!("shutdown race leaked error {other:?}"),
+                        }
+                    }
+                    (ok, stopped)
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_micros(200 * round));
+        let t0 = Instant::now();
+        ps.stop();
+        assert!(t0.elapsed() < Duration::from_secs(10), "stop must not hang");
+        let (mut total_ok, mut total_stopped) = (0, 0);
+        for s in submitters {
+            let (ok, stopped) = s.join().expect("no submitter may hang or panic");
+            total_ok += ok;
+            total_stopped += stopped;
+        }
+        assert_eq!(
+            total_ok + total_stopped,
+            8 * 16,
+            "round {round}: every submission must be answered exactly once"
+        );
+    }
+}
+
+#[test]
 fn stage_error_fails_only_that_batch() {
     let fail = Arc::new(AtomicBool::new(true));
     let stages: Vec<Box<dyn PipelineStage>> = vec![

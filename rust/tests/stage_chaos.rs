@@ -1,0 +1,379 @@
+//! Chaos tests for cross-host pipeline stages (DESIGN.md §20): a real
+//! head (engine + HTTP front, or a bare [`RemotePipelinedBackend`])
+//! driving stage peers that die, stall, or corrupt the stream, with the
+//! §19 failure taxonomy asserted to *exact* typed errors and counter
+//! values. Nothing here sleeps to "let things settle": every ordering is
+//! forced by parsing child ready lines, holding scripted sockets, or the
+//! head's own pinned deadlines, so the counts replay bit-for-bit.
+//!
+//! Scenarios:
+//! - SIGKILL a stage child mid-stream → that batch fails with a typed
+//!   502 (never a hang), the link reconnects once the child is back, and
+//!   both metric formats show exactly one `unreachable` failure and one
+//!   reconnect on that link — the other link untouched.
+//! - A peer that accepts frames but never answers → typed 504 after the
+//!   pinned per-try deadline, `timeout` failures counted per try,
+//!   connection re-established between tries.
+//! - A peer that answers with a corrupted checksum → typed 502 protocol
+//!   error, the connection is dropped (a desynced stream is
+//!   unrecoverable) and the retry runs clean over a fresh connection.
+
+use hinm::coordinator::{BackendFactory, BatchServer, InferError, ServeConfig, StageLinkMetrics};
+use hinm::net::stage_wire::{Frame, FrameCodec};
+use hinm::net::{protocol, HttpClient, HttpFront};
+use hinm::runtime::{RemotePipelinedBackend, SpmmBackend, StageLinkConfig};
+use hinm::tensor::Matrix;
+use hinm::util::json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A spawned `hinm stage` child, killed (SIGKILL) and reaped on drop.
+struct StageChild {
+    child: Child,
+    addr: String,
+}
+
+impl StageChild {
+    fn spawn(model: &str, stage: usize, stages: usize, listen: &str) -> StageChild {
+        let spec = format!("{stage}/{stages}");
+        let mut child = Command::new(env!("CARGO_BIN_EXE_hinm"))
+            .args(["stage", "--stage", &spec, "--model", model, "--seed", "7", "--listen", listen])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn hinm stage");
+        let stdout = child.stdout.take().expect("child stdout piped");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = match lines.next() {
+                Some(Ok(line)) => line,
+                other => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    panic!("stage child exited before ready line: {other:?}");
+                }
+            };
+            if let Some(rest) = line.split("listening on ").nth(1) {
+                break rest.split(" |").next().unwrap_or(rest).trim().to_string();
+            }
+        };
+        StageChild { child, addr }
+    }
+
+    /// SIGKILL — no shutdown handshake, exactly the chaos we are testing.
+    fn sigkill(&mut self) {
+        self.child.kill().expect("kill stage child");
+        self.child.wait().expect("reap stage child");
+    }
+}
+
+impl Drop for StageChild {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// A port we can hand to a child twice (kill + restart on the same
+/// address): bind an ephemeral listener, note the port, release it.
+fn reserve_port() -> u16 {
+    let l = TcpListener::bind("127.0.0.1:0").expect("reserve port");
+    l.local_addr().expect("reserved addr").port()
+}
+
+/// In-process `--stage-hosts` head: batch-1 single-replica engine over
+/// `RemotePipelinedBackend` plus an HTTP front exposing the link
+/// counters, so one HTTP request maps to exactly one link round-trip.
+fn start_head(
+    hosts: Vec<String>,
+    dims: (usize, usize),
+    lcfg: StageLinkConfig,
+) -> (BatchServer, HttpFront, Arc<StageLinkMetrics>) {
+    let links = StageLinkMetrics::new(&hosts);
+    let factory_links = Arc::clone(&links);
+    let factory: BackendFactory = Arc::new(move |_replica| {
+        let b: Box<dyn SpmmBackend> = Box::new(RemotePipelinedBackend::connect(
+            &hosts,
+            dims.0,
+            dims.1,
+            lcfg.clone(),
+            Arc::clone(&factory_links),
+        )?);
+        Ok(b)
+    });
+    let scfg = ServeConfig::new(1, Duration::ZERO).with_replicas(1).with_queue_depth(16);
+    let server = BatchServer::start(factory, scfg).expect("start head engine");
+    let front = HttpFront::start_with_links(
+        "127.0.0.1:0",
+        server.handle.clone(),
+        None,
+        None,
+        Some(Arc::clone(&links)),
+        2,
+    )
+    .expect("start http front");
+    (server, front, links)
+}
+
+fn infer(client: &mut HttpClient, x: &[f32]) -> (u16, String) {
+    let body = protocol::InferRequest::new(x.to_vec()).to_json().compact();
+    client.post_json("/v1/infer", &body).expect("infer round-trip")
+}
+
+/// Pull the `stage_links` row for `host` out of a `/v1/metrics` body.
+fn link_row(body: &str, host: &str) -> json::Json {
+    let doc = json::parse(body).expect("metrics json");
+    let rows = doc.get("stage_links").as_arr().expect("stage_links array");
+    rows.iter()
+        .find(|r| r.get("host").as_str() == Some(host))
+        .cloned()
+        .unwrap_or_else(|| panic!("no stage_links row for {host}: {body}"))
+}
+
+fn assert_counters(
+    body: &str,
+    host: &str,
+    batches: f64,
+    reconnects: f64,
+    unreachable: f64,
+    timeout: f64,
+    protocol_: f64,
+) {
+    let row = link_row(body, host);
+    assert_eq!(row.get("batches").as_f64(), Some(batches), "{host} batches: {body}");
+    assert_eq!(row.get("reconnects").as_f64(), Some(reconnects), "{host} reconnects: {body}");
+    assert_eq!(
+        row.get("failures_unreachable").as_f64(),
+        Some(unreachable),
+        "{host} unreachable: {body}"
+    );
+    assert_eq!(row.get("failures_timeout").as_f64(), Some(timeout), "{host} timeout: {body}");
+    assert_eq!(row.get("failures_protocol").as_f64(), Some(protocol_), "{host} protocol: {body}");
+}
+
+/// SIGKILL a stage host mid-stream: the in-flight batch fails with a
+/// typed 502 within the link deadline (no hang, no retry storm), the
+/// healthy link is untouched, and once the child is restarted on the
+/// same address the next request reconnects and answers 200 — with the
+/// whole story told by exact counters in both metric formats.
+#[test]
+fn sigkill_mid_stream_yields_typed_502_then_reconnects() {
+    let port1 = reserve_port();
+    let host1 = format!("127.0.0.1:{port1}");
+    let mut stage1 = StageChild::spawn("ffn-relu", 1, 2, &host1);
+    let stage2 = StageChild::spawn("ffn-relu", 2, 2, "127.0.0.1:0");
+    let hosts = vec![stage1.addr.clone(), stage2.addr.clone()];
+
+    let lcfg = StageLinkConfig {
+        io_timeout_ms: 2_000,
+        connect_attempts: 2,
+        backoff_base_ms: 10,
+        backoff_max_ms: 20,
+        ..StageLinkConfig::default()
+    };
+    // ffn-relu is 32→32; the head never builds the model, it only needs
+    // the end-to-end dims (the stage hosts own the weights).
+    let (server, front, _links) = start_head(hosts.clone(), (32, 32), lcfg);
+    let mut client = HttpClient::connect(front.local_addr()).expect("connect front");
+    let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.25).sin()).collect();
+
+    // 1. Healthy round-trip through both hosts.
+    let (status, first) = infer(&mut client, &x);
+    assert_eq!(status, 200, "healthy round-trip: {first}");
+
+    // 2. SIGKILL stage 1, then infer again: the head's link is dead, the
+    // batch fails with a typed 502 — bounded by the link deadline, so
+    // this cannot hang even if the kernel swallowed the write.
+    stage1.sigkill();
+    let t0 = Instant::now();
+    let (status, body) = infer(&mut client, &x);
+    assert_eq!(status, 502, "dead stage host must type as bad gateway: {body}");
+    assert!(body.contains("bad_gateway"), "typed error body: {body}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "mid-batch death must fail fast, took {:?}",
+        t0.elapsed()
+    );
+
+    // 3. Restart on the same address (ready line parsed before the next
+    // request — no sleeps), and the link recovers on first contact.
+    let stage1b = StageChild::spawn("ffn-relu", 1, 2, &host1);
+    assert_eq!(stage1b.addr, host1, "restart must reclaim the reserved address");
+    let (status, third) = infer(&mut client, &x);
+    assert_eq!(status, 200, "post-restart round-trip: {third}");
+    assert_eq!(third, first, "recovered chain must answer identically");
+
+    // 4. Exact counters, JSON format: the dead link saw 2 good batches
+    // (before + after), 1 unreachable failure, 1 reconnect; the healthy
+    // link saw the same 2 batches and nothing else — the failed batch
+    // never reached it.
+    let (status, metrics) = client.get("/v1/metrics").expect("metrics json");
+    assert_eq!(status, 200);
+    assert_counters(&metrics, &hosts[0], 2.0, 1.0, 1.0, 0.0, 0.0);
+    assert_counters(&metrics, &hosts[1], 2.0, 0.0, 0.0, 0.0, 0.0);
+
+    // 5. Same counters, Prometheus text exposition format.
+    let (status, prom) = client.get("/v1/metrics?format=prometheus").expect("metrics prom");
+    assert_eq!(status, 200);
+    for line in [
+        format!("hinm_stage_link_batches_total{{host=\"{}\"}} 2", hosts[0]),
+        format!("hinm_stage_link_reconnects_total{{host=\"{}\"}} 1", hosts[0]),
+        format!("hinm_stage_link_failures_total{{host=\"{}\",class=\"unreachable\"}} 1", hosts[0]),
+        format!("hinm_stage_link_failures_total{{host=\"{}\",class=\"timeout\"}} 0", hosts[0]),
+        format!("hinm_stage_link_failures_total{{host=\"{}\",class=\"protocol\"}} 0", hosts[0]),
+        format!("hinm_stage_link_batches_total{{host=\"{}\"}} 2", hosts[1]),
+        format!("hinm_stage_link_reconnects_total{{host=\"{}\"}} 0", hosts[1]),
+        format!("hinm_stage_link_failures_total{{host=\"{}\",class=\"unreachable\"}} 0", hosts[1]),
+    ] {
+        assert!(prom.contains(&line), "missing exposition line {line:?} in:\n{prom}");
+    }
+
+    front.stop();
+    server.stop();
+}
+
+/// A stage peer that accepts the connection and reads frames but never
+/// answers: each try fails with a typed 504 once the pinned per-try
+/// deadline lapses — the head never hangs on a stalled host — and the
+/// link reconnects between tries (the stalled connection is presumed
+/// desynchronized and dropped).
+#[test]
+fn stall_past_link_deadline_yields_typed_504() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("stall peer");
+    let addr = listener.local_addr().expect("peer addr").to_string();
+    // Hold accepted sockets so the peer stays "up but silent"; further
+    // connects succeed off the backlog even after this thread is done.
+    let (tx, rx) = std::sync::mpsc::channel::<TcpStream>();
+    let acceptor = std::thread::spawn(move || {
+        if let Ok((s, _)) = listener.accept() {
+            let _ = tx.send(s);
+        }
+        listener // keep the listener (and its backlog) alive with the test
+    });
+
+    let lcfg = StageLinkConfig {
+        io_timeout_ms: 300,
+        connect_attempts: 1,
+        backoff_base_ms: 1,
+        backoff_max_ms: 2,
+        ..StageLinkConfig::default()
+    };
+    let (server, front, links) = start_head(vec![addr.clone()], (8, 8), lcfg);
+    let _held = rx.recv_timeout(Duration::from_secs(10)).expect("peer accepted");
+    let mut client = HttpClient::connect(front.local_addr()).expect("connect front");
+    let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+
+    for round in 1..=2u64 {
+        let t0 = Instant::now();
+        let (status, body) = infer(&mut client, &x);
+        assert_eq!(status, 504, "round {round}: stall must type as a timeout: {body}");
+        assert!(body.contains("upstream_timeout"), "round {round}: typed body: {body}");
+        let took = t0.elapsed();
+        assert!(
+            took >= Duration::from_millis(300),
+            "round {round}: failed before the 300 ms deadline ({took:?})"
+        );
+        assert!(
+            took < Duration::from_secs(10),
+            "round {round}: stalled host must not hang the head ({took:?})"
+        );
+    }
+
+    // Round 1 timed out on the eagerly-connected link; round 2 had to
+    // re-establish first (one reconnect) and then timed out again.
+    let (status, metrics) = client.get("/v1/metrics").expect("metrics json");
+    assert_eq!(status, 200);
+    assert_counters(&metrics, &addr, 0.0, 1.0, 0.0, 2.0, 0.0);
+    let snap = links.snapshot();
+    assert_eq!(snap.links[0].failures_timeout, 2);
+    assert_eq!(snap.links[0].batches, 0);
+
+    front.stop();
+    server.stop();
+    let _listener = acceptor.join().expect("acceptor joins");
+}
+
+/// A stage peer that answers with a flipped payload byte (checksum no
+/// longer matches): the head types the batch as a 502 protocol error and
+/// drops the connection — a desynced stream is unrecoverable — then the
+/// next batch re-establishes and completes over a clean connection.
+#[test]
+fn corrupt_frame_drops_connection_then_reestablishes() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("corrupt peer");
+    let addr = listener.local_addr().expect("peer addr").to_string();
+
+    let peer = std::thread::spawn(move || {
+        let mut codec = FrameCodec::new();
+        let mut m = Matrix::zeros(0, 0);
+
+        // Connection 1: echo the activations back, but flip the first
+        // payload byte after sealing the frame — the checksum in the
+        // trailer no longer matches the bytes on the wire.
+        let (mut s, _) = listener.accept().expect("conn 1");
+        let seq = match codec.read_into(&mut s, &mut m).expect("read request 1") {
+            Frame::Activations { seq } => seq,
+            other => panic!("expected activations, got {other:?}"),
+        };
+        let mut buf = Vec::new();
+        codec.write_activations(&mut buf, seq, &m).expect("encode echo");
+        buf[24] ^= 0x01; // 4-byte length prefix + 20-byte header = first payload byte
+        s.write_all(&buf).expect("send corrupted frame");
+        s.flush().expect("flush corrupted frame");
+
+        // The head drops that connection; serve the retry cleanly.
+        let (mut s2, _) = listener.accept().expect("conn 2");
+        let seq2 = match codec.read_into(&mut s2, &mut m).expect("read request 2") {
+            Frame::Activations { seq } => seq,
+            other => panic!("expected activations, got {other:?}"),
+        };
+        codec.write_activations(&mut s2, seq2, &m).expect("send clean echo");
+        s2.flush().expect("flush clean echo");
+    });
+
+    let hosts = vec![addr.clone()];
+    let links = StageLinkMetrics::new(&hosts);
+    let lcfg = StageLinkConfig {
+        io_timeout_ms: 5_000,
+        connect_attempts: 2,
+        backoff_base_ms: 1,
+        backoff_max_ms: 2,
+        ..StageLinkConfig::default()
+    };
+    let mut backend =
+        RemotePipelinedBackend::connect(&hosts, 3, 3, lcfg, Arc::clone(&links)).expect("connect");
+
+    let x = Matrix::from_vec(3, 2, vec![1.0, -0.0, f32::MIN_POSITIVE, 2.5, -7.0, 0.125]);
+
+    // Batch 1: corrupted reply → typed protocol 502, connection dropped.
+    let err = backend.run_batch(&x).expect_err("corrupted frame must fail the batch");
+    let typed = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<InferError>())
+        .expect("typed InferError in the chain");
+    assert!(
+        matches!(typed, InferError::Upstream(m) if m.contains("protocol error")),
+        "wrong taxonomy class for a corrupt frame: {typed:?}"
+    );
+
+    // Batch 2: reconnect + clean echo, bit-exact (the scripted peer
+    // echoes, so output bits == input bits, including -0.0).
+    let y = backend.run_batch(&x).expect("clean retry");
+    assert_eq!(
+        y.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        x.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "echo must round-trip bit-exactly"
+    );
+
+    let snap = links.snapshot();
+    assert_eq!(snap.links[0].failures_protocol, 1, "exactly one protocol failure");
+    assert_eq!(snap.links[0].failures_unreachable, 0);
+    assert_eq!(snap.links[0].failures_timeout, 0);
+    assert_eq!(snap.links[0].reconnects, 1, "exactly one re-establishment");
+    assert_eq!(snap.links[0].batches, 1, "only the clean batch counts");
+
+    drop(backend);
+    peer.join().expect("peer joins");
+}

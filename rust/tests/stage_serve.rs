@@ -1,0 +1,280 @@
+//! Distributed bit-identity for cross-host pipeline stages (DESIGN.md
+//! §20): real `hinm stage` child processes — spawned via
+//! `CARGO_BIN_EXE_hinm`, exactly what an operator runs — serve contiguous
+//! sub-chains over TCP, and a [`RemotePipelinedBackend`] head drives the
+//! chain through them. The distributed output must be **bitwise
+//! identical** to the in-process [`HinmModel::forward_planned`] reference
+//! for every serving-catalog model × stage count × batch size, and again
+//! through the full `hinm serve --stage-hosts` HTTP front.
+//!
+//! No weights ever cross the wire: head and stage hosts independently
+//! build the same model from the same `--model`/`--seed` flags and agree
+//! on stage boundaries because [`HinmModel::split_stages`] is
+//! deterministic in the model. That agreement is exactly what these tests
+//! pin — if construction or partitioning ever diverges between the CLI
+//! and the library, dims stop lining up or bits change, and this suite
+//! fails loudly rather than an operator's fleet drifting silently.
+
+use hinm::coordinator::StageLinkMetrics;
+use hinm::models::chain::ActivationBuffers;
+use hinm::models::{serving_models, HinmModel};
+use hinm::net::{protocol, HttpClient};
+use hinm::runtime::{RemotePipelinedBackend, SpmmBackend, StageLinkConfig};
+use hinm::spmm::SpmmEngine;
+use hinm::tensor::Matrix;
+use hinm::util::json;
+use hinm::util::rng::Xoshiro256;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn vec_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Reference output through the unsplit planned path.
+fn planned(model: &HinmModel, x: &Matrix) -> Matrix {
+    let engine = SpmmEngine::single();
+    let mut bufs = ActivationBuffers::new();
+    model.forward_planned(x, &engine, &mut bufs)
+}
+
+/// A spawned `hinm` child whose ready line has been parsed for its bound
+/// address. Killed (and reaped) on drop so a failing assertion never
+/// leaks processes into the test runner.
+struct CliChild {
+    child: Child,
+    addr: String,
+}
+
+impl CliChild {
+    /// Spawn `hinm <args>` and block until a stdout line contains
+    /// `ready_marker`, returning the address printed right after it.
+    /// `addr_end` bounds the address token (`" |"` for stage hosts, end
+    /// of line for the HTTP front).
+    fn spawn(args: &[&str], ready_marker: &str, addr_end: Option<&str>) -> CliChild {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_hinm"))
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn hinm child");
+        let stdout = child.stdout.take().expect("child stdout piped");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = match lines.next() {
+                Some(Ok(line)) => line,
+                other => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    panic!("child exited before ready line ({args:?}): {other:?}");
+                }
+            };
+            if let Some(rest) = line.split(ready_marker).nth(1) {
+                let addr = match addr_end {
+                    Some(end) => rest.split(end).next().unwrap_or(rest),
+                    None => rest,
+                };
+                break addr.trim().to_string();
+            }
+        };
+        CliChild { child, addr }
+    }
+
+    fn stage(model: &str, stage: usize, stages: usize, listen: &str) -> CliChild {
+        let spec = format!("{stage}/{stages}");
+        CliChild::spawn(
+            &["stage", "--stage", &spec, "--model", model, "--seed", "7", "--listen", listen],
+            "listening on ",
+            Some(" |"),
+        )
+    }
+}
+
+impl Drop for CliChild {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn one `hinm stage` child per stage of an S-way split of the named
+/// catalog model, returning them with their host list in chain order.
+fn spawn_stage_hosts(model: &str, stages: usize) -> (Vec<CliChild>, Vec<String>) {
+    let children: Vec<CliChild> =
+        (1..=stages).map(|k| CliChild::stage(model, k, stages, "127.0.0.1:0")).collect();
+    let hosts: Vec<String> = children.iter().map(|c| c.addr.clone()).collect();
+    (children, hosts)
+}
+
+/// The headline pin: for every serving-catalog model × stages {2, 3} ×
+/// batches {1, 7, 33}, a head driving real `hinm stage` children returns
+/// bits identical to the in-process planned forward pass.
+#[test]
+fn cross_host_outputs_match_forward_planned_bit_for_bit() {
+    for (name, model) in serving_models(7).unwrap() {
+        for &stages in &[2usize, 3] {
+            if stages > model.n_layers() {
+                continue; // ffn-relu has 2 layers; a 3-way split is an error, not a test.
+            }
+            let (_children, hosts) = spawn_stage_hosts(name, stages);
+            let links = StageLinkMetrics::new(&hosts);
+            let mut backend = RemotePipelinedBackend::connect(
+                &hosts,
+                model.d_in(),
+                model.d_out(),
+                StageLinkConfig::default(),
+                Arc::clone(&links),
+            )
+            .unwrap_or_else(|e| panic!("{name}: connect {stages} stage hosts: {e}"));
+
+            let mut rng = Xoshiro256::new(0x5747 ^ stages as u64);
+            let mut batches = 0u64;
+            for &batch in &[1usize, 7, 33] {
+                let x = Matrix::randn(model.d_in(), batch, 1.0, &mut rng);
+                let want = planned(&model, &x);
+                // Two rounds so the recycled §15 hop buffers are hit.
+                for round in 0..2 {
+                    let got = backend.run_batch(&x).unwrap_or_else(|e| {
+                        panic!("{name}: stages={stages} batch={batch} round={round}: {e}")
+                    });
+                    assert_eq!(got.shape(), (model.d_out(), batch));
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "{name}: stages={stages} batch={batch} round={round} changed bits"
+                    );
+                    batches += 1;
+                }
+            }
+
+            // Every batch crossed every link exactly once, cleanly.
+            let snap = links.snapshot();
+            for (row, host) in snap.links.iter().zip(&hosts) {
+                assert_eq!(row.batches, batches, "{name}: {host} batches");
+                assert_eq!(row.reconnects, 0, "{name}: {host} reconnects");
+                assert_eq!(
+                    row.failures_unreachable + row.failures_timeout + row.failures_protocol,
+                    0,
+                    "{name}: {host} failures"
+                );
+            }
+        }
+    }
+}
+
+/// Same pin through the entire operator surface: a real `hinm serve
+/// --stage-hosts` head process (batch window, replica worker, HTTP front)
+/// in front of real `hinm stage` children, answering `POST /v1/infer`
+/// with bits identical to the in-process reference.
+#[test]
+fn stage_serve_http_front_is_bit_identical_end_to_end() {
+    let (name, stages) = ("bert-mini", 3usize);
+    let model = serving_models(7)
+        .unwrap()
+        .into_iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, m)| m)
+        .expect("catalog model");
+    let (_children, hosts) = spawn_stage_hosts(name, stages);
+
+    let head = CliChild::spawn(
+        &[
+            "serve",
+            "--model",
+            name,
+            "--seed",
+            "7",
+            "--stage-hosts",
+            &hosts.join(","),
+            "--replicas",
+            "1",
+            "--batch",
+            "4",
+            "--http",
+            "127.0.0.1:0",
+        ],
+        "HTTP front listening on http://",
+        None,
+    );
+    let mut client =
+        HttpClient::connect(head.addr.parse().expect("front addr")).expect("connect front");
+
+    let mut rng = Xoshiro256::new(23);
+    for i in 0..12 {
+        let x = Matrix::randn(model.d_in(), 1, 1.0, &mut rng);
+        let want = planned(&model, &x);
+        let body = protocol::InferRequest::new(x.data.clone()).to_json().compact();
+        let (status, resp) = client.post_json("/v1/infer", &body).expect("infer round-trip");
+        assert_eq!(status, 200, "request {i}: {resp}");
+        let y = protocol::parse_infer_response(&json::parse(&resp).unwrap()).unwrap();
+        assert_eq!(
+            vec_bits(&y),
+            vec_bits(&want.data),
+            "request {i}: HTTP answer changed bits"
+        );
+    }
+
+    // The head's /v1/metrics exposes one stage_links row per child, all
+    // clean: 12 single-column requests grouped by the batch window into
+    // at least one and at most 12 batches, zero failures.
+    let (status, body) = client.get("/v1/metrics").expect("metrics");
+    assert_eq!(status, 200);
+    let doc = json::parse(&body).expect("metrics json");
+    let rows = doc.get("stage_links").as_arr().expect("stage_links array");
+    assert_eq!(rows.len(), stages, "one row per stage host: {body}");
+    for (row, host) in rows.iter().zip(&hosts) {
+        assert_eq!(row.get("host").as_str(), Some(host.as_str()), "{body}");
+        let batches = row.get("batches").as_f64().expect("batches");
+        assert!(
+            (1.0..=12.0).contains(&batches),
+            "{host}: 12 requests → 1..=12 batches, got {batches}: {body}"
+        );
+        assert_eq!(row.get("reconnects").as_f64(), Some(0.0), "{host}: {body}");
+        assert_eq!(row.get("failures_unreachable").as_f64(), Some(0.0), "{host}: {body}");
+        assert_eq!(row.get("failures_timeout").as_f64(), Some(0.0), "{host}: {body}");
+        assert_eq!(row.get("failures_protocol").as_f64(), Some(0.0), "{host}: {body}");
+    }
+}
+
+/// The CLI composition guards: a stage index outside the split and flag
+/// combinations documented as non-composing must fail fast with a
+/// pointed message, not limp into serving the wrong shard.
+#[test]
+fn stage_cli_rejects_bad_splits_and_compositions() {
+    let out = Command::new(env!("CARGO_BIN_EXE_hinm"))
+        .args(["stage", "--stage", "4/3", "--model", "bert-mini"])
+        .output()
+        .expect("spawn hinm stage");
+    assert!(!out.status.success(), "stage 4/3 must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("outside"), "stderr: {err}");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_hinm"))
+        .args(["stage", "--stage", "1/9", "--model", "ffn-relu"])
+        .output()
+        .expect("spawn hinm stage");
+    assert!(!out.status.success(), "splitting 2 layers 9 ways must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("stages"), "stderr: {err}");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_hinm"))
+        .args([
+            "serve",
+            "--stage-hosts",
+            "127.0.0.1:1",
+            "--pipeline-stages",
+            "2",
+            "--requests",
+            "1",
+        ])
+        .output()
+        .expect("spawn hinm serve");
+    assert!(!out.status.success(), "stage-hosts × pipeline-stages must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--stage-hosts") && err.contains("--pipeline-stages"), "stderr: {err}");
+}

@@ -21,10 +21,11 @@
 //!   contracts a multiply-add).
 //! - **R3** — no wall-clock or hash-order nondeterminism (`Instant::now`,
 //!   `SystemTime`, default-hasher `HashMap`/`HashSet`) in the numeric core
-//!   (`permute/`, `spmm/`, `sparsity/`, `tensor/`) or the router's wire
-//!   layer (`net/route.rs`, which must stay clock-free per §19); the
-//!   router's policy layer (`coordinator/router.rs`) owns the clock but
-//!   still bans the default-hasher containers.
+//!   (`permute/`, `spmm/`, `sparsity/`, `tensor/`) or the wire layers
+//!   (`net/route.rs` per §19, `net/stage_wire.rs` per §20 — both must
+//!   stay clock-free); the router's policy layer
+//!   (`coordinator/router.rs`) owns the clock but still bans the
+//!   default-hasher containers.
 //! - **R4** — no `unwrap()`/`expect(` in library code outside `#[cfg(test)]`
 //!   and `main.rs`.
 //! - **R5** — every `§N` anchor cited from doc comments, README.md, or
@@ -467,14 +468,16 @@ pub fn design_headings(design: &str) -> BTreeSet<u32> {
 }
 
 /// Paths (directories or single files) where the full R3 nondeterminism
-/// ban applies: the numeric core plus the router's wire layer, which §19
-/// keeps clock-free so every timing decision lives in the coordinator.
-const R3_DIRS: [&str; 5] = [
+/// ban applies: the numeric core plus the wire layers — the router's
+/// (§19) and the stage-activation codec's (§20) — which stay clock-free
+/// so every timing decision lives in the coordinator/runtime tiers.
+const R3_DIRS: [&str; 6] = [
     "rust/src/permute/",
     "rust/src/spmm/",
     "rust/src/sparsity/",
     "rust/src/tensor/",
     "rust/src/net/route.rs",
+    "rust/src/net/stage_wire.rs",
 ];
 
 /// Files under the hash-order half of R3 only: the router's policy layer
@@ -484,7 +487,7 @@ const R3_HASH_FILES: [&str; 1] = ["rust/src/coordinator/router.rs"];
 
 /// Sections ARCHITECTURE.md must anchor into DESIGN.md (carried over from
 /// the retired CI grep step — presence, not just resolution).
-const ARCH_REQUIRED_SECTIONS: [u32; 7] = [4, 12, 13, 14, 15, 16, 19];
+const ARCH_REQUIRED_SECTIONS: [u32; 8] = [4, 12, 13, 14, 15, 16, 19, 20];
 
 /// Files scanned for the raw `+fma` flag string in addition to `rust/src`.
 const R2_RAW_FILES: [&str; 3] = ["Cargo.toml", "rust/Cargo.toml", ".github/workflows/ci.yml"];
